@@ -1,0 +1,45 @@
+//! Figure 1: the 'chessboard' (XOR) vs 'tablecloth' (SUM) toy problems —
+//! the paper's illustration of the non-linearity assumption.
+//!
+//! The linear pairwise kernel can only express `f(d,t) = f_d(d) + f_t(t)`
+//! (a global drug ordering), so it fails on the XOR chessboard; the
+//! Kronecker product kernel models drug×target feature interactions and
+//! solves it.
+//!
+//! ```bash
+//! cargo run --release --example chessboard
+//! ```
+
+use gvt_rls::data::chessboard::{ChessboardConfig, Pattern};
+use gvt_rls::eval::auc;
+use gvt_rls::gvt::pairwise::PairwiseKernel;
+use gvt_rls::solvers::ridge::{PairwiseRidge, RidgeConfig};
+
+fn evaluate(pattern: Pattern, kernel: PairwiseKernel) -> anyhow::Result<f64> {
+    let data = ChessboardConfig::new(pattern).generate(3);
+    let split = data.split_setting(1, 0.3, 11);
+    let cfg = RidgeConfig { max_iters: 100, ..Default::default() };
+    let model = PairwiseRidge::fit_early_stopping(&split.train, 1, kernel, &cfg, 11)?;
+    let preds = model.predict(&split.test.pairs)?;
+    Ok(auc(&preds, &split.test.binary_labels()).unwrap_or(f64::NAN))
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("Figure 1 — pairwise vs additive signal (test AUC, setting 1)\n");
+    println!(
+        "{:<14} {:>10} {:>10} {:>10}",
+        "pattern", "linear", "poly2d", "kronecker"
+    );
+    for pattern in [Pattern::Chessboard, Pattern::Tablecloth] {
+        let lin = evaluate(pattern, PairwiseKernel::Linear)?;
+        let poly = evaluate(pattern, PairwiseKernel::Poly2D)?;
+        let kron = evaluate(pattern, PairwiseKernel::Kronecker)?;
+        println!("{:<14} {:>10.3} {:>10.3} {:>10.3}", format!("{pattern:?}"), lin, poly, kron);
+    }
+    println!(
+        "\nExpected shape: linear ≈ 0.5 on Chessboard (XOR is outside its \
+         hypothesis space — Minsky & Papert 1969) but ≈ 1.0 on Tablecloth; \
+         the interaction kernels solve both."
+    );
+    Ok(())
+}

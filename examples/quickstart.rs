@@ -1,0 +1,56 @@
+//! Quickstart: train a pairwise kernel ridge model with the generalized
+//! vec trick and evaluate it in all four prediction settings.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use gvt_rls::data::metz::MetzConfig;
+use gvt_rls::eval::auc;
+use gvt_rls::gvt::pairwise::PairwiseKernel;
+use gvt_rls::solvers::ridge::{PairwiseRidge, RidgeConfig};
+
+fn main() -> anyhow::Result<()> {
+    // 1. A drug–target interaction dataset: kernels over 40 drugs and 60
+    //    targets plus ~1200 labeled pairs (Metz-like synthetic data).
+    let data = MetzConfig::small().generate(7);
+    println!(
+        "dataset '{}': {} labeled pairs over {} drugs × {} targets ({:.0}% dense)",
+        data.name,
+        data.len(),
+        data.pairs.m(),
+        data.pairs.q(),
+        100.0 * data.density()
+    );
+
+    // 2. Train with the paper's protocol (inner split → early stopping →
+    //    refit) and evaluate each of the four settings of Table 1:
+    //    known pairs / novel targets / novel drugs / both novel.
+    let cfg = RidgeConfig::default();
+    println!("\n{:<10} {:>22} {:>12} {:>10}", "setting", "task", "iterations", "AUC");
+    for (setting, label) in [
+        (1u8, "known drugs+targets"),
+        (2, "novel targets"),
+        (3, "novel drugs"),
+        (4, "novel drugs+targets"),
+    ] {
+        let split = data.split_setting(setting, 0.25, 42);
+        let model = PairwiseRidge::fit_early_stopping(
+            &split.train,
+            setting,
+            PairwiseKernel::Kronecker,
+            &cfg,
+            42,
+        )?;
+        let preds = model.predict(&split.test.pairs)?;
+        let a = auc(&preds, &split.test.binary_labels()).unwrap_or(f64::NAN);
+        println!("{:<10} {:>22} {:>12} {:>10.4}", setting, label, model.iterations, a);
+    }
+
+    println!(
+        "\nEvery training iteration and every prediction above ran in \
+         O(nm + nq) via the generalized vec trick — the n×n pairwise \
+         kernel matrix was never materialized."
+    );
+    Ok(())
+}

@@ -1,0 +1,80 @@
+"""AOT lowering: JAX/Pallas (L2+L1) → HLO text artifacts for the rust
+runtime (L3).
+
+HLO *text* — NOT ``lowered.compile()`` / serialized protos — is the
+interchange format: jax ≥ 0.5 emits HloModuleProtos with 64-bit
+instruction ids which xla_extension 0.5.1 (the version behind the
+published ``xla`` rust crate) rejects; the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts``
+
+Emits one shape-specialized program per size bucket plus manifest.json:
+
+    kron_matvec_m{M}_q{Q}_n{N}.hlo.txt
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Size buckets: (m, q, n). Small for tests; larger for the examples /
+# benches. The runtime zero-pads kernels into a bucket and chunks the
+# output sample by n.
+BUCKETS = [
+    (64, 64, 4096),
+    (128, 128, 8192),
+    (256, 256, 16384),
+]
+
+
+def to_hlo_text(fn, args) -> str:
+    """Lower a jittable function to XLA HLO text via StableHLO."""
+    lowered = jax.jit(fn).lower(*args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build(out_dir: str, buckets=None) -> dict:
+    buckets = buckets or BUCKETS
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"version": 1, "artifacts": []}
+    for m, q, n in buckets:
+        name = f"kron_matvec_m{m}_q{q}_n{n}"
+        fname = f"{name}.hlo.txt"
+        print(f"lowering {name} …", flush=True)
+        text = to_hlo_text(model.kron_matvec, model.example_args(m, q, n))
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {"name": name, "m": m, "q": q, "n": n, "file": fname, "dtype": "f32"}
+        )
+        print(f"  wrote {fname} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts → {out_dir}/manifest.json")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--quick", action="store_true", help="only the smallest bucket (CI smoke)"
+    )
+    args = ap.parse_args()
+    build(args.out, BUCKETS[:1] if args.quick else None)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""L1 — Pallas kernel for the dense Kronecker mat-vec's MXU hot spot.
+
+The generalized vec trick never materializes the pairwise kernel matrix;
+its dense (complete-data) formulation reduces every pairwise-kernel
+mat-vec to
+
+    S = T @ W        # this file: tiled matmul on the MXU
+    p[i] = <D[row_d[i], :], S[row_t[i], :]>   # VPU gather-dot (model.py)
+
+HARDWARE ADAPTATION (DESIGN.md §Hardware-Adaptation): the paper's CPU
+algorithm is two sparse gather/scatter passes; on TPU we restructure the
+same factorization into a dense matmul so the MXU systolic array does the
+O(q·q·m) work. BlockSpec tiles below are MXU-shaped (multiples of 8×128
+lanes when the problem allows); `interpret=True` is mandatory here —
+real-TPU lowering emits a Mosaic custom-call the CPU PJRT plugin cannot
+execute, and this sandbox validates numerics on CPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """One (bq × K) @ (K × bm) tile; K is carried whole in VMEM.
+
+    With K = domain size ≤ 2048 this is ≤ 2048·128·4 B ≈ 1 MiB per input
+    panel — comfortably inside a TPU core's ~16 MiB VMEM, so no K-loop /
+    scratch accumulator is needed at the shapes this library compiles.
+    """
+    acc = jnp.float32 if o_ref.dtype == jnp.float32 else o_ref.dtype
+    o_ref[...] = jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=acc
+    ).astype(o_ref.dtype)
+
+
+def _pick_block(dim: int, preferred: int = 128) -> int:
+    """Largest divisor of `dim` that is ≤ preferred (MXU tiles want 128;
+    fall back gracefully for small/odd dims)."""
+    b = min(dim, preferred)
+    while dim % b != 0:
+        b -= 1
+    return max(b, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_cols"))
+def matmul(x: jax.Array, y: jax.Array, *, block_rows: int = 0, block_cols: int = 0):
+    """Tiled Pallas matmul `x @ y` (f32 accumulate), interpret-mode.
+
+    x: (Q_r, K), y: (K, M) -> (Q_r, M).
+    """
+    qr, k = x.shape
+    k2, m = y.shape
+    assert k == k2, f"matmul inner dims {k} vs {k2}"
+    br = block_rows or _pick_block(qr)
+    bc = block_cols or _pick_block(m)
+    grid = (qr // br, m // bc)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bc), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((qr, m), x.dtype),
+        interpret=True,  # CPU sandbox: Mosaic lowering is compile-only
+    )(x, y)
+
+
+def kron_matvec_core(d, t, w, row_d, row_t):
+    """The artifact program body (called by model.kron_matvec).
+
+    d: (M, M) f32 — drug kernel (zero-padded by the runtime)
+    t: (Q, Q) f32 — target kernel
+    w: (Q, M) f32 — scattered coefficients W[t_j, d_j] += a_j
+    row_d, row_t: (N,) i32 — output gather indices
+    returns p: (N,) f32 with p[i] = Σ_dd D[row_d[i], dd] · S[row_t[i], dd]
+    """
+    s = matmul(t, w)  # (Q, M) — the MXU part (L1)
+    d_rows = jnp.take(d, row_d, axis=0)  # (N, M)
+    s_rows = jnp.take(s, row_t, axis=0)  # (N, M)
+    return jnp.sum(d_rows * s_rows, axis=1)

@@ -1,0 +1,76 @@
+"""Pure-jnp / numpy oracles for the Pallas kernel and the model layer.
+
+Three levels of reference, each independent of the code it checks:
+
+* ``matmul_ref`` — jnp matmul for the Pallas tile kernel.
+* ``kron_matvec_ref`` — jnp composition for the artifact program.
+* ``gvt_entry_loop`` — the *literal* Theorem-1 definition
+  ``p_i = Σ_j A[d̄_i, d_j] · B[t̄_i, t_j] · a_j`` as a python loop: the
+  ground truth for everything, mirroring the rust ``naive_matvec``.
+* ``pairwise_kernel_matrix`` — Table 3 closed forms, entry by entry,
+  mirroring the rust ``explicit.rs`` oracle.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    return jnp.dot(x, y, preferred_element_type=jnp.float32)
+
+
+def kron_matvec_ref(d, t, w, row_d, row_t):
+    s = jnp.dot(t, w, preferred_element_type=jnp.float32)
+    return jnp.sum(jnp.take(d, row_d, axis=0) * jnp.take(s, row_t, axis=0), axis=1)
+
+
+def gvt_entry_loop(d, t, rows, cols, a):
+    """Literal Theorem-1 loop. rows/cols: (n, 2) integer arrays of
+    (drug, target) indices."""
+    d = np.asarray(d, dtype=np.float64)
+    t = np.asarray(t, dtype=np.float64)
+    a = np.asarray(a, dtype=np.float64)
+    out = np.zeros(len(rows))
+    for i, (rd, rt) in enumerate(rows):
+        acc = 0.0
+        for j, (cd, ct) in enumerate(cols):
+            acc += d[rd, cd] * t[rt, ct] * a[j]
+        out[i] = acc
+    return out
+
+
+def pairwise_kernel_entry(kernel: str, d, t, row, col) -> float:
+    """Table 3 closed forms (homogeneous kernels read only ``d``)."""
+    rd, rt = row
+    cd, ct = col
+    if kernel == "linear":
+        return d[rd, cd] + t[rt, ct]
+    if kernel == "poly2d":
+        return (d[rd, cd] + t[rt, ct]) ** 2
+    if kernel == "kronecker":
+        return d[rd, cd] * t[rt, ct]
+    if kernel == "cartesian":
+        return d[rd, cd] * (rt == ct) + (rd == cd) * t[rt, ct]
+    if kernel == "symmetric":
+        return d[rd, cd] * d[rt, ct] + d[rd, ct] * d[rt, cd]
+    if kernel == "antisymmetric":
+        return d[rd, cd] * d[rt, ct] - d[rd, ct] * d[rt, cd]
+    if kernel == "ranking":
+        return d[rd, cd] - d[rd, ct] - d[rt, cd] + d[rt, ct]
+    if kernel == "mlpk":
+        r = d[rd, cd] - d[rd, ct] - d[rt, cd] + d[rt, ct]
+        return r * r
+    raise ValueError(f"unknown kernel {kernel}")
+
+
+def pairwise_kernel_matrix(kernel: str, d, t, rows, cols):
+    """Dense ``n̄ × n`` pairwise kernel matrix from the closed forms."""
+    d = np.asarray(d, dtype=np.float64)
+    t = np.asarray(t, dtype=np.float64)
+    k = np.zeros((len(rows), len(cols)))
+    for i, row in enumerate(rows):
+        for j, col in enumerate(cols):
+            k[i, j] = pairwise_kernel_entry(kernel, d, t, tuple(row), tuple(col))
+    return k

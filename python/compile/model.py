@@ -1,0 +1,161 @@
+"""L2 — the JAX model layer: pairwise-kernel mat-vecs built on the L1
+Pallas primitive.
+
+``kron_matvec`` is the AOT artifact program (one Kronecker summand; the
+rust coordinator composes Corollary-1 term sums from it with index
+plumbing, exactly as its own native implementation does).
+``pairwise_matvec`` composes the full per-kernel sums *in JAX* — it
+exists to pin the operator algebra at this layer too, validated against
+the Table 3 closed forms in python/tests.
+
+Python never runs at serve time: everything here is lowered once by
+``aot.py`` to HLO text and executed from rust via PJRT.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile.kernels import kron
+
+
+def scatter_coefficients(cols_d, cols_t, a, q: int, m: int):
+    """W[t_j, d_j] += a_j — the VPU scatter feeding the MXU matmul."""
+    w = jnp.zeros((q, m), dtype=jnp.float32)
+    return w.at[cols_t, cols_d].add(a.astype(jnp.float32))
+
+
+def kron_matvec(d, t, w, row_d, row_t):
+    """The artifact program: see kernels/kron.kron_matvec_core."""
+    return kron.kron_matvec_core(d, t, w, row_d, row_t)
+
+
+def gvt_matvec(d, t, rows_d, rows_t, cols_d, cols_t, a):
+    """Full dense GVT product `p = R(rows) (D ⊗ T) R(cols)ᵀ a`."""
+    q = t.shape[0]
+    m = d.shape[1]
+    w = scatter_coefficients(cols_d, cols_t, a, q, m)
+    return kron_matvec(d, t, w, rows_d, rows_t)
+
+
+# --------------------------------------------------------------------------
+# Corollary 1 term tables (mirrors rust/src/gvt/pairwise.rs): each term is
+# (coeff, left, right, row_map, col_map) with left/right in
+# {D, T, DSq, TSq, Ones, Identity} and maps in {id, swap, dupd, dupt}.
+# --------------------------------------------------------------------------
+
+PAIRWISE_TERMS = {
+    "linear": [(1.0, "D", "Ones", "id", "id"), (1.0, "Ones", "T", "id", "id")],
+    "poly2d": [
+        (1.0, "DSq", "Ones", "id", "id"),
+        (2.0, "D", "T", "id", "id"),
+        (1.0, "Ones", "TSq", "id", "id"),
+    ],
+    "kronecker": [(1.0, "D", "T", "id", "id")],
+    "cartesian": [(1.0, "D", "I", "id", "id"), (1.0, "I", "T", "id", "id")],
+    "symmetric": [(1.0, "D", "D", "id", "id"), (1.0, "D", "D", "swap", "id")],
+    "antisymmetric": [(1.0, "D", "D", "id", "id"), (-1.0, "D", "D", "swap", "id")],
+    "ranking": [
+        (1.0, "D", "Ones", "id", "id"),
+        (-1.0, "D", "Ones", "swap", "id"),
+        (-1.0, "D", "Ones", "id", "swap"),
+        (1.0, "D", "Ones", "swap", "swap"),
+    ],
+    "mlpk": [
+        (1.0, "DSq", "Ones", "id", "id"),
+        (1.0, "DSq", "Ones", "id", "swap"),
+        (1.0, "DSq", "Ones", "swap", "id"),
+        (1.0, "DSq", "Ones", "swap", "swap"),
+        (-2.0, "D", "D", "dupd", "id"),
+        (-2.0, "D", "D", "id", "dupd"),
+        (2.0, "D", "D", "id", "id"),
+        (2.0, "D", "D", "id", "swap"),
+        (-2.0, "D", "D", "id", "dupt"),
+        (-2.0, "D", "D", "dupt", "id"),
+    ],
+}
+
+
+def _apply_map(idx_d, idx_t, which: str):
+    if which == "id":
+        return idx_d, idx_t
+    if which == "swap":
+        return idx_t, idx_d
+    if which == "dupd":
+        return idx_d, idx_d
+    if which == "dupt":
+        return idx_t, idx_t
+    raise ValueError(which)
+
+
+def _factor(mat_name: str, d, t, n_rows: int, n_cols: int):
+    if mat_name == "D":
+        return d
+    if mat_name == "T":
+        return t
+    if mat_name == "DSq":
+        return d * d
+    if mat_name == "TSq":
+        return t * t
+    if mat_name == "Ones":
+        return jnp.ones((n_rows, n_cols), dtype=jnp.float32)
+    if mat_name == "I":
+        assert n_rows == n_cols
+        return jnp.eye(n_rows, dtype=jnp.float32)
+    raise ValueError(mat_name)
+
+
+def pairwise_matvec(kernel: str, d, t, rows_d, rows_t, cols_d, cols_t, a):
+    """`p = R(rows) K R(cols)ᵀ a` for any Table 3 kernel, as a sum of GVT
+    products (Corollary 1). The special factors `1` and `I` are passed as
+    dense matrices here (the L2 graph lets XLA fold them); the rust L3
+    path uses dedicated fast paths instead.
+    """
+    terms = PAIRWISE_TERMS[kernel]
+    m = d.shape[0]
+    q = t.shape[0]
+    p = jnp.zeros(rows_d.shape[0], dtype=jnp.float32)
+    for coeff, left, right, rmap, cmap in terms:
+        rd, rt = _apply_map(rows_d, rows_t, rmap)
+        cd, ct = _apply_map(cols_d, cols_t, cmap)
+        # Domain sizes of the transformed slots.
+        ldim_r = m if rmap in ("id", "dupd") else q
+        ldim_c = m if cmap in ("id", "dupd") else q
+        rdim_r = q if rmap in ("id", "dupt") else m
+        rdim_c = q if cmap in ("id", "dupt") else m
+        a_mat = _factor(left, d, t, ldim_r, ldim_c)
+        b_mat = _factor(right, d, t, rdim_r, rdim_c)
+        w = jnp.zeros((rdim_c, ldim_c), dtype=jnp.float32)
+        w = w.at[ct, cd].add(a.astype(jnp.float32))
+        p = p + coeff * kron.kron_matvec_core(a_mat, b_mat, w, rd, rt)
+    return p
+
+
+def example_args(m: int, q: int, n: int):
+    """ShapeDtypeStructs for AOT lowering of ``kron_matvec``."""
+    import jax
+
+    return (
+        jax.ShapeDtypeStruct((m, m), jnp.float32),  # d
+        jax.ShapeDtypeStruct((q, q), jnp.float32),  # t
+        jax.ShapeDtypeStruct((q, m), jnp.float32),  # w
+        jax.ShapeDtypeStruct((n,), jnp.int32),  # row_d
+        jax.ShapeDtypeStruct((n,), jnp.int32),  # row_t
+    )
+
+
+def random_problem(rng: np.random.Generator, m: int, q: int, n: int, nbar: int):
+    """Random dense-GVT test problem (shared by the python tests)."""
+    d = rng.standard_normal((m, m)).astype(np.float32)
+    d = (d + d.T) / 2
+    t = rng.standard_normal((q, q)).astype(np.float32)
+    t = (t + t.T) / 2
+    cols = np.stack(
+        [rng.integers(0, m, size=n), rng.integers(0, q, size=n)], axis=1
+    ).astype(np.int32)
+    rows = np.stack(
+        [rng.integers(0, m, size=nbar), rng.integers(0, q, size=nbar)], axis=1
+    ).astype(np.int32)
+    a = rng.standard_normal(n).astype(np.float32)
+    return d, t, rows, cols, a

@@ -1,0 +1,79 @@
+"""L1 correctness: the Pallas kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes (including non-128-divisible and degenerate
+ones) and dtypes; assert_allclose against ref.py is the CORE correctness
+signal for the kernel layer.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)  # allow true f64 in the dtype sweep
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import kron, ref
+
+settings.register_profile("kernels", max_examples=25, deadline=None)
+settings.load_profile("kernels")
+
+
+dims = st.integers(min_value=1, max_value=96)
+
+
+@given(qr=dims, k=dims, m=dims, seed=st.integers(0, 2**31 - 1))
+def test_pallas_matmul_matches_ref_f32(qr, k, m, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((qr, k)).astype(np.float32)
+    y = rng.standard_normal((k, m)).astype(np.float32)
+    got = np.asarray(kron.matmul(x, y))
+    want = np.asarray(ref.matmul_ref(x, y))
+    assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_pallas_matmul_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((32, 17)).astype(dtype)
+    y = rng.standard_normal((17, 48)).astype(dtype)
+    got = np.asarray(kron.matmul(x, y))
+    assert got.dtype == dtype
+    assert_allclose(got, x @ y, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize(
+    "block", [1, 2, 8, 32],
+)
+def test_pallas_matmul_explicit_blocks(block):
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((64, 64)).astype(np.float32)
+    y = rng.standard_normal((64, 64)).astype(np.float32)
+    got = np.asarray(kron.matmul(x, y, block_rows=block, block_cols=block))
+    assert_allclose(got, x @ y, rtol=1e-5, atol=1e-5)
+
+
+@given(
+    m=st.integers(2, 24),
+    q=st.integers(2, 24),
+    n=st.integers(1, 60),
+    nbar=st.integers(1, 60),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kron_matvec_core_matches_theorem1_loop(m, q, n, nbar, seed):
+    rng = np.random.default_rng(seed)
+    from compile import model
+
+    d, t, rows, cols, a = model.random_problem(rng, m, q, n, nbar)
+    w = np.zeros((q, m), dtype=np.float32)
+    np.add.at(w, (cols[:, 1], cols[:, 0]), a)
+    got = np.asarray(kron.kron_matvec_core(d, t, w, rows[:, 0], rows[:, 1]))
+    want = ref.gvt_entry_loop(d, t, rows, cols, a)
+    assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_block_picker_divides():
+    for dim in [1, 7, 64, 96, 100, 128, 1000]:
+        b = kron._pick_block(dim)
+        assert dim % b == 0
+        assert 1 <= b <= 128

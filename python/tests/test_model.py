@@ -1,0 +1,80 @@
+"""L2 correctness: the pairwise mat-vec compositions (Corollary 1) vs the
+Table 3 closed-form kernel matrices — the same oracle relationship the
+rust tests enforce, pinned at the JAX layer too."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import ref
+
+settings.register_profile("model", max_examples=12, deadline=None)
+settings.load_profile("model")
+
+HETEROGENEOUS = ["linear", "poly2d", "kronecker", "cartesian"]
+HOMOGENEOUS = ["symmetric", "antisymmetric", "ranking", "mlpk"]
+
+
+def _case(rng, m, q, n, nbar):
+    d, t, rows, cols, a = model.random_problem(rng, m, q, n, nbar)
+    return d, t, rows, cols, a
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_heterogeneous_kernels_match_closed_form(seed):
+    rng = np.random.default_rng(seed)
+    m, q, n, nbar = 7, 5, 30, 20
+    d, t, rows, cols, a = _case(rng, m, q, n, nbar)
+    for kernel in HETEROGENEOUS:
+        got = np.asarray(
+            model.pairwise_matvec(
+                kernel, d, t, rows[:, 0], rows[:, 1], cols[:, 0], cols[:, 1], a
+            )
+        )
+        k_mat = ref.pairwise_kernel_matrix(kernel, d, t, rows, cols)
+        want = k_mat @ np.asarray(a, dtype=np.float64)
+        assert_allclose(got, want, rtol=2e-3, atol=2e-3, err_msg=kernel)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_homogeneous_kernels_match_closed_form(seed):
+    rng = np.random.default_rng(seed)
+    m = 6  # homogeneous: both slots index the same domain
+    d, _, rows, cols, a = _case(rng, m, m, 25, 15)
+    for kernel in HOMOGENEOUS:
+        got = np.asarray(
+            model.pairwise_matvec(
+                kernel, d, d, rows[:, 0], rows[:, 1], cols[:, 0], cols[:, 1], a
+            )
+        )
+        k_mat = ref.pairwise_kernel_matrix(kernel, d, d, rows, cols)
+        want = k_mat @ np.asarray(a, dtype=np.float64)
+        assert_allclose(got, want, rtol=2e-3, atol=2e-3, err_msg=kernel)
+
+
+def test_gvt_matvec_shapes():
+    rng = np.random.default_rng(3)
+    d, t, rows, cols, a = _case(rng, 9, 4, 40, 13)
+    p = model.gvt_matvec(d, t, rows[:, 0], rows[:, 1], cols[:, 0], cols[:, 1], a)
+    assert p.shape == (13,)
+
+
+def test_scatter_accumulates_duplicates():
+    # Two coefficients on the same (t, d) cell must add.
+    w = model.scatter_coefficients(
+        np.array([2, 2], dtype=np.int32),
+        np.array([1, 1], dtype=np.int32),
+        np.array([0.5, 0.25], dtype=np.float32),
+        q=3,
+        m=4,
+    )
+    w = np.asarray(w)
+    assert w[1, 2] == 0.75
+    assert w.sum() == 0.75
+
+
+def test_mlpk_term_table_has_ten_terms():
+    # §6.4: "the MLPK slowest because it has 10 such terms".
+    assert len(model.PAIRWISE_TERMS["mlpk"]) == 10
+    assert len(model.PAIRWISE_TERMS["kronecker"]) == 1

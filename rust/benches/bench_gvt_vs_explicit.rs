@@ -1,0 +1,91 @@
+//! Theorem 1 / Figure 7 (time panel): GVT vs explicit kernel mat-vec
+//! scaling in n, plus the GVT factorization ablation (sparse-left /
+//! sparse-right / dense-GEMM / auto).
+//!
+//! Expected shape: explicit cost grows ~n² (and its build dominates);
+//! GVT grows ~n·(m+q). Crossover is below the smallest size here.
+
+use gvt_rls::bench::{BenchConfig, BenchSuite};
+use gvt_rls::data::kernel_filling::KernelFillingConfig;
+use gvt_rls::gvt::explicit::ExplicitLinOp;
+use gvt_rls::gvt::pairwise::{PairwiseKernel, PairwiseLinOp};
+use gvt_rls::gvt::vec_trick::GvtPolicy;
+use gvt_rls::solvers::linear_op::LinOp;
+use std::hint::black_box;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let mut suite = BenchSuite::new();
+    let quick = std::env::var("GVT_RLS_BENCH_QUICK").is_ok();
+    let k = if quick { 64 } else { 192 };
+    let sizes: &[usize] = if quick { &[500, 2000] } else { &[1_000, 4_000, 16_000] };
+
+    println!("# bench_gvt_vs_explicit — Theorem 1 scaling (k = {k} drugs)\n");
+    for &n in sizes {
+        let data = KernelFillingConfig::small().generate(k, n, 42);
+        let a: Vec<f64> = (0..n).map(|i| ((i % 13) as f64) - 6.0).collect();
+
+        let op = PairwiseLinOp::new(
+            PairwiseKernel::Kronecker,
+            data.d.clone(),
+            data.t.clone(),
+            data.pairs.clone(),
+            data.pairs.clone(),
+            GvtPolicy::Auto,
+        )
+        .unwrap();
+        suite.run(&format!("gvt matvec n={n}"), &cfg, || {
+            black_box(op.matvec(black_box(&a)));
+        });
+
+        // Explicit baseline: build once (time it separately), then matvec.
+        if n <= 16_000 {
+            suite.run(&format!("explicit BUILD n={n}"), &cfg, || {
+                black_box(ExplicitLinOp::new(
+                    PairwiseKernel::Kronecker,
+                    &data.d,
+                    &data.t,
+                    &data.pairs,
+                    &data.pairs,
+                ));
+            });
+            let exp = ExplicitLinOp::new(
+                PairwiseKernel::Kronecker,
+                &data.d,
+                &data.t,
+                &data.pairs,
+                &data.pairs,
+            );
+            suite.run(&format!("explicit matvec n={n}"), &cfg, || {
+                black_box(exp.apply(black_box(&a)));
+            });
+        }
+    }
+
+    // Factorization ablation at a fixed size.
+    let n = if quick { 2000 } else { 16_000 };
+    let data = KernelFillingConfig::small().generate(k, n, 43);
+    let a: Vec<f64> = (0..n).map(|i| ((i % 5) as f64) - 2.0).collect();
+    println!("\n## factorization ablation (n = {n}, density {:.0}%)\n", 100.0 * data.density());
+    for policy in [
+        GvtPolicy::SparseLeft,
+        GvtPolicy::SparseRight,
+        GvtPolicy::Dense,
+        GvtPolicy::Auto,
+    ] {
+        let op = PairwiseLinOp::new(
+            PairwiseKernel::Kronecker,
+            data.d.clone(),
+            data.t.clone(),
+            data.pairs.clone(),
+            data.pairs.clone(),
+            policy,
+        )
+        .unwrap();
+        suite.run(&format!("gvt {policy:?} n={n}"), &cfg, || {
+            black_box(op.matvec(black_box(&a)));
+        });
+    }
+
+    println!("\n{}", suite.table());
+}

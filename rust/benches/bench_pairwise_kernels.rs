@@ -1,0 +1,52 @@
+//! Corollary 1 / §6.4: per-kernel mat-vec cost. "The Kronecker kernel is
+//! fastest of these because it has only one term and the MLPK slowest
+//! because it has 10 such terms" — this bench regenerates that ordering.
+
+use gvt_rls::bench::{BenchConfig, BenchSuite};
+use gvt_rls::data::kernel_filling::KernelFillingConfig;
+use gvt_rls::gvt::pairwise::{PairwiseKernel, PairwiseLinOp};
+use gvt_rls::gvt::vec_trick::GvtPolicy;
+use std::hint::black_box;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let mut suite = BenchSuite::new();
+    let quick = std::env::var("GVT_RLS_BENCH_QUICK").is_ok();
+    let (k, n) = if quick { (64, 2_000) } else { (192, 16_000) };
+    let data = KernelFillingConfig::small().generate(k, n, 42);
+    let a: Vec<f64> = (0..n).map(|i| ((i % 9) as f64) - 4.0).collect();
+
+    println!("# bench_pairwise_kernels — per-kernel GVT mat-vec (n = {n}, m = q = {k})\n");
+    let mut order: Vec<(String, f64, usize)> = Vec::new();
+    for kernel in PairwiseKernel::ALL {
+        let op = PairwiseLinOp::new(
+            kernel,
+            data.d.clone(),
+            data.t.clone(),
+            data.pairs.clone(),
+            data.pairs.clone(),
+            GvtPolicy::Auto,
+        )
+        .unwrap();
+        let r = suite.run(
+            &format!("{:<14} ({} terms)", kernel.name(), op.term_count()),
+            &cfg,
+            || {
+                black_box(op.matvec(black_box(&a)));
+            },
+        );
+        order.push((kernel.name().to_string(), r.mean.as_secs_f64(), op.term_count()));
+    }
+
+    println!("\n{}", suite.table());
+
+    // Paper-shape check: Kronecker fastest, MLPK slowest.
+    let kron = order.iter().find(|(n, _, _)| n == "kronecker").unwrap().1;
+    let mlpk = order.iter().find(|(n, _, _)| n == "mlpk").unwrap().1;
+    println!(
+        "kronecker {:.4}ms vs mlpk {:.4}ms → ratio {:.1}× (paper: ~10 terms vs 1)",
+        kron * 1e3,
+        mlpk * 1e3,
+        mlpk / kron
+    );
+}

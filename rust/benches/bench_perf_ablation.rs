@@ -1,0 +1,81 @@
+//! §Perf ablation driver: in-process A/B of hot-path variants with
+//! min-of-N statistics (robust to the shared-box noise that defeats
+//! mean/median comparisons across processes).
+
+use gvt_rls::data::kernel_filling::KernelFillingConfig;
+use gvt_rls::gvt::pairwise::{PairwiseKernel, PairwiseLinOp};
+use gvt_rls::gvt::vec_trick::GvtPolicy;
+use std::hint::black_box;
+use std::time::Instant;
+
+fn min_time<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t = Instant::now();
+        f();
+        best = best.min(t.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn main() {
+    let quick = std::env::var("GVT_RLS_BENCH_QUICK").is_ok();
+    let (k, n, reps) = if quick { (64, 2000, 10) } else { (192, 16_000, 60) };
+    let data = KernelFillingConfig::small().generate(k, n, 42);
+    let a: Vec<f64> = (0..n).map(|i| ((i % 13) as f64) - 6.0).collect();
+    println!("# perf ablation (k={k}, n={n}, min of {reps})\n");
+    for policy in [GvtPolicy::SparseLeft, GvtPolicy::SparseRight, GvtPolicy::Dense, GvtPolicy::Auto] {
+        let op = PairwiseLinOp::new(
+            PairwiseKernel::Kronecker,
+            data.d.clone(), data.t.clone(), data.pairs.clone(), data.pairs.clone(), policy,
+        ).unwrap();
+        let t = min_time(reps, || { black_box(op.matvec(black_box(&a))); });
+        println!("kron {policy:?}: {:.3} ms", t * 1e3);
+    }
+    for kernel in [PairwiseKernel::Poly2D, PairwiseKernel::Mlpk] {
+        let op = PairwiseLinOp::new(
+            kernel, data.d.clone(), data.t.clone(), data.pairs.clone(), data.pairs.clone(), GvtPolicy::Auto,
+        ).unwrap();
+        let t = min_time(reps / 2, || { black_box(op.matvec(black_box(&a))); });
+        println!("{}: {:.3} ms", kernel.name(), t * 1e3);
+    }
+
+    // Cartesian: the paper's GVT formulation vs the Kashima (2009b)
+    // Kronecker-sum shortcut it improves on (§4.8).
+    {
+        let op = PairwiseLinOp::new(
+            PairwiseKernel::Cartesian,
+            data.d.clone(), data.t.clone(), data.pairs.clone(), data.pairs.clone(), GvtPolicy::Auto,
+        ).unwrap();
+        let t_gvt = min_time(reps, || { black_box(op.matvec(black_box(&a))); });
+        let t_kashima = min_time(reps, || {
+            black_box(gvt_rls::gvt::kashima::cartesian_matvec_kashima(
+                &data.d, &data.t, &data.pairs, &data.pairs, black_box(&a),
+            ));
+        });
+        println!("cartesian GVT: {:.3} ms | Kashima O(m²q+q²m): {:.3} ms", t_gvt * 1e3, t_kashima * 1e3);
+    }
+
+    // Third-order GVT (the §7 extension).
+    {
+        use gvt_rls::gvt::tensor::{gvt3_matvec, TripletIndex};
+        use gvt_rls::rng::{dist, Rng, Xoshiro256};
+        use gvt_rls::testing::gen;
+        let mut rng = Xoshiro256::seed_from(9);
+        let (m, q, c, n3) = (48, 48, 12, n);
+        let d = gen::psd_kernel(&mut rng, m);
+        let t = gen::psd_kernel(&mut rng, q);
+        let cm = gen::psd_kernel(&mut rng, c);
+        let trip = TripletIndex::new(
+            (0..n3).map(|_| rng.index(m) as u32).collect(),
+            (0..n3).map(|_| rng.index(q) as u32).collect(),
+            (0..n3).map(|_| rng.index(c) as u32).collect(),
+            m, q, c,
+        );
+        let a3 = dist::normal_vec(&mut rng, n3);
+        let t3 = min_time(reps / 2, || {
+            black_box(gvt3_matvec(&d, &t, &cm, &trip, &trip, black_box(&a3)));
+        });
+        println!("gvt3 (m=q=48, c=12, n={n3}): {:.3} ms", t3 * 1e3);
+    }
+}

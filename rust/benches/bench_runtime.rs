@@ -1,0 +1,60 @@
+//! The three-layer bridge: rust-native GVT vs the AOT-compiled JAX/Pallas
+//! artifact (PJRT CPU) on identical Kronecker mat-vecs. Not a paper
+//! figure — this is the ablation for DESIGN.md §Hardware-Adaptation: the
+//! dense artifact formulation costs O(q²m) FLOPs vs the sparse O(n(m+q)),
+//! so on CPU the sparse rust path should win at low density and the gap
+//! should close as density → 1.
+
+use gvt_rls::bench::{BenchConfig, BenchSuite};
+use gvt_rls::gvt::vec_trick::{gvt_matvec, GvtPolicy};
+use gvt_rls::rng::{dist, Xoshiro256};
+use gvt_rls::runtime::{KronExec, Registry};
+use gvt_rls::testing::gen;
+use std::hint::black_box;
+
+fn main() {
+    let Some(reg) = Registry::discover() else {
+        println!("bench_runtime SKIPPED: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    let cfg = BenchConfig::from_env();
+    let mut suite = BenchSuite::new();
+    let quick = std::env::var("GVT_RLS_BENCH_QUICK").is_ok();
+
+    let m = if quick { 64 } else { 128 };
+    let meta = reg.pick(m, m).expect("no artifact bucket").clone();
+    let exec = KronExec::load(&reg, &meta).expect("compile artifact");
+    println!("# bench_runtime — rust GVT vs XLA artifact {} \n", meta.name);
+
+    let mut rng = Xoshiro256::seed_from(42);
+    let d = gen::psd_kernel(&mut rng, m);
+    let t = gen::psd_kernel(&mut rng, m);
+
+    for density in [0.05, 0.25, 1.0] {
+        let n = ((m * m) as f64 * density) as usize;
+        let cols = gen::pair_sample(&mut rng, n, m, m);
+        let rows = gen::pair_sample(&mut rng, n, m, m);
+        let a = dist::normal_vec(&mut rng, n);
+
+        suite.run(&format!("rust gvt  m={m} density={density}"), &cfg, || {
+            black_box(gvt_matvec(
+                black_box(&d),
+                &t,
+                &rows,
+                &cols,
+                black_box(&a),
+                GvtPolicy::Auto,
+            ));
+        });
+        suite.run(&format!("xla kron  m={m} density={density}"), &cfg, || {
+            black_box(exec.matvec(black_box(&d), &t, &rows, &cols, black_box(&a)).unwrap());
+        });
+    }
+
+    println!("\n{}", suite.table());
+    println!(
+        "(the XLA path includes per-call host↔device literal transfers; \
+         on a real TPU the dense formulation amortizes those over MXU \
+         throughput — see DESIGN.md §Hardware-Adaptation)"
+    );
+}

@@ -1,0 +1,84 @@
+//! Solver-layer benches: MINRES iteration cost through GVT vs explicit
+//! operators (the per-iteration costs behind Figure 7's time panel), and
+//! Figure 3's iteration-count-to-optimum by setting.
+
+use gvt_rls::bench::{BenchConfig, BenchSuite};
+use gvt_rls::data::kernel_filling::KernelFillingConfig;
+use gvt_rls::gvt::explicit::ExplicitLinOp;
+use gvt_rls::gvt::pairwise::{PairwiseKernel, PairwiseLinOp};
+use gvt_rls::gvt::vec_trick::GvtPolicy;
+use gvt_rls::solvers::linear_op::ShiftedOp;
+use gvt_rls::solvers::minres::{minres, MinresOptions};
+use gvt_rls::solvers::ridge::{PairwiseRidge, RidgeConfig};
+use std::hint::black_box;
+use std::ops::ControlFlow;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let mut suite = BenchSuite::new();
+    let quick = std::env::var("GVT_RLS_BENCH_QUICK").is_ok();
+    let (k, n, iters) = if quick { (48, 1_500, 10) } else { (128, 8_000, 25) };
+    let data = KernelFillingConfig::small().generate(k, n, 42);
+
+    println!("# bench_solvers — MINRES training cost (n = {n}, {iters} iterations)\n");
+
+    let gvt_op = PairwiseLinOp::new(
+        PairwiseKernel::Kronecker,
+        data.d.clone(),
+        data.t.clone(),
+        data.pairs.clone(),
+        data.pairs.clone(),
+        GvtPolicy::Auto,
+    )
+    .unwrap();
+    suite.run(&format!("minres {iters} iters, GVT operator"), &cfg, || {
+        let shifted = ShiftedOp::new(&gvt_op, 1e-5);
+        black_box(minres(
+            &shifted,
+            black_box(&data.y),
+            &MinresOptions { max_iters: iters, rel_tol: 0.0 },
+            |_, _, _| ControlFlow::Continue(()),
+        ));
+    });
+
+    if n <= 8_000 {
+        let exp_op = ExplicitLinOp::new(
+            PairwiseKernel::Kronecker,
+            &data.d,
+            &data.t,
+            &data.pairs,
+            &data.pairs,
+        );
+        suite.run(&format!("minres {iters} iters, explicit operator"), &cfg, || {
+            let shifted = ShiftedOp::new(&exp_op, 1e-5);
+            black_box(minres(
+                &shifted,
+                black_box(&data.y),
+                &MinresOptions { max_iters: iters, rel_tol: 0.0 },
+                |_, _, _| ControlFlow::Continue(()),
+            ));
+        });
+    }
+
+    println!("\n{}", suite.table());
+
+    // Figure 3/7 iterations panel: optimal iteration count per setting.
+    println!("## iterations to optimal validation AUC by setting (Kronecker)\n");
+    let rcfg = RidgeConfig { max_iters: if quick { 30 } else { 100 }, patience: 10, ..Default::default() };
+    for setting in 1..=4u8 {
+        let split = data.split_setting(setting, 0.25, 7);
+        let inner = split.train.split_setting(setting, 0.25, 8);
+        if inner.train.is_empty() || inner.test.is_empty() {
+            continue;
+        }
+        let (best, _) = PairwiseRidge::find_optimal_iters(
+            &inner.train,
+            &inner.test,
+            PairwiseKernel::Kronecker,
+            &rcfg,
+        )
+        .unwrap();
+        println!("setting {setting}: optimal at {best} iterations");
+    }
+    println!("\n(paper shape: setting 1 needs most iterations, setting 4 fewest)");
+}

@@ -1,0 +1,215 @@
+//! Benchmark harness (criterion is unavailable offline).
+//!
+//! Plain `harness = false` bench binaries drive this: adaptive iteration
+//! count against a wall-clock budget, warmup, median/mean/σ, and markdown
+//! output. Deliberately simple — the benches compare *methods against each
+//! other* (GVT vs explicit, kernel vs kernel), so relative numbers are
+//! what matters.
+
+use std::time::{Duration, Instant};
+
+/// Statistics of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchResult {
+    /// Milliseconds mean (series plotting).
+    pub fn mean_ms(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e3
+    }
+}
+
+/// Harness configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    /// Total measurement budget per benchmark.
+    pub budget: Duration,
+    /// Warmup runs (not measured).
+    pub warmup: usize,
+    /// Max measured iterations.
+    pub max_iters: usize,
+    /// Min measured iterations.
+    pub min_iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            budget: Duration::from_secs(2),
+            warmup: 2,
+            max_iters: 50,
+            min_iters: 3,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Quick config for smoke runs (`GVT_RLS_BENCH_QUICK=1`).
+    pub fn from_env() -> Self {
+        if std::env::var("GVT_RLS_BENCH_QUICK").is_ok() {
+            Self {
+                budget: Duration::from_millis(300),
+                warmup: 1,
+                max_iters: 5,
+                min_iters: 1,
+            }
+        } else {
+            Self::default()
+        }
+    }
+}
+
+/// Run one benchmark: call `f` repeatedly under the budget. `f` should
+/// perform the full operation under test (use `std::hint::black_box` on
+/// inputs/outputs inside).
+pub fn bench<F: FnMut()>(name: &str, cfg: &BenchConfig, mut f: F) -> BenchResult {
+    for _ in 0..cfg.warmup {
+        f();
+    }
+    let mut samples: Vec<Duration> = Vec::new();
+    let start = Instant::now();
+    while samples.len() < cfg.min_iters
+        || (start.elapsed() < cfg.budget && samples.len() < cfg.max_iters)
+    {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    summarize(name, &samples)
+}
+
+fn summarize(name: &str, samples: &[Duration]) -> BenchResult {
+    let mut sorted = samples.to_vec();
+    sorted.sort();
+    let n = sorted.len();
+    let total: Duration = sorted.iter().sum();
+    let mean = total / (n as u32);
+    let median = sorted[n / 2];
+    let mean_s = mean.as_secs_f64();
+    let var = sorted
+        .iter()
+        .map(|d| {
+            let x = d.as_secs_f64() - mean_s;
+            x * x
+        })
+        .sum::<f64>()
+        / n as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters: n,
+        mean,
+        median,
+        stddev: Duration::from_secs_f64(var.sqrt()),
+        min: sorted[0],
+        max: sorted[n - 1],
+    }
+}
+
+/// Pretty-print duration adaptively.
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} µs", s * 1e6)
+    }
+}
+
+/// Collects results and prints a markdown table at the end.
+#[derive(Default)]
+pub struct BenchSuite {
+    results: Vec<BenchResult>,
+}
+
+impl BenchSuite {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Run and record one benchmark, echoing a progress line.
+    pub fn run<F: FnMut()>(&mut self, name: &str, cfg: &BenchConfig, f: F) -> &BenchResult {
+        let r = bench(name, cfg, f);
+        println!(
+            "  {:<52} {:>12} (median {:>12}, n={})",
+            r.name,
+            fmt_duration(r.mean),
+            fmt_duration(r.median),
+            r.iters
+        );
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Markdown summary table.
+    pub fn table(&self) -> String {
+        let mut out = String::from(
+            "| benchmark                                            |        mean |      median |      stddev | iters |\n\
+             |------------------------------------------------------|-------------|-------------|-------------|-------|\n",
+        );
+        for r in &self.results {
+            out.push_str(&format!(
+                "| {:<52} | {:>11} | {:>11} | {:>11} | {:>5} |\n",
+                r.name,
+                fmt_duration(r.mean),
+                fmt_duration(r.median),
+                fmt_duration(r.stddev),
+                r.iters
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_work() {
+        let cfg = BenchConfig {
+            budget: Duration::from_millis(50),
+            warmup: 1,
+            max_iters: 10,
+            min_iters: 2,
+        };
+        let r = bench("spin", &cfg, || {
+            std::hint::black_box((0..10_000).sum::<u64>());
+        });
+        assert!(r.iters >= 2);
+        assert!(r.min <= r.median && r.median <= r.max);
+    }
+
+    #[test]
+    fn suite_table_contains_rows() {
+        let mut s = BenchSuite::new();
+        let cfg = BenchConfig {
+            budget: Duration::from_millis(10),
+            warmup: 0,
+            max_iters: 2,
+            min_iters: 1,
+        };
+        s.run("noop", &cfg, || {});
+        assert!(s.table().contains("noop"));
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(Duration::from_secs(2)), "2.000 s");
+        assert_eq!(fmt_duration(Duration::from_millis(5)), "5.000 ms");
+        assert_eq!(fmt_duration(Duration::from_micros(7)), "7.0 µs");
+    }
+}

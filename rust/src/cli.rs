@@ -1,0 +1,122 @@
+//! Hand-rolled CLI argument parsing (no clap offline).
+//!
+//! Grammar: `gvt-rls <subcommand> [--flag value]... [--switch]... [key=value]...`
+//! Positional `key=value` tokens become config overrides.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Cli {
+    /// First positional token (the subcommand).
+    pub command: String,
+    /// `--name value` options.
+    pub options: BTreeMap<String, String>,
+    /// `--name` switches with no value.
+    pub switches: Vec<String>,
+    /// Positional `key=value` overrides.
+    pub overrides: Vec<String>,
+    /// Remaining bare positionals.
+    pub positionals: Vec<String>,
+}
+
+impl Cli {
+    /// Parse from an argument iterator (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Cli> {
+        let mut cli = Cli::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare '--' is not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    cli.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    cli.options.insert(name.to_string(), v);
+                } else {
+                    cli.switches.push(name.to_string());
+                }
+            } else if cli.command.is_empty() {
+                cli.command = arg;
+            } else if arg.contains('=') {
+                cli.overrides.push(arg);
+            } else {
+                cli.positionals.push(arg);
+            }
+        }
+        Ok(cli)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} {v}: not an integer")),
+        }
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} {v}: not an integer")),
+        }
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name} {v}: not a number")),
+        }
+    }
+
+    pub fn has_switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Cli {
+        Cli::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_options_switches() {
+        let c = parse("experiment fig4 --folds 9 --quick --seed=42 lambda=1e-5");
+        assert_eq!(c.command, "experiment");
+        assert_eq!(c.positionals, vec!["fig4"]);
+        assert_eq!(c.opt("folds"), Some("9"));
+        assert!(c.has_switch("quick"));
+        assert_eq!(c.opt_u64("seed", 0).unwrap(), 42);
+        assert_eq!(c.overrides, vec!["lambda=1e-5"]);
+    }
+
+    #[test]
+    fn option_followed_by_option() {
+        let c = parse("train --verbose --kernel kronecker");
+        assert!(c.has_switch("verbose"));
+        assert_eq!(c.opt("kernel"), Some("kronecker"));
+    }
+
+    #[test]
+    fn numeric_errors() {
+        let c = parse("x --n abc");
+        assert!(c.opt_usize("n", 1).is_err());
+    }
+}

@@ -1,0 +1,138 @@
+//! Minimal `key = value` config format for the CLI (no serde offline).
+//!
+//! ```text
+//! # comment
+//! dataset  = metz
+//! kernel   = kronecker
+//! setting  = 1
+//! lambda   = 1e-5
+//! folds    = 9
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Parsed config: ordered key → value map with typed accessors.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    /// Parse from text. Later keys override earlier ones.
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut values = BTreeMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("config line {}: expected 'key = value', got {raw:?}", lineno + 1);
+            };
+            values.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(Config { values })
+    }
+
+    /// Load from a file.
+    pub fn load(path: &str) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        Self::parse(&text)
+    }
+
+    /// Build from `key=value` CLI overrides.
+    pub fn from_overrides(args: &[String]) -> Result<Config> {
+        Self::parse(&args.join("\n"))
+    }
+
+    /// Merge `other` over `self`.
+    pub fn merged(mut self, other: &Config) -> Config {
+        for (k, v) in &other.values {
+            self.values.insert(k.clone(), v.clone());
+        }
+        self
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("config {key}={v}: not a number")),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("config {key}={v}: not an integer")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("config {key}={v}: not an integer")),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => bail!("config {key}={v}: expected true/false"),
+        }
+    }
+
+    /// Keys present (for validation / help output).
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_comments_and_types() {
+        let c = Config::parse(
+            "# experiment\nkernel = kronecker\nlambda = 1e-5 # small\nfolds=9\nverbose = true\n",
+        )
+        .unwrap();
+        assert_eq!(c.get_str("kernel", "x"), "kronecker");
+        assert_eq!(c.get_f64("lambda", 0.0).unwrap(), 1e-5);
+        assert_eq!(c.get_usize("folds", 0).unwrap(), 9);
+        assert!(c.get_bool("verbose", false).unwrap());
+        assert_eq!(c.get_usize("missing", 3).unwrap(), 3);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Config::parse("just words").is_err());
+    }
+
+    #[test]
+    fn merge_overrides() {
+        let a = Config::parse("x = 1\ny = 2").unwrap();
+        let b = Config::parse("y = 3").unwrap();
+        let m = a.merged(&b);
+        assert_eq!(m.get_usize("x", 0).unwrap(), 1);
+        assert_eq!(m.get_usize("y", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn bad_type_errors() {
+        let c = Config::parse("lambda = abc").unwrap();
+        assert!(c.get_f64("lambda", 0.0).is_err());
+    }
+}

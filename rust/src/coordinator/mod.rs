@@ -1,0 +1,26 @@
+//! L3 experiment coordination.
+//!
+//! The paper's evaluation is a grid of (dataset, feature view, pairwise
+//! kernel, setting) cells, each trained with 9-fold CV + inner early
+//! stopping. This module is the leader/worker machinery that runs that
+//! grid:
+//!
+//! * [`experiment`] — one cell: CV folds, the paper's training protocol,
+//!   AUC/iterations/time/memory accounting.
+//! * [`runner`] — a leader thread + worker pool draining a job queue
+//!   (no rayon offline; this is a from-scratch work-stealing-free pool).
+//! * [`memory`] — tracking allocator + VmHWM reader for the Figure 7
+//!   memory series.
+//! * [`report`] — markdown/CSV emitters shaped like the paper's figures.
+//! * [`config`] — a small `key = value` config format for the CLI.
+
+pub mod config;
+pub mod experiment;
+pub mod figures;
+pub mod memory;
+pub mod report;
+pub mod runner;
+pub mod tuning;
+
+pub use experiment::{run_cv_experiment, ExperimentResult, ExperimentSpec};
+pub use runner::run_grid;

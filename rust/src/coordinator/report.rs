@@ -1,0 +1,166 @@
+//! Report emitters: markdown tables shaped like the paper's figures and a
+//! CSV sink for downstream plotting.
+
+use crate::coordinator::experiment::ExperimentResult;
+use crate::gvt::pairwise::PairwiseKernel;
+
+/// Render a grid of results as the paper's figure layout: one row per
+/// (dataset/feature, kernel), one column per setting, cells `AUC ± std`.
+pub fn auc_table(results: &[&ExperimentResult]) -> String {
+    // Collect distinct (name, kernel) rows and settings columns, in order.
+    let mut rows: Vec<(String, PairwiseKernel)> = Vec::new();
+    let mut settings: Vec<u8> = Vec::new();
+    for r in results {
+        let key = (r.name.clone(), r.kernel);
+        if !rows.contains(&key) {
+            rows.push(key);
+        }
+        if !settings.contains(&r.setting) {
+            settings.push(r.setting);
+        }
+    }
+    settings.sort_unstable();
+
+    let mut out = String::new();
+    out.push_str(&format!("| {:<28} | {:<13} |", "dataset", "kernel"));
+    for s in &settings {
+        out.push_str(&format!(" Setting {s}      |"));
+    }
+    out.push('\n');
+    out.push_str(&format!("|{}|{}|", "-".repeat(30), "-".repeat(15)));
+    for _ in &settings {
+        out.push_str(&format!("{}|", "-".repeat(16)));
+    }
+    out.push('\n');
+    for (name, kernel) in &rows {
+        out.push_str(&format!("| {:<28} | {:<13} |", name, kernel.name()));
+        for s in &settings {
+            let cell = results
+                .iter()
+                .find(|r| &r.name == name && r.kernel == *kernel && r.setting == *s)
+                .map(|r| r.auc.format())
+                .unwrap_or_else(|| "—".into());
+            out.push_str(&format!(" {cell:<14} |"));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// CSV with one row per (cell, metric) for plotting.
+pub fn results_csv(results: &[&ExperimentResult]) -> String {
+    let mut out = String::from(
+        "dataset,kernel,setting,auc_mean,auc_std,iters_mean,train_secs_mean,folds,failed\n",
+    );
+    for r in results {
+        out.push_str(&format!(
+            "{},{},{},{:.4},{:.4},{:.1},{:.4},{},{}\n",
+            r.name,
+            r.kernel.name(),
+            r.setting,
+            r.auc.mean(),
+            r.auc.std(),
+            r.iterations.mean(),
+            r.train_secs.mean(),
+            r.auc.count(),
+            r.failed_folds
+        ));
+    }
+    out
+}
+
+/// A labeled numeric series (the scalability figures print these).
+pub struct Series {
+    pub label: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+/// Render aligned series as a markdown table: first column x, one column
+/// per series (the Figure 7/9 panels: CPU time / memory / AUC vs N).
+pub fn series_table(x_label: &str, series: &[Series]) -> String {
+    let mut xs: Vec<f64> = Vec::new();
+    for s in series {
+        for &(x, _) in &s.points {
+            if !xs.iter().any(|&v| (v - x).abs() < 1e-9) {
+                xs.push(x);
+            }
+        }
+    }
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    let mut out = format!("| {x_label:>12} |");
+    for s in series {
+        out.push_str(&format!(" {:>14} |", s.label));
+    }
+    out.push('\n');
+    out.push_str(&format!("|{}|", "-".repeat(14)));
+    for _ in series {
+        out.push_str(&format!("{}|", "-".repeat(16)));
+    }
+    out.push('\n');
+    for &x in &xs {
+        out.push_str(&format!("| {x:>12.0} |"));
+        for s in series {
+            let v = s.points.iter().find(|(px, _)| (px - x).abs() < 1e-9);
+            match v {
+                Some((_, y)) => out.push_str(&format!(" {y:>14.4} |")),
+                None => out.push_str(&format!(" {:>14} |", "—")),
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::FoldStats;
+
+    fn fake(name: &str, kernel: PairwiseKernel, setting: u8, auc: f64) -> ExperimentResult {
+        let mut s = FoldStats::new();
+        s.push(auc);
+        s.push(auc + 0.01);
+        ExperimentResult {
+            name: name.into(),
+            kernel,
+            setting,
+            auc: s,
+            iterations: FoldStats::new(),
+            train_secs: FoldStats::new(),
+            failed_folds: 0,
+        }
+    }
+
+    #[test]
+    fn auc_table_has_row_per_kernel_and_col_per_setting() {
+        let r1 = fake("d", PairwiseKernel::Linear, 1, 0.8);
+        let r2 = fake("d", PairwiseKernel::Linear, 2, 0.7);
+        let r3 = fake("d", PairwiseKernel::Kronecker, 1, 0.9);
+        let t = auc_table(&[&r1, &r2, &r3]);
+        assert!(t.contains("Setting 1"));
+        assert!(t.contains("Setting 2"));
+        assert!(t.contains("linear"));
+        assert!(t.contains("kronecker"));
+        // Kronecker has no setting-2 cell -> em dash.
+        assert!(t.contains("—"));
+    }
+
+    #[test]
+    fn csv_emits_one_line_per_result() {
+        let r1 = fake("d", PairwiseKernel::Linear, 1, 0.8);
+        let csv = results_csv(&[&r1]);
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.lines().nth(1).unwrap().starts_with("d,linear,1,"));
+    }
+
+    #[test]
+    fn series_table_aligns_on_x() {
+        let s1 = Series { label: "gvt".into(), points: vec![(1000.0, 0.5), (2000.0, 1.0)] };
+        let s2 = Series { label: "naive".into(), points: vec![(1000.0, 5.0)] };
+        let t = series_table("N", &[s1, s2]);
+        assert!(t.contains("1000"));
+        assert!(t.contains("2000"));
+        assert!(t.contains("—"));
+    }
+}

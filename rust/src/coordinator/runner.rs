@@ -1,0 +1,133 @@
+//! Leader/worker job runner.
+//!
+//! The experiment grids (Figures 4–6 sweep dozens of cells) parallelize at
+//! the cell level: a leader thread owns the job queue, workers pull cells
+//! and run the fold loop. Inside a cell, the GVT mat-vecs themselves are
+//! threaded (see [`crate::linalg::par`]); to avoid oversubscription the
+//! runner caps cell-level workers and relies on the mat-vec threading for
+//! the rest.
+
+use crate::coordinator::experiment::{run_cv_experiment, ExperimentResult, ExperimentSpec};
+use anyhow::Result;
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// Run a grid of experiment cells across `workers` threads, preserving
+/// input order in the output. Failures are returned in-place (a failed
+/// cell doesn't abort the grid — the paper's harness runs overnight; ours
+/// should be as robust).
+pub fn run_grid(
+    specs: Vec<ExperimentSpec>,
+    workers: usize,
+) -> Vec<Result<ExperimentResult>> {
+    let n = specs.len();
+    let queue: Mutex<VecDeque<(usize, ExperimentSpec)>> =
+        Mutex::new(specs.into_iter().enumerate().collect());
+    let results: Mutex<Vec<Option<Result<ExperimentResult>>>> =
+        Mutex::new((0..n).map(|_| None).collect());
+    let workers = workers.max(1).min(n.max(1));
+
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let job = queue.lock().unwrap().pop_front();
+                let Some((idx, spec)) = job else { break };
+                let res = run_cv_experiment(&spec);
+                results.lock().unwrap()[idx] = Some(res);
+            });
+        }
+    });
+
+    results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("runner: job not completed"))
+        .collect()
+}
+
+/// Progress-reporting variant: calls `on_done(completed, total, &result)`
+/// from worker threads as cells finish (the CLI prints a live grid).
+pub fn run_grid_with_progress<F>(
+    specs: Vec<ExperimentSpec>,
+    workers: usize,
+    on_done: F,
+) -> Vec<Result<ExperimentResult>>
+where
+    F: Fn(usize, usize, &Result<ExperimentResult>) + Sync,
+{
+    let n = specs.len();
+    let queue: Mutex<VecDeque<(usize, ExperimentSpec)>> =
+        Mutex::new(specs.into_iter().enumerate().collect());
+    let results: Mutex<Vec<Option<Result<ExperimentResult>>>> =
+        Mutex::new((0..n).map(|_| None).collect());
+    let done = std::sync::atomic::AtomicUsize::new(0);
+    let workers = workers.max(1).min(n.max(1));
+
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let job = queue.lock().unwrap().pop_front();
+                let Some((idx, spec)) = job else { break };
+                let res = run_cv_experiment(&spec);
+                let c = done.fetch_add(1, std::sync::atomic::Ordering::SeqCst) + 1;
+                on_done(c, n, &res);
+                results.lock().unwrap()[idx] = Some(res);
+            });
+        }
+    });
+
+    results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("runner: job not completed"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::metz::MetzConfig;
+    use crate::gvt::pairwise::PairwiseKernel;
+    use crate::solvers::ridge::RidgeConfig;
+
+    fn spec(kernel: PairwiseKernel, setting: u8, seed: u64) -> ExperimentSpec {
+        ExperimentSpec {
+            name: format!("{}-s{setting}", kernel.name()),
+            data: MetzConfig::small().generate(seed),
+            kernel,
+            setting,
+            folds: 2,
+            ridge: RidgeConfig { max_iters: 20, patience: 3, ..Default::default() },
+            seed,
+        }
+    }
+
+    #[test]
+    fn grid_preserves_order_and_completes() {
+        let specs = vec![
+            spec(PairwiseKernel::Linear, 1, 1),
+            spec(PairwiseKernel::Kronecker, 1, 2),
+            spec(PairwiseKernel::Poly2D, 2, 3),
+        ];
+        let names: Vec<String> = specs.iter().map(|s| s.name.clone()).collect();
+        let results = run_grid(specs, 2);
+        assert_eq!(results.len(), 3);
+        for (r, n) in results.iter().zip(&names) {
+            assert_eq!(&r.as_ref().unwrap().name, n);
+        }
+    }
+
+    #[test]
+    fn progress_callback_fires_for_each_cell() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let count = AtomicUsize::new(0);
+        let specs = vec![spec(PairwiseKernel::Linear, 1, 4), spec(PairwiseKernel::Linear, 2, 5)];
+        let _ = run_grid_with_progress(specs, 2, |_, total, _| {
+            assert_eq!(total, 2);
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 2);
+    }
+}

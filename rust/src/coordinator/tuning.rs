@@ -1,0 +1,144 @@
+//! Hyperparameter selection — the λ / kernel searches behind the paper's
+//! protocol ("finding an optimal λ and stopping iterations when the model
+//! has converged", and Figure 3's comparison of the two regularization
+//! modes).
+
+use crate::data::{splits, PairDataset};
+use crate::eval::auc;
+use crate::gvt::pairwise::PairwiseKernel;
+use crate::solvers::ridge::{PairwiseRidge, RidgeConfig};
+use anyhow::Result;
+
+/// One evaluated candidate.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    pub lambda: f64,
+    pub kernel: PairwiseKernel,
+    pub validation_auc: f64,
+    pub iterations: usize,
+}
+
+/// Select λ on an inner validation split (setting-aware), training each
+/// candidate to convergence (the Figure 3 "tuned λ" mode). Returns the
+/// best candidate and the full sweep for reporting.
+pub fn select_lambda(
+    train: &PairDataset,
+    setting: u8,
+    kernel: PairwiseKernel,
+    lambdas: &[f64],
+    cfg: &RidgeConfig,
+    seed: u64,
+) -> Result<(Candidate, Vec<Candidate>)> {
+    let inner_split = splits::split_setting(train, setting, cfg.validation_fraction, seed);
+    let (inner, validation) = (&inner_split.train, &inner_split.test);
+    let val_labels = validation.binary_labels();
+    let mut sweep = Vec::new();
+    for &lambda in lambdas {
+        let c = RidgeConfig { lambda, ..cfg.clone() };
+        let model = PairwiseRidge::fit(inner, kernel, &c)?;
+        let preds = model.predict(&validation.pairs)?;
+        sweep.push(Candidate {
+            lambda,
+            kernel,
+            validation_auc: auc(&preds, &val_labels).unwrap_or(0.5),
+            iterations: model.iterations,
+        });
+    }
+    let best = sweep
+        .iter()
+        .cloned()
+        .max_by(|a, b| a.validation_auc.partial_cmp(&b.validation_auc).unwrap())
+        .expect("empty lambda grid");
+    Ok((best, sweep))
+}
+
+/// Select the pairwise kernel on an inner validation split using the
+/// early-stopping protocol per candidate. Skips kernels incompatible with
+/// the dataset's domain structure.
+pub fn select_kernel(
+    train: &PairDataset,
+    setting: u8,
+    kernels: &[PairwiseKernel],
+    cfg: &RidgeConfig,
+    seed: u64,
+) -> Result<(Candidate, Vec<Candidate>)> {
+    let inner_split = splits::split_setting(train, setting, cfg.validation_fraction, seed);
+    let (inner, validation) = (&inner_split.train, &inner_split.test);
+    let val_labels = validation.binary_labels();
+    let mut sweep = Vec::new();
+    for &kernel in kernels {
+        if !kernel.supports_heterogeneous() && !train.homogeneous {
+            continue;
+        }
+        let model = PairwiseRidge::fit_early_stopping(inner, setting, kernel, cfg, seed)?;
+        let preds = model.predict(&validation.pairs)?;
+        sweep.push(Candidate {
+            lambda: cfg.lambda,
+            kernel,
+            validation_auc: auc(&preds, &val_labels).unwrap_or(0.5),
+            iterations: model.iterations,
+        });
+    }
+    let best = sweep
+        .iter()
+        .cloned()
+        .max_by(|a, b| a.validation_auc.partial_cmp(&b.validation_auc).unwrap())
+        .expect("no applicable kernels");
+    Ok((best, sweep))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::chessboard::{ChessboardConfig, Pattern};
+    use crate::data::metz::MetzConfig;
+
+    #[test]
+    fn lambda_sweep_reports_all_candidates() {
+        let data = MetzConfig::small().generate(80);
+        let cfg = RidgeConfig { max_iters: 30, ..Default::default() };
+        let (best, sweep) = select_lambda(
+            &data,
+            1,
+            PairwiseKernel::Kronecker,
+            &[1e-4, 1e-1, 1e2],
+            &cfg,
+            3,
+        )
+        .unwrap();
+        assert_eq!(sweep.len(), 3);
+        assert!(sweep.iter().all(|c| c.validation_auc <= best.validation_auc + 1e-12));
+    }
+
+    #[test]
+    fn kernel_selection_picks_interaction_kernel_on_xor() {
+        // On the chessboard, kernel selection must reject Linear.
+        let data = ChessboardConfig::new(Pattern::Chessboard).generate(81);
+        let cfg = RidgeConfig { max_iters: 50, patience: 6, ..Default::default() };
+        let (best, sweep) = select_kernel(
+            &data,
+            1,
+            &[PairwiseKernel::Linear, PairwiseKernel::Kronecker],
+            &cfg,
+            5,
+        )
+        .unwrap();
+        assert_eq!(sweep.len(), 2);
+        assert_eq!(best.kernel, PairwiseKernel::Kronecker);
+    }
+
+    #[test]
+    fn kernel_selection_skips_homogeneous_kernels_on_heterogeneous_data() {
+        let data = MetzConfig::small().generate(82);
+        let cfg = RidgeConfig { max_iters: 15, ..Default::default() };
+        let (_, sweep) = select_kernel(
+            &data,
+            1,
+            &[PairwiseKernel::Linear, PairwiseKernel::Mlpk],
+            &cfg,
+            5,
+        )
+        .unwrap();
+        assert_eq!(sweep.len(), 1); // MLPK skipped
+    }
+}

@@ -1,0 +1,124 @@
+//! Area under the ROC curve — the paper's headline metric for every
+//! figure. Exact rank-based computation with the midrank tie correction,
+//! matching `sklearn.metrics.roc_auc_score` semantics.
+
+/// AUC of `scores` against binary `labels` (`true` = positive).
+///
+/// Returns `None` when the labels are single-class (AUC undefined).
+/// `O(n log n)` via sorting; ties among scores receive midranks so that
+/// constant predictors score exactly 0.5.
+pub fn auc(scores: &[f64], labels: &[bool]) -> Option<f64> {
+    assert_eq!(scores.len(), labels.len(), "auc: length mismatch");
+    let n = scores.len();
+    let pos = labels.iter().filter(|&&l| l).count();
+    let neg = n - pos;
+    if pos == 0 || neg == 0 {
+        return None;
+    }
+    // Sort indices by score ascending.
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).expect("NaN score in AUC"));
+    // Midranks: average rank within each tie group, 1-based.
+    let mut rank_sum_pos = 0.0f64;
+    let mut i = 0;
+    while i < n {
+        let mut j = i + 1;
+        while j < n && scores[idx[j]] == scores[idx[i]] {
+            j += 1;
+        }
+        // Ranks i+1 ..= j (1-based); midrank is their mean.
+        let midrank = ((i + 1 + j) as f64) / 2.0;
+        for &k in &idx[i..j] {
+            if labels[k] {
+                rank_sum_pos += midrank;
+            }
+        }
+        i = j;
+    }
+    // Mann–Whitney U statistic.
+    let u = rank_sum_pos - (pos * (pos + 1)) as f64 / 2.0;
+    Some(u / (pos as f64 * neg as f64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_separation() {
+        let scores = vec![0.1, 0.2, 0.8, 0.9];
+        let labels = vec![false, false, true, true];
+        assert_eq!(auc(&scores, &labels), Some(1.0));
+    }
+
+    #[test]
+    fn perfectly_wrong() {
+        let scores = vec![0.9, 0.8, 0.2, 0.1];
+        let labels = vec![false, false, true, true];
+        assert_eq!(auc(&scores, &labels), Some(0.0));
+    }
+
+    #[test]
+    fn constant_scores_give_half() {
+        let scores = vec![0.5; 10];
+        let labels: Vec<bool> = (0..10).map(|i| i % 2 == 0).collect();
+        assert_eq!(auc(&scores, &labels), Some(0.5));
+    }
+
+    #[test]
+    fn single_class_undefined() {
+        assert_eq!(auc(&[0.1, 0.2], &[true, true]), None);
+        assert_eq!(auc(&[0.1, 0.2], &[false, false]), None);
+    }
+
+    #[test]
+    fn known_small_case() {
+        // scores: pos {3, 1}, neg {2, 0}. Pairs: (3>2),(3>0),(1<2),(1>0)
+        // => 3 wins of 4 => 0.75.
+        let scores = vec![3.0, 2.0, 1.0, 0.0];
+        let labels = vec![true, false, true, false];
+        assert_eq!(auc(&scores, &labels), Some(0.75));
+    }
+
+    #[test]
+    fn ties_get_half_credit() {
+        // pos {1.0}, neg {1.0} tie => 0.5
+        let scores = vec![1.0, 1.0];
+        let labels = vec![true, false];
+        assert_eq!(auc(&scores, &labels), Some(0.5));
+    }
+
+    #[test]
+    fn matches_naive_pairwise_count() {
+        use crate::rng::{dist, Rng, Xoshiro256};
+        let mut rng = Xoshiro256::seed_from(12);
+        for trial in 0..20 {
+            let n = 30 + trial;
+            // Quantize scores to force ties.
+            let scores: Vec<f64> =
+                (0..n).map(|_| (rng.next_f64() * 8.0).floor() / 8.0).collect();
+            let labels: Vec<bool> = (0..n).map(|_| dist::bernoulli(&mut rng, 0.4)).collect();
+            if labels.iter().all(|&l| l) || labels.iter().all(|&l| !l) {
+                continue;
+            }
+            let fast = auc(&scores, &labels).unwrap();
+            // Naive O(n²): wins + half-ties.
+            let mut wins = 0.0;
+            let mut total = 0.0;
+            for i in 0..n {
+                for j in 0..n {
+                    if labels[i] && !labels[j] {
+                        total += 1.0;
+                        if scores[i] > scores[j] {
+                            wins += 1.0;
+                        } else if scores[i] == scores[j] {
+                            wins += 0.5;
+                        }
+                    }
+                }
+            }
+            let naive = wins / total;
+            assert!((fast - naive).abs() < 1e-12, "trial {trial}: {fast} vs {naive}");
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Evaluation metrics and fold aggregation.
+
+mod auc;
+mod metrics;
+mod stats;
+
+pub use auc::auc;
+pub use metrics::{pearson, rmse, spearman};
+pub use stats::FoldStats;

@@ -1,0 +1,83 @@
+//! Aggregation of per-fold metrics into the mean ± std numbers every figure
+//! in the paper reports.
+
+use crate::linalg::vecops::{mean, std_dev};
+
+/// Accumulates one metric across cross-validation folds.
+#[derive(Clone, Debug, Default)]
+pub struct FoldStats {
+    values: Vec<f64>,
+}
+
+impl FoldStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one fold's metric value. `None` (e.g. undefined AUC on a
+    /// single-class fold) is skipped but counted.
+    pub fn push(&mut self, value: impl Into<Option<f64>>) {
+        if let Some(v) = value.into() {
+            self.values.push(v);
+        }
+    }
+
+    /// Number of recorded (defined) folds.
+    pub fn count(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        mean(&self.values)
+    }
+
+    pub fn std(&self) -> f64 {
+        std_dev(&self.values)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.values.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.values.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// `"0.873 ± 0.021"` formatting used by the report tables.
+    pub fn format(&self) -> String {
+        if self.values.is_empty() {
+            "n/a".to_string()
+        } else {
+            format!("{:.3} ± {:.3}", self.mean(), self.std())
+        }
+    }
+
+    /// Raw values (for CSV emission).
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates() {
+        let mut s = FoldStats::new();
+        for v in [0.8, 0.9, 1.0] {
+            s.push(v);
+        }
+        s.push(None);
+        assert_eq!(s.count(), 3);
+        assert!((s.mean() - 0.9).abs() < 1e-12);
+        assert_eq!(s.min(), 0.8);
+        assert_eq!(s.max(), 1.0);
+        assert!(s.format().starts_with("0.900"));
+    }
+
+    #[test]
+    fn empty_formats_na() {
+        assert_eq!(FoldStats::new().format(), "n/a");
+    }
+}

@@ -1,0 +1,27 @@
+//! The paper's contribution: the generalized vec trick and the operator
+//! framework expressing pairwise kernels as sums of Kronecker products.
+//!
+//! * [`vec_trick`] — Theorem 1: `p = R(d̄,t̄)(A ⊗ B)R(d,t)ᵀ a` in
+//!   `O(min(q̄n + mn̄, m̄n + qn̄))`, with a dense scatter-GEMM-gather variant
+//!   (the formulation the JAX/Pallas artifact implements) and fast paths
+//!   for `1` (all-ones) and `I` factors.
+//! * [`terms`] — the operator algebra of Definition 1 / Theorem 2:
+//!   commutation `P` and unification `Q` act on samples as index plumbing,
+//!   so every pairwise kernel is a list of [`terms::KroneckerTerm`]s.
+//! * [`pairwise`] — Corollary 1: the nine pairwise kernels as term sums,
+//!   and [`pairwise::PairwiseLinOp`], the `K`-as-linear-operator used by
+//!   the iterative solvers.
+//! * [`explicit`] — the `O(n n̄)` explicit kernel matrices computed straight
+//!   from the Table 3 closed forms: the baseline method of §6 and the
+//!   oracle every GVT path is tested against.
+
+pub mod explicit;
+pub mod kashima;
+pub mod pairwise;
+pub mod tensor;
+pub mod terms;
+pub mod vec_trick;
+
+pub use pairwise::{PairwiseKernel, PairwiseLinOp};
+pub use terms::{Factor, IndexMap, KroneckerTerm};
+pub use vec_trick::{gvt_matvec, GvtPolicy};

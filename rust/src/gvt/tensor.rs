@@ -1,0 +1,327 @@
+//! Third-order generalized vec trick — the paper's stated open problem.
+//!
+//! §7: *"an open question remains under what conditions similar efficient
+//! methods can be derived in general to nth order tensorial data, which
+//! could be a Kronecker product of more than two kernel matrices. For
+//! example, the data may consist of triplets (drug, target, cell line)."*
+//!
+//! This module answers the constructive half for order 3: the mat-vec
+//!
+//! ```text
+//! p_i = Σ_j D[d̄_i, d_j] · T[t̄_i, t_j] · C[c̄_i, c_j] · a_j
+//! ```
+//!
+//! over a sample of `n` (drug, target, cell-line) triplets factorizes by
+//! peeling one mode at a time, exactly like Theorem 1:
+//!
+//! * stage 1 — for each cell-line row `c̄`:
+//!   `S1[c̄, t, d] = Σ_j C[c̄, c_j] a_j [t_j = t][d_j = d]`  → `O(n·c̄dim)`
+//! * stage 2 — for each `(c̄, t̄)`:
+//!   `S2[c̄, t̄, d] = Σ_t T[t̄, t] S1[c̄, t, d]`               → dense GEMM
+//! * stage 3 — gather-dot over drugs                          → `O(n̄·m)`
+//!
+//! Cost `O(n·c + c·q·(q + m) + n̄·m)` vs the naive `O(n·n̄)` — for the
+//! triplet datasets the paper envisions (tens of drugs/targets/cell
+//! lines, millions of triplets) this is the same orders-of-magnitude win
+//! Theorem 1 gives for pairs. The memory price is the `c × q × m`
+//! intermediate, the direct generalization of GVT's `q × m` matrix.
+//! `bench_perf_ablation` exercises it; `examples/triplet.rs` trains a
+//! (drug, target, cell-line) ridge model end-to-end with it.
+
+use crate::linalg::{par, vecops, Mat};
+
+/// A sample of `n` (drug, target, cell-line) index triplets.
+#[derive(Clone, Debug)]
+pub struct TripletIndex {
+    drugs: Vec<u32>,
+    targets: Vec<u32>,
+    cells: Vec<u32>,
+    m: usize,
+    q: usize,
+    c: usize,
+}
+
+impl TripletIndex {
+    pub fn new(
+        drugs: Vec<u32>,
+        targets: Vec<u32>,
+        cells: Vec<u32>,
+        m: usize,
+        q: usize,
+        c: usize,
+    ) -> Self {
+        assert_eq!(drugs.len(), targets.len());
+        assert_eq!(drugs.len(), cells.len());
+        assert!(drugs.iter().all(|&d| (d as usize) < m), "drug index out of range");
+        assert!(targets.iter().all(|&t| (t as usize) < q), "target index out of range");
+        assert!(cells.iter().all(|&x| (x as usize) < c), "cell index out of range");
+        Self { drugs, targets, cells, m, q, c }
+    }
+
+    pub fn len(&self) -> usize {
+        self.drugs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.drugs.is_empty()
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    pub fn q(&self) -> usize {
+        self.q
+    }
+
+    pub fn c(&self) -> usize {
+        self.c
+    }
+
+    #[inline]
+    pub fn drug(&self, i: usize) -> usize {
+        self.drugs[i] as usize
+    }
+
+    #[inline]
+    pub fn target(&self, i: usize) -> usize {
+        self.targets[i] as usize
+    }
+
+    #[inline]
+    pub fn cell(&self, i: usize) -> usize {
+        self.cells[i] as usize
+    }
+
+    /// Sub-sample by row positions.
+    pub fn subset(&self, rows: &[usize]) -> TripletIndex {
+        TripletIndex::new(
+            rows.iter().map(|&i| self.drugs[i]).collect(),
+            rows.iter().map(|&i| self.targets[i]).collect(),
+            rows.iter().map(|&i| self.cells[i]).collect(),
+            self.m,
+            self.q,
+            self.c,
+        )
+    }
+}
+
+/// `p = R(rows) (D ⊗ T ⊗ C) R(cols)ᵀ a` for third-order samples.
+///
+/// `d: rows.m × cols.m`, `t: rows.q × cols.q`, `cmat: rows.c × cols.c`.
+pub fn gvt3_matvec(
+    d: &Mat,
+    t: &Mat,
+    cmat: &Mat,
+    rows: &TripletIndex,
+    cols: &TripletIndex,
+    a: &[f64],
+) -> Vec<f64> {
+    assert_eq!(a.len(), cols.len());
+    assert_eq!(d.rows(), rows.m());
+    assert_eq!(d.cols(), cols.m());
+    assert_eq!(t.rows(), rows.q());
+    assert_eq!(t.cols(), cols.q());
+    assert_eq!(cmat.rows(), rows.c());
+    assert_eq!(cmat.cols(), cols.c());
+
+    let (m_c, q_c) = (d.cols(), t.cols());
+    let (q_r, c_r) = (t.rows(), cmat.rows());
+
+    // Stage 1: peel the cell-line mode.
+    // S1[c̄][t, d] = Σ_j C[c̄, c_j] · a_j at (t_j, d_j). One q_c × m_c
+    // sheet per c̄ row; threaded over sheets.
+    let sheet = q_c * m_c;
+    let mut s1 = vec![0.0f64; c_r * sheet];
+    par::parallel_fill_rows(&mut s1, sheet, sheet, |start_flat, _end, chunk| {
+        let c0 = start_flat / sheet;
+        for (k, sh) in chunk.chunks_mut(sheet).enumerate() {
+            let crow = cmat.row(c0 + k);
+            for j in 0..a.len() {
+                sh[cols.target(j) * m_c + cols.drug(j)] += crow[cols.cell(j)] * a[j];
+            }
+        }
+    });
+
+    // Stage 2: peel the target mode with one GEMM per sheet:
+    // S2[c̄] = T · S1[c̄]  (q_r × m_c).
+    let mut s2 = vec![0.0f64; c_r * q_r * m_c];
+    for cbar in 0..c_r {
+        let sheet_in = Mat::from_vec(q_c, m_c, s1[cbar * sheet..(cbar + 1) * sheet].to_vec());
+        let out = t.matmul(&sheet_in);
+        s2[cbar * q_r * m_c..(cbar + 1) * q_r * m_c].copy_from_slice(out.as_slice());
+    }
+    drop(s1);
+
+    // Stage 3: gather-dot over the drug mode.
+    let mut p = vec![0.0; rows.len()];
+    par::parallel_fill(&mut p, 2048, |start, _end, chunk| {
+        for (k, pi) in chunk.iter_mut().enumerate() {
+            let i = start + k;
+            let drow = d.row(rows.drug(i));
+            let srow =
+                &s2[rows.cell(i) * q_r * m_c + rows.target(i) * m_c..][..m_c];
+            *pi = vecops::dot(drow, srow);
+        }
+    });
+    p
+}
+
+/// The third-order Kronecker kernel as a [`crate::solvers::linear_op::LinOp`],
+/// so the same MINRES driver trains triplet models (see
+/// `examples/triplet.rs`).
+pub struct TensorKronOp {
+    d: std::sync::Arc<Mat>,
+    t: std::sync::Arc<Mat>,
+    c: std::sync::Arc<Mat>,
+    rows: TripletIndex,
+    cols: TripletIndex,
+}
+
+impl TensorKronOp {
+    pub fn new(
+        d: std::sync::Arc<Mat>,
+        t: std::sync::Arc<Mat>,
+        c: std::sync::Arc<Mat>,
+        rows: TripletIndex,
+        cols: TripletIndex,
+    ) -> Self {
+        assert_eq!(d.rows(), rows.m());
+        assert_eq!(d.cols(), cols.m());
+        assert_eq!(t.rows(), rows.q());
+        assert_eq!(t.cols(), cols.q());
+        assert_eq!(c.rows(), rows.c());
+        assert_eq!(c.cols(), cols.c());
+        Self { d, t, c, rows, cols }
+    }
+}
+
+impl crate::solvers::linear_op::LinOp for TensorKronOp {
+    fn dim_out(&self) -> usize {
+        self.rows.len()
+    }
+
+    fn dim_in(&self) -> usize {
+        self.cols.len()
+    }
+
+    fn apply_into(&self, x: &[f64], y: &mut [f64]) {
+        let p = gvt3_matvec(&self.d, &self.t, &self.c, &self.rows, &self.cols, x);
+        y.copy_from_slice(&p);
+    }
+}
+
+/// Naive `O(n̄ n)` third-order reference (test oracle).
+pub fn naive3_matvec(
+    d: &Mat,
+    t: &Mat,
+    cmat: &Mat,
+    rows: &TripletIndex,
+    cols: &TripletIndex,
+    a: &[f64],
+) -> Vec<f64> {
+    let mut p = vec![0.0; rows.len()];
+    for i in 0..rows.len() {
+        let mut acc = 0.0;
+        for j in 0..cols.len() {
+            acc += d[(rows.drug(i), cols.drug(j))]
+                * t[(rows.target(i), cols.target(j))]
+                * cmat[(rows.cell(i), cols.cell(j))]
+                * a[j];
+        }
+        p[i] = acc;
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{dist, Rng, Xoshiro256};
+    use crate::testing::gen;
+
+    fn triplet_sample(rng: &mut Xoshiro256, n: usize, m: usize, q: usize, c: usize) -> TripletIndex {
+        TripletIndex::new(
+            (0..n).map(|i| if i < m { i as u32 } else { rng.index(m) as u32 }).collect(),
+            (0..n).map(|i| if i < q { i as u32 } else { rng.index(q) as u32 }).collect(),
+            (0..n).map(|i| if i < c { i as u32 } else { rng.index(c) as u32 }).collect(),
+            m,
+            q,
+            c,
+        )
+    }
+
+    #[test]
+    fn matches_naive_on_random_cases() {
+        let mut rng = Xoshiro256::seed_from(300);
+        for (n, nbar, m, q, c) in [(30, 20, 4, 5, 3), (80, 50, 7, 6, 5), (15, 40, 3, 3, 3)] {
+            let d = gen::psd_kernel(&mut rng, m);
+            let t = gen::psd_kernel(&mut rng, q);
+            let cm = gen::psd_kernel(&mut rng, c);
+            let cols = triplet_sample(&mut rng, n, m, q, c);
+            let rows = triplet_sample(&mut rng, nbar, m, q, c);
+            let a = dist::normal_vec(&mut rng, n);
+            let fast = gvt3_matvec(&d, &t, &cm, &rows, &cols, &a);
+            let slow = naive3_matvec(&d, &t, &cm, &rows, &cols, &a);
+            let err = crate::linalg::vecops::max_abs_diff(&fast, &slow);
+            assert!(err < 1e-9, "({n},{nbar},{m},{q},{c}): err {err}");
+        }
+    }
+
+    #[test]
+    fn reduces_to_pairwise_gvt_with_trivial_cell_mode() {
+        // With a single cell line and C = [1], the third-order product is
+        // exactly the pairwise GVT — the consistency anchor.
+        let mut rng = Xoshiro256::seed_from(301);
+        let (m, q, n) = (5, 6, 40);
+        let d = gen::psd_kernel(&mut rng, m);
+        let t = gen::psd_kernel(&mut rng, q);
+        let ones = Mat::full(1, 1, 1.0);
+        let pairs = gen::pair_sample(&mut rng, n, m, q);
+        let trip = TripletIndex::new(
+            pairs.drugs().to_vec(),
+            pairs.targets().to_vec(),
+            vec![0; n],
+            m,
+            q,
+            1,
+        );
+        let a = dist::normal_vec(&mut rng, n);
+        let p3 = gvt3_matvec(&d, &t, &ones, &trip, &trip, &a);
+        let p2 = crate::gvt::vec_trick::gvt_matvec(
+            &d,
+            &t,
+            &pairs,
+            &pairs,
+            &a,
+            crate::gvt::vec_trick::GvtPolicy::Auto,
+        );
+        let err = crate::linalg::vecops::max_abs_diff(&p3, &p2);
+        assert!(err < 1e-10, "err {err}");
+    }
+
+    #[test]
+    fn operator_is_symmetric_on_training_sample() {
+        let mut rng = Xoshiro256::seed_from(302);
+        let (m, q, c, n) = (4, 4, 4, 30);
+        let d = gen::psd_kernel(&mut rng, m);
+        let t = gen::psd_kernel(&mut rng, q);
+        let cm = gen::psd_kernel(&mut rng, c);
+        let s = triplet_sample(&mut rng, n, m, q, c);
+        let a = dist::normal_vec(&mut rng, n);
+        let b = dist::normal_vec(&mut rng, n);
+        let ka = gvt3_matvec(&d, &t, &cm, &s, &s, &a);
+        let kb = gvt3_matvec(&d, &t, &cm, &s, &s, &b);
+        let lhs: f64 = ka.iter().zip(&b).map(|(x, y)| x * y).sum();
+        let rhs: f64 = a.iter().zip(&kb).map(|(x, y)| x * y).sum();
+        assert!((lhs - rhs).abs() < 1e-8 * lhs.abs().max(1.0));
+    }
+
+    #[test]
+    fn rejects_out_of_range_indices() {
+        let r = std::panic::catch_unwind(|| {
+            TripletIndex::new(vec![5], vec![0], vec![0], 5, 3, 3)
+        });
+        assert!(r.is_err());
+    }
+}

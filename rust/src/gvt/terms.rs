@@ -1,0 +1,429 @@
+//! The operator algebra of Definition 1 / Theorem 2.
+//!
+//! A pairwise kernel operator is a sum of terms `c · X(A ⊗ B) Y` where `X`,
+//! `Y` are products of commutation (`P`) and unification (`Q`) operators.
+//! Multiplied by sampling operators, `P`/`Q` reduce to **index plumbing**
+//! (`R(d,t)P = R(t,d)`, `R(d,t)Q = R(d,d)` — proof of Corollary 1), so a
+//! term is fully described by
+//!
+//! * a scalar coefficient,
+//! * two factors (which matrix sits in each Kronecker slot, where the
+//!   special factors `1` (all-ones) and `I` admit cheaper mat-vecs), and
+//! * an [`IndexMap`] for the row and the column sample.
+//!
+//! [`KroneckerTerm::matvec`] dispatches to the generalized vec trick with
+//! the fast paths:
+//!
+//! | factors        | algorithm                                   | cost          |
+//! |----------------|---------------------------------------------|---------------|
+//! | dense ⊗ dense  | GVT (Theorem 1)                             | O(nq̄ + n̄m)   |
+//! | `1` in a slot  | pool-then-GEMV                              | O(n + mq + n̄) |
+//! | `I` in a slot  | scatter + gather-dot                        | O(n + n̄m)     |
+//! | `1 ⊗ 1`        | scalar sum                                  | O(n + n̄)      |
+
+use crate::gvt::vec_trick::{gvt_matvec, GvtPolicy};
+use crate::linalg::{par, vecops, Mat};
+use crate::sparse::PairIndex;
+
+/// Which matrix occupies a Kronecker slot.
+///
+/// `D`/`T` refer to the drug/target kernel matrices supplied to the op;
+/// `DSq`/`TSq` to their elementwise squares (Theorem 2:
+/// `Q(D⊗D)Qᵀ = D^{⊙2} ⊗ 1`); `Ones`/`Identity` to the `1` and `I`
+/// operators over whichever domain the slot requires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Factor {
+    D,
+    T,
+    DSq,
+    TSq,
+    Ones,
+    Identity,
+}
+
+/// How a term derives its effective sample from the data sample — the
+/// residue of the `P`/`Q` operators after absorption into `R`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IndexMap {
+    /// `R(d, t)` unchanged.
+    Id,
+    /// `R(d,t)P = R(t,d)` — commutation.
+    Swap,
+    /// `R(d,t)Q = R(d,d)` — unification onto the drug slot.
+    DupDrug,
+    /// `R(d,t)PQ = R(t,t)` — unification onto the target slot.
+    DupTarget,
+}
+
+impl IndexMap {
+    /// Apply to a sample.
+    pub fn apply(&self, s: &PairIndex) -> PairIndex {
+        match self {
+            IndexMap::Id => s.clone(),
+            IndexMap::Swap => s.swapped(),
+            IndexMap::DupDrug => s.dupe_drugs(),
+            IndexMap::DupTarget => s.dupe_targets(),
+        }
+    }
+
+    /// Does this map require a homogeneous domain (m == q)?
+    pub fn needs_homogeneous(&self) -> bool {
+        !matches!(self, IndexMap::Id)
+    }
+}
+
+/// One summand `coeff · (left ⊗ right)` with row/column index maps.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct KroneckerTerm {
+    pub coeff: f64,
+    pub left: Factor,
+    pub right: Factor,
+    pub row_map: IndexMap,
+    pub col_map: IndexMap,
+}
+
+impl KroneckerTerm {
+    pub const fn new(
+        coeff: f64,
+        left: Factor,
+        right: Factor,
+        row_map: IndexMap,
+        col_map: IndexMap,
+    ) -> Self {
+        Self { coeff, left, right, row_map, col_map }
+    }
+}
+
+/// Resolved matrices for a term's two slots.
+pub(crate) enum SlotMatrix<'a> {
+    Dense(&'a Mat),
+    Ones,
+    Identity,
+}
+
+/// Context holding the kernel matrices a term may reference.
+///
+/// `d` is the drug kernel (`m×m`), `t` the target kernel (`q×q`; for
+/// homogeneous kernels pass the drug kernel in both). `dsq`/`tsq` are
+/// computed lazily by [`crate::gvt::pairwise::PairwiseLinOp`].
+pub struct TermContext<'a> {
+    pub d: &'a Mat,
+    pub t: &'a Mat,
+    pub dsq: Option<&'a Mat>,
+    pub tsq: Option<&'a Mat>,
+}
+
+impl<'a> TermContext<'a> {
+    fn resolve(&self, f: Factor) -> SlotMatrix<'a> {
+        match f {
+            Factor::D => SlotMatrix::Dense(self.d),
+            Factor::T => SlotMatrix::Dense(self.t),
+            Factor::DSq => SlotMatrix::Dense(
+                self.dsq.expect("DSq factor requested but not precomputed"),
+            ),
+            Factor::TSq => SlotMatrix::Dense(
+                self.tsq.expect("TSq factor requested but not precomputed"),
+            ),
+            Factor::Ones => SlotMatrix::Ones,
+            Factor::Identity => SlotMatrix::Identity,
+        }
+    }
+}
+
+impl KroneckerTerm {
+    /// `out += coeff · R(row_map(rows)) (left ⊗ right) R(col_map(cols))ᵀ a`.
+    ///
+    /// Applies the index maps on the fly; the hot path
+    /// ([`crate::gvt::pairwise::PairwiseLinOp`]) pre-applies them once at
+    /// construction and calls [`Self::matvec_transformed`] instead.
+    pub fn matvec_accumulate(
+        &self,
+        ctx: &TermContext<'_>,
+        rows: &PairIndex,
+        cols: &PairIndex,
+        a: &[f64],
+        policy: GvtPolicy,
+        out: &mut [f64],
+    ) {
+        let rows_t = self.row_map.apply(rows);
+        let cols_t = self.col_map.apply(cols);
+        self.matvec_transformed(ctx, &rows_t, &cols_t, a, policy, out);
+    }
+
+    /// Like [`Self::matvec_accumulate`] but `rows_t`/`cols_t` are already
+    /// the transformed samples (`row_map(rows)`, `col_map(cols)`).
+    ///
+    /// Fast paths for `Ones`/`Identity` factors; dense×dense falls through
+    /// to [`gvt_matvec`].
+    pub fn matvec_transformed(
+        &self,
+        ctx: &TermContext<'_>,
+        rows_t: &PairIndex,
+        cols_t: &PairIndex,
+        a: &[f64],
+        policy: GvtPolicy,
+        out: &mut [f64],
+    ) {
+        assert_eq!(out.len(), rows_t.len());
+        assert_eq!(a.len(), cols_t.len());
+        let left = ctx.resolve(self.left);
+        let right = ctx.resolve(self.right);
+        let c = self.coeff;
+        match (left, right) {
+            (SlotMatrix::Ones, SlotMatrix::Ones) => {
+                // p_i = Σ_j a_j, constant.
+                let s: f64 = a.iter().sum();
+                for o in out.iter_mut() {
+                    *o += c * s;
+                }
+            }
+            (SlotMatrix::Dense(am), SlotMatrix::Ones) => {
+                // Pool over drugs then one GEMV: p_i = (A w)[d̄_i],
+                // w[d] = Σ_{j: d_j = d} a_j.
+                let mut w = vec![0.0; am.cols()];
+                for j in 0..a.len() {
+                    w[cols_t.drug(j)] += a[j];
+                }
+                let v = am.matvec(&w);
+                for (i, o) in out.iter_mut().enumerate() {
+                    *o += c * v[rows_t.drug(i)];
+                }
+            }
+            (SlotMatrix::Ones, SlotMatrix::Dense(bm)) => {
+                let mut w = vec![0.0; bm.cols()];
+                for j in 0..a.len() {
+                    w[cols_t.target(j)] += a[j];
+                }
+                let v = bm.matvec(&w);
+                for (i, o) in out.iter_mut().enumerate() {
+                    *o += c * v[rows_t.target(i)];
+                }
+            }
+            (SlotMatrix::Dense(am), SlotMatrix::Identity) => {
+                // B = I over targets: p_i = Σ_{j: t_j = t̄_i} A[d̄_i, d_j]a_j.
+                // Scatter W[t, d] then contiguous row dots.
+                assert_eq!(
+                    rows_t.q(),
+                    cols_t.q(),
+                    "Identity factor needs matching target domains"
+                );
+                let mut w = Mat::zeros(cols_t.q(), am.cols());
+                for j in 0..a.len() {
+                    w[(cols_t.target(j), cols_t.drug(j))] += a[j];
+                }
+                accumulate_rowdot(am, &w, rows_t.drugs(), rows_t.targets(), c, out);
+            }
+            (SlotMatrix::Identity, SlotMatrix::Dense(bm)) => {
+                assert_eq!(
+                    rows_t.m(),
+                    cols_t.m(),
+                    "Identity factor needs matching drug domains"
+                );
+                let mut w = Mat::zeros(cols_t.m(), bm.cols());
+                for j in 0..a.len() {
+                    w[(cols_t.drug(j), cols_t.target(j))] += a[j];
+                }
+                accumulate_rowdot(bm, &w, rows_t.targets(), rows_t.drugs(), c, out);
+            }
+            (SlotMatrix::Identity, SlotMatrix::Identity) => {
+                // p_i = Σ_{j: d_j=d̄_i, t_j=t̄_i} a_j — sparse diagonal-ish.
+                let mut w = Mat::zeros(cols_t.m(), cols_t.q());
+                for j in 0..a.len() {
+                    w[(cols_t.drug(j), cols_t.target(j))] += a[j];
+                }
+                for (i, o) in out.iter_mut().enumerate() {
+                    *o += c * w[(rows_t.drug(i), rows_t.target(i))];
+                }
+            }
+            (SlotMatrix::Identity, SlotMatrix::Ones) => {
+                let mut w = vec![0.0; cols_t.m()];
+                for j in 0..a.len() {
+                    w[cols_t.drug(j)] += a[j];
+                }
+                for (i, o) in out.iter_mut().enumerate() {
+                    *o += c * w[rows_t.drug(i)];
+                }
+            }
+            (SlotMatrix::Ones, SlotMatrix::Identity) => {
+                let mut w = vec![0.0; cols_t.q()];
+                for j in 0..a.len() {
+                    w[cols_t.target(j)] += a[j];
+                }
+                for (i, o) in out.iter_mut().enumerate() {
+                    *o += c * w[rows_t.target(i)];
+                }
+            }
+            (SlotMatrix::Dense(am), SlotMatrix::Dense(bm)) => {
+                let p = gvt_matvec(am, bm, rows_t, cols_t, a, policy);
+                vecops::axpy(c, &p, out);
+            }
+        }
+    }
+
+    /// Evaluate this term's contribution to a single kernel entry — the
+    /// `O(1)` scalar form used by the explicit-matrix oracle tests.
+    pub fn entry(
+        &self,
+        ctx: &TermContext<'_>,
+        row: (usize, usize),
+        col: (usize, usize),
+    ) -> f64 {
+        let (rd, rt) = match self.row_map {
+            IndexMap::Id => row,
+            IndexMap::Swap => (row.1, row.0),
+            IndexMap::DupDrug => (row.0, row.0),
+            IndexMap::DupTarget => (row.1, row.1),
+        };
+        let (cd, ct) = match self.col_map {
+            IndexMap::Id => col,
+            IndexMap::Swap => (col.1, col.0),
+            IndexMap::DupDrug => (col.0, col.0),
+            IndexMap::DupTarget => (col.1, col.1),
+        };
+        let lv = match self.left {
+            Factor::D => ctx.d[(rd, cd)],
+            Factor::T => ctx.t[(rd, cd)],
+            Factor::DSq => ctx.d[(rd, cd)] * ctx.d[(rd, cd)],
+            Factor::TSq => ctx.t[(rd, cd)] * ctx.t[(rd, cd)],
+            Factor::Ones => 1.0,
+            Factor::Identity => {
+                if rd == cd {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+        };
+        let rv = match self.right {
+            Factor::D => ctx.d[(rt, ct)],
+            Factor::T => ctx.t[(rt, ct)],
+            Factor::DSq => ctx.d[(rt, ct)] * ctx.d[(rt, ct)],
+            Factor::TSq => ctx.t[(rt, ct)] * ctx.t[(rt, ct)],
+            Factor::Ones => 1.0,
+            Factor::Identity => {
+                if rt == ct {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+        };
+        self.coeff * lv * rv
+    }
+}
+
+/// `out[i] += c · ⟨lhs[li[i], :], w[ri[i], :]⟩`, threaded.
+fn accumulate_rowdot(
+    lhs: &Mat,
+    w: &Mat,
+    li: &[u32],
+    ri: &[u32],
+    c: f64,
+    out: &mut [f64],
+) {
+    debug_assert_eq!(lhs.cols(), w.cols());
+    par::parallel_fill(out, 2048, |start, _end, chunk| {
+        for (k, o) in chunk.iter_mut().enumerate() {
+            let i = start + k;
+            *o += c * vecops::dot(lhs.row(li[i] as usize), w.row(ri[i] as usize));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{dist, Xoshiro256};
+    use crate::testing::gen;
+
+    /// Every fast path must equal the dense `entry()`-based naive matvec.
+    #[test]
+    fn fast_paths_match_entry_oracle() {
+        let mut rng = Xoshiro256::seed_from(31);
+        let m = 6;
+        let q = 6; // homogeneous so all index maps are legal
+        let d = gen::psd_kernel(&mut rng, m);
+        let t = gen::psd_kernel(&mut rng, q);
+        let dsq = d.hadamard_square();
+        let tsq = t.hadamard_square();
+        let ctx = TermContext { d: &d, t: &t, dsq: Some(&dsq), tsq: Some(&tsq) };
+        let rows = gen::pair_sample(&mut rng, 25, m, q);
+        let cols = gen::pair_sample(&mut rng, 40, m, q);
+        let a = dist::normal_vec(&mut rng, 40);
+
+        let factors = [
+            Factor::D,
+            Factor::T,
+            Factor::DSq,
+            Factor::TSq,
+            Factor::Ones,
+            Factor::Identity,
+        ];
+        let maps = [IndexMap::Id, IndexMap::Swap, IndexMap::DupDrug, IndexMap::DupTarget];
+        for &left in &factors {
+            for &right in &factors {
+                for &rm in &maps {
+                    for &cm in &maps {
+                        let term = KroneckerTerm::new(1.25, left, right, rm, cm);
+                        let mut fast = vec![0.0; rows.len()];
+                        term.matvec_accumulate(
+                            &ctx,
+                            &rows,
+                            &cols,
+                            &a,
+                            GvtPolicy::Auto,
+                            &mut fast,
+                        );
+                        // Naive via entry().
+                        let mut naive = vec![0.0; rows.len()];
+                        for i in 0..rows.len() {
+                            for j in 0..cols.len() {
+                                naive[i] += term.entry(
+                                    &ctx,
+                                    (rows.drug(i), rows.target(i)),
+                                    (cols.drug(j), cols.target(j)),
+                                ) * a[j];
+                            }
+                        }
+                        let err = vecops::max_abs_diff(&fast, &naive);
+                        assert!(
+                            err < 1e-9,
+                            "term {left:?}⊗{right:?} maps ({rm:?},{cm:?}): err {err}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn accumulation_adds_terms() {
+        let mut rng = Xoshiro256::seed_from(32);
+        let d = gen::psd_kernel(&mut rng, 4);
+        let t = gen::psd_kernel(&mut rng, 4);
+        let ctx = TermContext { d: &d, t: &t, dsq: None, tsq: None };
+        let rows = gen::pair_sample(&mut rng, 10, 4, 4);
+        let cols = rows.clone();
+        let a = dist::normal_vec(&mut rng, 10);
+        let t1 = KroneckerTerm::new(1.0, Factor::D, Factor::T, IndexMap::Id, IndexMap::Id);
+        let t2 = KroneckerTerm::new(2.0, Factor::D, Factor::T, IndexMap::Id, IndexMap::Id);
+        let mut out1 = vec![0.0; 10];
+        t1.matvec_accumulate(&ctx, &rows, &cols, &a, GvtPolicy::Auto, &mut out1);
+        t1.matvec_accumulate(&ctx, &rows, &cols, &a, GvtPolicy::Auto, &mut out1);
+        let mut out2 = vec![0.0; 10];
+        t2.matvec_accumulate(&ctx, &rows, &cols, &a, GvtPolicy::Auto, &mut out2);
+        assert!(vecops::max_abs_diff(&out1, &out2) < 1e-12);
+    }
+
+    #[test]
+    fn index_maps_apply_correctly() {
+        let s = PairIndex::new(vec![0, 2], vec![1, 1], 3, 3);
+        let sw = IndexMap::Swap.apply(&s);
+        assert_eq!(sw.drug(0), 1);
+        assert_eq!(sw.target(1), 2);
+        let dd = IndexMap::DupDrug.apply(&s);
+        assert_eq!((dd.drug(1), dd.target(1)), (2, 2));
+        let dt = IndexMap::DupTarget.apply(&s);
+        assert_eq!((dt.drug(0), dt.target(0)), (1, 1));
+    }
+}

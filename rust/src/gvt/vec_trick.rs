@@ -1,0 +1,362 @@
+//! Theorem 1 — the generalized vec trick (GVT).
+//!
+//! Computes `p = R(d̄,t̄) (A ⊗ B) R(d,t)ᵀ a` without materializing the
+//! `n̄ × n` kernel matrix, where
+//!
+//! * `A ∈ R^{m_r × m_c}` is the drug-side factor (rows indexed by the row
+//!   sample's drug domain, columns by the column sample's),
+//! * `B ∈ R^{q_r × q_c}` is the target-side factor,
+//! * `rows` is the sample indexing output entries (`n̄` pairs),
+//! * `cols` is the sample indexing input entries (`n` pairs).
+//!
+//! Entry-wise: `p_i = Σ_j A[d̄_i, d_j] · B[t̄_i, t_j] · a_j`.
+//!
+//! Two sparse factorizations exist, mirroring the `O(min(q̄n + mn̄,
+//! m̄n + qn̄))` bound of the theorem (note the roles of row/col samples):
+//!
+//! * **left**: `S[t̄, d] = Σ_j B[t̄, t_j] a_j [d_j = d]`, then
+//!   `p_i = ⟨A[d̄_i, :], S[t̄_i, :]⟩` — cost `O(n·q_r + n̄·m_c)`.
+//! * **right**: `S[d̄, t] = Σ_j A[d̄, d_j] a_j [t_j = t]`, then
+//!   `p_i = ⟨B[t̄_i, :], S[d̄_i, :]⟩` — cost `O(n·m_r + n̄·q_c)`.
+//!
+//! plus a **dense** formulation (scatter → GEMM → gather-dot) that trades
+//! `O(n·q_r)` irregular scalar work for an `O(q_r·q_c·m_c)` vectorized
+//! GEMM — the formulation the JAX/Pallas artifact implements, and faster
+//! on dense samples (see bench_gvt_vs_explicit and DESIGN.md
+//! §Hardware-Adaptation).
+
+use crate::linalg::{par, Mat};
+use crate::sparse::PairIndex;
+
+/// Which GVT factorization to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GvtPolicy {
+    /// Pick the cheaper factorization from the cost model, switching to
+    /// the dense path when the sample is dense enough to favor GEMM.
+    Auto,
+    /// Force the `S ∈ R^{q_r × m_c}` sparse factorization.
+    SparseLeft,
+    /// Force the `S ∈ R^{m_r × q_c}` sparse factorization.
+    SparseRight,
+    /// Force scatter → GEMM → gather-dot.
+    Dense,
+}
+
+/// Density threshold above which `Auto` prefers the dense GEMM path.
+/// Tuned in the §Perf pass (see EXPERIMENTS.md): the GEMM runs ~8 f64
+/// FMAs/cycle while the sparse path does ~1 gather-multiply per cycle.
+const DENSE_DENSITY_THRESHOLD: f64 = 0.10;
+
+/// `p = R(rows) (A ⊗ B) R(cols)ᵀ a` — see module docs.
+///
+/// Shape requirements (checked):
+/// `A: rows.m() × cols.m()`, `B: rows.q() × cols.q()`,
+/// `a.len() == cols.len()`; returns `p` with `rows.len()` entries.
+pub fn gvt_matvec(
+    a_mat: &Mat,
+    b_mat: &Mat,
+    rows: &PairIndex,
+    cols: &PairIndex,
+    a: &[f64],
+    policy: GvtPolicy,
+) -> Vec<f64> {
+    check_shapes(a_mat, b_mat, rows, cols, a);
+    match policy {
+        GvtPolicy::SparseLeft => sparse_left(a_mat, b_mat, rows, cols, a),
+        GvtPolicy::SparseRight => sparse_right(a_mat, b_mat, rows, cols, a),
+        GvtPolicy::Dense => dense(a_mat, b_mat, rows, cols, a),
+        GvtPolicy::Auto => {
+            let n = cols.len() as f64;
+            let nbar = rows.len() as f64;
+            let (m_r, m_c) = a_mat.shape();
+            let (q_r, q_c) = b_mat.shape();
+            let cost_left = n * q_r as f64 + nbar * m_c as f64;
+            let cost_right = n * m_r as f64 + nbar * q_c as f64;
+            // Dense path: GEMM flops with a vectorization discount, only
+            // competitive when the sample covers a decent fraction of the
+            // complete q×m grid. §Perf: the discount was measured at ~2×
+            // against the 4-row-blocked sparse stage 1 (an 8× guess made
+            // Auto pick Dense where SparseLeft was 1.5× faster — see
+            // EXPERIMENTS.md §Perf iteration log).
+            let density = n / (q_c as f64 * m_c as f64).max(1.0);
+            let cost_dense =
+                (q_r as f64 * q_c as f64 * m_c as f64) / 2.0 + n + nbar * m_c as f64;
+            if density >= DENSE_DENSITY_THRESHOLD
+                && cost_dense < cost_left.min(cost_right)
+            {
+                dense(a_mat, b_mat, rows, cols, a)
+            } else if cost_left <= cost_right {
+                sparse_left(a_mat, b_mat, rows, cols, a)
+            } else {
+                sparse_right(a_mat, b_mat, rows, cols, a)
+            }
+        }
+    }
+}
+
+fn check_shapes(a_mat: &Mat, b_mat: &Mat, rows: &PairIndex, cols: &PairIndex, a: &[f64]) {
+    assert_eq!(a.len(), cols.len(), "gvt: coefficient length != column sample size");
+    assert_eq!(a_mat.rows(), rows.m(), "gvt: A rows != row-sample drug domain");
+    assert_eq!(a_mat.cols(), cols.m(), "gvt: A cols != col-sample drug domain");
+    assert_eq!(b_mat.rows(), rows.q(), "gvt: B rows != row-sample target domain");
+    assert_eq!(b_mat.cols(), cols.q(), "gvt: B cols != col-sample target domain");
+}
+
+/// Left factorization: `S ∈ R^{q_r × m_c}`, stage 1 `O(n·q_r)`, stage 2
+/// `O(n̄·m_c)`. Both stages threaded.
+fn sparse_left(
+    a_mat: &Mat,
+    b_mat: &Mat,
+    rows: &PairIndex,
+    cols: &PairIndex,
+    a: &[f64],
+) -> Vec<f64> {
+    let q_r = b_mat.rows();
+    let m_c = a_mat.cols();
+    // Stage 1: each worker owns a band of S rows (t̄ values) and streams
+    // the whole column sample once: S[t̄, d_j] += B[t̄, t_j] * a_j.
+    let mut s = Mat::zeros(q_r, m_c);
+    {
+        let sdata = s.as_mut_slice();
+        par::parallel_fill_rows(sdata, m_c.max(1), 4 * m_c.max(1), |start_flat, _end, chunk| {
+            stage1_scatter(b_mat, start_flat / m_c, chunk, m_c, cols.drugs(), cols.targets(), a);
+        });
+    }
+    // Stage 2: p_i = ⟨A[d̄_i, :], S[t̄_i, :]⟩ — contiguous row dots.
+    stage2_rowdot(a_mat, &s, rows.drugs(), rows.targets())
+}
+
+/// Right factorization: mirror image of [`sparse_left`].
+fn sparse_right(
+    a_mat: &Mat,
+    b_mat: &Mat,
+    rows: &PairIndex,
+    cols: &PairIndex,
+    a: &[f64],
+) -> Vec<f64> {
+    let m_r = a_mat.rows();
+    let q_c = b_mat.cols();
+    let mut s = Mat::zeros(m_r, q_c);
+    {
+        let sdata = s.as_mut_slice();
+        par::parallel_fill_rows(sdata, q_c.max(1), 4 * q_c.max(1), |start_flat, _end, chunk| {
+            // Mirror image: S rows indexed by drugs, gathers by drug index,
+            // scatters by target index.
+            stage1_scatter(a_mat, start_flat / q_c, chunk, q_c, cols.targets(), cols.drugs(), a);
+        });
+    }
+    // p_i = ⟨B[t̄_i, :], S[d̄_i, :]⟩.
+    stage2_rowdot(b_mat, &s, rows.targets(), rows.drugs())
+}
+
+/// Dense complete-data formulation (the Roth vec trick on a scattered
+/// coefficient matrix): `W[t_j, d_j] += a_j`; `S = B·W`; gather-dot.
+fn dense(
+    a_mat: &Mat,
+    b_mat: &Mat,
+    rows: &PairIndex,
+    cols: &PairIndex,
+    a: &[f64],
+) -> Vec<f64> {
+    let q_c = b_mat.cols();
+    let m_c = a_mat.cols();
+    let mut w = Mat::zeros(q_c, m_c);
+    for j in 0..a.len() {
+        w[(cols.target(j), cols.drug(j))] += a[j];
+    }
+    let s = b_mat.matmul(&w); // q_r × m_c
+    stage2_rowdot(a_mat, &s, rows.drugs(), rows.targets())
+}
+
+/// Stage-1 kernel shared by both sparse factorizations: for each S row
+/// `r` in this worker's band, `S[r, scatter[j]] += M[r0+r, gather[j]] · a[j]`.
+///
+/// §Perf: processes FOUR S rows per pass over the column sample so the
+/// three index/coefficient streams (`scatter[j]`, `gather[j]`, `a[j]`,
+/// 12 B/pair) are loaded once per 4 rows instead of once per row — stage 1
+/// is index-bandwidth-bound, and this cut the n=16k Kronecker mat-vec by
+/// ~35% (see EXPERIMENTS.md §Perf).
+fn stage1_scatter(
+    mat: &Mat,
+    row0: usize,
+    chunk: &mut [f64],
+    row_len: usize,
+    scatter: &[u32],
+    gather: &[u32],
+    a: &[f64],
+) {
+    debug_assert_eq!(scatter.len(), a.len());
+    debug_assert_eq!(gather.len(), a.len());
+    let rows_here = chunk.len() / row_len;
+    let mut r = 0;
+    // A/B escape hatch used by the §Perf ablation (bench_perf_ablation):
+    // GVT_RLS_STAGE1_1ROW=1 disables the 4-row blocking.
+    let block = std::env::var_os("GVT_RLS_STAGE1_1ROW").is_none();
+    while block && r + 4 <= rows_here {
+        let m0 = mat.row(row0 + r);
+        let m1 = mat.row(row0 + r + 1);
+        let m2 = mat.row(row0 + r + 2);
+        let m3 = mat.row(row0 + r + 3);
+        // Split the 4 destination rows out of the chunk.
+        let (s0, rest) = chunk[r * row_len..].split_at_mut(row_len);
+        let (s1, rest) = rest.split_at_mut(row_len);
+        let (s2, s3full) = rest.split_at_mut(row_len);
+        let s3 = &mut s3full[..row_len];
+        for j in 0..a.len() {
+            let dst = scatter[j] as usize;
+            let src = gather[j] as usize;
+            let aj = a[j];
+            s0[dst] += m0[src] * aj;
+            s1[dst] += m1[src] * aj;
+            s2[dst] += m2[src] * aj;
+            s3[dst] += m3[src] * aj;
+        }
+        r += 4;
+    }
+    for rr in r..rows_here {
+        let mrow = mat.row(row0 + rr);
+        let srow = &mut chunk[rr * row_len..(rr + 1) * row_len];
+        for j in 0..a.len() {
+            srow[scatter[j] as usize] += mrow[gather[j] as usize] * a[j];
+        }
+    }
+}
+
+/// `p_i = ⟨lhs[li[i], :], s[ri[i], :]⟩`, threaded over output chunks.
+fn stage2_rowdot(lhs: &Mat, s: &Mat, li: &[u32], ri: &[u32]) -> Vec<f64> {
+    debug_assert_eq!(lhs.cols(), s.cols());
+    let mut p = vec![0.0; li.len()];
+    par::parallel_fill(&mut p, 2048, |start, _end, chunk| {
+        for (k, pi) in chunk.iter_mut().enumerate() {
+            let i = start + k;
+            let lrow = lhs.row(li[i] as usize);
+            let srow = s.row(ri[i] as usize);
+            *pi = crate::linalg::vecops::dot(lrow, srow);
+        }
+    });
+    p
+}
+
+/// Naive `O(n̄ · n)` reference: materializes nothing but loops all pairs.
+/// Used by tests and the explicit-baseline benches.
+pub fn naive_matvec(
+    a_mat: &Mat,
+    b_mat: &Mat,
+    rows: &PairIndex,
+    cols: &PairIndex,
+    a: &[f64],
+) -> Vec<f64> {
+    check_shapes(a_mat, b_mat, rows, cols, a);
+    let mut p = vec![0.0; rows.len()];
+    for i in 0..rows.len() {
+        let (di, ti) = (rows.drug(i), rows.target(i));
+        let mut acc = 0.0;
+        for j in 0..cols.len() {
+            acc += a_mat[(di, cols.drug(j))] * b_mat[(ti, cols.target(j))] * a[j];
+        }
+        p[i] = acc;
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{dist, Xoshiro256};
+    use crate::testing::gen;
+
+    fn random_case(
+        seed: u64,
+        n: usize,
+        nbar: usize,
+        m: usize,
+        q: usize,
+    ) -> (Mat, Mat, PairIndex, PairIndex, Vec<f64>) {
+        let mut rng = Xoshiro256::seed_from(seed);
+        let a_mat = Mat::from_vec(m, m, dist::normal_vec(&mut rng, m * m));
+        let b_mat = Mat::from_vec(q, q, dist::normal_vec(&mut rng, q * q));
+        let cols = gen::pair_sample(&mut rng, n, m, q);
+        let rows = gen::pair_sample(&mut rng, nbar, m, q);
+        let a = dist::normal_vec(&mut rng, n);
+        (a_mat, b_mat, rows, cols, a)
+    }
+
+    #[test]
+    fn all_policies_match_naive() {
+        for (seed, n, nbar, m, q) in
+            [(1u64, 40, 25, 6, 9), (2, 100, 100, 13, 7), (3, 17, 60, 5, 5)]
+        {
+            let (am, bm, rows, cols, a) = random_case(seed, n, nbar, m, q);
+            let expect = naive_matvec(&am, &bm, &rows, &cols, &a);
+            for policy in [
+                GvtPolicy::SparseLeft,
+                GvtPolicy::SparseRight,
+                GvtPolicy::Dense,
+                GvtPolicy::Auto,
+            ] {
+                let got = gvt_matvec(&am, &bm, &rows, &cols, &a, policy);
+                let err = crate::linalg::vecops::max_abs_diff(&got, &expect);
+                assert!(err < 1e-9, "{policy:?} seed {seed}: err {err}");
+            }
+        }
+    }
+
+    #[test]
+    fn rectangular_factors_supported() {
+        // Distinct row/col domains: A is 4×6, B is 3×5.
+        let mut rng = Xoshiro256::seed_from(9);
+        let am = Mat::from_vec(4, 6, dist::normal_vec(&mut rng, 24));
+        let bm = Mat::from_vec(3, 5, dist::normal_vec(&mut rng, 15));
+        let rows = gen::pair_sample(&mut rng, 20, 4, 3);
+        let cols = gen::pair_sample(&mut rng, 30, 6, 5);
+        let a = dist::normal_vec(&mut rng, 30);
+        let expect = naive_matvec(&am, &bm, &rows, &cols, &a);
+        for policy in [GvtPolicy::SparseLeft, GvtPolicy::SparseRight, GvtPolicy::Dense] {
+            let got = gvt_matvec(&am, &bm, &rows, &cols, &a, policy);
+            assert!(crate::linalg::vecops::max_abs_diff(&got, &expect) < 1e-10);
+        }
+    }
+
+    #[test]
+    fn complete_sample_matches_kronecker_definition() {
+        // On the complete sample with identity coefficients the op returns
+        // vec of B·W·Aᵀ per Roth's lemma; spot-check one basis vector.
+        let m = 3;
+        let q = 2;
+        let am = Mat::from_fn(m, m, |i, j| (i * m + j) as f64);
+        let bm = Mat::from_fn(q, q, |i, j| (10 + i * q + j) as f64);
+        let c = PairIndex::complete(m, q);
+        // a = e_0 selects pair (d=0, t=0): p_i = A[d_i,0]·B[t_i,0].
+        let mut a = vec![0.0; m * q];
+        a[0] = 1.0;
+        let p = gvt_matvec(&am, &bm, &c, &c, &a, GvtPolicy::Auto);
+        for i in 0..m * q {
+            let (di, ti) = (c.drug(i), c.target(i));
+            assert_eq!(p[i], am[(di, 0)] * bm[(ti, 0)]);
+        }
+    }
+
+    #[test]
+    fn empty_column_sample_gives_zeros() {
+        let mut rng = Xoshiro256::seed_from(10);
+        let am = Mat::from_vec(3, 3, dist::normal_vec(&mut rng, 9));
+        let bm = Mat::from_vec(3, 3, dist::normal_vec(&mut rng, 9));
+        let rows = gen::pair_sample(&mut rng, 5, 3, 3);
+        let cols = PairIndex::new(vec![], vec![], 3, 3);
+        let p = gvt_matvec(&am, &bm, &rows, &cols, &[], GvtPolicy::Auto);
+        assert_eq!(p, vec![0.0; 5]);
+    }
+
+    #[test]
+    fn linearity_in_coefficients() {
+        let (am, bm, rows, cols, a) = random_case(12, 50, 30, 7, 8);
+        let b: Vec<f64> = a.iter().map(|x| 0.5 * x + 1.0).collect();
+        let pa = gvt_matvec(&am, &bm, &rows, &cols, &a, GvtPolicy::Auto);
+        let pb = gvt_matvec(&am, &bm, &rows, &cols, &b, GvtPolicy::Auto);
+        let sum: Vec<f64> = a.iter().zip(&b).map(|(x, y)| x + y).collect();
+        let psum = gvt_matvec(&am, &bm, &rows, &cols, &sum, GvtPolicy::Auto);
+        for i in 0..pa.len() {
+            assert!((pa[i] + pb[i] - psum[i]).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,202 @@
+//! Base kernel functions on feature vectors.
+
+/// Hyperparameters for the parametric kernels.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct KernelParams {
+    /// Gaussian bandwidth γ in `exp(-γ ||x - y||²)`. Paper uses 1e-5 on
+    /// similarity-row features.
+    pub gamma: f64,
+    /// Polynomial degree.
+    pub degree: u32,
+    /// Polynomial bias term `c` in `(⟨x,y⟩ + c)^degree`.
+    pub coef0: f64,
+}
+
+impl Default for KernelParams {
+    fn default() -> Self {
+        Self { gamma: 1e-5, degree: 2, coef0: 0.0 }
+    }
+}
+
+/// The base kernels used across the paper's datasets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BaseKernel {
+    /// `⟨x, y⟩`
+    Linear,
+    /// `(⟨x, y⟩ + c)^degree`
+    Polynomial,
+    /// `exp(-γ ||x − y||²)`
+    Gaussian,
+    /// Tanimoto / MinMax on nonnegative vectors:
+    /// `Σ min(x_i, y_i) / Σ max(x_i, y_i)` (1 when both are all-zero).
+    Tanimoto,
+    /// Min (histogram-intersection) kernel: `Σ min(x_i, y_i)` — the "Min"
+    /// variant the paper compares on the heterodimer binary features.
+    Min,
+    /// Cosine-normalized linear kernel: `⟨x,y⟩ / (‖x‖·‖y‖)` — the "Norm"
+    /// variant of §6.1 (0 for zero vectors).
+    Cosine,
+}
+
+impl BaseKernel {
+    /// Evaluate `k(x, y)`.
+    pub fn eval(&self, params: &KernelParams, x: &[f64], y: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), y.len(), "kernel eval: feature dim mismatch");
+        match self {
+            BaseKernel::Linear => dot(x, y),
+            BaseKernel::Polynomial => (dot(x, y) + params.coef0).powi(params.degree as i32),
+            BaseKernel::Gaussian => {
+                let mut d2 = 0.0;
+                for (a, b) in x.iter().zip(y) {
+                    let d = a - b;
+                    d2 += d * d;
+                }
+                (-params.gamma * d2).exp()
+            }
+            BaseKernel::Tanimoto => {
+                let mut num = 0.0;
+                let mut den = 0.0;
+                for (a, b) in x.iter().zip(y) {
+                    num += a.min(*b);
+                    den += a.max(*b);
+                }
+                if den == 0.0 {
+                    1.0
+                } else {
+                    num / den
+                }
+            }
+            BaseKernel::Min => x.iter().zip(y).map(|(a, b)| a.min(*b)).sum(),
+            BaseKernel::Cosine => {
+                let (mut xy, mut xx, mut yy) = (0.0, 0.0, 0.0);
+                for (a, b) in x.iter().zip(y) {
+                    xy += a * b;
+                    xx += a * a;
+                    yy += b * b;
+                }
+                if xx == 0.0 || yy == 0.0 {
+                    0.0
+                } else {
+                    xy / (xx * yy).sqrt()
+                }
+            }
+        }
+    }
+
+    /// Parse from a config string (the CLI/experiment configs use these).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "linear" => Some(Self::Linear),
+            "polynomial" | "poly" => Some(Self::Polynomial),
+            "gaussian" | "rbf" => Some(Self::Gaussian),
+            "tanimoto" | "minmax" => Some(Self::Tanimoto),
+            "min" => Some(Self::Min),
+            "cosine" | "norm" => Some(Self::Cosine),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Linear => "linear",
+            Self::Polynomial => "polynomial",
+            Self::Gaussian => "gaussian",
+            Self::Tanimoto => "tanimoto",
+            Self::Min => "min",
+            Self::Cosine => "cosine",
+        }
+    }
+}
+
+#[inline]
+fn dot(x: &[f64], y: &[f64]) -> f64 {
+    crate::linalg::vecops::dot(x, y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const P: KernelParams = KernelParams { gamma: 0.5, degree: 2, coef0: 1.0 };
+
+    #[test]
+    fn linear_is_dot() {
+        assert_eq!(BaseKernel::Linear.eval(&P, &[1.0, 2.0], &[3.0, -1.0]), 1.0);
+    }
+
+    #[test]
+    fn polynomial_known_value() {
+        // (<[1,1],[2,3]> + 1)^2 = 36
+        assert_eq!(BaseKernel::Polynomial.eval(&P, &[1.0, 1.0], &[2.0, 3.0]), 36.0);
+    }
+
+    #[test]
+    fn gaussian_unit_at_self_and_decays() {
+        let x = [0.3, -0.7, 2.0];
+        assert_eq!(BaseKernel::Gaussian.eval(&P, &x, &x), 1.0);
+        let y = [0.3, -0.7, 3.0];
+        assert!((BaseKernel::Gaussian.eval(&P, &x, &y) - (-0.5f64).exp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tanimoto_binary_semantics() {
+        // Bits shared: 1; bits in union: 3 => 1/3.
+        let x = [1.0, 1.0, 0.0, 0.0];
+        let y = [1.0, 0.0, 1.0, 0.0];
+        assert!((BaseKernel::Tanimoto.eval(&P, &x, &y) - 1.0 / 3.0).abs() < 1e-12);
+        // All-zero pair defined as 1 (identical).
+        assert_eq!(BaseKernel::Tanimoto.eval(&P, &[0.0; 3], &[0.0; 3]), 1.0);
+    }
+
+    #[test]
+    fn tanimoto_self_is_one() {
+        let x = [1.0, 0.0, 1.0, 1.0];
+        assert_eq!(BaseKernel::Tanimoto.eval(&P, &x, &x), 1.0);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for k in [
+            BaseKernel::Linear,
+            BaseKernel::Polynomial,
+            BaseKernel::Gaussian,
+            BaseKernel::Tanimoto,
+            BaseKernel::Min,
+            BaseKernel::Cosine,
+        ] {
+            assert_eq!(BaseKernel::parse(k.name()), Some(k));
+        }
+        assert_eq!(BaseKernel::parse("nope"), None);
+    }
+
+    #[test]
+    fn min_kernel_counts_shared_bits() {
+        // On binary vectors, Min = intersection size.
+        let x = [1.0, 1.0, 0.0, 1.0];
+        let y = [1.0, 0.0, 1.0, 1.0];
+        assert_eq!(BaseKernel::Min.eval(&P, &x, &y), 2.0);
+    }
+
+    #[test]
+    fn cosine_is_normalized_linear() {
+        let x = [3.0, 4.0];
+        let y = [4.0, 3.0];
+        assert!((BaseKernel::Cosine.eval(&P, &x, &y) - 24.0 / 25.0).abs() < 1e-12);
+        assert_eq!(BaseKernel::Cosine.eval(&P, &x, &x), 1.0);
+        assert_eq!(BaseKernel::Cosine.eval(&P, &[0.0, 0.0], &y), 0.0);
+    }
+
+    #[test]
+    fn min_minmax_norm_agree_on_self_similarity_ordering() {
+        // §6.1: the binary-feature kernel variants rank similar pairs the
+        // same way — check monotone agreement on nested bit sets.
+        let a = [1.0, 1.0, 1.0, 0.0];
+        let b = [1.0, 1.0, 0.0, 0.0]; // subset of a
+        let c = [1.0, 0.0, 0.0, 0.0]; // subset of b
+        for k in [BaseKernel::Tanimoto, BaseKernel::Min, BaseKernel::Cosine] {
+            let ab = k.eval(&P, &a, &b);
+            let ac = k.eval(&P, &a, &c);
+            assert!(ab > ac, "{k:?}: {ab} vs {ac}");
+        }
+    }
+}

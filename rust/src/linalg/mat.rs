@@ -1,0 +1,408 @@
+//! Dense row-major `f64` matrix.
+//!
+//! This is the storage type for object-level kernel matrices (`D ∈ R^{m×m}`,
+//! `T ∈ R^{q×q}`), feature matrices, and the GVT intermediate `S`. The GEMM
+//! here is a cache-blocked, threaded triple loop — no SIMD intrinsics, but
+//! laid out so LLVM auto-vectorizes the innermost `axpy`-style loop.
+
+use crate::linalg::par;
+use std::fmt;
+
+/// Row-major dense matrix of `f64`.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    /// Zero matrix of shape `rows × cols`.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Matrix filled with `value`.
+    pub fn full(rows: usize, cols: usize, value: f64) -> Self {
+        Self { rows, cols, data: vec![value; rows * cols] }
+    }
+
+    /// Identity matrix of order `n`.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a row-major data vector.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Self { rows, cols, data }
+    }
+
+    /// Build from a closure `f(i, j)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// `(rows, cols)`.
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Borrow the backing row-major slice.
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Mutable backing slice.
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Consume into the backing vector.
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
+    }
+
+    /// Borrow row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable row `i`.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        debug_assert!(i < self.rows);
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on big matrices.
+        const B: usize = 64;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Gather rows by index: result row `k` = `self` row `idx[k]`.
+    pub fn gather_rows(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(idx.len(), self.cols);
+        for (k, &i) in idx.iter().enumerate() {
+            out.row_mut(k).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Symmetric submatrix `self[idx, idx]`.
+    pub fn principal_submatrix(&self, idx: &[usize]) -> Mat {
+        let k = idx.len();
+        let mut out = Mat::zeros(k, k);
+        for (a, &i) in idx.iter().enumerate() {
+            let src = self.row(i);
+            let dst = out.row_mut(a);
+            for (b, &j) in idx.iter().enumerate() {
+                dst[b] = src[j];
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Max absolute entry difference vs `other` (test helper).
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Is this matrix symmetric to tolerance `tol`?
+    pub fn is_symmetric(&self, tol: f64) -> bool {
+        if self.rows != self.cols {
+            return false;
+        }
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                if (self[(i, j)] - self[(j, i)]).abs() > tol {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Scale all entries in place.
+    pub fn scale(&mut self, s: f64) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    /// `self += s * other` (elementwise).
+    pub fn axpy(&mut self, s: f64, other: &Mat) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += s * b;
+        }
+    }
+
+    /// Elementwise square, returned as a new matrix (the `D^{⊙2}` of
+    /// Theorem 2's `Q(D⊗D)Qᵀ = D^{⊙2} ⊗ 1`).
+    pub fn hadamard_square(&self) -> Mat {
+        let data = self.data.iter().map(|x| x * x).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Dense matrix–vector product `y = self · x` (threaded over rows).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols, "matvec dim mismatch");
+        let mut y = vec![0.0; self.rows];
+        let cols = self.cols;
+        let data = &self.data;
+        par::parallel_fill(&mut y, 256, |start, _end, chunk| {
+            for (k, yi) in chunk.iter_mut().enumerate() {
+                let row = &data[(start + k) * cols..(start + k + 1) * cols];
+                let mut acc = 0.0;
+                for (a, b) in row.iter().zip(x) {
+                    acc += a * b;
+                }
+                *yi = acc;
+            }
+        });
+        y
+    }
+
+    /// Dense GEMM `self · other`, cache-blocked and threaded over row
+    /// panels. Inner loop is `C[i,:] += A[i,k] * B[k,:]` which LLVM
+    /// vectorizes well on row-major data.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul dim mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut c = Mat::zeros(m, n);
+        let a = &self.data;
+        let b = &other.data;
+        // Row-panel parallelism; each worker owns disjoint C rows.
+        let cdata = c.as_mut_slice();
+        par::parallel_fill_rows(cdata, n.max(1), 8 * n.max(1), |row_start_flat, _end, chunk| {
+            let row_start = row_start_flat / n;
+            let rows_here = chunk.len() / n;
+            const KB: usize = 256; // K-blocking: keep B panel in L2
+            for kb in (0..k).step_by(KB) {
+                let kend = (kb + KB).min(k);
+                for i in 0..rows_here {
+                    let ai = &a[(row_start + i) * k..(row_start + i) * k + k];
+                    let ci = &mut chunk[i * n..(i + 1) * n];
+                    for kk in kb..kend {
+                        let aik = ai[kk];
+                        if aik == 0.0 {
+                            continue;
+                        }
+                        let brow = &b[kk * n..(kk + 1) * n];
+                        for (cij, bkj) in ci.iter_mut().zip(brow) {
+                            *cij += aik * bkj;
+                        }
+                    }
+                }
+            }
+        });
+        c
+    }
+
+    /// `self · otherᵀ` without materializing the transpose: row-dot-row,
+    /// good when `other` is row-major and both row sets are gathered.
+    pub fn matmul_nt(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "matmul_nt dim mismatch");
+        let (m, n, k) = (self.rows, other.rows, self.cols);
+        let mut c = Mat::zeros(m, n);
+        let a = &self.data;
+        let b = &other.data;
+        let cdata = c.as_mut_slice();
+        par::parallel_fill_rows(cdata, n.max(1), 8 * n.max(1), |row_start_flat, _end, chunk| {
+            let row_start = row_start_flat / n;
+            let rows_here = chunk.len() / n;
+            for i in 0..rows_here {
+                let ai = &a[(row_start + i) * k..(row_start + i) * k + k];
+                let ci = &mut chunk[i * n..(i + 1) * n];
+                for (j, cij) in ci.iter_mut().enumerate() {
+                    let bj = &b[j * k..(j + 1) * k];
+                    let mut acc = 0.0;
+                    for (x, y) in ai.iter().zip(bj) {
+                        acc += x * y;
+                    }
+                    *cij = acc;
+                }
+            }
+        });
+        c
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        let show = self.rows.min(6);
+        for i in 0..show {
+            let cols = self.cols.min(8);
+            let vals: Vec<String> =
+                (0..cols).map(|j| format!("{:9.4}", self[(i, j)])).collect();
+            writeln!(f, "  [{}{}]", vals.join(", "), if self.cols > 8 { ", …" } else { "" })?;
+        }
+        if self.rows > show {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut s = 0.0;
+                for k in 0..a.cols() {
+                    s += a[(i, k)] * b[(k, j)];
+                }
+                c[(i, j)] = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        use crate::rng::{dist, Xoshiro256};
+        let mut rng = Xoshiro256::seed_from(1);
+        for &(m, k, n) in &[(3, 4, 5), (17, 31, 13), (64, 64, 64), (65, 127, 33)] {
+            let a = Mat::from_vec(m, k, dist::normal_vec(&mut rng, m * k));
+            let b = Mat::from_vec(k, n, dist::normal_vec(&mut rng, k * n));
+            let c = a.matmul(&b);
+            let c0 = naive_matmul(&a, &b);
+            assert!(c.max_abs_diff(&c0) < 1e-10, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn matmul_nt_matches_transpose_path() {
+        use crate::rng::{dist, Xoshiro256};
+        let mut rng = Xoshiro256::seed_from(2);
+        let a = Mat::from_vec(10, 7, dist::normal_vec(&mut rng, 70));
+        let b = Mat::from_vec(12, 7, dist::normal_vec(&mut rng, 84));
+        let c1 = a.matmul_nt(&b);
+        let c2 = a.matmul(&b.transpose());
+        assert!(c1.max_abs_diff(&c2) < 1e-12);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        use crate::rng::{dist, Xoshiro256};
+        let mut rng = Xoshiro256::seed_from(3);
+        let a = Mat::from_vec(23, 17, dist::normal_vec(&mut rng, 23 * 17));
+        let x = dist::normal_vec(&mut rng, 17);
+        let y = a.matvec(&x);
+        let xm = Mat::from_vec(17, 1, x);
+        let ym = a.matmul(&xm);
+        for i in 0..23 {
+            assert!((y[i] - ym[(i, 0)]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        use crate::rng::{dist, Xoshiro256};
+        let mut rng = Xoshiro256::seed_from(4);
+        let a = Mat::from_vec(37, 91, dist::normal_vec(&mut rng, 37 * 91));
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn gather_and_principal_submatrix() {
+        let a = Mat::from_fn(5, 5, |i, j| (10 * i + j) as f64);
+        let g = a.gather_rows(&[3, 0, 3]);
+        assert_eq!(g.row(0), a.row(3));
+        assert_eq!(g.row(1), a.row(0));
+        assert_eq!(g.row(2), a.row(3));
+        let s = a.principal_submatrix(&[1, 4]);
+        assert_eq!(s[(0, 0)], a[(1, 1)]);
+        assert_eq!(s[(0, 1)], a[(1, 4)]);
+        assert_eq!(s[(1, 0)], a[(4, 1)]);
+        assert_eq!(s[(1, 1)], a[(4, 4)]);
+    }
+
+    #[test]
+    fn hadamard_square_values() {
+        let a = Mat::from_fn(2, 2, |i, j| (i as f64) - (j as f64));
+        let h = a.hadamard_square();
+        assert_eq!(h[(0, 1)], 1.0);
+        assert_eq!(h[(1, 0)], 1.0);
+        assert_eq!(h[(0, 0)], 0.0);
+    }
+
+    #[test]
+    fn eye_is_identity_under_matmul() {
+        use crate::rng::{dist, Xoshiro256};
+        let mut rng = Xoshiro256::seed_from(5);
+        let a = Mat::from_vec(9, 9, dist::normal_vec(&mut rng, 81));
+        assert!(a.matmul(&Mat::eye(9)).max_abs_diff(&a) < 1e-14);
+        assert!(Mat::eye(9).matmul(&a).max_abs_diff(&a) < 1e-14);
+    }
+}

@@ -1,0 +1,16 @@
+//! Dense linear algebra substrate (no external BLAS available offline).
+//!
+//! * [`Mat`] — row-major dense `f64` matrix with the operations the GVT
+//!   stack needs: blocked & threaded GEMM, GEMV, transpose, row gather.
+//! * [`chol`] — Cholesky factorization + triangular solves (closed-form
+//!   ridge oracle and the Nyström/Falkon preconditioner).
+//! * [`vecops`] — dot/axpy/norm primitives used by the iterative solvers.
+//! * [`par`] — scoped-thread parallel-for helper (no rayon offline).
+
+pub mod chol;
+pub mod eigh;
+pub mod mat;
+pub mod par;
+pub mod vecops;
+
+pub use mat::Mat;

@@ -1,0 +1,149 @@
+//! Scoped-thread parallelism helper. `rayon` is not available offline, so
+//! the hot paths fan work out over `std::thread::scope` with static
+//! chunking — adequate because our parallel loops are regular (rows of a
+//! matrix, chunks of an output vector).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use: `GVT_RLS_THREADS` env override, else
+/// available parallelism, clamped to at least 1.
+pub fn num_threads() -> usize {
+    static CACHED: AtomicUsize = AtomicUsize::new(0);
+    let cached = CACHED.load(Ordering::Relaxed);
+    if cached != 0 {
+        return cached;
+    }
+    let n = std::env::var("GVT_RLS_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        });
+    CACHED.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Run `f(chunk_index, start, end)` over `0..len` split into contiguous
+/// chunks, one per worker. Falls back to inline execution for small `len`
+/// (thread spawn ≈ 10 µs; not worth it under ~16k elements of trivial work).
+///
+/// `f` must be `Sync` because it is shared across workers; interior
+/// mutability (disjoint output slices via raw parts, atomics) is the
+/// caller's responsibility — see `split_mut_chunks` for the safe pattern.
+pub fn parallel_ranges<F>(len: usize, min_per_thread: usize, f: F)
+where
+    F: Fn(usize, usize, usize) + Sync,
+{
+    let workers = num_threads().min(len / min_per_thread.max(1)).max(1);
+    if workers == 1 {
+        f(0, 0, len);
+        return;
+    }
+    let chunk = len.div_ceil(workers);
+    std::thread::scope(|s| {
+        for w in 0..workers {
+            let start = w * chunk;
+            let end = ((w + 1) * chunk).min(len);
+            if start >= end {
+                break;
+            }
+            let f = &f;
+            s.spawn(move || f(w, start, end));
+        }
+    });
+}
+
+/// Split a mutable slice into `k` near-equal contiguous chunks (the safe
+/// counterpart for writing disjoint outputs from `parallel_ranges` workers).
+pub fn split_mut_chunks<'a, T>(xs: &'a mut [T], k: usize) -> Vec<&'a mut [T]> {
+    let len = xs.len();
+    let chunk = len.div_ceil(k.max(1)).max(1);
+    xs.chunks_mut(chunk).collect()
+}
+
+/// Parallel map over disjoint output chunks: `out` is split to match the
+/// ranges handed to `f(start, end, out_chunk)`.
+pub fn parallel_fill<T, F>(out: &mut [T], min_per_thread: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, usize, &mut [T]) + Sync,
+{
+    parallel_fill_rows(out, 1, min_per_thread, f)
+}
+
+/// Row-aligned parallel fill: `out` is treated as rows of `row_len`
+/// elements and chunk boundaries always fall on row boundaries, so workers
+/// that index `chunk[i * row_len ..]` stay consistent. `f(start, end,
+/// chunk)` receives flat element offsets.
+pub fn parallel_fill_rows<T, F>(out: &mut [T], row_len: usize, min_per_thread: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, usize, &mut [T]) + Sync,
+{
+    let len = out.len();
+    assert!(row_len >= 1 && len % row_len == 0, "parallel_fill_rows: ragged rows");
+    let rows = len / row_len;
+    let min_rows = min_per_thread.div_ceil(row_len).max(1);
+    let workers = num_threads().min(rows / min_rows).max(1);
+    if workers == 1 {
+        f(0, len, out);
+        return;
+    }
+    let chunk_rows = rows.div_ceil(workers);
+    let chunk = chunk_rows * row_len;
+    std::thread::scope(|s| {
+        let mut rest = out;
+        let mut start = 0;
+        while !rest.is_empty() {
+            let take = chunk.min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            let f = &f;
+            s.spawn(move || f(start, start + take, head));
+            rest = tail;
+            start += take;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_fill_covers_everything() {
+        let mut out = vec![0usize; 10_000];
+        parallel_fill(&mut out, 1, |start, _end, chunk| {
+            for (i, v) in chunk.iter_mut().enumerate() {
+                *v = start + i;
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i);
+        }
+    }
+
+    #[test]
+    fn parallel_ranges_partition() {
+        use std::sync::Mutex;
+        let seen = Mutex::new(vec![0u8; 1000]);
+        parallel_ranges(1000, 1, |_, s, e| {
+            let mut g = seen.lock().unwrap();
+            for i in s..e {
+                g[i] += 1;
+            }
+        });
+        assert!(seen.lock().unwrap().iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn small_len_runs_inline() {
+        let mut out = vec![0.0f64; 7];
+        parallel_fill(&mut out, 1024, |_, _, chunk| {
+            for v in chunk.iter_mut() {
+                *v = 1.0;
+            }
+        });
+        assert!(out.iter().all(|&v| v == 1.0));
+    }
+}

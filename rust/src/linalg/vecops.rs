@@ -1,0 +1,120 @@
+//! Vector primitives for the iterative solvers (MINRES/CG run thousands of
+//! these per training; kept allocation-free and auto-vectorizable).
+
+/// Dot product.
+#[inline]
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    // Four-way unrolled accumulation: breaks the dependency chain so LLVM
+    // emits vector FMAs; also slightly better numerics than strict serial.
+    let mut acc = [0.0f64; 4];
+    let chunks = x.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += x[i] * y[i];
+        acc[1] += x[i + 1] * y[i + 1];
+        acc[2] += x[i + 2] * y[i + 2];
+        acc[3] += x[i + 3] * y[i + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..x.len() {
+        s += x[i] * y[i];
+    }
+    s
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm2(x: &[f64]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// `y += a * x`.
+#[inline]
+pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// `y = a * x + b * y` (the MINRES update shape).
+#[inline]
+pub fn axpby(a: f64, x: &[f64], b: f64, y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi = a * xi + b * *yi;
+    }
+}
+
+/// Scale in place.
+#[inline]
+pub fn scale(x: &mut [f64], a: f64) {
+    for xi in x.iter_mut() {
+        *xi *= a;
+    }
+}
+
+/// Elementwise copy (explicit name for solver readability).
+#[inline]
+pub fn copy(from: &[f64], to: &mut [f64]) {
+    to.copy_from_slice(from);
+}
+
+/// Max |x_i - y_i| (test helper).
+pub fn max_abs_diff(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max)
+}
+
+/// Mean of a slice.
+pub fn mean(x: &[f64]) -> f64 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    x.iter().sum::<f64>() / x.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(x: &[f64]) -> f64 {
+    if x.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(x);
+    (x.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / x.len() as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let x: Vec<f64> = (0..1001).map(|i| (i as f64) * 0.25).collect();
+        let y: Vec<f64> = (0..1001).map(|i| 1.0 - (i as f64) * 0.125).collect();
+        let naive: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        assert!((dot(&x, &y) - naive).abs() < 1e-6 * naive.abs().max(1.0));
+    }
+
+    #[test]
+    fn axpby_basic() {
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![10.0, 20.0, 30.0];
+        axpby(2.0, &x, 0.5, &mut y);
+        assert_eq!(y, vec![7.0, 14.0, 21.0]);
+    }
+
+    #[test]
+    fn norm_of_unit_axis() {
+        let mut x = vec![0.0; 9];
+        x[4] = -3.0;
+        assert_eq!(norm2(&x), 3.0);
+    }
+
+    #[test]
+    fn mean_std() {
+        let x = vec![2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&x) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&x) - 2.0).abs() < 1e-12);
+    }
+}

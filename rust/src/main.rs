@@ -1,0 +1,224 @@
+//! `gvt-rls` — CLI for the pairwise-kernel learning framework.
+//!
+//! Subcommands:
+//!
+//! * `datasets` — print Table 5 (dataset statistics) for the generators.
+//! * `train` — train one model and report test AUC across settings.
+//! * `experiment <fig3|fig4|fig5|fig6|fig8>` — regenerate a paper figure.
+//! * `gvt-demo` — timing demo: GVT vs explicit mat-vec on one problem.
+//! * `runtime-info` — list AOT artifacts and smoke-run one.
+//!
+//! `--quick` shrinks every experiment to smoke-test size.
+
+use anyhow::Result;
+use gvt_rls::cli::Cli;
+
+// Install the tracking allocator so `--mem` reports are exact (Figure 7).
+#[global_allocator]
+static ALLOC: gvt_rls::coordinator::memory::TrackingAlloc =
+    gvt_rls::coordinator::memory::TrackingAlloc;
+
+fn main() {
+    let cli = match Cli::parse(std::env::args().skip(1)) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match cli.command.as_str() {
+        "datasets" => cmd_datasets(&cli),
+        "train" => cmd_train(&cli),
+        "experiment" => cmd_experiment(&cli),
+        "gvt-demo" => cmd_gvt_demo(&cli),
+        "runtime-info" => cmd_runtime_info(&cli),
+        "" | "help" | "--help" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand '{other}'\n");
+            print_help();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "gvt-rls {} — generalized vec trick pairwise kernel learning\n\n\
+         USAGE: gvt-rls <command> [options]\n\n\
+         COMMANDS:\n\
+         \x20 datasets                      print Table 5 dataset statistics\n\
+         \x20 train                         train one model (--dataset --kernel --setting)\n\
+         \x20 experiment <fig3|fig4|fig5|fig6|fig8>   regenerate a paper figure\n\
+         \x20 gvt-demo                      GVT vs explicit mat-vec timing\n\
+         \x20 runtime-info                  list + smoke-run AOT artifacts\n\n\
+         COMMON OPTIONS:\n\
+         \x20 --seed <u64>      master seed (default 42)\n\
+         \x20 --folds <n>       CV folds (default 9)\n\
+         \x20 --workers <n>     experiment-grid worker threads (default 2)\n\
+         \x20 --quick           shrink to smoke-test size\n",
+        gvt_rls::VERSION
+    );
+}
+
+fn cmd_datasets(cli: &Cli) -> Result<()> {
+    use gvt_rls::data::heterodimer::{HeterodimerConfig, ProteinFeature};
+    use gvt_rls::data::kernel_filling::KernelFillingConfig;
+    use gvt_rls::data::merget::MergetConfig;
+    use gvt_rls::data::metz::MetzConfig;
+
+    let seed = cli.opt_u64("seed", 42)?;
+    let quick = cli.has_switch("quick");
+    println!("Generating datasets (quick={quick})…\n");
+    println!(
+        "| {:<14} | {:>9} | {:>5} | {:>5} | Hom. | Dens.  |",
+        "Data set", "Pairs", "Drugs", "Targ."
+    );
+    println!("|{}|{}|{}|{}|------|--------|", "-".repeat(16), "-".repeat(11), "-".repeat(7), "-".repeat(7));
+    let het = if quick { HeterodimerConfig::small() } else { HeterodimerConfig::paper() };
+    println!("{}", het.generate(ProteinFeature::Domain, seed).stats_row());
+    let metz = if quick { MetzConfig::small() } else { MetzConfig::paper() };
+    println!("{}", metz.generate(seed).stats_row());
+    let merget = if quick { MergetConfig::small() } else { MergetConfig::paper() };
+    println!("{}", merget.generate(1, 0, seed).stats_row());
+    let kf = KernelFillingConfig::small();
+    let (k, n) = if quick { (48, 1500) } else { (256, 32_768) };
+    println!("{}", kf.generate(k, n, seed).stats_row());
+    Ok(())
+}
+
+fn cmd_train(cli: &Cli) -> Result<()> {
+    use gvt_rls::data::metz::MetzConfig;
+    use gvt_rls::eval::auc;
+    use gvt_rls::gvt::pairwise::PairwiseKernel;
+    use gvt_rls::solvers::ridge::{PairwiseRidge, RidgeConfig};
+
+    let seed = cli.opt_u64("seed", 42)?;
+    let kernel = PairwiseKernel::parse(&cli.opt_or("kernel", "kronecker"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --kernel"))?;
+    let setting = cli.opt_usize("setting", 1)? as u8;
+    let quick = cli.has_switch("quick");
+    let cfg = RidgeConfig {
+        lambda: cli.opt_f64("lambda", 1e-5)?,
+        max_iters: cli.opt_usize("max-iters", if quick { 50 } else { 400 })?,
+        ..Default::default()
+    };
+
+    let data = if quick { MetzConfig::small() } else { MetzConfig::paper() }.generate(seed);
+    println!("dataset: {} ({} pairs)", data.name, data.len());
+    let split = data.split_setting(setting, 0.25, seed);
+    println!(
+        "setting {}: train {} / test {}",
+        setting,
+        split.train.len(),
+        split.test.len()
+    );
+    let t0 = std::time::Instant::now();
+    let model = PairwiseRidge::fit_early_stopping(&split.train, setting, kernel, &cfg, seed)?;
+    let secs = t0.elapsed().as_secs_f64();
+    let preds = model.predict(&split.test.pairs)?;
+    let a = auc(&preds, &split.test.binary_labels());
+    println!(
+        "kernel {} | iterations {} | train {:.2}s | test AUC {}",
+        kernel.name(),
+        model.iterations,
+        secs,
+        a.map(|v| format!("{v:.4}")).unwrap_or_else(|| "n/a".into())
+    );
+    Ok(())
+}
+
+fn cmd_experiment(cli: &Cli) -> Result<()> {
+    let which = cli
+        .positionals
+        .first()
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow::anyhow!("usage: gvt-rls experiment <fig3|fig4|fig5|fig6|fig8>"))?;
+    gvt_rls::coordinator::figures::run(which, cli)
+}
+
+fn cmd_gvt_demo(cli: &Cli) -> Result<()> {
+    use gvt_rls::data::kernel_filling::KernelFillingConfig;
+    use gvt_rls::gvt::explicit::ExplicitLinOp;
+    use gvt_rls::gvt::pairwise::{PairwiseKernel, PairwiseLinOp};
+    use gvt_rls::gvt::vec_trick::GvtPolicy;
+    use gvt_rls::solvers::linear_op::LinOp;
+
+    let quick = cli.has_switch("quick");
+    let (k, n) = if quick { (48, 1200) } else { (192, 18_000) };
+    let data = KernelFillingConfig::small().generate(k, n, cli.opt_u64("seed", 42)?);
+    println!("kernel-filling problem: {} pairs over {}x{} drugs\n", n, k, k);
+    let a: Vec<f64> = (0..n).map(|i| ((i % 7) as f64) - 3.0).collect();
+
+    for kernel in [PairwiseKernel::Kronecker, PairwiseKernel::Poly2D, PairwiseKernel::Mlpk] {
+        let op = PairwiseLinOp::new(
+            kernel,
+            data.d.clone(),
+            data.t.clone(),
+            data.pairs.clone(),
+            data.pairs.clone(),
+            GvtPolicy::Auto,
+        )?;
+        let t0 = std::time::Instant::now();
+        let p_gvt = op.matvec(&a);
+        let gvt_s = t0.elapsed().as_secs_f64();
+
+        let t1 = std::time::Instant::now();
+        let exp = ExplicitLinOp::new(kernel, &data.d, &data.t, &data.pairs, &data.pairs);
+        let build_s = t1.elapsed().as_secs_f64();
+        let t2 = std::time::Instant::now();
+        let p_exp = exp.apply(&a);
+        let mv_s = t2.elapsed().as_secs_f64();
+        let err = gvt_rls::linalg::vecops::max_abs_diff(&p_gvt, &p_exp);
+        println!(
+            "{:<14} terms {:>2} | GVT {:>9.4}s | explicit build {:>8.3}s + matvec {:>8.4}s ({}) | max|Δ| {:.2e}",
+            kernel.name(),
+            op.term_count(),
+            gvt_s,
+            build_s,
+            mv_s,
+            gvt_rls::coordinator::memory::format_bytes(exp.memory_bytes()),
+            err
+        );
+    }
+    Ok(())
+}
+
+fn cmd_runtime_info(cli: &Cli) -> Result<()> {
+    use gvt_rls::runtime::{KronExec, Registry};
+    let Some(reg) = Registry::discover() else {
+        println!("no artifacts found — run `make artifacts`");
+        return Ok(());
+    };
+    println!("artifacts:");
+    for a in reg.artifacts() {
+        println!("  {:<32} m={:<5} q={:<5} n={:<7} {}", a.name, a.m, a.q, a.n, a.file.display());
+    }
+    if cli.has_switch("smoke") {
+        use gvt_rls::gvt::vec_trick::{gvt_matvec, GvtPolicy};
+        use gvt_rls::rng::{dist, Xoshiro256};
+        use gvt_rls::testing::gen;
+        let meta = reg.artifacts().first().unwrap().clone();
+        println!("\nsmoke-running {} …", meta.name);
+        let exec = KronExec::load(&reg, &meta)?;
+        let mut rng = Xoshiro256::seed_from(1);
+        let m = meta.m.min(16);
+        let q = meta.q.min(16);
+        let d = gen::psd_kernel(&mut rng, m);
+        let t = gen::psd_kernel(&mut rng, q);
+        let cols = gen::pair_sample(&mut rng, 40, m, q);
+        let rows = gen::pair_sample(&mut rng, 30, m, q);
+        let a = dist::normal_vec(&mut rng, 40);
+        let p_xla = exec.matvec(&d, &t, &rows, &cols, &a)?;
+        let p_rust = gvt_matvec(&d, &t, &rows, &cols, &a, GvtPolicy::Auto);
+        let err = gvt_rls::linalg::vecops::max_abs_diff(&p_xla, &p_rust);
+        println!("XLA vs rust-native GVT: max|Δ| = {err:.3e} (f32 artifact)");
+    }
+    Ok(())
+}

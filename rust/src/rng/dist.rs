@@ -1,0 +1,146 @@
+//! Sampling distributions and combinatorial helpers on top of [`Rng`].
+
+use super::Rng;
+
+/// Standard normal sample via the Marsaglia polar method.
+pub fn standard_normal<R: Rng>(rng: &mut R) -> f64 {
+    loop {
+        let u = 2.0 * rng.next_f64() - 1.0;
+        let v = 2.0 * rng.next_f64() - 1.0;
+        let s = u * u + v * v;
+        if s > 0.0 && s < 1.0 {
+            return u * (-2.0 * s.ln() / s).sqrt();
+        }
+    }
+}
+
+/// Normal sample with given mean and standard deviation.
+#[inline]
+pub fn normal<R: Rng>(rng: &mut R, mean: f64, std: f64) -> f64 {
+    mean + std * standard_normal(rng)
+}
+
+/// Vector of i.i.d. standard normals.
+pub fn normal_vec<R: Rng>(rng: &mut R, n: usize) -> Vec<f64> {
+    (0..n).map(|_| standard_normal(rng)).collect()
+}
+
+/// Uniform sample in `[lo, hi)`.
+#[inline]
+pub fn uniform<R: Rng>(rng: &mut R, lo: f64, hi: f64) -> f64 {
+    lo + (hi - lo) * rng.next_f64()
+}
+
+/// Bernoulli trial with success probability `p`.
+#[inline]
+pub fn bernoulli<R: Rng>(rng: &mut R, p: f64) -> bool {
+    rng.next_f64() < p
+}
+
+/// Random binary vector with density `p` (fraction of ones).
+pub fn binary_vec<R: Rng>(rng: &mut R, n: usize, p: f64) -> Vec<f64> {
+    (0..n).map(|_| if bernoulli(rng, p) { 1.0 } else { 0.0 }).collect()
+}
+
+/// In-place Fisher–Yates shuffle.
+pub fn shuffle<R: Rng, T>(rng: &mut R, xs: &mut [T]) {
+    for i in (1..xs.len()).rev() {
+        let j = rng.index(i + 1);
+        xs.swap(i, j);
+    }
+}
+
+/// Random permutation of `0..n`.
+pub fn permutation<R: Rng>(rng: &mut R, n: usize) -> Vec<usize> {
+    let mut p: Vec<usize> = (0..n).collect();
+    shuffle(rng, &mut p);
+    p
+}
+
+/// Sample `k` distinct indices from `0..n` (k ≤ n), in random order.
+///
+/// Uses a partial Fisher–Yates over an index vector: `O(n)` memory,
+/// `O(n + k)` time — fine for the dataset sizes here.
+pub fn sample_without_replacement<R: Rng>(rng: &mut R, n: usize, k: usize) -> Vec<usize> {
+    assert!(k <= n, "cannot sample {k} from {n} without replacement");
+    let mut pool: Vec<usize> = (0..n).collect();
+    for i in 0..k {
+        let j = i + rng.index(n - i);
+        pool.swap(i, j);
+    }
+    pool.truncate(k);
+    pool
+}
+
+/// Split `0..n` into `folds` contiguous-in-permutation folds of near-equal
+/// size. Returns fold assignment per index.
+pub fn fold_assignment<R: Rng>(rng: &mut R, n: usize, folds: usize) -> Vec<usize> {
+    assert!(folds >= 2, "need at least 2 folds");
+    let perm = permutation(rng, n);
+    let mut assign = vec![0usize; n];
+    for (rank, &idx) in perm.iter().enumerate() {
+        assign[idx] = rank * folds / n.max(1);
+    }
+    assign
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Xoshiro256::seed_from(3);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| standard_normal(&mut rng)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn permutation_is_permutation() {
+        let mut rng = Xoshiro256::seed_from(4);
+        let p = permutation(&mut rng, 100);
+        let mut seen = vec![false; 100];
+        for &i in &p {
+            assert!(!seen[i]);
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn sample_without_replacement_distinct_and_in_range() {
+        let mut rng = Xoshiro256::seed_from(5);
+        let s = sample_without_replacement(&mut rng, 50, 20);
+        assert_eq!(s.len(), 20);
+        let mut sorted = s.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 20);
+        assert!(s.iter().all(|&i| i < 50));
+    }
+
+    #[test]
+    fn folds_are_balanced() {
+        let mut rng = Xoshiro256::seed_from(6);
+        let assign = fold_assignment(&mut rng, 103, 9);
+        let mut counts = vec![0usize; 9];
+        for &f in &assign {
+            counts[f] += 1;
+        }
+        let (min, max) = (counts.iter().min().unwrap(), counts.iter().max().unwrap());
+        assert!(max - min <= 1, "unbalanced: {counts:?}");
+    }
+
+    #[test]
+    fn bernoulli_rate() {
+        let mut rng = Xoshiro256::seed_from(7);
+        let hits = (0..100_000).filter(|_| bernoulli(&mut rng, 0.3)).count();
+        let rate = hits as f64 / 100_000.0;
+        assert!((rate - 0.3).abs() < 0.01, "rate={rate}");
+    }
+}

@@ -1,0 +1,110 @@
+//! Pseudo-random number generation substrate.
+//!
+//! The sandbox registry has no `rand` crate, so this module implements the
+//! generators the rest of the library needs: [`SplitMix64`] for seeding and
+//! [`Xoshiro256`] (xoshiro256++) as the workhorse generator, plus the
+//! distribution / shuffling helpers in [`dist`].
+//!
+//! All experiment code takes explicit `u64` seeds so every figure and table
+//! in EXPERIMENTS.md is exactly reproducible.
+
+mod splitmix;
+mod xoshiro;
+
+pub mod dist;
+
+pub use splitmix::SplitMix64;
+pub use xoshiro::Xoshiro256;
+
+/// Minimal RNG interface implemented by both generators.
+pub trait Rng {
+    /// Next raw 64 uniformly random bits.
+    fn next_u64(&mut self) -> u64;
+
+    /// Uniform `f64` in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    fn next_f64(&mut self) -> f64 {
+        // Take the top 53 bits — the low bits of some generators are weaker.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, bound)` via Lemire's multiply-shift with
+    /// rejection (unbiased).
+    #[inline]
+    fn next_below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0, "next_below: bound must be positive");
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128) * (bound as u128);
+            let lo = m as u64;
+            if lo >= bound || lo >= bound.wrapping_neg() % bound {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Uniform `usize` index in `[0, len)`.
+    #[inline]
+    fn index(&mut self, len: usize) -> usize {
+        self.next_below(len as u64) as usize
+    }
+}
+
+/// Derive `k` statistically independent child seeds from one master seed.
+///
+/// Used by the coordinator to hand each (fold, worker) job its own stream.
+pub fn child_seeds(master: u64, k: usize) -> Vec<u64> {
+    let mut sm = SplitMix64::new(master);
+    (0..k).map(|_| sm.next_u64()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = Xoshiro256::seed_from(1);
+        for _ in 0..10_000 {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x), "{x} out of [0,1)");
+        }
+    }
+
+    #[test]
+    fn next_below_unbiased_small_bound() {
+        let mut rng = Xoshiro256::seed_from(2);
+        let mut counts = [0usize; 3];
+        let trials = 300_000;
+        for _ in 0..trials {
+            counts[rng.next_below(3) as usize] += 1;
+        }
+        for &c in &counts {
+            let frac = c as f64 / trials as f64;
+            assert!((frac - 1.0 / 3.0).abs() < 0.01, "biased: {frac}");
+        }
+    }
+
+    #[test]
+    fn child_seeds_distinct() {
+        let seeds = child_seeds(42, 64);
+        for i in 0..seeds.len() {
+            for j in (i + 1)..seeds.len() {
+                assert_ne!(seeds[i], seeds[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a: Vec<u64> = {
+            let mut r = Xoshiro256::seed_from(9);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut r = Xoshiro256::seed_from(9);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        assert_eq!(a, b);
+    }
+}

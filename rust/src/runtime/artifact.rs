@@ -1,0 +1,151 @@
+//! Artifact manifest: discovery and metadata for the AOT-compiled HLO
+//! programs produced by `python/compile/aot.py`.
+
+use crate::runtime::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Metadata of one shape-specialized artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactMeta {
+    /// Logical name, e.g. `kron_matvec_m64_q64_n4096`.
+    pub name: String,
+    /// Drug-domain size baked into the program.
+    pub m: usize,
+    /// Target-domain size.
+    pub q: usize,
+    /// Output-sample capacity (gather rows padded to this).
+    pub n: usize,
+    /// HLO text file, relative to the artifacts dir.
+    pub file: PathBuf,
+}
+
+/// The set of available artifacts.
+#[derive(Clone, Debug, Default)]
+pub struct Registry {
+    dir: PathBuf,
+    artifacts: Vec<ArtifactMeta>,
+}
+
+impl Registry {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Registry> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let version = j.get("version").and_then(|v| v.as_usize()).unwrap_or(0);
+        if version != 1 {
+            bail!("manifest version {version} unsupported (expected 1)");
+        }
+        let mut artifacts = Vec::new();
+        for a in j
+            .get("artifacts")
+            .and_then(|v| v.as_arr())
+            .context("manifest missing 'artifacts' array")?
+        {
+            let get_usize = |k: &str| -> Result<usize> {
+                a.get(k)
+                    .and_then(|v| v.as_usize())
+                    .with_context(|| format!("artifact missing numeric field '{k}'"))
+            };
+            let meta = ArtifactMeta {
+                name: a
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .context("artifact missing 'name'")?
+                    .to_string(),
+                m: get_usize("m")?,
+                q: get_usize("q")?,
+                n: get_usize("n")?,
+                file: PathBuf::from(
+                    a.get("file").and_then(|v| v.as_str()).context("artifact missing 'file'")?,
+                ),
+            };
+            let full = dir.join(&meta.file);
+            if !full.is_file() {
+                bail!("artifact file missing: {}", full.display());
+            }
+            artifacts.push(meta);
+        }
+        Ok(Registry { dir: dir.to_path_buf(), artifacts })
+    }
+
+    /// Load from the default location, `None` when artifacts aren't built
+    /// (callers treat the XLA path as unavailable and fall back to the
+    /// rust-native GVT).
+    pub fn discover() -> Option<Registry> {
+        let dir = crate::runtime::artifacts_dir()?;
+        Registry::load(&dir).ok()
+    }
+
+    pub fn artifacts(&self) -> &[ArtifactMeta] {
+        &self.artifacts
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn path_of(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+
+    /// Smallest artifact whose baked shape covers `(m, q)` (the sample
+    /// capacity `n` is handled by chunking, so it doesn't constrain
+    /// selection).
+    pub fn pick(&self, m: usize, q: usize) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.m >= m && a.q >= q)
+            .min_by_key(|a| a.m * a.q)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn load_and_pick() {
+        let dir = std::env::temp_dir().join(format!("gvt_rls_reg_{}", std::process::id()));
+        write_manifest(
+            &dir,
+            r#"{"version": 1, "artifacts": [
+                {"name": "a64", "m": 64, "q": 64, "n": 4096, "file": "a64.hlo.txt"},
+                {"name": "a128", "m": 128, "q": 128, "n": 8192, "file": "a128.hlo.txt"}
+            ]}"#,
+        );
+        std::fs::write(dir.join("a64.hlo.txt"), "x").unwrap();
+        std::fs::write(dir.join("a128.hlo.txt"), "x").unwrap();
+        let reg = Registry::load(&dir).unwrap();
+        assert_eq!(reg.artifacts().len(), 2);
+        assert_eq!(reg.pick(32, 50).unwrap().name, "a64");
+        assert_eq!(reg.pick(100, 10).unwrap().name, "a128");
+        assert!(reg.pick(300, 300).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_is_error() {
+        let dir = std::env::temp_dir().join(format!("gvt_rls_reg2_{}", std::process::id()));
+        write_manifest(
+            &dir,
+            r#"{"version": 1, "artifacts": [
+                {"name": "a", "m": 8, "q": 8, "n": 64, "file": "missing.hlo.txt"}
+            ]}"#,
+        );
+        assert!(Registry::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn wrong_version_rejected() {
+        let dir = std::env::temp_dir().join(format!("gvt_rls_reg3_{}", std::process::id()));
+        write_manifest(&dir, r#"{"version": 2, "artifacts": []}"#);
+        assert!(Registry::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,153 @@
+//! PJRT executor for the AOT-compiled dense Kronecker mat-vec.
+//!
+//! The artifact program (see `python/compile/model.py::kron_matvec`)
+//! computes, entirely on-device,
+//!
+//! ```text
+//! S = T_mat @ W            # the Pallas-tiled MXU matmul (L1)
+//! p[i] = Σ_d D[row_d[i], d] · S[row_t[i], d]
+//! ```
+//!
+//! with shapes baked at AOT time: `D: f32[M,M]`, `T: f32[Q,Q]`,
+//! `W: f32[Q,M]`, `row_d/row_t: i32[N]` → `p: f32[N]`.
+//!
+//! The executor pads the runtime problem into the artifact's shape
+//! envelope: kernels are zero-padded (zero rows/cols contribute nothing),
+//! output rows are chunked into batches of `N` with padding rows pointed
+//! at index 0 and discarded.
+
+use crate::linalg::Mat;
+use crate::runtime::artifact::{ArtifactMeta, Registry};
+use crate::sparse::PairIndex;
+use anyhow::{bail, Context, Result};
+
+/// A compiled, loaded artifact ready to execute.
+pub struct KronExec {
+    exe: xla::PjRtLoadedExecutable,
+    meta: ArtifactMeta,
+}
+
+impl KronExec {
+    /// Load + compile one artifact on the PJRT CPU client.
+    pub fn load(registry: &Registry, meta: &ArtifactMeta) -> Result<KronExec> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let path = registry.path_of(meta);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-UTF8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("PJRT compile")?;
+        Ok(KronExec { exe, meta: meta.clone() })
+    }
+
+    /// Convenience: discover the registry and load the best artifact for
+    /// domain sizes `(m, q)`.
+    pub fn for_domains(m: usize, q: usize) -> Result<KronExec> {
+        let reg = Registry::discover()
+            .context("artifacts not built — run `make artifacts` first")?;
+        let meta = reg
+            .pick(m, q)
+            .with_context(|| format!("no artifact bucket covers m={m}, q={q}"))?
+            .clone();
+        Self::load(&reg, &meta)
+    }
+
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    /// Dense Kronecker mat-vec through the artifact:
+    /// `p_i = Σ_j D[d̄_i, d_j] T[t̄_i, t_j] a_j` — numerically the same
+    /// operation as [`crate::gvt::vec_trick::gvt_matvec`] (f32 vs f64).
+    pub fn matvec(
+        &self,
+        d: &Mat,
+        t: &Mat,
+        rows: &PairIndex,
+        cols: &PairIndex,
+        a: &[f64],
+    ) -> Result<Vec<f64>> {
+        let (bm, bq, bn) = (self.meta.m, self.meta.q, self.meta.n);
+        if d.rows() > bm || d.cols() > bm || t.rows() > bq || t.cols() > bq {
+            bail!(
+                "kernel matrices ({}x{}, {}x{}) exceed artifact bucket ({bm}, {bq})",
+                d.rows(),
+                d.cols(),
+                t.rows(),
+                t.cols()
+            );
+        }
+        assert_eq!(a.len(), cols.len());
+
+        // Pad kernels into the bucket (f32).
+        let d_lit = pad_matrix_literal(d, bm, bm)?;
+        let t_lit = pad_matrix_literal(t, bq, bq)?;
+
+        // Scatter the coefficients: W[t_j, d_j] += a_j (f32, padded).
+        let mut w = vec![0.0f32; bq * bm];
+        for j in 0..cols.len() {
+            w[cols.target(j) * bm + cols.drug(j)] += a[j] as f32;
+        }
+        let w_lit = OwnedLiteral { data: w, rows: bq, cols: bm };
+
+        // Chunk output rows into batches of bn.
+        let nbar = rows.len();
+        let mut out = Vec::with_capacity(nbar);
+        let mut start = 0;
+        while start < nbar {
+            let end = (start + bn).min(nbar);
+            let mut rd = vec![0i32; bn];
+            let mut rt = vec![0i32; bn];
+            for (k, i) in (start..end).enumerate() {
+                rd[k] = rows.drug(i) as i32;
+                rt[k] = rows.target(i) as i32;
+            }
+            let rd_lit = xla::Literal::vec1(&rd);
+            let rt_lit = xla::Literal::vec1(&rt);
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&[
+                    d_lit.clone_literal()?,
+                    t_lit.clone_literal()?,
+                    w_lit.clone_literal()?,
+                    rd_lit,
+                    rt_lit,
+                ])
+                .context("PJRT execute")?;
+            let lit = result[0][0].to_literal_sync()?;
+            // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+            let p: Vec<f32> = lit.to_tuple1()?.to_vec::<f32>()?;
+            out.extend(p[..end - start].iter().map(|&v| v as f64));
+            start = end;
+        }
+        Ok(out)
+    }
+}
+
+/// Zero-pad an f64 matrix into an `rows_to × cols_to` f32 literal.
+fn pad_matrix_literal(m: &Mat, rows_to: usize, cols_to: usize) -> Result<OwnedLiteral> {
+    let mut buf = vec![0.0f32; rows_to * cols_to];
+    for i in 0..m.rows() {
+        let src = m.row(i);
+        let dst = &mut buf[i * cols_to..i * cols_to + m.cols()];
+        for (d, s) in dst.iter_mut().zip(src) {
+            *d = *s as f32;
+        }
+    }
+    Ok(OwnedLiteral { data: buf, rows: rows_to, cols: cols_to })
+}
+
+/// A host-side buffer we can mint fresh `xla::Literal`s from per call
+/// (literals are consumed by `execute`).
+struct OwnedLiteral {
+    data: Vec<f32>,
+    rows: usize,
+    cols: usize,
+}
+
+impl OwnedLiteral {
+    fn clone_literal(&self) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(&self.data).reshape(&[self.rows as i64, self.cols as i64])?)
+    }
+}

@@ -1,0 +1,42 @@
+//! PJRT runtime bridge — L3 ↔ L2.
+//!
+//! `make artifacts` lowers the JAX/Pallas dense Kronecker mat-vec (L2/L1)
+//! to HLO **text** once at build time; this module loads those artifacts,
+//! compiles them on the PJRT CPU client, and exposes them as [`KronExec`]
+//! executors the coordinator can call on its request path. Python never
+//! runs at serve/train time.
+//!
+//! Artifacts are shape-specialized (`m`, `q`, `n` baked in); the executor
+//! pads/chunks samples to fit, and the registry picks the smallest
+//! compatible bucket.
+//!
+//! Interchange is HLO text rather than serialized protos: jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod artifact;
+pub mod executor;
+pub mod json;
+
+pub use artifact::{ArtifactMeta, Registry};
+pub use executor::KronExec;
+
+/// Default artifacts directory relative to the repo root.
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
+
+/// Locate the artifacts directory: `GVT_RLS_ARTIFACTS` env var, else
+/// `artifacts/` relative to cwd, else relative to the crate root (so
+/// `cargo test` finds it from any working directory).
+pub fn artifacts_dir() -> Option<std::path::PathBuf> {
+    if let Ok(dir) = std::env::var("GVT_RLS_ARTIFACTS") {
+        let p = std::path::PathBuf::from(dir);
+        return p.is_dir().then_some(p);
+    }
+    let cwd = std::path::PathBuf::from(DEFAULT_ARTIFACTS_DIR);
+    if cwd.is_dir() {
+        return Some(cwd);
+    }
+    let crate_rel =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(DEFAULT_ARTIFACTS_DIR);
+    crate_rel.is_dir().then_some(crate_rel)
+}

@@ -1,0 +1,74 @@
+//! Closed-form `O(n³)` ridge solution via Cholesky on the explicit kernel
+//! matrix. The small-problem oracle used by tests and by the standard
+//! (non-GVT) baseline when users want exact solves.
+
+use crate::data::PairDataset;
+use crate::gvt::explicit::explicit_matrix;
+use crate::gvt::pairwise::PairwiseKernel;
+use crate::linalg::chol::solve_regularized;
+use crate::sparse::PairIndex;
+use anyhow::{Context, Result};
+
+/// Exact ridge model: `a = (K + λI)⁻¹ y` with explicit `K`.
+pub struct ClosedFormModel {
+    kernel: PairwiseKernel,
+    d: std::sync::Arc<crate::linalg::Mat>,
+    t: std::sync::Arc<crate::linalg::Mat>,
+    train_pairs: PairIndex,
+    pub alpha: Vec<f64>,
+}
+
+impl ClosedFormModel {
+    /// Fit by dense factorization. `O(n²)` memory, `O(n³)` time — use for
+    /// n up to a few thousand only.
+    pub fn fit(data: &PairDataset, kernel: PairwiseKernel, lambda: f64) -> Result<Self> {
+        let k = explicit_matrix(kernel, &data.d, &data.t, &data.pairs, &data.pairs);
+        let alpha = solve_regularized(&k, lambda, &data.y)
+            .context("closed-form ridge: Cholesky failed (kernel not PD enough)")?;
+        Ok(Self {
+            kernel,
+            d: data.d.clone(),
+            t: data.t.clone(),
+            train_pairs: data.pairs.clone(),
+            alpha,
+        })
+    }
+
+    /// Predict via the explicit cross kernel matrix.
+    pub fn predict(&self, pairs: &PairIndex) -> Vec<f64> {
+        let kx = explicit_matrix(self.kernel, &self.d, &self.t, pairs, &self.train_pairs);
+        kx.matvec(&self.alpha)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{dist, Xoshiro256};
+    use crate::testing::gen;
+    use std::sync::Arc;
+
+    #[test]
+    fn interpolates_training_data_with_tiny_lambda() {
+        let mut rng = Xoshiro256::seed_from(110);
+        let m = 6;
+        let d = Arc::new(gen::psd_kernel(&mut rng, m));
+        let t = Arc::new(gen::psd_kernel(&mut rng, m));
+        // Distinct pairs so K is nonsingular.
+        let pairs = PairIndex::complete(m, m).subset(&(0..20).collect::<Vec<_>>());
+        let y = dist::normal_vec(&mut rng, 20);
+        let data = PairDataset {
+            name: "cf".into(),
+            d,
+            t,
+            pairs: pairs.clone(),
+            y: y.clone(),
+            homogeneous: true,
+        };
+        let model = ClosedFormModel::fit(&data, PairwiseKernel::Kronecker, 1e-8).unwrap();
+        let p = model.predict(&pairs);
+        for (pi, yi) in p.iter().zip(&y) {
+            assert!((pi - yi).abs() < 1e-3, "{pi} vs {yi}");
+        }
+    }
+}

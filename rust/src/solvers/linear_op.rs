@@ -1,0 +1,105 @@
+//! Linear-operator abstraction: the solvers only ever see `x ↦ Ax`.
+
+/// A (possibly rectangular) linear operator.
+///
+/// `Sync` so the coordinator can share ops across worker threads.
+pub trait LinOp: Sync {
+    /// Output dimension (rows).
+    fn dim_out(&self) -> usize;
+
+    /// Input dimension (columns).
+    fn dim_in(&self) -> usize;
+
+    /// `y = A x` into a caller-provided buffer (hot path: no allocation).
+    fn apply_into(&self, x: &[f64], y: &mut [f64]);
+
+    /// Allocating convenience wrapper.
+    fn apply(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.dim_out()];
+        self.apply_into(x, &mut y);
+        y
+    }
+}
+
+/// `(A + λI) x` — the regularized system operator of Equation 1.
+pub struct ShiftedOp<'a> {
+    op: &'a dyn LinOp,
+    shift: f64,
+}
+
+impl<'a> ShiftedOp<'a> {
+    /// Requires a square underlying operator.
+    pub fn new(op: &'a dyn LinOp, shift: f64) -> Self {
+        assert_eq!(op.dim_in(), op.dim_out(), "ShiftedOp needs a square operator");
+        Self { op, shift }
+    }
+}
+
+impl LinOp for ShiftedOp<'_> {
+    fn dim_out(&self) -> usize {
+        self.op.dim_out()
+    }
+
+    fn dim_in(&self) -> usize {
+        self.op.dim_in()
+    }
+
+    fn apply_into(&self, x: &[f64], y: &mut [f64]) {
+        self.op.apply_into(x, y);
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi += self.shift * xi;
+        }
+    }
+}
+
+/// A dense matrix as a [`LinOp`] (test helper and small-problem baseline).
+pub struct DenseOp {
+    m: crate::linalg::Mat,
+}
+
+impl DenseOp {
+    pub fn new(m: crate::linalg::Mat) -> Self {
+        Self { m }
+    }
+
+    pub fn matrix(&self) -> &crate::linalg::Mat {
+        &self.m
+    }
+}
+
+impl LinOp for DenseOp {
+    fn dim_out(&self) -> usize {
+        self.m.rows()
+    }
+
+    fn dim_in(&self) -> usize {
+        self.m.cols()
+    }
+
+    fn apply_into(&self, x: &[f64], y: &mut [f64]) {
+        let r = self.m.matvec(x);
+        y.copy_from_slice(&r);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    #[test]
+    fn shifted_op_adds_lambda_x() {
+        let a = Mat::eye(3);
+        let op = DenseOp::new(a);
+        let sh = ShiftedOp::new(&op, 0.5);
+        let y = sh.apply(&[1.0, 2.0, 3.0]);
+        assert_eq!(y, vec![1.5, 3.0, 4.5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "square")]
+    fn shifted_op_rejects_rectangular() {
+        let op = DenseOp::new(Mat::zeros(2, 3));
+        let _ = ShiftedOp::new(&op, 1.0);
+    }
+}

@@ -1,0 +1,293 @@
+//! MINRES — minimum residual method for symmetric (possibly indefinite)
+//! systems (Paige & Saunders 1975). This is the paper's training solver
+//! ("we used the scipy.sparse.linalg.minres method"); the GVT and explicit
+//! baselines differ only in the `LinOp` handed to it.
+//!
+//! The implementation follows the classic Lanczos + Givens-QR recurrence;
+//! per iteration it performs exactly one operator application plus `O(n)`
+//! vector work and zero allocations after setup.
+
+use crate::linalg::vecops::{axpy, dot, norm2};
+use crate::solvers::linear_op::LinOp;
+use std::ops::ControlFlow;
+
+/// Options for [`minres`].
+#[derive(Clone, Debug)]
+pub struct MinresOptions {
+    /// Maximum number of iterations (operator applications).
+    pub max_iters: usize,
+    /// Relative residual tolerance `‖r_k‖ / ‖b‖`.
+    pub rel_tol: f64,
+}
+
+impl Default for MinresOptions {
+    fn default() -> Self {
+        Self { max_iters: 1000, rel_tol: 1e-8 }
+    }
+}
+
+/// Why MINRES stopped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MinresStop {
+    /// Residual tolerance reached.
+    Converged,
+    /// Iteration budget exhausted.
+    MaxIters,
+    /// Lanczos breakdown: exact solution found in the Krylov subspace.
+    Breakdown,
+    /// The per-iteration callback requested a stop (early stopping).
+    Callback,
+    /// Right-hand side was zero.
+    ZeroRhs,
+}
+
+/// Result of a MINRES run.
+#[derive(Clone, Debug)]
+pub struct MinresOutcome {
+    /// Approximate solution.
+    pub x: Vec<f64>,
+    /// Iterations performed.
+    pub iterations: usize,
+    /// Final relative residual estimate.
+    pub rel_residual: f64,
+    /// Stop reason.
+    pub stop: MinresStop,
+}
+
+/// Solve `A x = b` for symmetric `A`, invoking `callback(iter, x, relres)`
+/// after each iteration; the callback may stop the run early (the paper's
+/// early-stopping regularizer). `x` passed to the callback is the current
+/// iterate — cheap to use for validation predictions.
+pub fn minres<F>(
+    a: &dyn LinOp,
+    b: &[f64],
+    opts: &MinresOptions,
+    mut callback: F,
+) -> MinresOutcome
+where
+    F: FnMut(usize, &[f64], f64) -> ControlFlow<()>,
+{
+    let n = b.len();
+    assert_eq!(a.dim_in(), n, "minres: rhs/operator size mismatch");
+    assert_eq!(a.dim_out(), n, "minres: operator must be square");
+
+    let beta1 = norm2(b);
+    if beta1 == 0.0 {
+        return MinresOutcome {
+            x: vec![0.0; n],
+            iterations: 0,
+            rel_residual: 0.0,
+            stop: MinresStop::ZeroRhs,
+        };
+    }
+
+    // Lanczos vectors.
+    let mut v_prev = vec![0.0; n]; // v_{k-1}
+    let mut v: Vec<f64> = b.iter().map(|bi| bi / beta1).collect(); // v_k
+    let mut av = vec![0.0; n]; // workspace for A v
+
+    // Direction vectors for the solution update.
+    let mut w_oold = vec![0.0; n];
+    let mut w_old = vec![0.0; n];
+    let mut w_new = vec![0.0; n];
+
+    let mut x = vec![0.0; n];
+
+    // Givens rotation state.
+    let (mut c_old, mut c) = (1.0f64, 1.0f64);
+    let (mut s_old, mut s) = (0.0f64, 0.0f64);
+    let mut beta = beta1; // β_k
+    let mut eta = beta1; // residual carrier
+
+    let mut stop = MinresStop::MaxIters;
+    let mut iterations = 0;
+    let mut rel_res = 1.0;
+
+    for k in 1..=opts.max_iters {
+        // Lanczos step: α, β_{k+1}, next v.
+        a.apply_into(&v, &mut av);
+        let alpha = dot(&v, &av);
+        // av ← av − α v − β v_prev (three-term recurrence).
+        axpy(-alpha, &v, &mut av);
+        axpy(-beta, &v_prev, &mut av);
+        let beta_next = norm2(&av);
+
+        // Apply previous rotations to the new tridiagonal column.
+        let delta = c * alpha - c_old * s * beta;
+        let rho1 = (delta * delta + beta_next * beta_next).sqrt();
+        let rho2 = s * alpha + c_old * c * beta;
+        let rho3 = s_old * beta;
+
+        if rho1 == 0.0 {
+            // Singular leading block: cannot advance.
+            stop = MinresStop::Breakdown;
+            iterations = k - 1;
+            break;
+        }
+
+        // New rotation.
+        c_old = c;
+        s_old = s;
+        c = delta / rho1;
+        s = beta_next / rho1;
+
+        // w_new = (v − ρ3 w_oold − ρ2 w_old) / ρ1.
+        for i in 0..n {
+            w_new[i] = (v[i] - rho3 * w_oold[i] - rho2 * w_old[i]) / rho1;
+        }
+        // x += c · η · w_new.
+        axpy(c * eta, &w_new, &mut x);
+        eta = -s * eta;
+
+        // Shift registers.
+        std::mem::swap(&mut w_oold, &mut w_old);
+        std::mem::swap(&mut w_old, &mut w_new);
+        std::mem::swap(&mut v_prev, &mut v);
+        if beta_next > 0.0 {
+            for i in 0..n {
+                v[i] = av[i] / beta_next;
+            }
+        }
+        beta = beta_next;
+
+        iterations = k;
+        rel_res = eta.abs() / beta1;
+
+        if let ControlFlow::Break(()) = callback(k, &x, rel_res) {
+            stop = MinresStop::Callback;
+            break;
+        }
+        if rel_res <= opts.rel_tol {
+            stop = MinresStop::Converged;
+            break;
+        }
+        if beta_next == 0.0 {
+            // Krylov space exhausted — x is exact (up to rounding).
+            stop = MinresStop::Breakdown;
+            break;
+        }
+    }
+
+    MinresOutcome { x, iterations, rel_residual: rel_res, stop }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::chol::Cholesky;
+    use crate::linalg::Mat;
+    use crate::rng::{dist, Xoshiro256};
+    use crate::solvers::linear_op::DenseOp;
+    use crate::testing::gen;
+
+    fn no_cb(_: usize, _: &[f64], _: f64) -> ControlFlow<()> {
+        ControlFlow::Continue(())
+    }
+
+    #[test]
+    fn solves_spd_system_to_cholesky_answer() {
+        let mut rng = Xoshiro256::seed_from(60);
+        let k = gen::psd_kernel(&mut rng, 25);
+        let mut a = k.clone();
+        for i in 0..25 {
+            a[(i, i)] += 0.1;
+        }
+        let b = dist::normal_vec(&mut rng, 25);
+        let oracle = Cholesky::factor(&a).unwrap().solve(&b);
+        let out = minres(
+            &DenseOp::new(a),
+            &b,
+            &MinresOptions { max_iters: 500, rel_tol: 1e-12 },
+            no_cb,
+        );
+        assert!(matches!(out.stop, MinresStop::Converged | MinresStop::Breakdown));
+        for (x, o) in out.x.iter().zip(&oracle) {
+            assert!((x - o).abs() < 1e-6, "{x} vs {o}");
+        }
+    }
+
+    #[test]
+    fn handles_indefinite_symmetric() {
+        // MINRES (unlike CG) must handle indefinite matrices — this is why
+        // the paper uses it: anti-symmetric/ranking kernels give PSD but
+        // near-singular K, and K itself (without +λI) may be indefinite
+        // after floating-point symmetrization.
+        let mut a = Mat::eye(4);
+        a[(2, 2)] = -2.0;
+        a[(0, 1)] = 0.3;
+        a[(1, 0)] = 0.3;
+        let b = vec![1.0, -1.0, 2.0, 0.5];
+        let out = minres(
+            &DenseOp::new(a.clone()),
+            &b,
+            &MinresOptions { max_iters: 100, rel_tol: 1e-12 },
+            no_cb,
+        );
+        let r = a.matvec(&out.x);
+        for (ri, bi) in r.iter().zip(&b) {
+            assert!((ri - bi).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn zero_rhs_short_circuits() {
+        let out = minres(
+            &DenseOp::new(Mat::eye(5)),
+            &[0.0; 5],
+            &MinresOptions::default(),
+            no_cb,
+        );
+        assert_eq!(out.stop, MinresStop::ZeroRhs);
+        assert_eq!(out.x, vec![0.0; 5]);
+    }
+
+    #[test]
+    fn callback_can_stop_early() {
+        let mut rng = Xoshiro256::seed_from(61);
+        let a = gen::psd_kernel(&mut rng, 30);
+        let b = dist::normal_vec(&mut rng, 30);
+        let out = minres(
+            &DenseOp::new(a),
+            &b,
+            &MinresOptions { max_iters: 1000, rel_tol: 1e-14 },
+            |k, _, _| {
+                if k >= 3 {
+                    ControlFlow::Break(())
+                } else {
+                    ControlFlow::Continue(())
+                }
+            },
+        );
+        assert_eq!(out.iterations, 3);
+        assert_eq!(out.stop, MinresStop::Callback);
+    }
+
+    #[test]
+    fn residual_estimate_tracks_true_residual() {
+        let mut rng = Xoshiro256::seed_from(62);
+        let mut a = gen::psd_kernel(&mut rng, 15);
+        for i in 0..15 {
+            a[(i, i)] += 1.0;
+        }
+        let b = dist::normal_vec(&mut rng, 15);
+        let amat = a.clone();
+        let bnorm = norm2(&b);
+        minres(
+            &DenseOp::new(a),
+            &b,
+            &MinresOptions { max_iters: 60, rel_tol: 1e-12 },
+            |_, x, est| {
+                let mut r = amat.matvec(x);
+                for (ri, bi) in r.iter_mut().zip(&b) {
+                    *ri = bi - *ri;
+                }
+                let truth = norm2(&r) / bnorm;
+                assert!(
+                    (truth - est).abs() < 1e-6 + 0.1 * truth,
+                    "estimate {est} vs true {truth}"
+                );
+                ControlFlow::Continue(())
+            },
+        );
+    }
+}

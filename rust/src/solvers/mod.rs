@@ -1,0 +1,26 @@
+//! Iterative and direct solvers for the regularized least-squares problem
+//! `(K + λI) a = y` (Equation 1 of the paper).
+//!
+//! * [`linear_op`] — the operator abstraction: anything that can multiply
+//!   a vector (GVT ops, explicit matrices, shifted/scaled compositions).
+//! * [`minres`] — the minimum residual method (Paige & Saunders 1975),
+//!   the paper's training algorithm (`scipy.sparse.linalg.minres`
+//!   equivalent) with per-iteration callbacks for early stopping.
+//! * [`cg`] — conjugate gradient, used by the Nyström/Falkon baseline.
+//! * [`ridge`] — kernel ridge regression over pairwise kernels with
+//!   validation-based early stopping (the paper's training protocol).
+//! * [`nystrom`] — Falkon-style Nyström approximation baseline (§6.5).
+//! * [`closed_form`] — `O(n³)` Cholesky oracle for tests/small problems.
+
+pub mod cg;
+pub mod closed_form;
+pub mod complete;
+pub mod linear_op;
+pub mod minres;
+pub mod nystrom;
+pub mod persist;
+pub mod ridge;
+
+pub use linear_op::{LinOp, ShiftedOp};
+pub use minres::{minres, MinresOptions, MinresOutcome};
+pub use ridge::{PairwiseRidge, RidgeConfig, RidgeModel};

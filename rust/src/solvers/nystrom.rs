@@ -1,0 +1,332 @@
+//! Falkon-style Nyström approximation (Rudi, Carratino, Rosasco 2017) —
+//! the state-of-the-art large-scale kernel baseline the paper compares
+//! against in §6.5.
+//!
+//! The learned function is restricted to `N` center pairs sampled
+//! uniformly from the training set. With `K_nm ∈ R^{n×N}` (training ×
+//! centers) and `K_mm ∈ R^{N×N}`, the estimator solves
+//!
+//! ```text
+//! (K_nmᵀ K_nm + λ n K_mm) β = K_nmᵀ y
+//! ```
+//!
+//! by preconditioned conjugate gradient with the Falkon preconditioner
+//! `M = n (K_mm²/N + λ K_mm)` applied through two Cholesky factors —
+//! `M⁻¹v = L⁻ᵀ A⁻¹ L⁻¹ v / n`, `K_mm = LLᵀ`, `A = LᵀL/N + λI`.
+//!
+//! Storage is dominated by `K_nm` — exactly the paper's observation that
+//! "a kernel matrix with 1 024 000 samples and 2048 basis vectors already
+//! consumes 16GiB". [`NystromModel::knm_bytes`] reports it for Figure 8/9.
+
+use crate::data::PairDataset;
+use crate::eval::auc;
+use crate::gvt::explicit::explicit_matrix;
+use crate::gvt::pairwise::PairwiseKernel;
+use crate::linalg::chol::Cholesky;
+use crate::linalg::{Mat, vecops};
+use crate::solvers::cg::{cg, CgOptions};
+use crate::solvers::linear_op::LinOp;
+use crate::sparse::PairIndex;
+use anyhow::{Context, Result};
+use std::ops::ControlFlow;
+use std::sync::Arc;
+
+/// Nyström/Falkon hyperparameters.
+#[derive(Clone, Debug)]
+pub struct NystromConfig {
+    /// Number of Nyström centers (basis vectors) `N`.
+    pub num_centers: usize,
+    /// Regularization λ (the paper aligns with RLScore at 1e-5).
+    pub lambda: f64,
+    /// CG iteration cap.
+    pub max_iters: usize,
+    /// CG relative tolerance.
+    pub rel_tol: f64,
+    /// Center-sampling seed.
+    pub seed: u64,
+    /// Early-stopping patience on validation AUC (when validation given).
+    pub patience: usize,
+}
+
+impl Default for NystromConfig {
+    fn default() -> Self {
+        Self {
+            num_centers: 512,
+            lambda: 1e-5,
+            max_iters: 200,
+            rel_tol: 1e-9,
+            seed: 0,
+            patience: 10,
+        }
+    }
+}
+
+/// Fitted Nyström model.
+pub struct NystromModel {
+    kernel: PairwiseKernel,
+    d: Arc<Mat>,
+    t: Arc<Mat>,
+    centers: PairIndex,
+    /// Coefficients over centers.
+    pub beta: Vec<f64>,
+    /// CG iterations used.
+    pub iterations: usize,
+    /// Bytes held by the `K_nm` matrix during training.
+    pub knm_bytes: usize,
+    /// Validation AUC curve when fitted with validation data.
+    pub history: Vec<(usize, f64)>,
+}
+
+/// Normal-equations operator `x ↦ K_nmᵀ(K_nm x) + λ n K_mm x` — never
+/// forms the `N×N` Gram of the normal equations explicitly.
+struct NormalEqOp<'a> {
+    knm: &'a Mat,
+    kmm: &'a Mat,
+    lambda_n: f64,
+}
+
+impl LinOp for NormalEqOp<'_> {
+    fn dim_out(&self) -> usize {
+        self.knm.cols()
+    }
+
+    fn dim_in(&self) -> usize {
+        self.knm.cols()
+    }
+
+    fn apply_into(&self, x: &[f64], y: &mut [f64]) {
+        let v = self.knm.matvec(x); // n
+        // y = K_nmᵀ v  (gemv with the transpose: accumulate rows).
+        y.fill(0.0);
+        for i in 0..self.knm.rows() {
+            let row = self.knm.row(i);
+            let vi = v[i];
+            if vi != 0.0 {
+                for (yj, kij) in y.iter_mut().zip(row) {
+                    *yj += vi * kij;
+                }
+            }
+        }
+        let reg = self.kmm.matvec(x);
+        vecops::axpy(self.lambda_n, &reg, y);
+    }
+}
+
+/// The Falkon preconditioner as a [`LinOp`].
+struct FalkonPrecond {
+    l: Cholesky,  // K_mm = L Lᵀ
+    la: Cholesky, // A = LᵀL/N + λI = La Laᵀ
+    inv_n: f64,
+}
+
+impl LinOp for FalkonPrecond {
+    fn dim_out(&self) -> usize {
+        self.l.l().rows()
+    }
+
+    fn dim_in(&self) -> usize {
+        self.l.l().rows()
+    }
+
+    fn apply_into(&self, v: &[f64], y: &mut [f64]) {
+        // y = L⁻ᵀ A⁻¹ L⁻¹ v / n.
+        let u = self.l.solve_lower(v);
+        let w = self.la.solve(&u);
+        let z = self.l.solve_upper(&w);
+        for (yi, zi) in y.iter_mut().zip(&z) {
+            *yi = self.inv_n * zi;
+        }
+    }
+}
+
+impl NystromModel {
+    /// Fit without validation (fixed λ, run to tolerance).
+    pub fn fit(
+        data: &PairDataset,
+        kernel: PairwiseKernel,
+        cfg: &NystromConfig,
+    ) -> Result<NystromModel> {
+        Self::fit_impl(data, None, kernel, cfg)
+    }
+
+    /// Fit with early stopping on a validation sample (Figure 8 protocol).
+    pub fn fit_with_validation(
+        data: &PairDataset,
+        validation: &PairDataset,
+        kernel: PairwiseKernel,
+        cfg: &NystromConfig,
+    ) -> Result<NystromModel> {
+        Self::fit_impl(data, Some(validation), kernel, cfg)
+    }
+
+    fn fit_impl(
+        data: &PairDataset,
+        validation: Option<&PairDataset>,
+        kernel: PairwiseKernel,
+        cfg: &NystromConfig,
+    ) -> Result<NystromModel> {
+        let n = data.len();
+        let nc = cfg.num_centers.min(n);
+        // Uniform center sampling (Falkon's default).
+        let mut rng = crate::rng::Xoshiro256::seed_from(cfg.seed);
+        let center_rows = crate::rng::dist::sample_without_replacement(&mut rng, n, nc);
+        let centers = data.pairs.subset(&center_rows);
+
+        // Materialize K_nm and K_mm (the memory cost Falkon pays).
+        let knm = explicit_matrix(kernel, &data.d, &data.t, &data.pairs, &centers);
+        let kmm = explicit_matrix(kernel, &data.d, &data.t, &centers, &centers);
+        let knm_bytes = knm.rows() * knm.cols() * 8;
+
+        // Preconditioner factors (jitter for numerical PD).
+        let mut kmm_j = kmm.clone();
+        for i in 0..nc {
+            kmm_j[(i, i)] += 1e-8 * (1.0 + kmm[(i, i)].abs());
+        }
+        let l = Cholesky::factor(&kmm_j).context("Falkon preconditioner: chol(K_mm)")?;
+        // A = LᵀL/N + λI.
+        let lt = l.l().transpose();
+        let mut a = lt.matmul(l.l());
+        a.scale(1.0 / nc as f64);
+        for i in 0..nc {
+            a[(i, i)] += cfg.lambda.max(1e-12);
+        }
+        let la = Cholesky::factor(&a).context("Falkon preconditioner: chol(A)")?;
+        let precond = FalkonPrecond { l, la, inv_n: 1.0 / n as f64 };
+
+        // RHS: K_nmᵀ y.
+        let mut rhs = vec![0.0; nc];
+        for i in 0..n {
+            let row = knm.row(i);
+            let yi = data.y[i];
+            for (rj, kij) in rhs.iter_mut().zip(row) {
+                *rj += yi * kij;
+            }
+        }
+
+        let op = NormalEqOp { knm: &knm, kmm: &kmm, lambda_n: cfg.lambda * n as f64 };
+
+        // Validation machinery.
+        let val_data = validation.map(|v| {
+            let kx = explicit_matrix(kernel, &data.d, &data.t, &v.pairs, &centers);
+            (kx, v.binary_labels())
+        });
+        let mut history = Vec::new();
+        let mut best_auc = f64::NEG_INFINITY;
+        let mut since_best = 0usize;
+
+        let out = cg(
+            &op,
+            &rhs,
+            Some(&precond),
+            &CgOptions { max_iters: cfg.max_iters, rel_tol: cfg.rel_tol },
+            |k, x, _| {
+                if let Some((kx, labels)) = &val_data {
+                    let preds = kx.matvec(x);
+                    let a = auc(&preds, labels).unwrap_or(0.5);
+                    history.push((k, a));
+                    if a > best_auc {
+                        best_auc = a;
+                        since_best = 0;
+                    } else {
+                        since_best += 1;
+                        if since_best >= cfg.patience {
+                            return ControlFlow::Break(());
+                        }
+                    }
+                }
+                ControlFlow::Continue(())
+            },
+        );
+
+        Ok(NystromModel {
+            kernel,
+            d: data.d.clone(),
+            t: data.t.clone(),
+            centers,
+            beta: out.x,
+            iterations: out.iterations,
+            knm_bytes,
+            history,
+        })
+    }
+
+    /// Predict: `p = K(test, centers) β`.
+    pub fn predict(&self, pairs: &PairIndex) -> Vec<f64> {
+        let kx = explicit_matrix(self.kernel, &self.d, &self.t, pairs, &self.centers);
+        kx.matvec(&self.beta)
+    }
+
+    pub fn num_centers(&self) -> usize {
+        self.centers.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{dist, Xoshiro256};
+    use crate::solvers::closed_form::ClosedFormModel;
+    use crate::testing::gen;
+
+    fn toy(seed: u64, n: usize, m: usize, q: usize) -> PairDataset {
+        let mut rng = Xoshiro256::seed_from(seed);
+        let d = Arc::new(gen::psd_kernel(&mut rng, m));
+        let t = Arc::new(gen::psd_kernel(&mut rng, q));
+        let pairs = gen::pair_sample(&mut rng, n, m, q);
+        let y = dist::normal_vec(&mut rng, n);
+        PairDataset { name: "ny".into(), d, t, pairs, y, homogeneous: m == q }
+    }
+
+    #[test]
+    fn full_rank_nystrom_matches_closed_form() {
+        // With N == n, Nyström is exact (same hypothesis space); predictions
+        // must match the closed-form ridge solution.
+        let data = toy(120, 60, 7, 8);
+        let cfg = NystromConfig {
+            num_centers: 60,
+            lambda: 1e-3,
+            max_iters: 4000,
+            rel_tol: 1e-13,
+            ..Default::default()
+        };
+        let ny = NystromModel::fit(&data, PairwiseKernel::Kronecker, &cfg).unwrap();
+        let cf = ClosedFormModel::fit(&data, PairwiseKernel::Kronecker, 60.0 * 1e-3).unwrap();
+        // NOTE: Falkon's objective is ‖Kβ − y‖² + λn βᵀKβ ⇒ matches ridge
+        // with λ_ridge = λ·n.
+        let mut rng = Xoshiro256::seed_from(121);
+        let test = gen::pair_sample(&mut rng, 25, 7, 8);
+        let p1 = ny.predict(&test);
+        let p2 = cf.predict(&test);
+        for (a, b) in p1.iter().zip(&p2) {
+            assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn more_centers_fit_training_better() {
+        let data = toy(122, 200, 10, 10);
+        let mut errs = Vec::new();
+        for nc in [10, 50, 200] {
+            let cfg = NystromConfig {
+                num_centers: nc,
+                lambda: 1e-6,
+                max_iters: 3000,
+                rel_tol: 1e-12,
+                ..Default::default()
+            };
+            let ny = NystromModel::fit(&data, PairwiseKernel::Kronecker, &cfg).unwrap();
+            let p = ny.predict(&data.pairs);
+            errs.push(crate::eval::rmse(&p, &data.y));
+        }
+        assert!(errs[2] < errs[0], "train error should shrink with centers: {errs:?}");
+    }
+
+    #[test]
+    fn memory_accounting() {
+        let data = toy(123, 100, 9, 9);
+        let cfg = NystromConfig { num_centers: 32, ..Default::default() };
+        let ny = NystromModel::fit(&data, PairwiseKernel::Kronecker, &cfg).unwrap();
+        assert_eq!(ny.knm_bytes, 100 * 32 * 8);
+        assert_eq!(ny.num_centers(), 32);
+    }
+}

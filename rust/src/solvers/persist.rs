@@ -1,0 +1,150 @@
+//! Model persistence: save/load fitted ridge models so the coordinator
+//! can train once and serve later (kernel matrices are reloaded from the
+//! dataset side; the model file stores what the representer theorem needs
+//! — the dual coefficients and the training sample).
+//!
+//! Format (versioned, line-oriented text — no serde offline):
+//!
+//! ```text
+//! gvt-rls-model v1
+//! kernel <name>
+//! domains <m> <q>
+//! pairs <n>
+//! <d_0> <t_0>
+//! …
+//! alpha
+//! <a_0>
+//! …
+//! ```
+
+use crate::gvt::pairwise::PairwiseKernel;
+use crate::gvt::vec_trick::GvtPolicy;
+use crate::linalg::Mat;
+use crate::solvers::ridge::RidgeModel;
+use crate::sparse::PairIndex;
+use anyhow::{bail, Context, Result};
+use std::io::Write;
+use std::path::Path;
+use std::sync::Arc;
+
+/// Serialize a fitted model to `path`.
+pub fn save_model(model: &RidgeModel, path: &Path) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
+    );
+    let pairs = model.train_pairs();
+    writeln!(f, "gvt-rls-model v1")?;
+    writeln!(f, "kernel {}", model.kernel().name())?;
+    writeln!(f, "domains {} {}", pairs.m(), pairs.q())?;
+    writeln!(f, "pairs {}", pairs.len())?;
+    for i in 0..pairs.len() {
+        writeln!(f, "{} {}", pairs.drug(i), pairs.target(i))?;
+    }
+    writeln!(f, "alpha")?;
+    for a in &model.alpha {
+        // {:e} round-trips f64 exactly enough at 17 significant digits.
+        writeln!(f, "{a:.17e}")?;
+    }
+    Ok(())
+}
+
+/// Load a model saved by [`save_model`]. The kernel matrices are supplied
+/// by the caller (they belong to the dataset, not the model).
+pub fn load_model(path: &Path, d: Arc<Mat>, t: Arc<Mat>) -> Result<RidgeModel> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let mut lines = text.lines();
+    let header = lines.next().context("empty model file")?;
+    if header != "gvt-rls-model v1" {
+        bail!("unsupported model header {header:?}");
+    }
+    let kernel_line = lines.next().context("missing kernel line")?;
+    let kernel_name =
+        kernel_line.strip_prefix("kernel ").context("malformed kernel line")?;
+    let kernel = PairwiseKernel::parse(kernel_name)
+        .with_context(|| format!("unknown kernel {kernel_name:?}"))?;
+    let domains = lines.next().context("missing domains line")?;
+    let mut it = domains.strip_prefix("domains ").context("malformed domains")?.split(' ');
+    let m: usize = it.next().context("missing m")?.parse()?;
+    let q: usize = it.next().context("missing q")?.parse()?;
+    let npairs_line = lines.next().context("missing pairs line")?;
+    let n: usize =
+        npairs_line.strip_prefix("pairs ").context("malformed pairs line")?.parse()?;
+    let mut drugs = Vec::with_capacity(n);
+    let mut targets = Vec::with_capacity(n);
+    for _ in 0..n {
+        let line = lines.next().context("truncated pair list")?;
+        let (dstr, tstr) = line.split_once(' ').context("malformed pair")?;
+        drugs.push(dstr.parse::<u32>()?);
+        targets.push(tstr.parse::<u32>()?);
+    }
+    if lines.next() != Some("alpha") {
+        bail!("missing alpha section");
+    }
+    let mut alpha = Vec::with_capacity(n);
+    for _ in 0..n {
+        alpha.push(lines.next().context("truncated alpha")?.parse::<f64>()?);
+    }
+    if d.rows() != m || t.rows() != q {
+        bail!(
+            "kernel matrices ({}, {}) do not match model domains ({m}, {q})",
+            d.rows(),
+            t.rows()
+        );
+    }
+    RidgeModel::from_parts(
+        kernel,
+        d,
+        t,
+        PairIndex::new(drugs, targets, m, q),
+        GvtPolicy::Auto,
+        alpha,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::metz::MetzConfig;
+    use crate::solvers::ridge::{PairwiseRidge, RidgeConfig};
+    use crate::testing::gen;
+
+    #[test]
+    fn roundtrip_preserves_predictions() {
+        let data = MetzConfig::small().generate(70);
+        let cfg = RidgeConfig { max_iters: 40, ..Default::default() };
+        let model = PairwiseRidge::fit(&data, PairwiseKernel::Kronecker, &cfg).unwrap();
+        let path = std::env::temp_dir().join(format!("gvt_model_{}.txt", std::process::id()));
+        save_model(&model, &path).unwrap();
+        let loaded = load_model(&path, data.d.clone(), data.t.clone()).unwrap();
+        let mut rng = crate::rng::Xoshiro256::seed_from(71);
+        let test = gen::pair_sample(&mut rng, 25, data.pairs.m(), data.pairs.q());
+        let p1 = model.predict(&test).unwrap();
+        let p2 = loaded.predict(&test).unwrap();
+        assert!(crate::linalg::vecops::max_abs_diff(&p1, &p2) < 1e-12);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_mismatched_kernels() {
+        let data = MetzConfig::small().generate(72);
+        let cfg = RidgeConfig { max_iters: 10, ..Default::default() };
+        let model = PairwiseRidge::fit(&data, PairwiseKernel::Linear, &cfg).unwrap();
+        let path = std::env::temp_dir().join(format!("gvt_model2_{}.txt", std::process::id()));
+        save_model(&model, &path).unwrap();
+        // Wrong-domain kernel matrix must be rejected, not silently used.
+        let mut rng = crate::rng::Xoshiro256::seed_from(73);
+        let wrong = std::sync::Arc::new(gen::psd_kernel(&mut rng, 3));
+        assert!(load_model(&path, wrong, data.t.clone()).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_garbage_file() {
+        let path = std::env::temp_dir().join(format!("gvt_model3_{}.txt", std::process::id()));
+        std::fs::write(&path, "not a model").unwrap();
+        let data = MetzConfig::small().generate(74);
+        assert!(load_model(&path, data.d.clone(), data.t.clone()).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

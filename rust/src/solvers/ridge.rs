@@ -1,0 +1,400 @@
+//! Kernel ridge regression over pairwise kernels — the paper's learning
+//! algorithm (§3, §6).
+//!
+//! Training solves `(K + λI) a = y` with MINRES, where `K` is a
+//! [`PairwiseLinOp`] (GVT, `O(nm + nq)` per iteration) or any other
+//! [`LinOp`] (the explicit baseline). Regularization is either Tikhonov
+//! (λ) or early stopping on a validation sample (the paper uses both,
+//! Figure 3); the paper's full protocol —
+//!
+//! 1. split the training set into inner/validation per the setting,
+//! 2. run MINRES on inner while validation AUC improves,
+//! 3. refit on the full training set for the optimal iteration count —
+//!
+//! is [`PairwiseRidge::fit_early_stopping`].
+
+use crate::data::{splits, PairDataset};
+use crate::eval::auc;
+use crate::gvt::pairwise::{PairwiseKernel, PairwiseLinOp};
+use crate::gvt::vec_trick::GvtPolicy;
+use crate::solvers::linear_op::{LinOp, ShiftedOp};
+use crate::solvers::minres::{minres, MinresOptions};
+use crate::sparse::PairIndex;
+use anyhow::{bail, Context, Result};
+use std::ops::ControlFlow;
+use std::sync::Arc;
+
+/// Hyperparameters for pairwise kernel ridge regression.
+#[derive(Clone, Debug)]
+pub struct RidgeConfig {
+    /// Tikhonov regularization λ. The paper's early-stopping experiments
+    /// fix this small (1e-5) and regularize by iteration count.
+    pub lambda: f64,
+    /// MINRES iteration cap.
+    pub max_iters: usize,
+    /// MINRES relative residual tolerance.
+    pub rel_tol: f64,
+    /// GVT factorization policy.
+    pub policy: GvtPolicy,
+    /// Early stopping: stop when validation AUC hasn't improved for this
+    /// many consecutive checks.
+    pub patience: usize,
+    /// Evaluate validation AUC every this many iterations (1 = paper).
+    pub check_every: usize,
+    /// Fraction of the training set held out as inner validation
+    /// (the paper uses 25%).
+    pub validation_fraction: f64,
+}
+
+impl Default for RidgeConfig {
+    fn default() -> Self {
+        Self {
+            lambda: 1e-5,
+            max_iters: 400,
+            rel_tol: 1e-10,
+            policy: GvtPolicy::Auto,
+            patience: 10,
+            check_every: 1,
+            validation_fraction: 0.25,
+        }
+    }
+}
+
+/// One point of the per-iteration validation curve (Figure 3).
+#[derive(Clone, Copy, Debug)]
+pub struct IterPoint {
+    pub iteration: usize,
+    pub validation_auc: f64,
+    pub rel_residual: f64,
+}
+
+/// A fitted pairwise ridge model.
+pub struct RidgeModel {
+    kernel: PairwiseKernel,
+    d: Arc<crate::linalg::Mat>,
+    t: Arc<crate::linalg::Mat>,
+    train_pairs: PairIndex,
+    policy: GvtPolicy,
+    /// Dual coefficients `a` (one per training pair).
+    pub alpha: Vec<f64>,
+    /// MINRES iterations actually run.
+    pub iterations: usize,
+    /// Validation curve, if trained with early stopping.
+    pub history: Vec<IterPoint>,
+}
+
+impl RidgeModel {
+    /// Predict scores for a sample of pairs (indices into the same drug /
+    /// target domains as the training data):
+    /// `p = R(test) K R(train)ᵀ a` — one GVT product, never `O(n n̄)`.
+    pub fn predict(&self, pairs: &PairIndex) -> Result<Vec<f64>> {
+        let op = PairwiseLinOp::new(
+            self.kernel,
+            self.d.clone(),
+            self.t.clone(),
+            pairs.clone(),
+            self.train_pairs.clone(),
+            self.policy,
+        )
+        .context("building prediction operator")?;
+        Ok(op.matvec(&self.alpha))
+    }
+
+    pub fn kernel(&self) -> PairwiseKernel {
+        self.kernel
+    }
+
+    pub fn train_size(&self) -> usize {
+        self.train_pairs.len()
+    }
+
+    /// The training sample the dual coefficients refer to.
+    pub fn train_pairs(&self) -> &PairIndex {
+        &self.train_pairs
+    }
+
+    /// Reassemble a model from persisted parts (see
+    /// [`crate::solvers::persist`]).
+    pub fn from_parts(
+        kernel: PairwiseKernel,
+        d: Arc<crate::linalg::Mat>,
+        t: Arc<crate::linalg::Mat>,
+        train_pairs: PairIndex,
+        policy: GvtPolicy,
+        alpha: Vec<f64>,
+    ) -> Result<RidgeModel> {
+        if alpha.len() != train_pairs.len() {
+            bail!(
+                "alpha length {} != training pairs {}",
+                alpha.len(),
+                train_pairs.len()
+            );
+        }
+        Ok(RidgeModel {
+            kernel,
+            d,
+            t,
+            train_pairs,
+            policy,
+            alpha,
+            iterations: 0,
+            history: Vec::new(),
+        })
+    }
+}
+
+/// The estimator: static constructors returning [`RidgeModel`]s.
+pub struct PairwiseRidge;
+
+impl PairwiseRidge {
+    /// Build the training operator for a dataset.
+    fn train_op(
+        data: &PairDataset,
+        kernel: PairwiseKernel,
+        policy: GvtPolicy,
+    ) -> Result<PairwiseLinOp> {
+        if !kernel.supports_heterogeneous() && !data.homogeneous {
+            bail!(
+                "{} requires a homogeneous dataset but '{}' is heterogeneous",
+                kernel.name(),
+                data.name
+            );
+        }
+        PairwiseLinOp::new(
+            kernel,
+            data.d.clone(),
+            data.t.clone(),
+            data.pairs.clone(),
+            data.pairs.clone(),
+            policy,
+        )
+    }
+
+    /// Fit to convergence (or `max_iters`) with pure Tikhonov
+    /// regularization — no early stopping.
+    pub fn fit(
+        data: &PairDataset,
+        kernel: PairwiseKernel,
+        cfg: &RidgeConfig,
+    ) -> Result<RidgeModel> {
+        Self::fit_fixed_iters(data, kernel, cfg, cfg.max_iters)
+    }
+
+    /// Fit with a fixed iteration budget (step 3 of the paper's protocol).
+    pub fn fit_fixed_iters(
+        data: &PairDataset,
+        kernel: PairwiseKernel,
+        cfg: &RidgeConfig,
+        iters: usize,
+    ) -> Result<RidgeModel> {
+        let op = Self::train_op(data, kernel, cfg.policy)?;
+        let shifted = ShiftedOp::new(&op, cfg.lambda);
+        let out = minres(
+            &shifted,
+            &data.y,
+            &MinresOptions { max_iters: iters, rel_tol: cfg.rel_tol },
+            |_, _, _| ControlFlow::Continue(()),
+        );
+        Ok(RidgeModel {
+            kernel,
+            d: data.d.clone(),
+            t: data.t.clone(),
+            train_pairs: data.pairs.clone(),
+            policy: cfg.policy,
+            alpha: out.x,
+            iterations: out.iterations,
+            history: Vec::new(),
+        })
+    }
+
+    /// Run MINRES on `inner` while tracking AUC on `validation`; returns
+    /// the iteration count with the best validation AUC plus the full
+    /// curve. This is steps 1–2 of the paper's protocol (and the data
+    /// behind Figure 3).
+    pub fn find_optimal_iters(
+        inner: &PairDataset,
+        validation: &PairDataset,
+        kernel: PairwiseKernel,
+        cfg: &RidgeConfig,
+    ) -> Result<(usize, Vec<IterPoint>)> {
+        let op = Self::train_op(inner, kernel, cfg.policy)?;
+        let shifted = ShiftedOp::new(&op, cfg.lambda);
+        // Prediction operator: rows = validation pairs, cols = inner pairs.
+        let pred_op = PairwiseLinOp::new(
+            kernel,
+            inner.d.clone(),
+            inner.t.clone(),
+            validation.pairs.clone(),
+            inner.pairs.clone(),
+            cfg.policy,
+        )?;
+        let val_labels = validation.binary_labels();
+
+        let mut history: Vec<IterPoint> = Vec::new();
+        let mut best_auc = f64::NEG_INFINITY;
+        let mut best_iter = 1usize;
+        let mut since_best = 0usize;
+
+        let _ = minres(
+            &shifted,
+            &inner.y,
+            &MinresOptions { max_iters: cfg.max_iters, rel_tol: cfg.rel_tol },
+            |k, x, relres| {
+                if k % cfg.check_every != 0 {
+                    return ControlFlow::Continue(());
+                }
+                let preds = pred_op.matvec(x);
+                let a = auc(&preds, &val_labels).unwrap_or(0.5);
+                history.push(IterPoint {
+                    iteration: k,
+                    validation_auc: a,
+                    rel_residual: relres,
+                });
+                if a > best_auc {
+                    best_auc = a;
+                    best_iter = k;
+                    since_best = 0;
+                    ControlFlow::Continue(())
+                } else {
+                    since_best += 1;
+                    if since_best >= cfg.patience {
+                        ControlFlow::Break(())
+                    } else {
+                        ControlFlow::Continue(())
+                    }
+                }
+            },
+        );
+        Ok((best_iter, history))
+    }
+
+    /// The paper's full training protocol: inner/validation split per the
+    /// setting, early-stopped iteration search, refit on all of `train`.
+    pub fn fit_early_stopping(
+        train: &PairDataset,
+        setting: u8,
+        kernel: PairwiseKernel,
+        cfg: &RidgeConfig,
+        seed: u64,
+    ) -> Result<RidgeModel> {
+        let inner_split =
+            splits::split_setting(train, setting, cfg.validation_fraction, seed);
+        let (inner, validation) = (&inner_split.train, &inner_split.test);
+        if inner.is_empty() || validation.is_empty() {
+            // Degenerate inner split (tiny folds): fall back to fixed iters.
+            return Self::fit_fixed_iters(train, kernel, cfg, cfg.max_iters);
+        }
+        let (best_iter, history) =
+            Self::find_optimal_iters(inner, validation, kernel, cfg)?;
+        let mut model = Self::fit_fixed_iters(train, kernel, cfg, best_iter)?;
+        model.history = history;
+        Ok(model)
+    }
+
+    /// Baseline variant: identical protocol but the operator is an
+    /// arbitrary pre-built `LinOp` (used with
+    /// [`crate::gvt::explicit::ExplicitLinOp`] for the Figure 7 baseline).
+    pub fn fit_with_op(
+        op: &dyn LinOp,
+        y: &[f64],
+        cfg: &RidgeConfig,
+        iters: usize,
+    ) -> (Vec<f64>, usize) {
+        let shifted = ShiftedOp::new(op, cfg.lambda);
+        let out = minres(
+            &shifted,
+            y,
+            &MinresOptions { max_iters: iters, rel_tol: cfg.rel_tol },
+            |_, _, _| ControlFlow::Continue(()),
+        );
+        (out.x, out.iterations)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gvt::explicit::explicit_matrix;
+    use crate::linalg::chol::solve_regularized;
+    use crate::rng::{dist, Xoshiro256};
+    use crate::testing::gen;
+
+    fn toy_dataset(seed: u64, n: usize, m: usize, q: usize) -> PairDataset {
+        let mut rng = Xoshiro256::seed_from(seed);
+        let d = Arc::new(gen::psd_kernel(&mut rng, m));
+        let t = Arc::new(gen::psd_kernel(&mut rng, q));
+        let pairs = gen::pair_sample(&mut rng, n, m, q);
+        let y = dist::normal_vec(&mut rng, n);
+        PairDataset { name: "toy".into(), d, t, pairs, y, homogeneous: m == q }
+    }
+
+    #[test]
+    fn converged_fit_matches_closed_form() {
+        let data = toy_dataset(100, 40, 6, 7);
+        let cfg = RidgeConfig {
+            lambda: 0.5,
+            max_iters: 2000,
+            rel_tol: 1e-13,
+            ..Default::default()
+        };
+        for kernel in [PairwiseKernel::Kronecker, PairwiseKernel::Linear, PairwiseKernel::Poly2D]
+        {
+            let model = PairwiseRidge::fit(&data, kernel, &cfg).unwrap();
+            // Closed-form oracle from the explicit matrix.
+            let k = explicit_matrix(kernel, &data.d, &data.t, &data.pairs, &data.pairs);
+            let oracle = solve_regularized(&k, 0.5, &data.y).unwrap();
+            for (a, o) in model.alpha.iter().zip(&oracle) {
+                assert!((a - o).abs() < 1e-5, "{kernel:?}: {a} vs {o}");
+            }
+        }
+    }
+
+    #[test]
+    fn prediction_matches_explicit_cross_matrix() {
+        let data = toy_dataset(101, 50, 8, 8);
+        let cfg = RidgeConfig { lambda: 1.0, max_iters: 500, ..Default::default() };
+        let model = PairwiseRidge::fit(&data, PairwiseKernel::Kronecker, &cfg).unwrap();
+        let mut rng = Xoshiro256::seed_from(102);
+        let test_pairs = gen::pair_sample(&mut rng, 20, 8, 8);
+        let p = model.predict(&test_pairs).unwrap();
+        let kx = explicit_matrix(
+            PairwiseKernel::Kronecker,
+            &data.d,
+            &data.t,
+            &test_pairs,
+            &data.pairs,
+        );
+        let p2 = kx.matvec(&model.alpha);
+        for (a, b) in p.iter().zip(&p2) {
+            assert!((a - b).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn early_stopping_returns_history() {
+        let data = toy_dataset(103, 120, 10, 12);
+        // Binarize labels so AUC is defined.
+        let mut data = data;
+        data.y = data.y.iter().map(|&v| if v > 0.0 { 1.0 } else { 0.0 }).collect();
+        let cfg = RidgeConfig { max_iters: 50, patience: 5, ..Default::default() };
+        let model =
+            PairwiseRidge::fit_early_stopping(&data, 1, PairwiseKernel::Kronecker, &cfg, 7)
+                .unwrap();
+        assert!(!model.history.is_empty());
+        assert!(model.iterations <= 50);
+        // Best iteration must be the argmax of the recorded curve.
+        let best = model
+            .history
+            .iter()
+            .max_by(|a, b| a.validation_auc.partial_cmp(&b.validation_auc).unwrap())
+            .unwrap();
+        assert_eq!(model.iterations, best.iteration);
+    }
+
+    #[test]
+    fn homogeneous_kernel_rejected_on_heterogeneous_data() {
+        let data = toy_dataset(104, 30, 5, 6);
+        let r = PairwiseRidge::fit(&data, PairwiseKernel::Mlpk, &RidgeConfig::default());
+        assert!(r.is_err());
+    }
+}

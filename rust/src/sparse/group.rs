@@ -1,0 +1,99 @@
+//! CSR-style group-by: for each key `k` in `0..domain`, the list of row
+//! positions whose key equals `k`. Built by counting sort in `O(n + domain)`.
+//!
+//! GVT stage 1 iterates pairs grouped by drug so that the accumulation into
+//! the intermediate matrix `S` walks each drug's column contiguously.
+
+/// Grouping of `n` rows by a `u32` key with known domain size.
+#[derive(Clone, Debug)]
+pub struct GroupBy {
+    /// `offsets[k]..offsets[k+1]` indexes `rows` for key `k`.
+    offsets: Vec<u32>,
+    /// Row positions, grouped by key, stable within a group.
+    rows: Vec<u32>,
+}
+
+impl GroupBy {
+    /// Build the grouping. `keys[i] < domain` must hold for all `i`.
+    pub fn build(keys: &[u32], domain: usize) -> Self {
+        let n = keys.len();
+        let mut counts = vec![0u32; domain + 1];
+        for &k in keys {
+            counts[k as usize + 1] += 1;
+        }
+        for k in 0..domain {
+            counts[k + 1] += counts[k];
+        }
+        let offsets = counts.clone();
+        let mut cursor = counts;
+        let mut rows = vec![0u32; n];
+        for (i, &k) in keys.iter().enumerate() {
+            let c = &mut cursor[k as usize];
+            rows[*c as usize] = i as u32;
+            *c += 1;
+        }
+        Self { offsets, rows }
+    }
+
+    /// Number of distinct keys in the domain.
+    #[inline]
+    pub fn domain(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Row positions whose key is `k`.
+    #[inline]
+    pub fn group(&self, k: usize) -> &[u32] {
+        let lo = self.offsets[k] as usize;
+        let hi = self.offsets[k + 1] as usize;
+        &self.rows[lo..hi]
+    }
+
+    /// Number of rows with key `k`.
+    #[inline]
+    pub fn count(&self, k: usize) -> usize {
+        (self.offsets[k + 1] - self.offsets[k]) as usize
+    }
+
+    /// Iterate `(key, rows)` over non-empty groups.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, &[u32])> + '_ {
+        (0..self.domain()).filter_map(move |k| {
+            let g = self.group(k);
+            (!g.is_empty()).then_some((k, g))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn groups_are_stable_and_complete() {
+        let keys = vec![2u32, 0, 2, 1, 0, 2];
+        let g = GroupBy::build(&keys, 4);
+        assert_eq!(g.group(0), &[1, 4]);
+        assert_eq!(g.group(1), &[3]);
+        assert_eq!(g.group(2), &[0, 2, 5]);
+        assert_eq!(g.group(3), &[] as &[u32]);
+        let total: usize = (0..4).map(|k| g.count(k)).sum();
+        assert_eq!(total, keys.len());
+    }
+
+    #[test]
+    fn iter_skips_empty() {
+        let keys = vec![1u32, 1, 1];
+        let g = GroupBy::build(&keys, 3);
+        let got: Vec<usize> = g.iter().map(|(k, _)| k).collect();
+        assert_eq!(got, vec![1]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let g = GroupBy::build(&[], 5);
+        assert_eq!(g.domain(), 5);
+        for k in 0..5 {
+            assert_eq!(g.count(k), 0);
+        }
+    }
+}

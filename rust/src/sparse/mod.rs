@@ -1,0 +1,15 @@
+//! Sparse index structures for pairwise samples.
+//!
+//! The observed data is a list of `n` (drug, target) index pairs over `m`
+//! unique drugs and `q` unique targets (the paper's sampling operator
+//! `R(d, t)`). GVT's inner loops need the pairs grouped by drug or by
+//! target; [`GroupBy`] is that CSR-style view. [`Incidence`] is the oriented
+//! incidence operator `M` of §4.6 used by the ranking-kernel shortcut.
+
+mod group;
+mod incidence;
+mod pair_index;
+
+pub use group::GroupBy;
+pub use incidence::Incidence;
+pub use pair_index::PairIndex;

@@ -1,0 +1,227 @@
+//! The sampling operator `R(d, t)`: a sequence of (drug, target) index
+//! pairs. Rows of any pairwise kernel matrix are indexed by such a sample.
+
+use crate::sparse::GroupBy;
+use std::sync::OnceLock;
+
+/// A sample of `n` (drug, target) pairs over index domains
+/// `0..m` (drugs) and `0..q` (targets).
+///
+/// This is the concrete form of the paper's `R(d, t) ∈ R^{n×(D×T)}`:
+/// `drugs[i]` and `targets[i]` give the nonzero column of row `i`.
+///
+/// The commutation/unification operators of Definition 1 act on samples by
+/// index plumbing only (`R(d,t)P = R(t,d)`, `R(d,t)Q = R(d,d)`), exposed
+/// here as [`PairIndex::swapped`] and [`PairIndex::dupe_drugs`] /
+/// [`PairIndex::dupe_targets`].
+#[derive(Clone, Debug)]
+pub struct PairIndex {
+    drugs: Vec<u32>,
+    targets: Vec<u32>,
+    m: usize,
+    q: usize,
+    by_drug: OnceLock<GroupBy>,
+    by_target: OnceLock<GroupBy>,
+}
+
+impl PairIndex {
+    /// Build from parallel index vectors. Panics if any index is out of
+    /// range — the coordinator validates data at the boundary.
+    pub fn new(drugs: Vec<u32>, targets: Vec<u32>, m: usize, q: usize) -> Self {
+        assert_eq!(drugs.len(), targets.len(), "drug/target length mismatch");
+        assert!(
+            drugs.iter().all(|&d| (d as usize) < m),
+            "drug index out of range (m={m})"
+        );
+        assert!(
+            targets.iter().all(|&t| (t as usize) < q),
+            "target index out of range (q={q})"
+        );
+        Self { drugs, targets, m, q, by_drug: OnceLock::new(), by_target: OnceLock::new() }
+    }
+
+    /// The complete sample: every (drug, target) combination, row-major in
+    /// drugs (i.e. `vec` ordering of an `m×q` label matrix by rows).
+    pub fn complete(m: usize, q: usize) -> Self {
+        let n = m * q;
+        let mut drugs = Vec::with_capacity(n);
+        let mut targets = Vec::with_capacity(n);
+        for d in 0..m as u32 {
+            for t in 0..q as u32 {
+                drugs.push(d);
+                targets.push(t);
+            }
+        }
+        Self::new(drugs, targets, m, q)
+    }
+
+    /// Number of pairs `n`.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.drugs.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.drugs.is_empty()
+    }
+
+    /// Number of drug indices in the domain (`m`).
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Number of target indices in the domain (`q`).
+    #[inline]
+    pub fn q(&self) -> usize {
+        self.q
+    }
+
+    /// Drug index of pair `i`.
+    #[inline]
+    pub fn drug(&self, i: usize) -> usize {
+        self.drugs[i] as usize
+    }
+
+    /// Target index of pair `i`.
+    #[inline]
+    pub fn target(&self, i: usize) -> usize {
+        self.targets[i] as usize
+    }
+
+    /// Borrow the raw drug index vector.
+    #[inline]
+    pub fn drugs(&self) -> &[u32] {
+        &self.drugs
+    }
+
+    /// Borrow the raw target index vector.
+    #[inline]
+    pub fn targets(&self) -> &[u32] {
+        &self.targets
+    }
+
+    /// `R(d,t) P = R(t,d)` — swap the roles of drugs and targets.
+    /// Only meaningful when composed against operators over the matching
+    /// domains (homogeneous case, or a `T ⊗ D` term).
+    pub fn swapped(&self) -> PairIndex {
+        PairIndex::new(self.targets.clone(), self.drugs.clone(), self.q, self.m)
+    }
+
+    /// `R(d,t) Q = R(d,d)` — duplicate the drug index into both slots.
+    pub fn dupe_drugs(&self) -> PairIndex {
+        PairIndex::new(self.drugs.clone(), self.drugs.clone(), self.m, self.m)
+    }
+
+    /// `R(d,t) P Q = R(t,t)` — duplicate the target index into both slots.
+    pub fn dupe_targets(&self) -> PairIndex {
+        PairIndex::new(self.targets.clone(), self.targets.clone(), self.q, self.q)
+    }
+
+    /// Take the sub-sample at `rows` (for train/test splits).
+    pub fn subset(&self, rows: &[usize]) -> PairIndex {
+        let drugs = rows.iter().map(|&i| self.drugs[i]).collect();
+        let targets = rows.iter().map(|&i| self.targets[i]).collect();
+        PairIndex::new(drugs, targets, self.m, self.q)
+    }
+
+    /// Number of *distinct* drugs appearing in this sample (≤ m).
+    pub fn distinct_drugs(&self) -> usize {
+        let mut seen = vec![false; self.m];
+        let mut c = 0;
+        for &d in &self.drugs {
+            if !seen[d as usize] {
+                seen[d as usize] = true;
+                c += 1;
+            }
+        }
+        c
+    }
+
+    /// Number of *distinct* targets appearing in this sample (≤ q).
+    pub fn distinct_targets(&self) -> usize {
+        let mut seen = vec![false; self.q];
+        let mut c = 0;
+        for &t in &self.targets {
+            if !seen[t as usize] {
+                seen[t as usize] = true;
+                c += 1;
+            }
+        }
+        c
+    }
+
+    /// CSR grouping of pair rows by drug index (cached; built once).
+    pub fn by_drug(&self) -> &GroupBy {
+        self.by_drug.get_or_init(|| GroupBy::build(&self.drugs, self.m))
+    }
+
+    /// CSR grouping of pair rows by target index (cached; built once).
+    pub fn by_target(&self) -> &GroupBy {
+        self.by_target.get_or_init(|| GroupBy::build(&self.targets, self.q))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> PairIndex {
+        PairIndex::new(vec![0, 1, 1, 2, 0], vec![2, 0, 1, 2, 0], 3, 3)
+    }
+
+    #[test]
+    fn swapped_swaps() {
+        let p = sample();
+        let s = p.swapped();
+        for i in 0..p.len() {
+            assert_eq!(s.drug(i), p.target(i));
+            assert_eq!(s.target(i), p.drug(i));
+        }
+    }
+
+    #[test]
+    fn dupe_drugs_matches_q_rule() {
+        let p = sample();
+        let d = p.dupe_drugs();
+        for i in 0..p.len() {
+            assert_eq!(d.drug(i), p.drug(i));
+            assert_eq!(d.target(i), p.drug(i));
+        }
+        assert_eq!(d.q(), p.m());
+    }
+
+    #[test]
+    fn complete_has_all_pairs() {
+        let c = PairIndex::complete(3, 4);
+        assert_eq!(c.len(), 12);
+        assert_eq!(c.distinct_drugs(), 3);
+        assert_eq!(c.distinct_targets(), 4);
+        // Row-major order: pair (d, t) lives at index d*q + t.
+        for d in 0..3 {
+            for t in 0..4 {
+                let i = d * 4 + t;
+                assert_eq!(c.drug(i), d);
+                assert_eq!(c.target(i), t);
+            }
+        }
+    }
+
+    #[test]
+    fn subset_picks_rows() {
+        let p = sample();
+        let s = p.subset(&[4, 2]);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.drug(0), 0);
+        assert_eq!(s.target(0), 0);
+        assert_eq!(s.drug(1), 1);
+        assert_eq!(s.target(1), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn rejects_out_of_range() {
+        PairIndex::new(vec![3], vec![0], 3, 3);
+    }
+}

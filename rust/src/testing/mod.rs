@@ -1,0 +1,185 @@
+//! Miniature property-testing harness (`proptest` is unavailable offline).
+//!
+//! A property is a closure over a seeded RNG that either passes or returns
+//! a failure message. The harness runs `cases` random cases from a master
+//! seed and, on failure, reports the *case seed* so the exact case can be
+//! replayed with [`replay`]. No shrinking — generators here are asked to
+//! start small (case sizes grow with the case index), which keeps failing
+//! cases readable in practice.
+//!
+//! ```
+//! use gvt_rls::testing::{property, Prop};
+//! use gvt_rls::rng::{Rng, dist};
+//!
+//! property("addition commutes", 64, |rng, _size| {
+//!     let a = rng.next_f64();
+//!     let b = rng.next_f64();
+//!     Prop::check(a + b == b + a, || format!("{a} + {b}"))
+//! });
+//! ```
+
+use crate::rng::{child_seeds, Xoshiro256};
+
+/// Result of a single property case.
+pub enum Prop {
+    Pass,
+    Fail(String),
+}
+
+impl Prop {
+    /// Pass iff `cond`; otherwise build a failure message lazily.
+    pub fn check(cond: bool, msg: impl FnOnce() -> String) -> Prop {
+        if cond {
+            Prop::Pass
+        } else {
+            Prop::Fail(msg())
+        }
+    }
+
+    /// Check that two floats agree to `tol` absolute-or-relative.
+    pub fn close(a: f64, b: f64, tol: f64, label: &str) -> Prop {
+        let scale = a.abs().max(b.abs()).max(1.0);
+        Prop::check((a - b).abs() <= tol * scale, || {
+            format!("{label}: {a} vs {b} (tol {tol}, scale {scale})")
+        })
+    }
+
+    /// Check two slices agree elementwise to `tol` (absolute-or-relative).
+    pub fn all_close(a: &[f64], b: &[f64], tol: f64, label: &str) -> Prop {
+        if a.len() != b.len() {
+            return Prop::Fail(format!("{label}: length {} vs {}", a.len(), b.len()));
+        }
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            let scale = x.abs().max(y.abs()).max(1.0);
+            if (x - y).abs() > tol * scale {
+                return Prop::Fail(format!(
+                    "{label}[{i}]: {x} vs {y} (|Δ|={:.3e}, tol {tol})",
+                    (x - y).abs()
+                ));
+            }
+        }
+        Prop::Pass
+    }
+}
+
+/// Run a property over `cases` random cases. `size` grows from 1 to ~32 with
+/// the case index so early failures are small. Panics with the case seed on
+/// the first failure.
+pub fn property<F>(name: &str, cases: usize, prop: F)
+where
+    F: Fn(&mut Xoshiro256, usize) -> Prop,
+{
+    let master = master_seed();
+    let seeds = child_seeds(master, cases);
+    for (case, &seed) in seeds.iter().enumerate() {
+        let size = 1 + case * 32 / cases.max(1);
+        let mut rng = Xoshiro256::seed_from(seed);
+        if let Prop::Fail(msg) = prop(&mut rng, size) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (replay seed: {seed:#x}, size {size}):\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Replay one failing case by seed (paste the seed from a failure message).
+pub fn replay<F>(name: &str, seed: u64, size: usize, prop: F)
+where
+    F: Fn(&mut Xoshiro256, usize) -> Prop,
+{
+    let mut rng = Xoshiro256::seed_from(seed);
+    if let Prop::Fail(msg) = prop(&mut rng, size) {
+        panic!("replayed property '{name}' (seed {seed:#x}) fails:\n  {msg}");
+    }
+}
+
+/// Master seed: `GVT_RLS_PROP_SEED` env override for CI reruns, else fixed.
+/// A fixed default keeps `cargo test` deterministic; set the env to fuzz.
+fn master_seed() -> u64 {
+    std::env::var("GVT_RLS_PROP_SEED")
+        .ok()
+        .and_then(|s| {
+            let s = s.trim().trim_start_matches("0x");
+            u64::from_str_radix(s, 16).ok().or_else(|| s.parse().ok())
+        })
+        .unwrap_or(0xC0FF_EE00_5EED_0001)
+}
+
+/// Generator helpers shared by property tests across the crate.
+pub mod gen {
+    use crate::rng::{dist, Rng, Xoshiro256};
+    use crate::sparse::PairIndex;
+
+    /// Random symmetric PSD kernel matrix of order `n` (Gram of random
+    /// features, ridge-stabilized).
+    pub fn psd_kernel(rng: &mut Xoshiro256, n: usize) -> crate::linalg::Mat {
+        let r = n.max(2);
+        let x = crate::linalg::Mat::from_vec(n, r, dist::normal_vec(rng, n * r));
+        let mut k = x.matmul_nt(&x);
+        for i in 0..n {
+            k[(i, i)] += 1e-3;
+        }
+        k
+    }
+
+    /// Random pair sample: `n` pairs over `m` drugs × `q` targets,
+    /// guaranteed to touch every drug and target at least once when
+    /// `n >= m + q` (keeps distinct counts predictable in tests).
+    pub fn pair_sample(
+        rng: &mut Xoshiro256,
+        n: usize,
+        m: usize,
+        q: usize,
+    ) -> PairIndex {
+        let mut drugs = Vec::with_capacity(n);
+        let mut targets = Vec::with_capacity(n);
+        for i in 0..n {
+            // First m entries cycle drugs, first q cycle targets: coverage.
+            let d = if i < m { i } else { rng.index(m) };
+            let t = if i < q { i } else { rng.index(q) };
+            drugs.push(d as u32);
+            targets.push(t as u32);
+        }
+        PairIndex::new(drugs, targets, m, q)
+    }
+
+    /// Random homogeneous pair sample over `m` objects.
+    pub fn homogeneous_sample(rng: &mut Xoshiro256, n: usize, m: usize) -> PairIndex {
+        pair_sample(rng, n, m, m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        property("tautology", 16, |rng, _| {
+            let _ = rng.next_u64();
+            Prop::Pass
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn failing_property_reports_seed() {
+        property("always fails", 4, |_, _| Prop::Fail("nope".into()));
+    }
+
+    #[test]
+    fn close_handles_relative_scale() {
+        assert!(matches!(Prop::close(1e9, 1e9 + 1.0, 1e-6, "x"), Prop::Pass));
+        assert!(matches!(Prop::close(1.0, 1.1, 1e-6, "x"), Prop::Fail(_)));
+    }
+
+    #[test]
+    fn generated_pair_sample_covers_domains() {
+        let mut rng = crate::rng::Xoshiro256::seed_from(3);
+        let p = gen::pair_sample(&mut rng, 40, 7, 5);
+        assert_eq!(p.distinct_drugs(), 7);
+        assert_eq!(p.distinct_targets(), 5);
+    }
+}

@@ -1,0 +1,221 @@
+//! Property tests on the coordinator invariants: Table 1 split semantics,
+//! CV coverage, determinism, grid-runner routing, config round-trips.
+
+use gvt_rls::data::splits::{cv_splits, split_setting, verify_split_invariant};
+use gvt_rls::data::PairDataset;
+use gvt_rls::rng::{dist, Rng, Xoshiro256};
+use gvt_rls::testing::{gen, property, Prop};
+use std::sync::Arc;
+
+fn random_dataset(rng: &mut Xoshiro256, size: usize) -> PairDataset {
+    let m = 8 + size;
+    let q = 6 + size;
+    let n = 4 * (m + q);
+    PairDataset {
+        name: "prop".into(),
+        d: Arc::new(gen::psd_kernel(rng, m)),
+        t: Arc::new(gen::psd_kernel(rng, q)),
+        pairs: gen::pair_sample(rng, n, m, q),
+        y: (0..n).map(|_| if dist::bernoulli(rng, 0.3) { 1.0 } else { 0.0 }).collect(),
+        homogeneous: false,
+    }
+}
+
+#[test]
+fn table1_invariants_hold_for_all_settings() {
+    property("Table 1 split invariants", 24, |rng, size| {
+        let data = random_dataset(rng, size);
+        for setting in 1..=4u8 {
+            let split = split_setting(&data, setting, 0.3, rng.next_u64());
+            if let Err(e) = verify_split_invariant(&split) {
+                return Prop::Fail(e);
+            }
+            // Train + test never exceed the source; labels stay aligned.
+            if split.train.len() + split.test.len() > data.len() {
+                return Prop::Fail(format!("setting {setting}: split grew the data"));
+            }
+        }
+        Prop::Pass
+    });
+}
+
+#[test]
+fn settings_1_to_3_partition_settings_4_discards() {
+    property("partition vs discard", 16, |rng, size| {
+        let data = random_dataset(rng, size);
+        for setting in 1..=3u8 {
+            let split = split_setting(&data, setting, 0.25, rng.next_u64());
+            if split.train.len() + split.test.len() != data.len() {
+                return Prop::Fail(format!(
+                    "setting {setting} must partition: {} + {} != {}",
+                    split.train.len(),
+                    split.test.len(),
+                    data.len()
+                ));
+            }
+        }
+        Prop::Pass
+    });
+}
+
+#[test]
+fn cv_test_folds_are_disjoint_and_cover_setting1() {
+    property("CV coverage", 12, |rng, size| {
+        let data = random_dataset(rng, size);
+        let folds = 3 + size % 4;
+        let splits = cv_splits(&data, 1, folds, rng.next_u64());
+        let total: usize = splits.iter().map(|s| s.test.len()).sum();
+        Prop::check(total == data.len(), || {
+            format!("setting-1 folds must cover all pairs: {total} vs {}", data.len())
+        })
+    });
+}
+
+#[test]
+fn cv_folds_satisfy_invariants_all_settings() {
+    property("CV invariants", 8, |rng, size| {
+        let data = random_dataset(rng, size);
+        for setting in 1..=4u8 {
+            for s in cv_splits(&data, setting, 3, rng.next_u64()) {
+                if let Err(e) = verify_split_invariant(&s) {
+                    return Prop::Fail(format!("setting {setting}: {e}"));
+                }
+            }
+        }
+        Prop::Pass
+    });
+}
+
+#[test]
+fn splits_are_deterministic_in_seed() {
+    property("split determinism", 12, |rng, size| {
+        let data = random_dataset(rng, size);
+        let seed = rng.next_u64();
+        for setting in 1..=4u8 {
+            let a = split_setting(&data, setting, 0.3, seed);
+            let b = split_setting(&data, setting, 0.3, seed);
+            if a.train.len() != b.train.len()
+                || a.test.len() != b.test.len()
+                || a.train.pairs.drugs() != b.train.pairs.drugs()
+            {
+                return Prop::Fail(format!("setting {setting} nondeterministic"));
+            }
+        }
+        Prop::Pass
+    });
+}
+
+#[test]
+fn label_alignment_survives_splitting() {
+    property("label alignment", 12, |rng, size| {
+        let data = random_dataset(rng, size);
+        // Tag each pair with a label encoding its identity.
+        let mut tagged = data.clone();
+        tagged.y = (0..tagged.len())
+            .map(|i| (tagged.pairs.drug(i) * 1000 + tagged.pairs.target(i)) as f64)
+            .collect();
+        let split = split_setting(&tagged, 2, 0.3, rng.next_u64());
+        for part in [&split.train, &split.test] {
+            for i in 0..part.len() {
+                let expect = (part.pairs.drug(i) * 1000 + part.pairs.target(i)) as f64;
+                if part.y[i] != expect {
+                    return Prop::Fail(format!("misaligned label at {i}"));
+                }
+            }
+        }
+        Prop::Pass
+    });
+}
+
+#[test]
+fn config_parse_roundtrip() {
+    use gvt_rls::coordinator::config::Config;
+    property("config roundtrip", 16, |rng, _| {
+        let lambda = rng.next_f64();
+        let folds = 2 + rng.index(10);
+        let text = format!("lambda = {lambda}\nfolds = {folds}\nkernel = mlpk\n");
+        let c = Config::parse(&text).unwrap();
+        if (c.get_f64("lambda", 0.0).unwrap() - lambda).abs() > 1e-12 {
+            return Prop::Fail("lambda roundtrip".into());
+        }
+        if c.get_usize("folds", 0).unwrap() != folds {
+            return Prop::Fail("folds roundtrip".into());
+        }
+        Prop::check(c.get_str("kernel", "") == "mlpk", || "kernel".into())
+    });
+}
+
+#[test]
+fn runner_returns_results_for_every_spec() {
+    use gvt_rls::coordinator::{run_grid, ExperimentSpec};
+    use gvt_rls::data::metz::MetzConfig;
+    use gvt_rls::gvt::pairwise::PairwiseKernel;
+    use gvt_rls::solvers::ridge::RidgeConfig;
+
+    let data = MetzConfig::small().generate(33);
+    let specs: Vec<ExperimentSpec> = (0..4)
+        .map(|i| ExperimentSpec {
+            name: format!("cell{i}"),
+            data: data.clone(),
+            kernel: PairwiseKernel::Linear,
+            setting: 1 + (i % 4) as u8,
+            folds: 2,
+            ridge: RidgeConfig { max_iters: 10, patience: 2, ..Default::default() },
+            seed: i as u64,
+        })
+        .collect();
+    let results = run_grid(specs, 3);
+    assert_eq!(results.len(), 4);
+    for (i, r) in results.iter().enumerate() {
+        let r = r.as_ref().unwrap();
+        assert_eq!(r.name, format!("cell{i}"));
+    }
+}
+
+#[test]
+fn auc_invariant_under_monotone_score_transforms() {
+    use gvt_rls::eval::auc;
+    property("AUC monotone invariance", 16, |rng, size| {
+        let n = 10 + 4 * size;
+        let scores: Vec<f64> = (0..n).map(|_| rng.next_f64() * 4.0 - 2.0).collect();
+        let labels: Vec<bool> = (0..n).map(|_| dist::bernoulli(rng, 0.4)).collect();
+        if labels.iter().all(|&l| l) || labels.iter().all(|&l| !l) {
+            return Prop::Pass;
+        }
+        let base = auc(&scores, &labels).unwrap();
+        // Strictly increasing transforms must not change AUC.
+        let scaled: Vec<f64> = scores.iter().map(|s| 3.0 * s + 7.0).collect();
+        let exp: Vec<f64> = scores.iter().map(|s| s.exp()).collect();
+        for (name, tr) in [("affine", &scaled), ("exp", &exp)] {
+            let a = auc(tr, &labels).unwrap();
+            if (a - base).abs() > 1e-12 {
+                return Prop::Fail(format!("{name}: {a} vs {base}"));
+            }
+        }
+        // Flipping scores must mirror AUC around 0.5.
+        let neg: Vec<f64> = scores.iter().map(|s| -s).collect();
+        let flipped = auc(&neg, &labels).unwrap();
+        Prop::close(flipped, 1.0 - base, 1e-12, "flip")
+    });
+}
+
+#[test]
+fn experiment_results_are_deterministic_across_runs() {
+    use gvt_rls::coordinator::{run_cv_experiment, ExperimentSpec};
+    use gvt_rls::data::metz::MetzConfig;
+    use gvt_rls::gvt::pairwise::PairwiseKernel;
+    use gvt_rls::solvers::ridge::RidgeConfig;
+    let spec = ExperimentSpec {
+        name: "det".into(),
+        data: MetzConfig::small().generate(99),
+        kernel: PairwiseKernel::Kronecker,
+        setting: 2,
+        folds: 3,
+        ridge: RidgeConfig { max_iters: 15, patience: 3, ..Default::default() },
+        seed: 1234,
+    };
+    let a = run_cv_experiment(&spec).unwrap();
+    let b = run_cv_experiment(&spec).unwrap();
+    assert_eq!(a.auc.values(), b.auc.values(), "same spec must give same fold AUCs");
+    assert_eq!(a.iterations.values(), b.iterations.values());
+}

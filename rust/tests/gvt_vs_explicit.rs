@@ -1,0 +1,303 @@
+//! The central correctness contract of the paper: for every pairwise
+//! kernel, the GVT term-sum mat-vec (Corollary 1) must equal the explicit
+//! Table 3 kernel-matrix product — on training matrices, cross
+//! (prediction) matrices, heterogeneous and homogeneous domains, and all
+//! factorization policies.
+
+use gvt_rls::gvt::explicit::explicit_matrix;
+use gvt_rls::gvt::pairwise::{PairwiseKernel, PairwiseLinOp};
+use gvt_rls::gvt::vec_trick::GvtPolicy;
+use gvt_rls::linalg::vecops;
+use gvt_rls::rng::dist;
+use gvt_rls::testing::{gen, property, Prop};
+use std::sync::Arc;
+
+fn check_kernel(
+    kernel: PairwiseKernel,
+    policy: GvtPolicy,
+    rng: &mut gvt_rls::rng::Xoshiro256,
+    size: usize,
+) -> Prop {
+    // Homogeneous domain sized by the property harness's growth schedule.
+    let m = 3 + size;
+    let hetero = kernel.supports_heterogeneous();
+    let q = if hetero { 2 + size / 2 } else { m };
+    let d = Arc::new(gen::psd_kernel(rng, m));
+    let t = if hetero { Arc::new(gen::psd_kernel(rng, q)) } else { d.clone() };
+    let n = 10 + 4 * size;
+    let nbar = 5 + 2 * size;
+    let cols = gen::pair_sample(rng, n, m, q);
+    let rows = gen::pair_sample(rng, nbar, m, q);
+    let a = dist::normal_vec(rng, n);
+
+    let op = PairwiseLinOp::new(kernel, d.clone(), t.clone(), rows.clone(), cols.clone(), policy)
+        .unwrap();
+    let fast = op.matvec(&a);
+    let k = explicit_matrix(kernel, &d, &t, &rows, &cols);
+    let slow = k.matvec(&a);
+    Prop::all_close(&fast, &slow, 1e-8, &format!("{kernel:?}/{policy:?}"))
+}
+
+#[test]
+fn all_kernels_match_explicit_all_policies() {
+    for kernel in PairwiseKernel::ALL {
+        for policy in [GvtPolicy::Auto, GvtPolicy::SparseLeft, GvtPolicy::SparseRight, GvtPolicy::Dense]
+        {
+            property(
+                &format!("{kernel:?} GVT == explicit ({policy:?})"),
+                12,
+                |rng, size| check_kernel(kernel, policy, rng, size),
+            );
+        }
+    }
+}
+
+#[test]
+fn training_matrix_case_rows_equal_cols() {
+    property("training op symmetric vs explicit", 16, |rng, size| {
+        let m = 4 + size;
+        let d = Arc::new(gen::psd_kernel(rng, m));
+        let s = gen::homogeneous_sample(rng, 12 + 3 * size, m);
+        let a = dist::normal_vec(rng, s.len());
+        for kernel in PairwiseKernel::ALL {
+            let op = PairwiseLinOp::new(
+                kernel,
+                d.clone(),
+                d.clone(),
+                s.clone(),
+                s.clone(),
+                GvtPolicy::Auto,
+            )
+            .unwrap();
+            let fast = op.matvec(&a);
+            let k = explicit_matrix(kernel, &d, &d, &s, &s);
+            let slow = k.matvec(&a);
+            if let Prop::Fail(msg) = Prop::all_close(&fast, &slow, 1e-8, kernel.name()) {
+                return Prop::Fail(msg);
+            }
+        }
+        Prop::Pass
+    });
+}
+
+#[test]
+fn entry_accessor_matches_explicit_entry() {
+    property("PairwiseLinOp::entry == Table 3 entry", 20, |rng, size| {
+        let m = 4 + size / 2;
+        let d = Arc::new(gen::psd_kernel(rng, m));
+        let rows = gen::homogeneous_sample(rng, 10, m);
+        let cols = gen::homogeneous_sample(rng, 10, m);
+        for kernel in PairwiseKernel::ALL {
+            let op = PairwiseLinOp::new(
+                kernel,
+                d.clone(),
+                d.clone(),
+                rows.clone(),
+                cols.clone(),
+                GvtPolicy::Auto,
+            )
+            .unwrap();
+            let k = explicit_matrix(kernel, &d, &d, &rows, &cols);
+            for i in 0..rows.len() {
+                for j in 0..cols.len() {
+                    let a = op.entry(i, j);
+                    let b = k[(i, j)];
+                    if (a - b).abs() > 1e-9 * (1.0 + b.abs()) {
+                        return Prop::Fail(format!("{kernel:?} entry ({i},{j}): {a} vs {b}"));
+                    }
+                }
+            }
+        }
+        Prop::Pass
+    });
+}
+
+#[test]
+fn ranking_incidence_shortcut_matches_gvt() {
+    // §4.6: the MᵀDM incidence shortcut and the (I−P)(D⊗1)(I−P) GVT
+    // decomposition are the same operator.
+    property("incidence == GVT ranking", 16, |rng, size| {
+        let m = 4 + size;
+        let d = gen::psd_kernel(rng, m);
+        let s = gen::homogeneous_sample(rng, 12 + 2 * size, m);
+        let a = dist::normal_vec(rng, s.len());
+        let inc = gvt_rls::sparse::Incidence::from_pairs(&s);
+        let p1 = inc.ranking_matvec(&d, &a);
+        let op = PairwiseLinOp::new(
+            PairwiseKernel::Ranking,
+            Arc::new(d.clone()),
+            Arc::new(d),
+            s.clone(),
+            s,
+            GvtPolicy::Auto,
+        )
+        .unwrap();
+        let p2 = op.matvec(&a);
+        Prop::all_close(&p1, &p2, 1e-8, "ranking")
+    });
+}
+
+#[test]
+fn term_counts_are_the_papers() {
+    // Fig 7 discussion: Kronecker 1 summand … MLPK 10 summands.
+    let counts: Vec<(PairwiseKernel, usize)> =
+        PairwiseKernel::ALL.iter().map(|k| (*k, k.terms().len())).collect();
+    let expect = [
+        (PairwiseKernel::Linear, 2),
+        (PairwiseKernel::Poly2D, 3),
+        (PairwiseKernel::Kronecker, 1),
+        (PairwiseKernel::Cartesian, 2),
+        (PairwiseKernel::Symmetric, 2),
+        (PairwiseKernel::AntiSymmetric, 2),
+        (PairwiseKernel::Ranking, 4),
+        (PairwiseKernel::Mlpk, 10),
+    ];
+    for (k, c) in expect {
+        assert!(counts.contains(&(k, c)), "{k:?} should have {c} terms, got {counts:?}");
+    }
+}
+
+#[test]
+fn gaussian_base_kernels_make_kronecker_the_gaussian_pairwise_kernel() {
+    // §4.3: the pairwise Gaussian kernel on concatenated features equals
+    // the Kronecker product of per-object Gaussian kernels.
+    use gvt_rls::kernels::{cross_kernel_matrix, BaseKernel, KernelParams};
+    use gvt_rls::linalg::Mat;
+    let mut rng = gvt_rls::rng::Xoshiro256::seed_from(7);
+    let m = 5;
+    let q = 4;
+    let fd = Mat::from_vec(m, 3, dist::normal_vec(&mut rng, m * 3));
+    let ft = Mat::from_vec(q, 3, dist::normal_vec(&mut rng, q * 3));
+    let params = KernelParams { gamma: 0.3, ..Default::default() };
+    let d = cross_kernel_matrix(BaseKernel::Gaussian, &params, &fd, &fd);
+    let t = cross_kernel_matrix(BaseKernel::Gaussian, &params, &ft, &ft);
+    let rows = gen::pair_sample(&mut rng, 12, m, q);
+    let k = explicit_matrix(PairwiseKernel::Kronecker, &d, &t, &rows, &rows);
+    // Direct pairwise Gaussian on concatenated features.
+    for i in 0..rows.len() {
+        for j in 0..rows.len() {
+            let (di, ti) = (rows.drug(i), rows.target(i));
+            let (dj, tj) = (rows.drug(j), rows.target(j));
+            let mut d2 = 0.0;
+            for c in 0..3 {
+                let x = fd[(di, c)] - fd[(dj, c)];
+                let y = ft[(ti, c)] - ft[(tj, c)];
+                d2 += x * x + y * y;
+            }
+            let direct = (-0.3 * d2).exp();
+            assert!(
+                (k[(i, j)] - direct).abs() < 1e-10,
+                "({i},{j}): {} vs {direct}",
+                k[(i, j)]
+            );
+        }
+    }
+}
+
+#[test]
+fn naive_and_gvt_agree_on_rectangular_cross_kernels() {
+    property("cross-kernel prediction matvec", 12, |rng, size| {
+        let m = 4 + size;
+        let q = 3 + size / 2;
+        let d = Arc::new(gen::psd_kernel(rng, m));
+        let t = Arc::new(gen::psd_kernel(rng, q));
+        let train = gen::pair_sample(rng, 20 + 2 * size, m, q);
+        let test = gen::pair_sample(rng, 10 + size, m, q);
+        let a = dist::normal_vec(rng, train.len());
+        for kernel in [PairwiseKernel::Kronecker, PairwiseKernel::Linear, PairwiseKernel::Poly2D] {
+            let op = PairwiseLinOp::new(
+                kernel,
+                d.clone(),
+                t.clone(),
+                test.clone(),
+                train.clone(),
+                GvtPolicy::Auto,
+            )
+            .unwrap();
+            let fast = op.matvec(&a);
+            let k = explicit_matrix(kernel, &d, &t, &test, &train);
+            let slow = k.matvec(&a);
+            let err = vecops::max_abs_diff(&fast, &slow);
+            if err > 1e-8 {
+                return Prop::Fail(format!("{kernel:?}: err {err}"));
+            }
+        }
+        Prop::Pass
+    });
+}
+
+#[test]
+fn pairwise_kernels_are_positive_semidefinite() {
+    // Random quadratic forms aᵀKa ≥ 0 for every PSD-claimed kernel built
+    // on PSD base kernels (anti-symmetric included: its feature map
+    // √½(x⊗x' − x'⊗x) is real, so the kernel is PSD too).
+    property("pairwise kernels PSD", 16, |rng, size| {
+        let m = 4 + size / 2;
+        let d = Arc::new(gen::psd_kernel(rng, m));
+        let s = gen::homogeneous_sample(rng, 10 + 2 * size, m);
+        let a = dist::normal_vec(rng, s.len());
+        for kernel in PairwiseKernel::ALL {
+            let op = PairwiseLinOp::new(
+                kernel,
+                d.clone(),
+                d.clone(),
+                s.clone(),
+                s.clone(),
+                GvtPolicy::Auto,
+            )
+            .unwrap();
+            let ka = op.matvec(&a);
+            let quad: f64 = a.iter().zip(&ka).map(|(x, y)| x * y).sum();
+            // Linear can be indefinite only if base kernels are not PSD;
+            // with PSD bases all of Table 3 is PSD.
+            if quad < -1e-6 * ka.iter().map(|x| x.abs()).sum::<f64>().max(1.0) {
+                return Prop::Fail(format!("{kernel:?}: aᵀKa = {quad}"));
+            }
+        }
+        Prop::Pass
+    });
+}
+
+#[test]
+fn prediction_operator_is_adjoint_of_reverse_operator() {
+    // <K_{test,train} a, b> == <a, K_{train,test} b> — the cross-kernel
+    // operators must be transposes of each other (prediction correctness
+    // depends on it).
+    property("cross op adjointness", 12, |rng, size| {
+        let m = 4 + size;
+        let q = 3 + size;
+        let d = Arc::new(gen::psd_kernel(rng, m));
+        let t = Arc::new(gen::psd_kernel(rng, q));
+        let train = gen::pair_sample(rng, 15 + 2 * size, m, q);
+        let test = gen::pair_sample(rng, 8 + size, m, q);
+        let a = dist::normal_vec(rng, train.len());
+        let b = dist::normal_vec(rng, test.len());
+        for kernel in [PairwiseKernel::Kronecker, PairwiseKernel::Poly2D, PairwiseKernel::Linear]
+        {
+            let fwd = PairwiseLinOp::new(
+                kernel,
+                d.clone(),
+                t.clone(),
+                test.clone(),
+                train.clone(),
+                GvtPolicy::Auto,
+            )
+            .unwrap();
+            let rev = PairwiseLinOp::new(
+                kernel,
+                d.clone(),
+                t.clone(),
+                train.clone(),
+                test.clone(),
+                GvtPolicy::Auto,
+            )
+            .unwrap();
+            let lhs: f64 = fwd.matvec(&a).iter().zip(&b).map(|(x, y)| x * y).sum();
+            let rhs: f64 = a.iter().zip(rev.matvec(&b)).map(|(x, y)| x * y).sum();
+            if (lhs - rhs).abs() > 1e-8 * lhs.abs().max(1.0) {
+                return Prop::Fail(format!("{kernel:?}: {lhs} vs {rhs}"));
+            }
+        }
+        Prop::Pass
+    });
+}

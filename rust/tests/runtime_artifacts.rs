@@ -1,0 +1,115 @@
+//! L3 ↔ L2/L1 integration: the AOT-compiled XLA artifact must compute the
+//! same Kronecker mat-vec as the rust-native GVT (f32 vs f64 tolerance).
+//!
+//! These tests skip (with a loud message) when `make artifacts` hasn't
+//! been run — the rust-native path never depends on python.
+
+use gvt_rls::gvt::vec_trick::{gvt_matvec, GvtPolicy};
+use gvt_rls::linalg::vecops;
+use gvt_rls::rng::{dist, Xoshiro256};
+use gvt_rls::runtime::{KronExec, Registry};
+use gvt_rls::testing::gen;
+
+fn registry_or_skip() -> Option<Registry> {
+    match Registry::discover() {
+        Some(r) => Some(r),
+        None => {
+            eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_lists_expected_buckets() {
+    let Some(reg) = registry_or_skip() else { return };
+    assert!(!reg.artifacts().is_empty());
+    for a in reg.artifacts() {
+        assert!(a.m > 0 && a.q > 0 && a.n > 0);
+        assert!(reg.path_of(a).is_file());
+    }
+    // Smallest bucket covers small problems.
+    assert!(reg.pick(16, 16).is_some());
+}
+
+#[test]
+fn xla_matvec_matches_rust_gvt() {
+    let Some(reg) = registry_or_skip() else { return };
+    let meta = reg.pick(32, 32).expect("no bucket").clone();
+    let exec = KronExec::load(&reg, &meta).expect("compile artifact");
+    let mut rng = Xoshiro256::seed_from(100);
+    for trial in 0..5 {
+        let m = 8 + trial * 5;
+        let q = 6 + trial * 4;
+        let n = 50 + trial * 30;
+        let nbar = 40 + trial * 10;
+        let d = gen::psd_kernel(&mut rng, m);
+        let t = gen::psd_kernel(&mut rng, q);
+        let cols = gen::pair_sample(&mut rng, n, m, q);
+        let rows = gen::pair_sample(&mut rng, nbar, m, q);
+        let a = dist::normal_vec(&mut rng, n);
+        let p_xla = exec.matvec(&d, &t, &rows, &cols, &a).expect("execute");
+        let p_rust = gvt_matvec(&d, &t, &rows, &cols, &a, GvtPolicy::Auto);
+        let err = vecops::max_abs_diff(&p_xla, &p_rust);
+        let scale = p_rust.iter().fold(1.0f64, |m, x| m.max(x.abs()));
+        assert!(
+            err < 1e-3 * scale,
+            "trial {trial}: XLA vs rust err {err} (scale {scale})"
+        );
+    }
+}
+
+#[test]
+fn chunking_handles_outputs_larger_than_bucket() {
+    let Some(reg) = registry_or_skip() else { return };
+    // Pick the smallest bucket and request more output rows than its n.
+    let meta = reg
+        .artifacts()
+        .iter()
+        .min_by_key(|a| a.n)
+        .unwrap()
+        .clone();
+    let exec = KronExec::load(&reg, &meta).expect("compile");
+    let mut rng = Xoshiro256::seed_from(101);
+    let m = 10;
+    let q = 10;
+    let d = gen::psd_kernel(&mut rng, m);
+    let t = gen::psd_kernel(&mut rng, q);
+    let n = 60;
+    let nbar = meta.n + 37; // forces 2 chunks with a ragged tail
+    let cols = gen::pair_sample(&mut rng, n, m, q);
+    let rows = gen::pair_sample(&mut rng, nbar, m, q);
+    let a = dist::normal_vec(&mut rng, n);
+    let p_xla = exec.matvec(&d, &t, &rows, &cols, &a).expect("execute");
+    assert_eq!(p_xla.len(), nbar);
+    let p_rust = gvt_matvec(&d, &t, &rows, &cols, &a, GvtPolicy::Auto);
+    let err = vecops::max_abs_diff(&p_xla, &p_rust);
+    assert!(err < 1e-3, "chunked err {err}");
+}
+
+#[test]
+fn oversize_kernel_is_rejected() {
+    let Some(reg) = registry_or_skip() else { return };
+    let meta = reg.artifacts().iter().min_by_key(|a| a.m).unwrap().clone();
+    let exec = KronExec::load(&reg, &meta).expect("compile");
+    let mut rng = Xoshiro256::seed_from(102);
+    let m = meta.m + 1; // one too many drugs
+    let d = gen::psd_kernel(&mut rng, m);
+    let t = gen::psd_kernel(&mut rng, 4);
+    let s = gen::pair_sample(&mut rng, 10, m, 4);
+    let a = dist::normal_vec(&mut rng, 10);
+    assert!(exec.matvec(&d, &t, &s, &s, &a).is_err());
+}
+
+#[test]
+fn zero_coefficients_give_zero_output() {
+    let Some(reg) = registry_or_skip() else { return };
+    let meta = reg.pick(8, 8).unwrap().clone();
+    let exec = KronExec::load(&reg, &meta).expect("compile");
+    let mut rng = Xoshiro256::seed_from(103);
+    let d = gen::psd_kernel(&mut rng, 8);
+    let t = gen::psd_kernel(&mut rng, 8);
+    let s = gen::pair_sample(&mut rng, 20, 8, 8);
+    let p = exec.matvec(&d, &t, &s, &s, &vec![0.0; 20]).unwrap();
+    assert!(p.iter().all(|&x| x == 0.0));
+}

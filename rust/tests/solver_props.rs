@@ -1,0 +1,221 @@
+//! Property tests on the solver stack: MINRES/CG vs the Cholesky oracle,
+//! Nyström exactness at full rank, and the GVT-powered ridge vs the
+//! closed-form solution.
+
+use gvt_rls::data::PairDataset;
+use gvt_rls::gvt::pairwise::PairwiseKernel;
+use gvt_rls::linalg::chol::{solve_regularized, Cholesky};
+use gvt_rls::rng::{dist, Rng, Xoshiro256};
+use gvt_rls::solvers::cg::{cg, CgOptions};
+use gvt_rls::solvers::linear_op::DenseOp;
+use gvt_rls::solvers::minres::{minres, MinresOptions};
+use gvt_rls::solvers::ridge::{PairwiseRidge, RidgeConfig};
+use gvt_rls::testing::{gen, property, Prop};
+use std::ops::ControlFlow;
+use std::sync::Arc;
+
+fn cont(_: usize, _: &[f64], _: f64) -> ControlFlow<()> {
+    ControlFlow::Continue(())
+}
+
+#[test]
+fn minres_matches_cholesky_on_random_spd() {
+    property("minres == cholesky", 20, |rng, size| {
+        let n = 5 + 2 * size;
+        let mut a = gen::psd_kernel(rng, n);
+        for i in 0..n {
+            a[(i, i)] += 0.2;
+        }
+        let b = dist::normal_vec(rng, n);
+        let oracle = Cholesky::factor(&a).unwrap().solve(&b);
+        let out = minres(
+            &DenseOp::new(a),
+            &b,
+            &MinresOptions { max_iters: 50 * n, rel_tol: 1e-12 },
+            cont,
+        );
+        Prop::all_close(&out.x, &oracle, 1e-5, "minres")
+    });
+}
+
+#[test]
+fn cg_and_minres_agree_on_spd() {
+    property("cg == minres", 16, |rng, size| {
+        let n = 5 + 2 * size;
+        let mut a = gen::psd_kernel(rng, n);
+        for i in 0..n {
+            a[(i, i)] += 0.5;
+        }
+        let b = dist::normal_vec(rng, n);
+        let m_out = minres(
+            &DenseOp::new(a.clone()),
+            &b,
+            &MinresOptions { max_iters: 50 * n, rel_tol: 1e-12 },
+            cont,
+        );
+        let c_out = cg(
+            &DenseOp::new(a),
+            &b,
+            None,
+            &CgOptions { max_iters: 50 * n, rel_tol: 1e-12 },
+            cont,
+        );
+        Prop::all_close(&m_out.x, &c_out.x, 1e-5, "cg vs minres")
+    });
+}
+
+#[test]
+fn minres_residual_is_monotone_nonincreasing() {
+    // MINRES minimizes the residual over growing Krylov spaces, so the
+    // residual-norm estimate must never increase.
+    property("minres residual monotone", 12, |rng, size| {
+        let n = 6 + 2 * size;
+        let a = gen::psd_kernel(rng, n);
+        let b = dist::normal_vec(rng, n);
+        let mut last = f64::INFINITY;
+        let mut ok = true;
+        minres(
+            &DenseOp::new(a),
+            &b,
+            &MinresOptions { max_iters: 3 * n, rel_tol: 1e-14 },
+            |_, _, res| {
+                if res > last + 1e-9 {
+                    ok = false;
+                    return ControlFlow::Break(());
+                }
+                last = res;
+                ControlFlow::Continue(())
+            },
+        );
+        Prop::check(ok, || "residual increased".into())
+    });
+}
+
+#[test]
+fn ridge_gvt_matches_closed_form_all_kernels() {
+    property("ridge GVT == closed form", 6, |rng, size| {
+        let m = 5 + size / 2;
+        let d = Arc::new(gen::psd_kernel(rng, m));
+        let n = 20 + 4 * size;
+        let pairs = gen::homogeneous_sample(rng, n, m);
+        let y = dist::normal_vec(rng, n);
+        let data = PairDataset {
+            name: "p".into(),
+            d: d.clone(),
+            t: d.clone(),
+            pairs,
+            y,
+            homogeneous: true,
+        };
+        let lambda = 1.0; // strong regularization keeps the system well-posed
+        let cfg = RidgeConfig {
+            lambda,
+            max_iters: 4000,
+            rel_tol: 1e-13,
+            ..Default::default()
+        };
+        for kernel in [
+            PairwiseKernel::Kronecker,
+            PairwiseKernel::Symmetric,
+            PairwiseKernel::Mlpk,
+        ] {
+            let model = PairwiseRidge::fit(&data, kernel, &cfg).unwrap();
+            let k = gvt_rls::gvt::explicit::explicit_matrix(
+                kernel,
+                &data.d,
+                &data.t,
+                &data.pairs,
+                &data.pairs,
+            );
+            let oracle = solve_regularized(&k, lambda, &data.y).unwrap();
+            if let Prop::Fail(msg) =
+                Prop::all_close(&model.alpha, &oracle, 1e-4, kernel.name())
+            {
+                return Prop::Fail(msg);
+            }
+        }
+        Prop::Pass
+    });
+}
+
+#[test]
+fn nystrom_with_all_centers_matches_ridge_solution() {
+    use gvt_rls::solvers::nystrom::{NystromConfig, NystromModel};
+    property("full-rank Nyström == ridge", 4, |rng, size| {
+        let m = 5 + size / 2;
+        let d = Arc::new(gen::psd_kernel(rng, m));
+        let n = 30 + 2 * size;
+        let pairs = gen::homogeneous_sample(rng, n, m);
+        let y = dist::normal_vec(rng, n);
+        let data = PairDataset {
+            name: "ny".into(),
+            d: d.clone(),
+            t: d.clone(),
+            pairs: pairs.clone(),
+            y,
+            homogeneous: true,
+        };
+        let lambda = 1e-2;
+        let ny = NystromModel::fit(
+            &data,
+            PairwiseKernel::Kronecker,
+            &NystromConfig {
+                num_centers: n,
+                lambda,
+                max_iters: 6000,
+                rel_tol: 1e-13,
+                seed: rng.next_u64(),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        // Falkon objective ⇒ ridge with λ_ridge = λ·n.
+        let cf = gvt_rls::solvers::closed_form::ClosedFormModel::fit(
+            &data,
+            PairwiseKernel::Kronecker,
+            lambda * n as f64,
+        )
+        .unwrap();
+        let test = gen::homogeneous_sample(rng, 15, m);
+        let p1 = ny.predict(&test);
+        let p2 = cf.predict(&test);
+        Prop::all_close(&p1, &p2, 1e-3, "nystrom vs closed form")
+    });
+}
+
+#[test]
+fn more_nystrom_centers_never_hurt_much() {
+    use gvt_rls::solvers::nystrom::{NystromConfig, NystromModel};
+    // Weak monotonicity: doubling centers shouldn't make training RMSE
+    // dramatically worse (allows small solver noise).
+    let mut rng = Xoshiro256::seed_from(200);
+    let m = 9;
+    let d = Arc::new(gen::psd_kernel(&mut rng, m));
+    let n = 120;
+    let pairs = gen::homogeneous_sample(&mut rng, n, m);
+    let y = dist::normal_vec(&mut rng, n);
+    let data =
+        PairDataset { name: "nyc".into(), d: d.clone(), t: d, pairs, y, homogeneous: true };
+    let mut rmses = Vec::new();
+    for nc in [15, 60, 120] {
+        let model = NystromModel::fit(
+            &data,
+            PairwiseKernel::Kronecker,
+            &NystromConfig {
+                num_centers: nc,
+                lambda: 1e-6,
+                max_iters: 3000,
+                rel_tol: 1e-12,
+                seed: 1,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let p = model.predict(&data.pairs);
+        rmses.push(gvt_rls::eval::rmse(&p, &data.y));
+    }
+    assert!(
+        rmses[2] <= rmses[0] * 1.05 + 1e-9,
+        "train RMSE should improve with centers: {rmses:?}"
+    );
+}
