@@ -15,7 +15,7 @@ use gvt_rls::eval::auc;
 use gvt_rls::gvt::pairwise::PairwiseKernel;
 use gvt_rls::solvers::ridge::{PairwiseRidge, RidgeConfig};
 
-fn evaluate(pattern: Pattern, kernel: PairwiseKernel) -> anyhow::Result<f64> {
+fn evaluate(pattern: Pattern, kernel: PairwiseKernel) -> gvt_rls::error::Result<f64> {
     let data = ChessboardConfig::new(pattern).generate(3);
     let split = data.split_setting(1, 0.3, 11);
     let cfg = RidgeConfig { max_iters: 100, ..Default::default() };
@@ -24,7 +24,7 @@ fn evaluate(pattern: Pattern, kernel: PairwiseKernel) -> anyhow::Result<f64> {
     Ok(auc(&preds, &split.test.binary_labels()).unwrap_or(f64::NAN))
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> gvt_rls::error::Result<()> {
     println!("Figure 1 — pairwise vs additive signal (test AUC, setting 1)\n");
     println!(
         "{:<14} {:>10} {:>10} {:>10}",

@@ -15,7 +15,7 @@ use gvt_rls::eval::auc;
 use gvt_rls::gvt::pairwise::PairwiseKernel;
 use gvt_rls::solvers::ridge::{PairwiseRidge, RidgeConfig};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> gvt_rls::error::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
     let seed = 42;
     let cfg = if quick {

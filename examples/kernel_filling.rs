@@ -11,7 +11,9 @@
 //! cargo run --release --example kernel_filling -- --quick # smoke
 //! ```
 //!
-//! The output is recorded in EXPERIMENTS.md §Figure 7.
+//! Background on the GVT factorizations and the dense-formulation trade
+//! this example races is in rust/DESIGN.md (§GVT-Factorizations,
+//! §Hardware-Adaptation).
 
 use gvt_rls::coordinator::memory::{format_bytes, peak_bytes, reset_peak, TrackingAlloc};
 use gvt_rls::data::kernel_filling::KernelFillingConfig;
@@ -28,7 +30,7 @@ static ALLOC: TrackingAlloc = TrackingAlloc;
 /// we scale the story down to keep the example runnable everywhere.
 const BASELINE_MEM_CUTOFF: usize = 2 << 30; // 2 GiB
 
-fn main() -> anyhow::Result<()> {
+fn main() -> gvt_rls::error::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
     let seed = 42;
     let cfg = KernelFillingConfig::small();
@@ -192,6 +194,6 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
-    println!("\nDone. See EXPERIMENTS.md §Figure 7 for the recorded run.");
+    println!("\nDone. See rust/DESIGN.md for the factorization and cost-model notes.");
     Ok(())
 }

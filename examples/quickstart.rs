@@ -10,7 +10,7 @@ use gvt_rls::eval::auc;
 use gvt_rls::gvt::pairwise::PairwiseKernel;
 use gvt_rls::solvers::ridge::{PairwiseRidge, RidgeConfig};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> gvt_rls::error::Result<()> {
     // 1. A drug–target interaction dataset: kernels over 40 drugs and 60
     //    targets plus ~1200 labeled pairs (Metz-like synthetic data).
     let data = MetzConfig::small().generate(7);

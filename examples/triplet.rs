@@ -39,7 +39,7 @@ fn latent_kernel(rng: &mut Xoshiro256, n: usize, r: usize) -> (Mat, Mat) {
     (u, k)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> gvt_rls::error::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
     let seed = 42;
     let mut rng = Xoshiro256::seed_from(seed);

@@ -7,7 +7,7 @@ mat-vec to
     S = T @ W        # this file: tiled matmul on the MXU
     p[i] = <D[row_d[i], :], S[row_t[i], :]>   # VPU gather-dot (model.py)
 
-HARDWARE ADAPTATION (DESIGN.md §Hardware-Adaptation): the paper's CPU
+HARDWARE ADAPTATION (rust/DESIGN.md §Hardware-Adaptation): the paper's CPU
 algorithm is two sparse gather/scatter passes; on TPU we restructure the
 same factorization into a dense matmul so the MXU systolic array does the
 O(q·q·m) work. BlockSpec tiles below are MXU-shaped (multiples of 8×128

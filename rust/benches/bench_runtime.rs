@@ -1,6 +1,6 @@
 //! The three-layer bridge: rust-native GVT vs the AOT-compiled JAX/Pallas
 //! artifact (PJRT CPU) on identical Kronecker mat-vecs. Not a paper
-//! figure — this is the ablation for DESIGN.md §Hardware-Adaptation: the
+//! figure — this is the ablation for rust/DESIGN.md §Hardware-Adaptation: the
 //! dense artifact formulation costs O(q²m) FLOPs vs the sparse O(n(m+q)),
 //! so on CPU the sparse rust path should win at low density and the gap
 //! should close as density → 1.
@@ -55,6 +55,6 @@ fn main() {
     println!(
         "(the XLA path includes per-call host↔device literal transfers; \
          on a real TPU the dense formulation amortizes those over MXU \
-         throughput — see DESIGN.md §Hardware-Adaptation)"
+         throughput — see rust/DESIGN.md §Hardware-Adaptation)"
     );
 }

@@ -3,7 +3,7 @@
 //! Grammar: `gvt-rls <subcommand> [--flag value]... [--switch]... [key=value]...`
 //! Positional `key=value` tokens become config overrides.
 
-use anyhow::{bail, Result};
+use crate::error::{bail, gvt_err, Result};
 use std::collections::BTreeMap;
 
 /// Parsed command line.
@@ -63,7 +63,7 @@ impl Cli {
             None => Ok(default),
             Some(v) => v
                 .parse()
-                .map_err(|_| anyhow::anyhow!("--{name} {v}: not an integer")),
+                .map_err(|_| gvt_err!("--{name} {v}: not an integer")),
         }
     }
 
@@ -72,14 +72,14 @@ impl Cli {
             None => Ok(default),
             Some(v) => v
                 .parse()
-                .map_err(|_| anyhow::anyhow!("--{name} {v}: not an integer")),
+                .map_err(|_| gvt_err!("--{name} {v}: not an integer")),
         }
     }
 
     pub fn opt_f64(&self, name: &str, default: f64) -> Result<f64> {
         match self.opt(name) {
             None => Ok(default),
-            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name} {v}: not a number")),
+            Some(v) => v.parse().map_err(|_| gvt_err!("--{name} {v}: not a number")),
         }
     }
 

@@ -9,7 +9,7 @@
 //! folds    = 9
 //! ```
 
-use anyhow::{bail, Context, Result};
+use crate::error::{bail, Context, Result};
 use std::collections::BTreeMap;
 
 /// Parsed config: ordered key → value map with typed accessors.

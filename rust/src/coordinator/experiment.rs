@@ -3,10 +3,10 @@
 //! work behind every bar in Figures 4, 5 and 6.
 
 use crate::data::{splits, PairDataset};
+use crate::error::{Context, Result};
 use crate::eval::{auc, FoldStats};
 use crate::gvt::pairwise::PairwiseKernel;
 use crate::solvers::ridge::{PairwiseRidge, RidgeConfig};
-use anyhow::{Context, Result};
 use std::time::Instant;
 
 /// Specification of one experiment cell.

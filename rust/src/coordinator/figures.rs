@@ -8,6 +8,7 @@
 
 use crate::cli::Cli;
 use crate::coordinator::report::{auc_table, results_csv, Series};
+use crate::error::{bail, Result};
 use crate::coordinator::runner::run_grid_with_progress;
 use crate::coordinator::ExperimentSpec;
 use crate::data::heterodimer::{HeterodimerConfig, ProteinFeature};
@@ -19,7 +20,6 @@ use crate::gvt::pairwise::PairwiseKernel;
 use crate::kernels::BaseKernel;
 use crate::solvers::nystrom::{NystromConfig, NystromModel};
 use crate::solvers::ridge::{PairwiseRidge, RidgeConfig};
-use anyhow::{bail, Result};
 
 /// Scale selector shared by all figures.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -8,7 +8,7 @@
 //! the rest.
 
 use crate::coordinator::experiment::{run_cv_experiment, ExperimentResult, ExperimentSpec};
-use anyhow::Result;
+use crate::error::Result;
 use std::collections::VecDeque;
 use std::sync::Mutex;
 

@@ -4,10 +4,10 @@
 //! modes).
 
 use crate::data::{splits, PairDataset};
+use crate::error::Result;
 use crate::eval::auc;
 use crate::gvt::pairwise::PairwiseKernel;
 use crate::solvers::ridge::{PairwiseRidge, RidgeConfig};
-use anyhow::Result;
 
 /// One evaluated candidate.
 #[derive(Clone, Debug)]

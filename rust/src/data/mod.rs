@@ -5,7 +5,7 @@
 //! generates a synthetic dataset matching the published characteristics —
 //! dimensions, density, homogeneity, feature structure, label imbalance,
 //! and crucially the *linear + pairwise-interaction* signal mix that drives
-//! the paper's kernel comparisons. See DESIGN.md §Substitutions.
+//! the paper's kernel comparisons. See rust/DESIGN.md §Substitutions.
 //!
 //! * [`chessboard`] — the Figure 1 chessboard/tablecloth toy problems.
 //! * [`heterodimer`] — homogeneous protein-complex classification.

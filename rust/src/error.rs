@@ -1,0 +1,254 @@
+//! Crate-local error subsystem (no external error crates offline).
+//!
+//! Mirrors the small slice of the usual context-chaining error API this
+//! crate needs, with zero dependencies:
+//!
+//! * [`GvtError`] — the crate-wide error enum. Ad-hoc failures carry a
+//!   message; foreign errors (I/O, number parsing, UTF-8) are wrapped so
+//!   the `?` operator keeps working at every call site; layered context
+//!   is a linked chain, printed innermost-last.
+//! * [`Result`] — `Result<T, GvtError>` alias, the return type of every
+//!   fallible API in the crate.
+//! * [`bail!`](crate::bail) — early-return with a formatted message.
+//! * [`gvt_err!`](crate::gvt_err) — build a [`GvtError`] from a format
+//!   string (for `ok_or_else`/`map_err` sites).
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`, attaching a caller-side description to a failure.
+//!
+//! Display formatting: `{}` prints the outermost description only, `{:#}`
+//! prints the whole chain separated by `": "` (the `error: {e:#}`
+//! reporting in the `gvt-rls` binary).
+
+use std::fmt;
+
+/// The crate-wide error type.
+pub enum GvtError {
+    /// Ad-hoc failure described by a message ([`bail!`](crate::bail) /
+    /// [`gvt_err!`](crate::gvt_err)).
+    Message(String),
+    /// Filesystem / stream failure (model persistence, config loading,
+    /// artifact discovery).
+    Io(std::io::Error),
+    /// Integer field that failed to parse (configs, CLI, model files).
+    ParseInt(std::num::ParseIntError),
+    /// Floating-point field that failed to parse (configs, CLI, JSON).
+    ParseFloat(std::num::ParseFloatError),
+    /// Invalid UTF-8 in a byte stream (JSON manifest parsing).
+    Utf8(std::str::Utf8Error),
+    /// A lower-level error wrapped with a caller-side description.
+    Context {
+        context: String,
+        source: Box<GvtError>,
+    },
+}
+
+impl GvtError {
+    /// Build an ad-hoc error from anything displayable.
+    pub fn msg(msg: impl fmt::Display) -> GvtError {
+        GvtError::Message(msg.to_string())
+    }
+
+    /// Wrap `self` with an outer description (what the caller was doing).
+    pub fn context(self, context: impl fmt::Display) -> GvtError {
+        GvtError::Context { context: context.to_string(), source: Box::new(self) }
+    }
+
+    /// The outermost description (what `{}` prints).
+    fn outermost(&self) -> String {
+        match self {
+            GvtError::Message(m) => m.clone(),
+            GvtError::Io(e) => e.to_string(),
+            GvtError::ParseInt(e) => e.to_string(),
+            GvtError::ParseFloat(e) => e.to_string(),
+            GvtError::Utf8(e) => e.to_string(),
+            GvtError::Context { context, .. } => context.clone(),
+        }
+    }
+}
+
+impl fmt::Display for GvtError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: full chain, outermost first — "reading config: No
+            // such file or directory".
+            write!(f, "{}", self.outermost())?;
+            let mut cur = self;
+            while let GvtError::Context { source, .. } = cur {
+                cur = &**source;
+                write!(f, ": {}", cur.outermost())?;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.outermost())
+        }
+    }
+}
+
+impl fmt::Debug for GvtError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `unwrap()` in tests prints Debug; show the full chain there too.
+        write!(f, "{self:#}")
+    }
+}
+
+impl std::error::Error for GvtError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            GvtError::Io(e) => Some(e),
+            GvtError::ParseInt(e) => Some(e),
+            GvtError::ParseFloat(e) => Some(e),
+            GvtError::Utf8(e) => Some(e),
+            GvtError::Context { source, .. } => Some(&**source),
+            GvtError::Message(_) => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for GvtError {
+    fn from(e: std::io::Error) -> GvtError {
+        GvtError::Io(e)
+    }
+}
+
+impl From<std::num::ParseIntError> for GvtError {
+    fn from(e: std::num::ParseIntError) -> GvtError {
+        GvtError::ParseInt(e)
+    }
+}
+
+impl From<std::num::ParseFloatError> for GvtError {
+    fn from(e: std::num::ParseFloatError) -> GvtError {
+        GvtError::ParseFloat(e)
+    }
+}
+
+impl From<std::str::Utf8Error> for GvtError {
+    fn from(e: std::str::Utf8Error) -> GvtError {
+        GvtError::Utf8(e)
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T, E = GvtError> = std::result::Result<T, E>;
+
+/// Return early with a formatted [`GvtError`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::error::GvtError::msg(format!($($arg)*)))
+    };
+}
+
+/// Build a [`GvtError`] from a format string.
+#[macro_export]
+macro_rules! gvt_err {
+    ($($arg:tt)*) => {
+        $crate::error::GvtError::msg(format!($($arg)*))
+    };
+}
+
+// Make the macros importable alongside the rest of the subsystem:
+// `use crate::error::{bail, Context, Result};`.
+pub use crate::{bail, gvt_err};
+
+/// Attach context to failures.
+pub trait Context<T> {
+    /// Wrap the error with a fixed description.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Wrap the error with a lazily-built description (use when the
+    /// description allocates).
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<GvtError>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| GvtError::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| GvtError::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_port(s: &str) -> Result<u16> {
+        let n: u16 = s.parse()?; // From<ParseIntError>
+        if n == 0 {
+            bail!("port must be nonzero, got {n}");
+        }
+        Ok(n)
+    }
+
+    #[test]
+    fn question_mark_converts_foreign_errors() {
+        assert_eq!(parse_port("8080").unwrap(), 8080);
+        assert!(matches!(parse_port("x"), Err(GvtError::ParseInt(_))));
+        assert!(matches!(parse_port("0"), Err(GvtError::Message(_))));
+    }
+
+    #[test]
+    fn bail_formats_message() {
+        let e = parse_port("0").unwrap_err();
+        assert_eq!(e.to_string(), "port must be nonzero, got 0");
+    }
+
+    #[test]
+    fn context_chain_prints_outermost_plain_and_full_alternate() {
+        let e = parse_port("x").context("reading config").unwrap_err();
+        let outer = format!("{e}");
+        assert_eq!(outer, "reading config");
+        let full = format!("{e:#}");
+        assert!(full.starts_with("reading config: "), "{full}");
+        assert!(full.len() > outer.len());
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let ok: Result<u8> = Ok(1);
+        let mut called = false;
+        let v = ok
+            .with_context(|| {
+                called = true;
+                "never"
+            })
+            .unwrap();
+        assert_eq!(v, 1);
+        assert!(!called, "context closure must not run on Ok");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u8> = None;
+        let e = none.context("missing field").unwrap_err();
+        assert_eq!(e.to_string(), "missing field");
+        assert_eq!(Some(3u8).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn gvt_err_macro_builds_error() {
+        let e: GvtError = gvt_err!("bad value {}", 42);
+        assert_eq!(e.to_string(), "bad value 42");
+    }
+
+    #[test]
+    fn source_chain_is_walkable() {
+        use std::error::Error;
+        let e = parse_port("x").context("outer").unwrap_err();
+        let src = e.source().expect("context has a source");
+        assert!(src.source().is_some(), "ParseInt wraps the std error");
+    }
+}

@@ -21,12 +21,12 @@
 //!   symmetry of the scalar product, leaving **10 summands** (matching the
 //!   paper's count in §6.4).
 
+use crate::error::{bail, Result};
 use crate::gvt::terms::{Factor, IndexMap, KroneckerTerm, TermContext};
 use crate::gvt::vec_trick::GvtPolicy;
 use crate::linalg::Mat;
 use crate::solvers::linear_op::LinOp;
 use crate::sparse::PairIndex;
-use anyhow::{bail, Result};
 use std::sync::Arc;
 
 use Factor::{DSq, Identity, Ones, TSq, D, T};

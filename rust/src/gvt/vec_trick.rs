@@ -22,11 +22,12 @@
 //! plus a **dense** formulation (scatter → GEMM → gather-dot) that trades
 //! `O(n·q_r)` irregular scalar work for an `O(q_r·q_c·m_c)` vectorized
 //! GEMM — the formulation the JAX/Pallas artifact implements, and faster
-//! on dense samples (see bench_gvt_vs_explicit and DESIGN.md
+//! on dense samples (see bench_gvt_vs_explicit and rust/DESIGN.md
 //! §Hardware-Adaptation).
 
 use crate::linalg::{par, Mat};
 use crate::sparse::PairIndex;
+use std::sync::OnceLock;
 
 /// Which GVT factorization to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -43,8 +44,9 @@ pub enum GvtPolicy {
 }
 
 /// Density threshold above which `Auto` prefers the dense GEMM path.
-/// Tuned in the §Perf pass (see EXPERIMENTS.md): the GEMM runs ~8 f64
-/// FMAs/cycle while the sparse path does ~1 gather-multiply per cycle.
+/// Tuned in the §Perf pass (see rust/DESIGN.md §Cost-Model): the GEMM
+/// runs ~8 f64 FMAs/cycle while the sparse path does ~1 gather-multiply
+/// per cycle.
 const DENSE_DENSITY_THRESHOLD: f64 = 0.10;
 
 /// `p = R(rows) (A ⊗ B) R(cols)ᵀ a` — see module docs.
@@ -77,7 +79,7 @@ pub fn gvt_matvec(
             // complete q×m grid. §Perf: the discount was measured at ~2×
             // against the 4-row-blocked sparse stage 1 (an 8× guess made
             // Auto pick Dense where SparseLeft was 1.5× faster — see
-            // EXPERIMENTS.md §Perf iteration log).
+            // rust/DESIGN.md §Perf).
             let density = n / (q_c as f64 * m_c as f64).max(1.0);
             let cost_dense =
                 (q_r as f64 * q_c as f64 * m_c as f64) / 2.0 + n + nbar * m_c as f64;
@@ -175,7 +177,7 @@ fn dense(
 /// three index/coefficient streams (`scatter[j]`, `gather[j]`, `a[j]`,
 /// 12 B/pair) are loaded once per 4 rows instead of once per row — stage 1
 /// is index-bandwidth-bound, and this cut the n=16k Kronecker mat-vec by
-/// ~35% (see EXPERIMENTS.md §Perf).
+/// ~35% (see rust/DESIGN.md §Perf).
 fn stage1_scatter(
     mat: &Mat,
     row0: usize,
@@ -189,9 +191,7 @@ fn stage1_scatter(
     debug_assert_eq!(gather.len(), a.len());
     let rows_here = chunk.len() / row_len;
     let mut r = 0;
-    // A/B escape hatch used by the §Perf ablation (bench_perf_ablation):
-    // GVT_RLS_STAGE1_1ROW=1 disables the 4-row blocking.
-    let block = std::env::var_os("GVT_RLS_STAGE1_1ROW").is_none();
+    let block = !stage1_single_row();
     while block && r + 4 <= rows_here {
         let m0 = mat.row(row0 + r);
         let m1 = mat.row(row0 + r + 1);
@@ -220,6 +220,19 @@ fn stage1_scatter(
             srow[scatter[j] as usize] += mrow[gather[j] as usize] * a[j];
         }
     }
+}
+
+/// A/B escape hatch used by the §Perf ablation (bench_perf_ablation):
+/// `GVT_RLS_STAGE1_1ROW=1` disables [`stage1_scatter`]'s 4-row blocking.
+///
+/// Read once and cached: stage 1 runs on every worker chunk of every GVT
+/// mat-vec, and `env::var_os` takes a process-global lock on some
+/// platforms — exactly the hot path the blocking exists to speed up. The
+/// ablation sets the variable before the process starts, so a cached
+/// read is equivalent.
+fn stage1_single_row() -> bool {
+    static CACHED: OnceLock<bool> = OnceLock::new();
+    *CACHED.get_or_init(|| std::env::var_os("GVT_RLS_STAGE1_1ROW").is_some())
 }
 
 /// `p_i = ⟨lhs[li[i], :], s[ri[i], :]⟩`, threaded over output chunks.
@@ -345,6 +358,75 @@ mod tests {
         let cols = PairIndex::new(vec![], vec![], 3, 3);
         let p = gvt_matvec(&am, &bm, &rows, &cols, &[], GvtPolicy::Auto);
         assert_eq!(p, vec![0.0; 5]);
+    }
+
+    /// The `Auto` cost model on an empty *row* sample (`n̄ = 0`): every
+    /// branch it can pick must agree with the forced policies and with
+    /// the naive oracle, and the division-free guards (`max(1)` in
+    /// `gvt_matvec` / `parallel_fill_rows`) must keep the cost
+    /// comparisons finite.
+    #[test]
+    fn auto_matches_forced_policies_on_empty_row_sample() {
+        let mut rng = Xoshiro256::seed_from(21);
+        let (m, q, n) = (4, 5, 30);
+        let am = Mat::from_vec(m, m, dist::normal_vec(&mut rng, m * m));
+        let bm = Mat::from_vec(q, q, dist::normal_vec(&mut rng, q * q));
+        let cols = gen::pair_sample(&mut rng, n, m, q);
+        let rows = PairIndex::new(vec![], vec![], m, q);
+        let a = dist::normal_vec(&mut rng, n);
+        let expect = naive_matvec(&am, &bm, &rows, &cols, &a);
+        assert_eq!(expect, Vec::<f64>::new());
+        for policy in [
+            GvtPolicy::Auto,
+            GvtPolicy::SparseLeft,
+            GvtPolicy::SparseRight,
+            GvtPolicy::Dense,
+        ] {
+            let got = gvt_matvec(&am, &bm, &rows, &cols, &a, policy);
+            assert_eq!(got, expect, "{policy:?} on empty row sample");
+        }
+    }
+
+    /// The `Auto` cost model on a degenerate 1×1 domain: density is
+    /// computed against a 1-cell grid (the `max(1)` guard), and all
+    /// policies must agree with the naive oracle.
+    #[test]
+    fn auto_matches_forced_policies_on_1x1_domain() {
+        let am = Mat::full(1, 1, 2.5);
+        let bm = Mat::full(1, 1, -0.5);
+        // Several repeated (0, 0) pairs: n > m·q exercises density > 1.
+        let cols = PairIndex::new(vec![0; 6], vec![0; 6], 1, 1);
+        let rows = PairIndex::new(vec![0; 3], vec![0; 3], 1, 1);
+        let a = vec![1.0, 2.0, -1.0, 0.5, 0.25, -0.75];
+        let expect = naive_matvec(&am, &bm, &rows, &cols, &a);
+        for policy in [
+            GvtPolicy::Auto,
+            GvtPolicy::SparseLeft,
+            GvtPolicy::SparseRight,
+            GvtPolicy::Dense,
+        ] {
+            let got = gvt_matvec(&am, &bm, &rows, &cols, &a, policy);
+            let err = crate::linalg::vecops::max_abs_diff(&got, &expect);
+            assert!(err < 1e-12, "{policy:?} on 1x1 domain: err {err}");
+        }
+    }
+
+    /// Both degeneracies at once: empty column sample *and* empty row
+    /// sample over a 1×1 domain — the operator is the 0×0 matrix.
+    #[test]
+    fn auto_handles_fully_empty_problem() {
+        let am = Mat::full(1, 1, 3.0);
+        let bm = Mat::full(1, 1, 4.0);
+        let empty = PairIndex::new(vec![], vec![], 1, 1);
+        for policy in [
+            GvtPolicy::Auto,
+            GvtPolicy::SparseLeft,
+            GvtPolicy::SparseRight,
+            GvtPolicy::Dense,
+        ] {
+            let got = gvt_matvec(&am, &bm, &empty, &empty, &[], policy);
+            assert_eq!(got, Vec::<f64>::new(), "{policy:?}");
+        }
     }
 
     #[test]

@@ -28,9 +28,10 @@
 //!   cross-validation, early stopping, memory accounting, reports.
 //! * [`runtime`] — PJRT bridge: loads AOT-compiled JAX/Pallas artifacts
 //!   (HLO text) and runs the dense complete-data Kronecker mat-vec.
-//! * [`linalg`], [`sparse`], [`rng`], [`eval`], [`bench`], [`testing`] —
-//!   from-scratch substrates (the sandbox has no rand/rayon/criterion/
-//!   proptest).
+//! * [`linalg`], [`sparse`], [`rng`], [`eval`], [`bench`], [`testing`],
+//!   [`error`] — from-scratch substrates (the sandbox has no rand/rayon/
+//!   criterion/proptest or error-handling crates; the crate builds with
+//!   zero dependencies, `cargo build --offline`).
 //!
 //! ## Quickstart
 //!
@@ -53,6 +54,7 @@ pub mod bench;
 pub mod cli;
 pub mod coordinator;
 pub mod data;
+pub mod error;
 pub mod eval;
 pub mod gvt;
 pub mod kernels;

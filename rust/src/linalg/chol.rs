@@ -4,8 +4,8 @@
 //! GVT solver on small problems, and (2) the Falkon-style Nyström solver's
 //! preconditioner (`K_mm + λI = LLᵀ`).
 
+use crate::error::{bail, Result};
 use crate::linalg::Mat;
-use anyhow::{bail, Result};
 
 /// Lower-triangular Cholesky factor of a symmetric positive-definite matrix.
 pub struct Cholesky {

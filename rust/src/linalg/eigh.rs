@@ -7,8 +7,8 @@
 //! external LAPACK (none is available offline); fine for the `m, q ≤` a
 //! few thousand this library targets.
 
+use crate::error::{bail, Result};
 use crate::linalg::Mat;
-use anyhow::{bail, Result};
 
 /// Eigendecomposition `A = V diag(λ) Vᵀ` of a symmetric matrix.
 pub struct Eigh {

@@ -10,8 +10,8 @@
 //!
 //! `--quick` shrinks every experiment to smoke-test size.
 
-use anyhow::Result;
 use gvt_rls::cli::Cli;
+use gvt_rls::error::{gvt_err, Result};
 
 // Install the tracking allocator so `--mem` reports are exact (Figure 7).
 #[global_allocator]
@@ -101,7 +101,7 @@ fn cmd_train(cli: &Cli) -> Result<()> {
 
     let seed = cli.opt_u64("seed", 42)?;
     let kernel = PairwiseKernel::parse(&cli.opt_or("kernel", "kronecker"))
-        .ok_or_else(|| anyhow::anyhow!("unknown --kernel"))?;
+        .ok_or_else(|| gvt_err!("unknown --kernel"))?;
     let setting = cli.opt_usize("setting", 1)? as u8;
     let quick = cli.has_switch("quick");
     let cfg = RidgeConfig {
@@ -139,7 +139,7 @@ fn cmd_experiment(cli: &Cli) -> Result<()> {
         .positionals
         .first()
         .map(|s| s.as_str())
-        .ok_or_else(|| anyhow::anyhow!("usage: gvt-rls experiment <fig3|fig4|fig5|fig6|fig8>"))?;
+        .ok_or_else(|| gvt_err!("usage: gvt-rls experiment <fig3|fig4|fig5|fig6|fig8>"))?;
     gvt_rls::coordinator::figures::run(which, cli)
 }
 

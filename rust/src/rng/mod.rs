@@ -6,7 +6,8 @@
 //! distribution / shuffling helpers in [`dist`].
 //!
 //! All experiment code takes explicit `u64` seeds so every figure and table
-//! in EXPERIMENTS.md is exactly reproducible.
+//! the CLI and benches print is exactly reproducible from its seed (see
+//! rust/DESIGN.md §Perf, RNG note).
 
 mod splitmix;
 mod xoshiro;

@@ -1,8 +1,8 @@
 //! Artifact manifest: discovery and metadata for the AOT-compiled HLO
 //! programs produced by `python/compile/aot.py`.
 
+use crate::error::{bail, Context, Result};
 use crate::runtime::json::Json;
-use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
 
 /// Metadata of one shape-specialized artifact.

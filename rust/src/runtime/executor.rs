@@ -16,10 +16,13 @@
 //! output rows are chunked into batches of `N` with padding rows pointed
 //! at index 0 and discarded.
 
+use crate::error::{bail, Context, Result};
 use crate::linalg::Mat;
 use crate::runtime::artifact::{ArtifactMeta, Registry};
+// Offline stub with the same API surface as the real `xla` PJRT bindings
+// (see its module docs for the swap-back procedure).
+use crate::runtime::xla;
 use crate::sparse::PairIndex;
-use anyhow::{bail, Context, Result};
 
 /// A compiled, loaded artifact ready to execute.
 pub struct KronExec {

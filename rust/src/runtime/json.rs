@@ -3,7 +3,7 @@
 //! Supports the subset the manifest uses: objects, arrays, strings
 //! (with `\"`/`\\`/`\n`/`\t`/`\u` escapes), numbers, booleans, null.
 
-use anyhow::{bail, Result};
+use crate::error::{bail, gvt_err, Result};
 use std::collections::BTreeMap;
 
 /// A parsed JSON value.
@@ -157,7 +157,7 @@ impl<'a> Parser<'a> {
                             let hex = std::str::from_utf8(
                                 self.bytes
                                     .get(self.pos + 1..self.pos + 5)
-                                    .ok_or_else(|| anyhow::anyhow!("bad \\u escape"))?,
+                                    .ok_or_else(|| gvt_err!("bad \\u escape"))?,
                             )?;
                             let code = u32::from_str_radix(hex, 16)?;
                             out.push(char::from_u32(code).unwrap_or('\u{fffd}'));

@@ -13,10 +13,15 @@
 //! Interchange is HLO text rather than serialized protos: jax ≥ 0.5 emits
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! In offline builds the PJRT bindings are replaced by the API-compatible
+//! stub in [`xla`]; loading an executor then fails gracefully and every
+//! caller falls back to the rust-native GVT.
 
 pub mod artifact;
 pub mod executor;
 pub mod json;
+pub mod xla;
 
 pub use artifact::{ArtifactMeta, Registry};
 pub use executor::KronExec;

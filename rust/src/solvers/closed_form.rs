@@ -3,11 +3,11 @@
 //! (non-GVT) baseline when users want exact solves.
 
 use crate::data::PairDataset;
+use crate::error::{Context, Result};
 use crate::gvt::explicit::explicit_matrix;
 use crate::gvt::pairwise::PairwiseKernel;
 use crate::linalg::chol::solve_regularized;
 use crate::sparse::PairIndex;
-use anyhow::{Context, Result};
 
 /// Exact ridge model: `a = (K + λI)⁻¹ y` with explicit `K`.
 pub struct ClosedFormModel {

@@ -18,9 +18,9 @@
 //! complete data and why the paper's incomplete-data setting needed GVT.
 
 use crate::data::PairDataset;
+use crate::error::{bail, Context, Result};
 use crate::linalg::eigh::{eigh, Eigh};
 use crate::linalg::Mat;
-use anyhow::{bail, Context, Result};
 
 /// Eigendecomposed complete-data Kronecker ridge solver.
 pub struct CompleteKronRidge {

@@ -19,6 +19,7 @@
 //! consumes 16GiB". [`NystromModel::knm_bytes`] reports it for Figure 8/9.
 
 use crate::data::PairDataset;
+use crate::error::{Context, Result};
 use crate::eval::auc;
 use crate::gvt::explicit::explicit_matrix;
 use crate::gvt::pairwise::PairwiseKernel;
@@ -27,7 +28,6 @@ use crate::linalg::{Mat, vecops};
 use crate::solvers::cg::{cg, CgOptions};
 use crate::solvers::linear_op::LinOp;
 use crate::sparse::PairIndex;
-use anyhow::{Context, Result};
 use std::ops::ControlFlow;
 use std::sync::Arc;
 

@@ -17,12 +17,12 @@
 //! …
 //! ```
 
+use crate::error::{bail, Context, Result};
 use crate::gvt::pairwise::PairwiseKernel;
 use crate::gvt::vec_trick::GvtPolicy;
 use crate::linalg::Mat;
 use crate::solvers::ridge::RidgeModel;
 use crate::sparse::PairIndex;
-use anyhow::{bail, Context, Result};
 use std::io::Write;
 use std::path::Path;
 use std::sync::Arc;

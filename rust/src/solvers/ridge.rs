@@ -14,13 +14,13 @@
 //! is [`PairwiseRidge::fit_early_stopping`].
 
 use crate::data::{splits, PairDataset};
+use crate::error::{bail, Context, Result};
 use crate::eval::auc;
 use crate::gvt::pairwise::{PairwiseKernel, PairwiseLinOp};
 use crate::gvt::vec_trick::GvtPolicy;
 use crate::solvers::linear_op::{LinOp, ShiftedOp};
 use crate::solvers::minres::{minres, MinresOptions};
 use crate::sparse::PairIndex;
-use anyhow::{bail, Context, Result};
 use std::ops::ControlFlow;
 use std::sync::Arc;
 

@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Tier-1 verification for the gvt_rls workspace, plus the bench/example
+# targets that `cargo build`/`cargo test` alone would let rot.
+#
+# Usage: scripts/verify.sh   (from anywhere; cd's to the repo root)
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+echo "== tier-1: cargo build --release --offline =="
+cargo build --release --offline
+
+echo "== tier-1: cargo test -q =="
+cargo test -q --offline
+
+echo "== benches + examples compile (kept in the workspace) =="
+cargo build --offline --benches --examples
+
+echo "verify.sh: OK"
