@@ -16,9 +16,16 @@ use std::hint::black_box;
 fn main() {
     let cfg = BenchConfig::from_env();
     let mut suite = BenchSuite::new();
-    let quick = std::env::var("GVT_RLS_BENCH_QUICK").is_ok();
-    let k = if quick { 64 } else { 192 };
-    let sizes: &[usize] = if quick { &[500, 2000] } else { &[1_000, 4_000, 16_000] };
+    let smoke = gvt_rls::bench::smoke();
+    let quick = std::env::var("GVT_RLS_BENCH_QUICK").is_ok() || smoke;
+    let k = if smoke { 32 } else if quick { 64 } else { 192 };
+    let sizes: &[usize] = if smoke {
+        &[200]
+    } else if quick {
+        &[500, 2000]
+    } else {
+        &[1_000, 4_000, 16_000]
+    };
 
     println!("# bench_gvt_vs_explicit — Theorem 1 scaling (k = {k} drugs)\n");
     for &n in sizes {
@@ -63,7 +70,7 @@ fn main() {
     }
 
     // Factorization ablation at a fixed size.
-    let n = if quick { 2000 } else { 16_000 };
+    let n = if smoke { 200 } else if quick { 2000 } else { 16_000 };
     let data = KernelFillingConfig::small().generate(k, n, 43);
     let a: Vec<f64> = (0..n).map(|i| ((i % 5) as f64) - 2.0).collect();
     println!("\n## factorization ablation (n = {n}, density {:.0}%)\n", 100.0 * data.density());

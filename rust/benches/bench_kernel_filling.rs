@@ -21,14 +21,18 @@ static ALLOC: TrackingAlloc = TrackingAlloc;
 const BASELINE_CUTOFF: usize = 1 << 31; // 2 GiB (paper: 16 GiB)
 
 fn main() {
-    let quick = std::env::var("GVT_RLS_BENCH_QUICK").is_ok();
-    let k = if quick { 64 } else { 192 };
-    let sizes: Vec<usize> = if quick {
+    let smoke = gvt_rls::bench::smoke();
+    let quick = std::env::var("GVT_RLS_BENCH_QUICK").is_ok() || smoke;
+    let k = if smoke { 32 } else if quick { 64 } else { 192 };
+    let sizes: Vec<usize> = if smoke {
+        vec![300]
+    } else if quick {
         vec![500, 1_000, 2_000]
     } else {
         vec![1_000, 2_000, 4_000, 8_000, 16_000, 32_000]
     };
-    let ridge = RidgeConfig { max_iters: if quick { 25 } else { 60 }, patience: 6, ..Default::default() };
+    let max_iters = if smoke { 8 } else if quick { 25 } else { 60 };
+    let ridge = RidgeConfig { max_iters, patience: 6, ..Default::default() };
     let cfgk = KernelFillingConfig::small();
 
     println!("# bench_kernel_filling — Figure 7 (k = {k} drugs)\n");

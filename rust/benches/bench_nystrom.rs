@@ -18,8 +18,11 @@ use std::time::Instant;
 static ALLOC: TrackingAlloc = TrackingAlloc;
 
 fn main() {
-    let quick = std::env::var("GVT_RLS_BENCH_QUICK").is_ok();
-    let (k, n, centers): (usize, usize, Vec<usize>) = if quick {
+    let smoke = gvt_rls::bench::smoke();
+    let quick = std::env::var("GVT_RLS_BENCH_QUICK").is_ok() || smoke;
+    let (k, n, centers): (usize, usize, Vec<usize>) = if smoke {
+        (32, 400, vec![8, 32])
+    } else if quick {
         (48, 1_500, vec![16, 64, 256])
     } else {
         (160, 12_000, vec![32, 128, 512, 2048])
@@ -68,7 +71,7 @@ fn main() {
         reset_peak();
         let t0 = Instant::now();
         let ridge = RidgeConfig {
-            max_iters: if quick { 30 } else { 100 },
+            max_iters: if smoke { 8 } else if quick { 30 } else { 100 },
             patience: 10,
             ..Default::default()
         };

@@ -1,8 +1,15 @@
 //! Corollary 1 / §6.4: per-kernel mat-vec cost. "The Kronecker kernel is
 //! fastest of these because it has only one term and the MLPK slowest
-//! because it has 10 such terms" — this bench regenerates that ordering.
+//! because it has 10 such terms" — this bench regenerates that ordering,
+//! and since the fused-plan PR also measures how much of the per-term
+//! cost the [`gvt_rls::gvt::plan::GvtPlan`] fusion claws back (the
+//! `unfused` rows are the `GVT_RLS_NO_FUSE=1` path run in-process).
+//!
+//! Set `GVT_RLS_BENCH_JSON=<path>` to emit the suite as JSON —
+//! scripts/bench.sh points it at BENCH_gvt.json in the repo root to seed
+//! the perf trajectory.
 
-use gvt_rls::bench::{BenchConfig, BenchSuite};
+use gvt_rls::bench::{reduced_size, BenchConfig, BenchSuite};
 use gvt_rls::data::kernel_filling::KernelFillingConfig;
 use gvt_rls::gvt::pairwise::{PairwiseKernel, PairwiseLinOp};
 use gvt_rls::gvt::vec_trick::GvtPolicy;
@@ -11,42 +18,89 @@ use std::hint::black_box;
 fn main() {
     let cfg = BenchConfig::from_env();
     let mut suite = BenchSuite::new();
-    let quick = std::env::var("GVT_RLS_BENCH_QUICK").is_ok();
-    let (k, n) = if quick { (64, 2_000) } else { (192, 16_000) };
-    let data = KernelFillingConfig::small().generate(k, n, 42);
-    let a: Vec<f64> = (0..n).map(|i| ((i % 9) as f64) - 4.0).collect();
+    let (k, sizes): (usize, &[usize]) =
+        if reduced_size() { (48, &[800]) } else { (192, &[4_000, 16_000]) };
 
-    println!("# bench_pairwise_kernels — per-kernel GVT mat-vec (n = {n}, m = q = {k})\n");
-    let mut order: Vec<(String, f64, usize)> = Vec::new();
-    for kernel in PairwiseKernel::ALL {
-        let op = PairwiseLinOp::new(
-            kernel,
-            data.d.clone(),
-            data.t.clone(),
-            data.pairs.clone(),
-            data.pairs.clone(),
-            GvtPolicy::Auto,
-        )
-        .unwrap();
-        let r = suite.run(
-            &format!("{:<14} ({} terms)", kernel.name(), op.term_count()),
-            &cfg,
-            || {
-                black_box(op.matvec(black_box(&a)));
-            },
+    let mut speedups: Vec<(String, usize, f64)> = Vec::new();
+    for &n in sizes {
+        let data = KernelFillingConfig::small().generate(k, n, 42);
+        let a: Vec<f64> = (0..n).map(|i| ((i % 9) as f64) - 4.0).collect();
+        println!("# bench_pairwise_kernels — per-kernel GVT mat-vec (n = {n}, m = q = {k})\n");
+        let mut order: Vec<(String, f64, usize)> = Vec::new();
+        for kernel in PairwiseKernel::ALL {
+            let op = PairwiseLinOp::new(
+                kernel,
+                data.d.clone(),
+                data.t.clone(),
+                data.pairs.clone(),
+                data.pairs.clone(),
+                GvtPolicy::Auto,
+            )
+            .unwrap();
+            let r = suite.run(
+                &format!("{:<14} n={n:<6} fused   ({} terms)", kernel.name(), op.term_count()),
+                &cfg,
+                || {
+                    black_box(op.matvec(black_box(&a)));
+                },
+            );
+            let fused_mean = r.mean.as_secs_f64();
+            order.push((kernel.name().to_string(), fused_mean, op.term_count()));
+            // Fusion ablation on the multi-term kernels (the acceptance
+            // targets): same operator, pre-plan per-term path.
+            if matches!(kernel, PairwiseKernel::Ranking | PairwiseKernel::Mlpk) {
+                let mut out = vec![0.0; n];
+                let r2 = suite.run(
+                    &format!("{:<14} n={n:<6} unfused ({} terms)", kernel.name(), op.term_count()),
+                    &cfg,
+                    || {
+                        op.matvec_into_unfused(black_box(&a), black_box(&mut out));
+                    },
+                );
+                let s = r2.mean.as_secs_f64() / fused_mean.max(1e-12);
+                println!(
+                    "    {} n={n}: plan [{}] fused speedup {s:.2}x",
+                    kernel.name(),
+                    op.plan_summary()
+                );
+                speedups.push((kernel.name().to_string(), n, s));
+            }
+        }
+
+        // Paper-shape check: Kronecker fastest, MLPK slowest.
+        let kron = order.iter().find(|(nm, _, _)| nm == "kronecker").unwrap().1;
+        let mlpk = order.iter().find(|(nm, _, _)| nm == "mlpk").unwrap().1;
+        println!(
+            "\nkronecker {:.4}ms vs mlpk {:.4}ms → ratio {:.1}× (paper: ~10 terms vs 1)\n",
+            kron * 1e3,
+            mlpk * 1e3,
+            mlpk / kron
         );
-        order.push((kernel.name().to_string(), r.mean.as_secs_f64(), op.term_count()));
     }
 
-    println!("\n{}", suite.table());
+    println!("{}", suite.table());
+    for (name, n, s) in &speedups {
+        println!("fused speedup {name} n={n}: {s:.2}x");
+    }
 
-    // Paper-shape check: Kronecker fastest, MLPK slowest.
-    let kron = order.iter().find(|(n, _, _)| n == "kronecker").unwrap().1;
-    let mlpk = order.iter().find(|(n, _, _)| n == "mlpk").unwrap().1;
-    println!(
-        "kronecker {:.4}ms vs mlpk {:.4}ms → ratio {:.1}× (paper: ~10 terms vs 1)",
-        kron * 1e3,
-        mlpk * 1e3,
-        mlpk / kron
-    );
+    if let Ok(path) = std::env::var("GVT_RLS_BENCH_JSON") {
+        let meta: Vec<(&str, String)> = vec![
+            ("bench", "bench_pairwise_kernels".to_string()),
+            ("domain", k.to_string()),
+            (
+                "sizes",
+                sizes.iter().map(|s| s.to_string()).collect::<Vec<_>>().join(","),
+            ),
+            (
+                "speedups",
+                speedups
+                    .iter()
+                    .map(|(nm, n, s)| format!("{nm}@{n}={s:.3}x"))
+                    .collect::<Vec<_>>()
+                    .join(";"),
+            ),
+        ];
+        suite.write_json(&path, &meta).expect("writing bench JSON");
+        println!("wrote {path}");
+    }
 }

@@ -19,8 +19,10 @@ fn min_time<F: FnMut()>(reps: usize, mut f: F) -> f64 {
 }
 
 fn main() {
-    let quick = std::env::var("GVT_RLS_BENCH_QUICK").is_ok();
-    let (k, n, reps) = if quick { (64, 2000, 10) } else { (192, 16_000, 60) };
+    let smoke = gvt_rls::bench::smoke();
+    let quick = std::env::var("GVT_RLS_BENCH_QUICK").is_ok() || smoke;
+    let (k, n, reps) =
+        if smoke { (32, 300, 2) } else if quick { (64, 2000, 10) } else { (192, 16_000, 60) };
     let data = KernelFillingConfig::small().generate(k, n, 42);
     let a: Vec<f64> = (0..n).map(|i| ((i % 13) as f64) - 6.0).collect();
     println!("# perf ablation (k={k}, n={n}, min of {reps})\n");
@@ -38,6 +40,50 @@ fn main() {
         ).unwrap();
         let t = min_time(reps / 2, || { black_box(op.matvec(black_box(&a))); });
         println!("{}: {:.3} ms", kernel.name(), t * 1e3);
+    }
+
+    // Plan-fusion ablation (§Plan-Fusion): fused plan vs the isolated
+    // per-term path, in-process (equivalent to GVT_RLS_NO_FUSE=1).
+    println!("\n## plan fusion (fused vs per-term)\n");
+    for kernel in [
+        PairwiseKernel::Ranking,
+        PairwiseKernel::Mlpk,
+        PairwiseKernel::Symmetric,
+        PairwiseKernel::Poly2D,
+    ] {
+        let op = PairwiseLinOp::new(
+            kernel, data.d.clone(), data.t.clone(), data.pairs.clone(), data.pairs.clone(), GvtPolicy::Auto,
+        ).unwrap();
+        let mut out = vec![0.0; n];
+        let t_fused = min_time(reps.max(2) / 2, || { op.matvec_into(black_box(&a), black_box(&mut out)); });
+        let t_unfused = min_time(reps.max(2) / 2, || { op.matvec_into_unfused(black_box(&a), black_box(&mut out)); });
+        println!(
+            "{:<12} [{}]: fused {:.3} ms, unfused {:.3} ms, speedup {:.2}x",
+            kernel.name(), op.plan_summary(), t_fused * 1e3, t_unfused * 1e3, t_unfused / t_fused.max(1e-12)
+        );
+    }
+
+    // Multi-RHS: matmat over an 8-vector block vs 8 matvecs.
+    {
+        let b = 8;
+        let cols: Vec<Vec<f64>> =
+            (0..b).map(|s| (0..n).map(|i| (((i + s) % 11) as f64) - 5.0).collect()).collect();
+        let refs: Vec<&[f64]> = cols.iter().map(|v| v.as_slice()).collect();
+        let ab = gvt_rls::linalg::Mat::from_columns(&refs);
+        let op = PairwiseLinOp::new(
+            PairwiseKernel::Kronecker,
+            data.d.clone(), data.t.clone(), data.pairs.clone(), data.pairs.clone(), GvtPolicy::Auto,
+        ).unwrap();
+        let t_block = min_time(reps.max(2) / 2, || { black_box(op.matmat(black_box(&ab))); });
+        let t_loop = min_time(reps.max(2) / 2, || {
+            for c in &cols {
+                black_box(op.matvec(black_box(c)));
+            }
+        });
+        println!(
+            "\nmatmat B={b}: block {:.3} ms vs column-loop {:.3} ms ({:.2}x)",
+            t_block * 1e3, t_loop * 1e3, t_loop / t_block.max(1e-12)
+        );
     }
 
     // Cartesian: the paper's GVT formulation vs the Kashima (2009b)

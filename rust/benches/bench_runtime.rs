@@ -19,7 +19,7 @@ fn main() {
     };
     let cfg = BenchConfig::from_env();
     let mut suite = BenchSuite::new();
-    let quick = std::env::var("GVT_RLS_BENCH_QUICK").is_ok();
+    let quick = std::env::var("GVT_RLS_BENCH_QUICK").is_ok() || gvt_rls::bench::smoke();
 
     let m = if quick { 64 } else { 128 };
     let meta = reg.pick(m, m).expect("no artifact bucket").clone();

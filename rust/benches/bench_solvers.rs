@@ -16,8 +16,10 @@ use std::ops::ControlFlow;
 fn main() {
     let cfg = BenchConfig::from_env();
     let mut suite = BenchSuite::new();
-    let quick = std::env::var("GVT_RLS_BENCH_QUICK").is_ok();
-    let (k, n, iters) = if quick { (48, 1_500, 10) } else { (128, 8_000, 25) };
+    let smoke = gvt_rls::bench::smoke();
+    let quick = std::env::var("GVT_RLS_BENCH_QUICK").is_ok() || smoke;
+    let (k, n, iters) =
+        if smoke { (32, 400, 4) } else if quick { (48, 1_500, 10) } else { (128, 8_000, 25) };
     let data = KernelFillingConfig::small().generate(k, n, 42);
 
     println!("# bench_solvers — MINRES training cost (n = {n}, {iters} iterations)\n");
@@ -64,7 +66,11 @@ fn main() {
 
     // Figure 3/7 iterations panel: optimal iteration count per setting.
     println!("## iterations to optimal validation AUC by setting (Kronecker)\n");
-    let rcfg = RidgeConfig { max_iters: if quick { 30 } else { 100 }, patience: 10, ..Default::default() };
+    let rcfg = RidgeConfig {
+        max_iters: if smoke { 8 } else if quick { 30 } else { 100 },
+        patience: 10,
+        ..Default::default()
+    };
     for setting in 1..=4u8 {
         let split = data.split_setting(setting, 0.25, 7);
         let inner = split.train.split_setting(setting, 0.25, 8);

@@ -52,9 +52,18 @@ impl Default for BenchConfig {
 }
 
 impl BenchConfig {
-    /// Quick config for smoke runs (`GVT_RLS_BENCH_QUICK=1`).
+    /// Environment-driven config: `GVT_BENCH_SMOKE=1` → 1 warmup + 1
+    /// measured iteration (CI smoke execution, see scripts/verify.sh);
+    /// `GVT_RLS_BENCH_QUICK=1` → short budget for local iteration.
     pub fn from_env() -> Self {
-        if std::env::var("GVT_RLS_BENCH_QUICK").is_ok() {
+        if smoke() {
+            Self {
+                budget: Duration::ZERO,
+                warmup: 1,
+                max_iters: 1,
+                min_iters: 1,
+            }
+        } else if std::env::var("GVT_RLS_BENCH_QUICK").is_ok() {
             Self {
                 budget: Duration::from_millis(300),
                 warmup: 1,
@@ -65,6 +74,19 @@ impl BenchConfig {
             Self::default()
         }
     }
+}
+
+/// `GVT_BENCH_SMOKE=1` — benches run 1 warmup + 1 iteration on minimal
+/// problem sizes so scripts/verify.sh can *execute* (not just build) every
+/// `harness = false` bench binary without burning CI minutes.
+pub fn smoke() -> bool {
+    std::env::var_os("GVT_BENCH_SMOKE").is_some()
+}
+
+/// Are we in any reduced-size mode (smoke or quick)? Benches use this to
+/// pick their problem dimensions.
+pub fn reduced_size() -> bool {
+    smoke() || std::env::var_os("GVT_RLS_BENCH_QUICK").is_some()
 }
 
 /// Run one benchmark: call `f` repeatedly under the budget. `f` should
@@ -113,6 +135,23 @@ fn summarize(name: &str, samples: &[Duration]) -> BenchResult {
     }
 }
 
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 /// Pretty-print duration adaptively.
 pub fn fmt_duration(d: Duration) -> String {
     let s = d.as_secs_f64();
@@ -152,6 +191,46 @@ impl BenchSuite {
 
     pub fn results(&self) -> &[BenchResult] {
         &self.results
+    }
+
+    /// Serialize the suite to a JSON file (no serde offline — hand-rolled
+    /// emitter). Shape:
+    /// `{"meta": {...}, "results": [{"name", "iters", "mean_ms", ...}]}`.
+    /// `meta` carries free-form context (problem sizes, git describe, the
+    /// fused/unfused ablation tag) so perf trajectories stay
+    /// self-describing.
+    pub fn write_json(
+        &self,
+        path: impl AsRef<std::path::Path>,
+        meta: &[(&str, String)],
+    ) -> std::io::Result<()> {
+        let mut out = String::from("{\n  \"meta\": {");
+        for (i, (k, v)) in meta.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\n    \"{}\": \"{}\"", json_escape(k), json_escape(v)));
+        }
+        out.push_str("\n  },\n  \"results\": [");
+        for (i, r) in self.results.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\n    {{\"name\": \"{}\", \"iters\": {}, \"mean_ms\": {:.6}, \
+                 \"median_ms\": {:.6}, \"stddev_ms\": {:.6}, \"min_ms\": {:.6}, \
+                 \"max_ms\": {:.6}}}",
+                json_escape(&r.name),
+                r.iters,
+                r.mean.as_secs_f64() * 1e3,
+                r.median.as_secs_f64() * 1e3,
+                r.stddev.as_secs_f64() * 1e3,
+                r.min.as_secs_f64() * 1e3,
+                r.max.as_secs_f64() * 1e3,
+            ));
+        }
+        out.push_str("\n  ]\n}\n");
+        std::fs::write(path, out)
     }
 
     /// Markdown summary table.
@@ -204,6 +283,29 @@ mod tests {
         };
         s.run("noop", &cfg, || {});
         assert!(s.table().contains("noop"));
+    }
+
+    #[test]
+    fn write_json_roundtrips_through_parser() {
+        let mut s = BenchSuite::new();
+        let cfg = BenchConfig {
+            budget: Duration::from_millis(5),
+            warmup: 0,
+            max_iters: 2,
+            min_iters: 1,
+        };
+        s.run("kernel \"x\"", &cfg, || {});
+        let path = std::env::temp_dir().join("gvt_rls_bench_json_test.json");
+        s.write_json(&path, &[("n", "16000".to_string())]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = crate::runtime::json::Json::parse(&text).unwrap();
+        let results = parsed.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].get("name").unwrap().as_str().unwrap(), "kernel \"x\"");
+        assert!(results[0].get("mean_ms").unwrap().as_f64().unwrap() >= 0.0);
+        let meta = parsed.get("meta").unwrap();
+        assert_eq!(meta.get("n").unwrap().as_str().unwrap(), "16000");
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -7,7 +7,7 @@ use crate::data::{splits, PairDataset};
 use crate::error::Result;
 use crate::eval::auc;
 use crate::gvt::pairwise::PairwiseKernel;
-use crate::solvers::ridge::{PairwiseRidge, RidgeConfig};
+use crate::solvers::ridge::{PairwiseRidge, RidgeConfig, RidgeModel};
 
 /// One evaluated candidate.
 #[derive(Clone, Debug)]
@@ -21,6 +21,12 @@ pub struct Candidate {
 /// Select λ on an inner validation split (setting-aware), training each
 /// candidate to convergence (the Figure 3 "tuned λ" mode). Returns the
 /// best candidate and the full sweep for reporting.
+///
+/// The whole sweep shares one training operator
+/// ([`PairwiseRidge::fit_lambda_grid`]: the fused GVT plan and workspace
+/// are built once) and the validation predictions for **all** λ come from
+/// a single multi-RHS block product ([`RidgeModel::predict_batch`])
+/// instead of one operator build + mat-vec per candidate.
 pub fn select_lambda(
     train: &PairDataset,
     setting: u8,
@@ -32,17 +38,19 @@ pub fn select_lambda(
     let inner_split = splits::split_setting(train, setting, cfg.validation_fraction, seed);
     let (inner, validation) = (&inner_split.train, &inner_split.test);
     let val_labels = validation.binary_labels();
+    let models = PairwiseRidge::fit_lambda_grid(inner, kernel, cfg, lambdas)?;
     let mut sweep = Vec::new();
-    for &lambda in lambdas {
-        let c = RidgeConfig { lambda, ..cfg.clone() };
-        let model = PairwiseRidge::fit(inner, kernel, &c)?;
-        let preds = model.predict(&validation.pairs)?;
-        sweep.push(Candidate {
-            lambda,
-            kernel,
-            validation_auc: auc(&preds, &val_labels).unwrap_or(0.5),
-            iterations: model.iterations,
-        });
+    if !models.is_empty() {
+        let preds = RidgeModel::predict_batch(&models, &validation.pairs)?;
+        for (li, (model, &lambda)) in models.iter().zip(lambdas).enumerate() {
+            let col = preds.column(li);
+            sweep.push(Candidate {
+                lambda,
+                kernel,
+                validation_auc: auc(&col, &val_labels).unwrap_or(0.5),
+                iterations: model.iterations,
+            });
+        }
     }
     let best = sweep
         .iter()

@@ -8,6 +8,10 @@
 //! * [`terms`] — the operator algebra of Definition 1 / Theorem 2:
 //!   commutation `P` and unification `Q` act on samples as index plumbing,
 //!   so every pairwise kernel is a list of [`terms::KroneckerTerm`]s.
+//! * [`plan`] — compiled multi-term execution plans: stage-1/stage-2 work
+//!   shared across Kronecker terms, CSR-grouped stage 1, reusable
+//!   workspaces (zero allocation per solver iteration), and the
+//!   multi-RHS [`plan::gvt_matmat`] block product.
 //! * [`pairwise`] — Corollary 1: the nine pairwise kernels as term sums,
 //!   and [`pairwise::PairwiseLinOp`], the `K`-as-linear-operator used by
 //!   the iterative solvers.
@@ -18,10 +22,12 @@
 pub mod explicit;
 pub mod kashima;
 pub mod pairwise;
+pub mod plan;
 pub mod tensor;
 pub mod terms;
 pub mod vec_trick;
 
 pub use pairwise::{PairwiseKernel, PairwiseLinOp};
+pub use plan::{gvt_matmat, GvtPlan, GvtWorkspace};
 pub use terms::{Factor, IndexMap, KroneckerTerm};
 pub use vec_trick::{gvt_matvec, GvtPolicy};

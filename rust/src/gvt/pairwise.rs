@@ -22,12 +22,13 @@
 //!   paper's count in §6.4).
 
 use crate::error::{bail, Result};
+use crate::gvt::plan::{fusion_disabled, GvtPlan, GvtWorkspace};
 use crate::gvt::terms::{Factor, IndexMap, KroneckerTerm, TermContext};
 use crate::gvt::vec_trick::GvtPolicy;
 use crate::linalg::Mat;
 use crate::solvers::linear_op::LinOp;
 use crate::sparse::PairIndex;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use Factor::{DSq, Identity, Ones, TSq, D, T};
 use IndexMap::{DupDrug, DupTarget, Id, Swap};
@@ -183,8 +184,19 @@ pub struct PairwiseLinOp {
     cols: PairIndex,
     policy: GvtPolicy,
     /// Terms with their index transforms pre-applied (§Perf: applying
-    /// `P`/`Q` per mat-vec cloned full index vectors every iteration).
+    /// `P`/`Q` per mat-vec cloned full index vectors every iteration;
+    /// with `Arc`-backed [`PairIndex`] buffers these are O(1) views).
+    /// Kept alongside the plan for the unfused ablation path.
     terms: Vec<(KroneckerTerm, PairIndex, PairIndex)>,
+    /// Compiled fused execution plan (see [`crate::gvt::plan`]): stage-1
+    /// dedup across terms, accumulated stage-2 sweeps, grouped-CSR
+    /// stage 1, and the multi-RHS path.
+    plan: GvtPlan,
+    /// Reusable workspace threaded through `apply_into` — after warmup,
+    /// solver iterations perform zero heap allocations. Behind a `Mutex`
+    /// so the operator stays `Sync`; solvers apply sequentially, so the
+    /// lock is uncontended (~20 ns against a multi-ms mat-vec).
+    ws: Mutex<GvtWorkspace>,
 }
 
 impl PairwiseLinOp {
@@ -233,10 +245,11 @@ impl PairwiseLinOp {
         let needs_sq = kernel.needs_squares();
         let dsq = needs_sq.then(|| d.hadamard_square());
         let tsq = needs_sq.then(|| t.hadamard_square());
-        // Pre-apply the P/Q index transforms once (identical transforms
-        // share nothing here — at ≤10 terms the duplication is trivial,
-        // and each term owning its samples keeps the hot loop branch-free).
-        let terms = kernel
+        // Pre-apply the P/Q index transforms once. With Arc-backed
+        // PairIndex buffers each transform is an O(1) view, and identical
+        // transforms share buffers — which is exactly what the plan
+        // builder keys on to fuse stage-1/stage-2 work across terms.
+        let terms: Vec<(KroneckerTerm, PairIndex, PairIndex)> = kernel
             .terms()
             .into_iter()
             .map(|term| {
@@ -245,7 +258,26 @@ impl PairwiseLinOp {
                 (term, r, c)
             })
             .collect();
-        Ok(Self { kernel, d, t, dsq, tsq, rows, cols, policy, terms })
+        let ctx = TermContext {
+            d: d.as_ref(),
+            t: t.as_ref(),
+            dsq: dsq.as_ref(),
+            tsq: tsq.as_ref(),
+        };
+        let plan = GvtPlan::build(&terms, &ctx, policy, rows.len(), cols.len());
+        Ok(Self {
+            kernel,
+            d,
+            t,
+            dsq,
+            tsq,
+            rows,
+            cols,
+            policy,
+            terms,
+            plan,
+            ws: Mutex::new(GvtWorkspace::new()),
+        })
     }
 
     pub fn kernel(&self) -> PairwiseKernel {
@@ -275,8 +307,25 @@ impl PairwiseLinOp {
         }
     }
 
-    /// `out = Σ_terms coeff · GVT(term)` — the `O(nm + nq)` product.
+    /// `out = Σ_terms coeff · GVT(term)` — the `O(nm + nq)` product,
+    /// executed through the fused [`GvtPlan`] with the operator-owned
+    /// workspace (zero heap allocations after the first call).
+    /// `GVT_RLS_NO_FUSE=1` falls back to [`Self::matvec_into_unfused`].
     pub fn matvec_into(&self, a: &[f64], out: &mut [f64]) {
+        if fusion_disabled() {
+            self.matvec_into_unfused(a, out);
+            return;
+        }
+        let ctx = self.ctx();
+        let mut ws = self.ws.lock().expect("GVT workspace poisoned");
+        self.plan.execute(&ctx, a, out, &mut ws);
+    }
+
+    /// The pre-plan path: every term evaluated in isolation (own stage-1
+    /// pass, own stage-2 sweep, fresh intermediates). Kept for the §Perf
+    /// fusion ablation (`bench_perf_ablation`, `GVT_RLS_NO_FUSE=1`) and
+    /// as an independent implementation the fused path is tested against.
+    pub fn matvec_into_unfused(&self, a: &[f64], out: &mut [f64]) {
         assert_eq!(out.len(), self.rows.len());
         out.fill(0.0);
         let ctx = self.ctx();
@@ -290,6 +339,50 @@ impl PairwiseLinOp {
         let mut out = vec![0.0; self.rows.len()];
         self.matvec_into(a, &mut out);
         out
+    }
+
+    /// Multi-RHS product `P = K · AB` for a block `AB` of `B` coefficient
+    /// vectors (`n × B` row-major, see [`Mat::from_columns`]): the index
+    /// arrays are streamed once per stage for the whole block instead of
+    /// once per RHS. Used by ridge's multi-λ and k-fold CV prediction
+    /// paths.
+    pub fn matmat(&self, ab: &Mat) -> Mat {
+        let mut out = Mat::zeros(self.rows.len(), ab.cols());
+        self.matmat_into(ab, &mut out);
+        out
+    }
+
+    /// [`Self::matmat`] into a caller-provided block. Under
+    /// `GVT_RLS_NO_FUSE=1` this too avoids the plan (column loop over the
+    /// per-term path), so the ablation hatch covers every product the
+    /// operator performs, not just single-RHS mat-vecs.
+    pub fn matmat_into(&self, ab: &Mat, out: &mut Mat) {
+        if fusion_disabled() {
+            assert_eq!(ab.rows(), self.cols.len());
+            assert_eq!(out.shape(), (self.rows.len(), ab.cols()));
+            let mut col_out = vec![0.0; self.rows.len()];
+            for bb in 0..ab.cols() {
+                let col = ab.column(bb);
+                self.matvec_into_unfused(&col, &mut col_out);
+                for i in 0..self.rows.len() {
+                    out[(i, bb)] = col_out[i];
+                }
+            }
+            return;
+        }
+        let ctx = self.ctx();
+        let mut ws = self.ws.lock().expect("GVT workspace poisoned");
+        self.plan.execute_multi(&ctx, ab, out, &mut ws);
+    }
+
+    /// One-line fused-plan structure summary (benches log this).
+    pub fn plan_summary(&self) -> String {
+        self.plan.summary()
+    }
+
+    /// The compiled plan (tests assert on its fusion structure).
+    pub fn plan(&self) -> &GvtPlan {
+        &self.plan
     }
 
     /// Single kernel entry via the term decomposition (`O(terms)`), used
@@ -314,6 +407,10 @@ impl LinOp for PairwiseLinOp {
 
     fn apply_into(&self, x: &[f64], y: &mut [f64]) {
         self.matvec_into(x, y);
+    }
+
+    fn apply_block(&self, x: &Mat, y: &mut Mat) {
+        self.matmat_into(x, y);
     }
 }
 
@@ -400,4 +497,49 @@ mod tests {
             assert_eq!(PairwiseKernel::parse(k.name()), Some(k));
         }
     }
+
+    /// §Plan-Fusion: the compiled plan collapses the per-kernel term lists
+    /// to the analyzed pass counts (see rust/DESIGN.md §Plan-Fusion).
+    #[test]
+    fn fused_plan_structure_matches_analysis() {
+        let mut rng = Xoshiro256::seed_from(50);
+        let m = 6;
+        let d = Arc::new(gen::psd_kernel(&mut rng, m));
+        let s = gen::homogeneous_sample(&mut rng, 20, m);
+        let op = |k: PairwiseKernel| {
+            PairwiseLinOp::new(
+                k,
+                d.clone(),
+                d.clone(),
+                s.clone(),
+                s.clone(),
+                GvtPolicy::SparseLeft,
+            )
+            .unwrap()
+        };
+        // Ranking: 4 pooled terms → 2 pool+GEMV passes, nothing else.
+        let ranking = op(PairwiseKernel::Ranking);
+        assert_eq!(ranking.plan().pooled_count(), 2);
+        assert_eq!(ranking.plan().stage1_count(), 0);
+        assert_eq!(ranking.plan().misc_count(), 0);
+        // MLPK: 10 terms → 2 pooled + 4 stage-1 passes + 3 stage-2 sweeps.
+        let mlpk = op(PairwiseKernel::Mlpk);
+        assert_eq!(mlpk.plan().pooled_count(), 2);
+        assert_eq!(mlpk.plan().stage1_count(), 4);
+        assert_eq!(mlpk.plan().stage2_count(), 3);
+        // Symmetric/AntiSymmetric: the two terms share one stage-1 pass.
+        for k in [PairwiseKernel::Symmetric, PairwiseKernel::AntiSymmetric] {
+            let o = op(k);
+            assert_eq!(o.plan().stage1_count(), 1, "{k:?}");
+            assert_eq!(o.plan().stage2_count(), 2, "{k:?}");
+        }
+        // Kronecker: single term, nothing to fuse.
+        let kron = op(PairwiseKernel::Kronecker);
+        assert_eq!(kron.plan().stage1_count(), 1);
+        assert_eq!(kron.plan().stage2_count(), 1);
+    }
+
+    // Fused-vs-unfused equivalence (all kernels, homogeneous and
+    // heterogeneous, plus the entry oracle and matmat-vs-column-loop) is
+    // property-tested in tests/plan_fusion.rs.
 }

@@ -1,0 +1,1135 @@
+//! Compiled multi-term GVT execution plans.
+//!
+//! A pairwise kernel is a sum of Kronecker terms (Corollary 1), and §6.4
+//! shows the per-kernel mat-vec cost is essentially proportional to the
+//! term count — MLPK is slowest *only* because it has 10 summands. But the
+//! terms of one kernel are far from independent: they are built from the
+//! same two index buffers (`P`/`Q` only permute or duplicate streams), so
+//! much of the per-term work is byte-identical across terms. This module
+//! compiles the term list into a [`GvtPlan`] **once at operator
+//! construction** and amortizes three things across the thousands of
+//! CG/MINRES iterations of a solve:
+//!
+//! 1. **Stage-1 dedup.** Terms whose (gather matrix, column sample)
+//!    coincide — witnessed by shared `Arc` index buffers, see
+//!    [`PairIndex::same_view`] — share one stage-1 pass producing one `S`.
+//!    Terms whose (stage-2 matrix, row sample) coincide accumulate their
+//!    coefficient-weighted `S` matrices (`O(q·m)` each) and run **one**
+//!    row-dot sweep (`O(n̄·m)`) instead of one per term. Pooled
+//!    (`dense ⊗ 1`) terms fuse the same way: one pool + GEMV per distinct
+//!    (matrix, pool stream). Ranking's 4 pooled terms collapse to 2
+//!    pool+GEMV passes; MLPK's 10 terms to 4 stage-1 passes + 3 row-dot
+//!    sweeps + 2 pooled GEMVs.
+//! 2. **CSR-grouped stage 1.** The streamed stage-1 kernel performs 4
+//!    random read-modify-writes per pair (`S[·, scatter[j]] +=`). The
+//!    grouped kernel walks the cached [`crate::sparse::GroupBy`] of the
+//!    scatter stream instead, accumulating each `S` column in registers
+//!    and storing it once — the random RMWs become one random gather of
+//!    `a[order[k]]`, and `S` needs no zeroing because every column is
+//!    fully written. [`GvtPolicy::Auto`]'s cost model picks grouped vs
+//!    streamed per stage-1 unit (grouped when the average column
+//!    occupancy `n / s_cols ≥ 1`); `GVT_RLS_STAGE1_GROUPED=0|1` forces it.
+//! 3. **Workspace reuse.** All intermediates (`S` matrices, accumulators,
+//!    pool buffers, scratch) live in a [`GvtWorkspace`] that the owning
+//!    operator threads through `LinOp::apply_into` — after the first
+//!    (warmup) application, solver iterations perform zero heap
+//!    allocations.
+//!
+//! The plan also executes **multi-RHS blocks** ([`GvtPlan::execute_multi`]
+//! / [`gvt_matmat`]): the index arrays are streamed once for a block of
+//! `B` coefficient vectors (the innermost dimension of `S` becomes `B`),
+//! which is what ridge's multi-λ and k-fold CV prediction paths use.
+//!
+//! `GVT_RLS_NO_FUSE=1` disables plan execution in
+//! [`crate::gvt::pairwise::PairwiseLinOp`] (falling back to the isolated
+//! per-term path) — the §Perf ablation hatch, mirroring
+//! `GVT_RLS_STAGE1_1ROW`.
+
+use crate::gvt::terms::{
+    accumulate_rowdot, Factor, IndexMap, KroneckerTerm, SlotMatrix, TermContext,
+};
+use crate::gvt::vec_trick::{
+    choose_policy, scatter_w_grouped, stage1_scatter, stage1_single_row, GvtPolicy,
+};
+use crate::linalg::{par, vecops, Mat};
+use crate::sparse::{GroupBy, PairIndex};
+use std::sync::{Arc, OnceLock};
+
+/// `GVT_RLS_NO_FUSE=1` — run terms unfused (the pre-plan path); `0` or
+/// unset keeps fusion on (same convention as `GVT_RLS_STAGE1_GROUPED`).
+/// Read once and cached; the check sits on the per-mat-vec path.
+pub(crate) fn fusion_disabled() -> bool {
+    static CACHED: OnceLock<bool> = OnceLock::new();
+    *CACHED.get_or_init(|| match std::env::var("GVT_RLS_NO_FUSE") {
+        Ok(v) => !v.is_empty() && v != "0",
+        Err(_) => false,
+    })
+}
+
+/// `GVT_RLS_STAGE1_GROUPED=0|1` — force the stage-1 kernel choice for all
+/// units, overriding the occupancy heuristic (A/B ablation hatch).
+fn stage1_grouped_override() -> Option<bool> {
+    static CACHED: OnceLock<Option<bool>> = OnceLock::new();
+    *CACHED.get_or_init(|| match std::env::var("GVT_RLS_STAGE1_GROUPED") {
+        Ok(v) if v == "0" => Some(false),
+        Ok(v) if v == "1" => Some(true),
+        _ => None,
+    })
+}
+
+/// Resolve a factor that the plan classified as dense.
+fn dense_mat<'a>(ctx: &TermContext<'a>, f: Factor) -> &'a Mat {
+    match ctx.resolve(f) {
+        SlotMatrix::Dense(m) => m,
+        _ => unreachable!("plan unit references a non-dense factor"),
+    }
+}
+
+fn is_dense(f: Factor) -> bool {
+    matches!(f, Factor::D | Factor::T | Factor::DSq | Factor::TSq)
+}
+
+/// Shape-stable reuse for a matrix buffer: reallocates only when the
+/// requested shape differs from the current one. Workspace buffers are
+/// therefore kept **per plan unit** (each unit's shapes are fixed), so
+/// after the first execution at a given shape no reallocation happens.
+fn ensure_mat(m: &mut Mat, rows: usize, cols: usize) {
+    if m.shape() != (rows, cols) {
+        *m = Mat::zeros(rows, cols);
+    }
+}
+
+/// Index into a `Vec<Mat>` of per-unit buffers, growing it on first use.
+fn unit_mat(buf: &mut Vec<Mat>, idx: usize) -> &mut Mat {
+    while buf.len() <= idx {
+        buf.push(Mat::zeros(0, 0));
+    }
+    &mut buf[idx]
+}
+
+/// Zeroed scratch of `len` without shrinking capacity.
+fn zeroed(buf: &mut Vec<f64>, len: usize) {
+    buf.clear();
+    buf.resize(len, 0.0);
+}
+
+/// Precomputed CSR grouping for one stage-1 unit: pair positions grouped
+/// by the scatter stream, plus the gather stream permuted into group
+/// order (so the inner loop reads two sequential arrays).
+struct GroupedStage1 {
+    grp: Arc<GroupBy>,
+    gather_keys: Vec<u32>,
+}
+
+/// One stage-1 pass producing an `S` intermediate shared by every term
+/// whose (gather matrix, column sample) coincide.
+struct Stage1Unit {
+    /// Matrix gathered from in stage 1 (the right factor under
+    /// `SparseLeft`/`Dense`, the left factor under `SparseRight`).
+    mat: Factor,
+    /// Transformed column sample of the fused terms.
+    cols: PairIndex,
+    s_rows: usize,
+    s_cols: usize,
+    /// `Some` → CSR-grouped kernel; `None` → streamed scatter (or the
+    /// GEMM formulation when the plan mode is `Dense`).
+    grouped: Option<GroupedStage1>,
+}
+
+/// One stage-2 row-dot sweep consuming one or more coefficient-weighted
+/// `S` intermediates that share (lhs matrix, row sample).
+struct Stage2Unit {
+    /// Row-dot matrix (left factor under `SparseLeft`/`Dense`, right
+    /// factor under `SparseRight`).
+    lhs: Factor,
+    /// Transformed row sample of the fused terms.
+    rows: PairIndex,
+    s_rows: usize,
+    s_cols: usize,
+    /// `(coefficient, stage-1 unit index)` per fused term.
+    contributions: Vec<(f64, usize)>,
+}
+
+/// One pool + GEMV pass shared by every `dense ⊗ 1` / `1 ⊗ dense` term
+/// with the same (matrix, pool stream).
+struct PooledUnit {
+    mat: Factor,
+    cols: PairIndex,
+    /// Pool over the column sample's target stream (else drug stream).
+    pool_targets: bool,
+    /// `(coefficient, row sample, gather-the-target-stream)` per term.
+    gathers: Vec<(f64, PairIndex, bool)>,
+}
+
+/// A term executed by the per-term fast path (`Identity` factors,
+/// `1 ⊗ 1`) with plan-owned scratch; these are `O(n + n̄)`-ish and gain
+/// nothing from cross-term fusion.
+struct MiscTerm {
+    term: KroneckerTerm,
+    rows: PairIndex,
+    cols: PairIndex,
+}
+
+/// Reusable scratch for plan execution. All buffers grow on first use
+/// and are reused verbatim afterwards — repeated
+/// [`GvtPlan::execute`] calls at fixed shapes perform no heap allocation.
+pub struct GvtWorkspace {
+    /// One `S` intermediate per stage-1 unit.
+    s: Vec<Mat>,
+    /// One accumulation buffer per multi-contribution stage-2 unit.
+    s_acc: Vec<Mat>,
+    /// Dense-mode scattered coefficient matrix `W`, per stage-1 unit
+    /// (units can have different column domains, e.g. MLPK's transformed
+    /// samples — one shared buffer would reallocate every call).
+    w: Vec<Mat>,
+    /// Pool + GEMV scratch (`w` then `v`, contiguous).
+    pool: Vec<f64>,
+    /// Scratch for misc terms (see `KroneckerTerm::matvec_transformed_with`).
+    scratch: Vec<f64>,
+    /// Multi-RHS `S` buffers, layout `[r][d][b]` (RHS innermost).
+    sm: Vec<Vec<f64>>,
+    /// Multi-RHS stage-2 accumulation buffers.
+    sm_acc: Vec<Vec<f64>>,
+    /// Multi-RHS pooled scratch (`W`, `V` blocks), per pooled unit.
+    pw: Vec<Mat>,
+    pv: Vec<Mat>,
+    /// Per-column scratch for multi-RHS misc/fallback execution.
+    col_in: Vec<f64>,
+    col_out: Vec<f64>,
+}
+
+impl GvtWorkspace {
+    pub fn new() -> Self {
+        Self {
+            s: Vec::new(),
+            s_acc: Vec::new(),
+            w: Vec::new(),
+            pool: Vec::new(),
+            scratch: Vec::new(),
+            sm: Vec::new(),
+            sm_acc: Vec::new(),
+            pw: Vec::new(),
+            pv: Vec::new(),
+            col_in: Vec::new(),
+            col_out: Vec::new(),
+        }
+    }
+}
+
+impl Default for GvtWorkspace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The compiled execution plan for a list of Kronecker terms over fixed
+/// row/column samples. Built once by
+/// [`crate::gvt::pairwise::PairwiseLinOp::new`]; see the module docs for
+/// what is fused.
+pub struct GvtPlan {
+    /// Concrete factorization for the dense×dense terms (never `Auto`).
+    mode: GvtPolicy,
+    pooled: Vec<PooledUnit>,
+    stage1: Vec<Stage1Unit>,
+    stage2: Vec<Stage2Unit>,
+    misc: Vec<MiscTerm>,
+    n_out: usize,
+    n_in: usize,
+}
+
+impl GvtPlan {
+    /// Analyze `terms` (each with its transformed row/column samples) and
+    /// build the fused plan. `policy` selects the factorization for the
+    /// dense×dense terms: `Auto` consults the shared cost model
+    /// ([`choose_policy`]); forced policies are honored as-is.
+    pub fn build(
+        terms: &[(KroneckerTerm, PairIndex, PairIndex)],
+        ctx: &TermContext<'_>,
+        policy: GvtPolicy,
+        n_out: usize,
+        n_in: usize,
+    ) -> GvtPlan {
+        let mut pooled: Vec<PooledUnit> = Vec::new();
+        let mut misc: Vec<MiscTerm> = Vec::new();
+        let mut dense_terms: Vec<(KroneckerTerm, PairIndex, PairIndex)> = Vec::new();
+
+        for (term, rows_t, cols_t) in terms {
+            match (is_dense(term.left), is_dense(term.right)) {
+                (true, true) => dense_terms.push((*term, rows_t.clone(), cols_t.clone())),
+                (true, false) if term.right == Factor::Ones => {
+                    // dense ⊗ 1: pool over the col drug stream, GEMV with
+                    // the left matrix, gather by the row drug stream.
+                    Self::add_pooled(
+                        &mut pooled, term.left, cols_t, false, term.coeff, rows_t, false,
+                    );
+                }
+                (false, true) if term.left == Factor::Ones => {
+                    // 1 ⊗ dense: the mirror image on target streams.
+                    Self::add_pooled(
+                        &mut pooled, term.right, cols_t, true, term.coeff, rows_t, true,
+                    );
+                }
+                _ => misc.push(MiscTerm {
+                    term: *term,
+                    rows: rows_t.clone(),
+                    cols: cols_t.clone(),
+                }),
+            }
+        }
+
+        // Factorization for the dense×dense terms: one mode per plan (the
+        // terms of a kernel share their shapes, so one cost evaluation is
+        // representative).
+        let mode = match (policy, dense_terms.first()) {
+            (GvtPolicy::Auto, Some((term, rows_t, cols_t))) => choose_policy(
+                cols_t.len(),
+                rows_t.len(),
+                dense_mat(ctx, term.left).shape(),
+                dense_mat(ctx, term.right).shape(),
+            ),
+            (GvtPolicy::Auto, None) => GvtPolicy::SparseLeft,
+            (forced, _) => forced,
+        };
+
+        let mut stage1: Vec<Stage1Unit> = Vec::new();
+        let mut stage2: Vec<Stage2Unit> = Vec::new();
+        for (term, rows_t, cols_t) in &dense_terms {
+            // Under SparseRight the roles of the two factors swap: stage 1
+            // gathers from the left matrix (scattering by target), stage 2
+            // row-dots the right matrix (indexing rows by target stream).
+            let (g_mat, l_mat) = match mode {
+                GvtPolicy::SparseRight => (term.left, term.right),
+                _ => (term.right, term.left),
+            };
+            let s_rows = dense_mat(ctx, g_mat).rows();
+            let s_cols = dense_mat(ctx, l_mat).cols();
+
+            // Stage 1: share units whose (matrix, column sample) coincide.
+            let existing = stage1.iter().position(|u| {
+                u.mat == g_mat
+                    && u.s_rows == s_rows
+                    && u.s_cols == s_cols
+                    && u.cols.same_view(cols_t)
+            });
+            let s1 = match existing {
+                Some(i) => i,
+                None => {
+                    let grouped = if mode == GvtPolicy::Dense {
+                        None
+                    } else {
+                        let want = stage1_grouped_override()
+                            .unwrap_or(cols_t.len() >= s_cols && s_cols > 0);
+                        want.then(|| {
+                            // Group by the scatter stream; permute the
+                            // gather stream into group order.
+                            let (grp, gather) = match mode {
+                                GvtPolicy::SparseRight => {
+                                    (cols_t.by_target_arc(), cols_t.drugs())
+                                }
+                                _ => (cols_t.by_drug_arc(), cols_t.targets()),
+                            };
+                            let gather_keys = grp
+                                .positions()
+                                .iter()
+                                .map(|&p| gather[p as usize])
+                                .collect();
+                            GroupedStage1 { grp, gather_keys }
+                        })
+                    };
+                    stage1.push(Stage1Unit {
+                        mat: g_mat,
+                        cols: cols_t.clone(),
+                        s_rows,
+                        s_cols,
+                        grouped,
+                    });
+                    stage1.len() - 1
+                }
+            };
+
+            // Stage 2: merge terms whose (matrix, row sample, S shape)
+            // coincide — their weighted S's accumulate before one sweep.
+            match stage2.iter_mut().find(|u| {
+                u.lhs == l_mat
+                    && u.s_rows == s_rows
+                    && u.s_cols == s_cols
+                    && u.rows.same_view(rows_t)
+            }) {
+                Some(u) => u.contributions.push((term.coeff, s1)),
+                None => stage2.push(Stage2Unit {
+                    lhs: l_mat,
+                    rows: rows_t.clone(),
+                    s_rows,
+                    s_cols,
+                    contributions: vec![(term.coeff, s1)],
+                }),
+            }
+        }
+
+        GvtPlan { mode, pooled, stage1, stage2, misc, n_out, n_in }
+    }
+
+    fn add_pooled(
+        pooled: &mut Vec<PooledUnit>,
+        mat: Factor,
+        cols_t: &PairIndex,
+        pool_targets: bool,
+        coeff: f64,
+        rows_t: &PairIndex,
+        gather_targets: bool,
+    ) {
+        let key = if pool_targets { cols_t.targets_key() } else { cols_t.drugs_key() };
+        let unit = pooled.iter_mut().find(|u| {
+            u.mat == mat
+                && u.pool_targets == pool_targets
+                && (if u.pool_targets { u.cols.targets_key() } else { u.cols.drugs_key() })
+                    == key
+        });
+        match unit {
+            Some(u) => u.gathers.push((coeff, rows_t.clone(), gather_targets)),
+            None => pooled.push(PooledUnit {
+                mat,
+                cols: cols_t.clone(),
+                pool_targets,
+                gathers: vec![(coeff, rows_t.clone(), gather_targets)],
+            }),
+        }
+    }
+
+    /// Number of stage-1 passes over the column sample (vs one per
+    /// dense×dense term unfused).
+    pub fn stage1_count(&self) -> usize {
+        self.stage1.len()
+    }
+
+    /// Number of stage-2 row-dot sweeps (vs one per dense×dense term).
+    pub fn stage2_count(&self) -> usize {
+        self.stage2.len()
+    }
+
+    /// Number of pool + GEMV passes (vs one per `dense ⊗ 1` term).
+    pub fn pooled_count(&self) -> usize {
+        self.pooled.len()
+    }
+
+    /// Terms on the per-term fast path (not worth fusing).
+    pub fn misc_count(&self) -> usize {
+        self.misc.len()
+    }
+
+    /// One-line structure summary (benches and DESIGN.md record this).
+    pub fn summary(&self) -> String {
+        format!(
+            "mode={:?} pooled={} stage1={} stage2={} misc={}",
+            self.mode,
+            self.pooled.len(),
+            self.stage1.len(),
+            self.stage2.len(),
+            self.misc.len()
+        )
+    }
+
+    /// `out = Σ_terms coeff · GVT(term) · a`, fused. `out` is fully
+    /// overwritten; `ws` provides all intermediates (allocation-free
+    /// after the first call at these shapes).
+    pub fn execute(
+        &self,
+        ctx: &TermContext<'_>,
+        a: &[f64],
+        out: &mut [f64],
+        ws: &mut GvtWorkspace,
+    ) {
+        assert_eq!(a.len(), self.n_in, "plan: coefficient length mismatch");
+        assert_eq!(out.len(), self.n_out, "plan: output length mismatch");
+        out.fill(0.0);
+
+        for unit in &self.pooled {
+            self.exec_pooled(unit, ctx, a, out, ws);
+        }
+
+        while ws.s.len() < self.stage1.len() {
+            ws.s.push(Mat::zeros(0, 0));
+        }
+        for (k, unit) in self.stage1.iter().enumerate() {
+            let w = unit_mat(&mut ws.w, k);
+            self.exec_stage1(unit, ctx, a, &mut ws.s[k], w);
+        }
+
+        while ws.s_acc.len() < self.stage2.len() {
+            ws.s_acc.push(Mat::zeros(0, 0));
+        }
+        for (idx, unit) in self.stage2.iter().enumerate() {
+            let lhs = dense_mat(ctx, unit.lhs);
+            let (li, ri) = match self.mode {
+                GvtPolicy::SparseRight => (unit.rows.targets(), unit.rows.drugs()),
+                _ => (unit.rows.drugs(), unit.rows.targets()),
+            };
+            if unit.contributions.len() == 1 {
+                let (c, k) = unit.contributions[0];
+                accumulate_rowdot(lhs, ws.s[k].as_slice(), unit.s_cols, li, ri, c, out);
+            } else {
+                let acc = &mut ws.s_acc[idx];
+                ensure_mat(acc, unit.s_rows, unit.s_cols);
+                let (c0, k0) = unit.contributions[0];
+                vecops::scale_into(acc.as_mut_slice(), ws.s[k0].as_slice(), c0);
+                for &(c, k) in &unit.contributions[1..] {
+                    vecops::axpy(c, ws.s[k].as_slice(), acc.as_mut_slice());
+                }
+                accumulate_rowdot(lhs, acc.as_slice(), unit.s_cols, li, ri, 1.0, out);
+            }
+        }
+
+        for mt in &self.misc {
+            mt.term.matvec_transformed_with(
+                ctx,
+                &mt.rows,
+                &mt.cols,
+                a,
+                self.mode,
+                out,
+                &mut ws.scratch,
+            );
+        }
+    }
+
+    fn exec_pooled(
+        &self,
+        unit: &PooledUnit,
+        ctx: &TermContext<'_>,
+        a: &[f64],
+        out: &mut [f64],
+        ws: &mut GvtWorkspace,
+    ) {
+        let mat = dense_mat(ctx, unit.mat);
+        let (mr, mc) = mat.shape();
+        zeroed(&mut ws.pool, mc + mr);
+        let (w, v) = ws.pool.split_at_mut(mc);
+        let stream =
+            if unit.pool_targets { unit.cols.targets() } else { unit.cols.drugs() };
+        for (j, &sj) in stream.iter().enumerate() {
+            w[sj as usize] += a[j];
+        }
+        mat.matvec_into(w, v);
+        for (c, rows, gather_targets) in &unit.gathers {
+            let g = if *gather_targets { rows.targets() } else { rows.drugs() };
+            for (i, o) in out.iter_mut().enumerate() {
+                *o += c * v[g[i] as usize];
+            }
+        }
+    }
+
+    fn exec_stage1(
+        &self,
+        unit: &Stage1Unit,
+        ctx: &TermContext<'_>,
+        a: &[f64],
+        s: &mut Mat,
+        w: &mut Mat,
+    ) {
+        let mat = dense_mat(ctx, unit.mat);
+        ensure_mat(s, unit.s_rows, unit.s_cols);
+        if unit.s_rows == 0 || unit.s_cols == 0 {
+            return;
+        }
+        let s_cols = unit.s_cols;
+        match (&unit.grouped, self.mode) {
+            (_, GvtPolicy::Dense) => {
+                // Roth formulation: scatter W (threaded via the target
+                // grouping), then one GEMM.
+                ensure_mat(w, unit.cols.q(), s_cols);
+                w.as_mut_slice().fill(0.0);
+                scatter_w_grouped(w, &unit.cols, a);
+                mat.matmul_into(w, s);
+            }
+            (Some(g), _) => {
+                let offsets = g.grp.offsets();
+                let order = g.grp.positions();
+                let gather_keys = &g.gather_keys[..];
+                let sdata = s.as_mut_slice();
+                par::parallel_fill_rows(sdata, s_cols, 4 * s_cols, |start, _end, chunk| {
+                    stage1_grouped(
+                        mat,
+                        start / s_cols,
+                        chunk,
+                        s_cols,
+                        offsets,
+                        order,
+                        gather_keys,
+                        a,
+                    );
+                });
+            }
+            (None, _) => {
+                let (scatter, gather) = match self.mode {
+                    GvtPolicy::SparseRight => (unit.cols.targets(), unit.cols.drugs()),
+                    _ => (unit.cols.drugs(), unit.cols.targets()),
+                };
+                let sdata = s.as_mut_slice();
+                sdata.fill(0.0);
+                par::parallel_fill_rows(sdata, s_cols, 4 * s_cols, |start, _end, chunk| {
+                    stage1_scatter(mat, start / s_cols, chunk, s_cols, scatter, gather, a);
+                });
+            }
+        }
+    }
+
+    /// Multi-RHS execution: `out = Σ_terms coeff · GVT(term) · ab`, where
+    /// `ab` is `n × B` row-major (row `j` holds pair `j`'s coefficient in
+    /// every RHS) and `out` is `n̄ × B`. The index arrays are streamed once
+    /// per stage for the whole block; `B` plays the register-reuse role
+    /// the 4-row blocking plays in the single-RHS kernels.
+    pub fn execute_multi(
+        &self,
+        ctx: &TermContext<'_>,
+        ab: &Mat,
+        out: &mut Mat,
+        ws: &mut GvtWorkspace,
+    ) {
+        assert_eq!(ab.rows(), self.n_in, "plan: coefficient block rows mismatch");
+        assert_eq!(
+            out.shape(),
+            (self.n_out, ab.cols()),
+            "plan: output block shape mismatch"
+        );
+        let b = ab.cols();
+        out.as_mut_slice().fill(0.0);
+        if b == 0 {
+            return;
+        }
+        if self.mode == GvtPolicy::Dense && !self.stage1.is_empty() {
+            // The GEMM formulation gains nothing from RHS blocking over a
+            // column loop (W itself would need a third axis); fall back.
+            self.execute_multi_by_columns(ctx, ab, out, ws);
+            return;
+        }
+
+        for (pi, unit) in self.pooled.iter().enumerate() {
+            self.exec_pooled_multi(pi, unit, ctx, ab, out, ws);
+        }
+
+        while ws.sm.len() < self.stage1.len() {
+            ws.sm.push(Vec::new());
+        }
+        for (k, unit) in self.stage1.iter().enumerate() {
+            let mut sm = std::mem::take(&mut ws.sm[k]);
+            self.exec_stage1_multi(unit, ctx, ab, &mut sm);
+            ws.sm[k] = sm;
+        }
+
+        while ws.sm_acc.len() < self.stage2.len() {
+            ws.sm_acc.push(Vec::new());
+        }
+        for (idx, unit) in self.stage2.iter().enumerate() {
+            let lhs = dense_mat(ctx, unit.lhs);
+            let (li, ri) = match self.mode {
+                GvtPolicy::SparseRight => (unit.rows.targets(), unit.rows.drugs()),
+                _ => (unit.rows.drugs(), unit.rows.targets()),
+            };
+            if unit.contributions.len() == 1 {
+                let (c, k) = unit.contributions[0];
+                stage2_rowdot_multi(lhs, &ws.sm[k], unit.s_cols, b, li, ri, c, out);
+            } else {
+                let len = unit.s_rows * unit.s_cols * b;
+                let acc = &mut ws.sm_acc[idx];
+                zeroed(acc, len);
+                let (c0, k0) = unit.contributions[0];
+                vecops::scale_into(acc, &ws.sm[k0][..len], c0);
+                for &(c, k) in &unit.contributions[1..] {
+                    vecops::axpy(c, &ws.sm[k][..len], acc);
+                }
+                stage2_rowdot_multi(lhs, acc, unit.s_cols, b, li, ri, 1.0, out);
+            }
+        }
+
+        if !self.misc.is_empty() {
+            self.exec_misc_multi_by_columns(ctx, ab, out, ws);
+        }
+    }
+
+    /// Column-loop fallback over the whole plan (Dense-mode blocks).
+    fn execute_multi_by_columns(
+        &self,
+        ctx: &TermContext<'_>,
+        ab: &Mat,
+        out: &mut Mat,
+        ws: &mut GvtWorkspace,
+    ) {
+        let b = ab.cols();
+        let mut col_in = std::mem::take(&mut ws.col_in);
+        let mut col_out = std::mem::take(&mut ws.col_out);
+        zeroed(&mut col_in, self.n_in);
+        zeroed(&mut col_out, self.n_out);
+        for bb in 0..b {
+            for j in 0..self.n_in {
+                col_in[j] = ab[(j, bb)];
+            }
+            self.execute(ctx, &col_in, &mut col_out, ws);
+            for i in 0..self.n_out {
+                out[(i, bb)] += col_out[i];
+            }
+        }
+        ws.col_in = col_in;
+        ws.col_out = col_out;
+    }
+
+    /// Misc terms under multi-RHS: per-column with reused scratch (these
+    /// paths are `O(n + n̄)`-ish; blocking would not pay for itself).
+    fn exec_misc_multi_by_columns(
+        &self,
+        ctx: &TermContext<'_>,
+        ab: &Mat,
+        out: &mut Mat,
+        ws: &mut GvtWorkspace,
+    ) {
+        let b = ab.cols();
+        let mut col_in = std::mem::take(&mut ws.col_in);
+        let mut col_out = std::mem::take(&mut ws.col_out);
+        zeroed(&mut col_in, self.n_in);
+        for bb in 0..b {
+            for j in 0..self.n_in {
+                col_in[j] = ab[(j, bb)];
+            }
+            zeroed(&mut col_out, self.n_out);
+            for mt in &self.misc {
+                mt.term.matvec_transformed_with(
+                    ctx,
+                    &mt.rows,
+                    &mt.cols,
+                    &col_in,
+                    self.mode,
+                    &mut col_out,
+                    &mut ws.scratch,
+                );
+            }
+            for i in 0..self.n_out {
+                out[(i, bb)] += col_out[i];
+            }
+        }
+        ws.col_in = col_in;
+        ws.col_out = col_out;
+    }
+
+    fn exec_pooled_multi(
+        &self,
+        pi: usize,
+        unit: &PooledUnit,
+        ctx: &TermContext<'_>,
+        ab: &Mat,
+        out: &mut Mat,
+        ws: &mut GvtWorkspace,
+    ) {
+        let mat = dense_mat(ctx, unit.mat);
+        let (mr, mc) = mat.shape();
+        let b = ab.cols();
+        let pw = unit_mat(&mut ws.pw, pi);
+        ensure_mat(pw, mc, b);
+        pw.as_mut_slice().fill(0.0);
+        let stream =
+            if unit.pool_targets { unit.cols.targets() } else { unit.cols.drugs() };
+        for (j, &sj) in stream.iter().enumerate() {
+            vecops::axpy(1.0, ab.row(j), pw.row_mut(sj as usize));
+        }
+        let pv = unit_mat(&mut ws.pv, pi);
+        ensure_mat(pv, mr, b);
+        mat.matmul_into(pw, pv);
+        for (c, rows, gather_targets) in &unit.gathers {
+            let g = if *gather_targets { rows.targets() } else { rows.drugs() };
+            for i in 0..self.n_out {
+                vecops::axpy(*c, pv.row(g[i] as usize), out.row_mut(i));
+            }
+        }
+    }
+
+    fn exec_stage1_multi(
+        &self,
+        unit: &Stage1Unit,
+        ctx: &TermContext<'_>,
+        ab: &Mat,
+        sm: &mut Vec<f64>,
+    ) {
+        let mat = dense_mat(ctx, unit.mat);
+        let b = ab.cols();
+        let s_cols = unit.s_cols;
+        zeroed(sm, unit.s_rows * s_cols * b);
+        if unit.s_rows == 0 || s_cols == 0 || b == 0 {
+            return;
+        }
+        let abdata = ab.as_slice();
+        let row_len = s_cols * b;
+        match &unit.grouped {
+            Some(g) => {
+                let offsets = g.grp.offsets();
+                let order = g.grp.positions();
+                let gather_keys = &g.gather_keys[..];
+                par::parallel_fill_rows(&mut sm[..], row_len, 2 * row_len, |start, _end, chunk| {
+                    let r0 = start / row_len;
+                    let rows_here = chunk.len() / row_len;
+                    for r in 0..rows_here {
+                        let mrow = mat.row(r0 + r);
+                        let srow = &mut chunk[r * row_len..(r + 1) * row_len];
+                        for d in 0..s_cols {
+                            let cell = &mut srow[d * b..(d + 1) * b];
+                            let lo = offsets[d] as usize;
+                            let hi = offsets[d + 1] as usize;
+                            for k in lo..hi {
+                                let mv = mrow[gather_keys[k] as usize];
+                                let j = order[k] as usize;
+                                let arow = &abdata[j * b..(j + 1) * b];
+                                for (cb, ab_j) in cell.iter_mut().zip(arow) {
+                                    *cb += mv * ab_j;
+                                }
+                            }
+                        }
+                    }
+                });
+            }
+            None => {
+                let (scatter, gather) = match self.mode {
+                    GvtPolicy::SparseRight => (unit.cols.targets(), unit.cols.drugs()),
+                    _ => (unit.cols.drugs(), unit.cols.targets()),
+                };
+                par::parallel_fill_rows(&mut sm[..], row_len, 2 * row_len, |start, _end, chunk| {
+                    let r0 = start / row_len;
+                    let rows_here = chunk.len() / row_len;
+                    for r in 0..rows_here {
+                        let mrow = mat.row(r0 + r);
+                        let srow = &mut chunk[r * row_len..(r + 1) * row_len];
+                        for j in 0..scatter.len() {
+                            let mv = mrow[gather[j] as usize];
+                            let dst = scatter[j] as usize;
+                            let cell = &mut srow[dst * b..(dst + 1) * b];
+                            let arow = &abdata[j * b..(j + 1) * b];
+                            for (cb, ab_j) in cell.iter_mut().zip(arow) {
+                                *cb += mv * ab_j;
+                            }
+                        }
+                    }
+                });
+            }
+        }
+    }
+}
+
+/// Grouped stage-1 kernel: for each `S` row `r` in this worker's band and
+/// each column `d`, accumulate `Σ_{k ∈ group(d)} M[r, gather_keys[k]] ·
+/// a[order[k]]` in registers and store once. Processes four rows per pass
+/// over the index streams (same bandwidth argument as `stage1_scatter`'s
+/// blocking; `GVT_RLS_STAGE1_1ROW=1` disables it for A/B runs).
+#[allow(clippy::too_many_arguments)]
+fn stage1_grouped(
+    mat: &Mat,
+    row0: usize,
+    chunk: &mut [f64],
+    row_len: usize,
+    offsets: &[u32],
+    order: &[u32],
+    gather_keys: &[u32],
+    a: &[f64],
+) {
+    debug_assert_eq!(offsets.len(), row_len + 1);
+    let rows_here = chunk.len() / row_len;
+    let mut r = 0;
+    let block = !stage1_single_row();
+    while block && r + 4 <= rows_here {
+        let m0 = mat.row(row0 + r);
+        let m1 = mat.row(row0 + r + 1);
+        let m2 = mat.row(row0 + r + 2);
+        let m3 = mat.row(row0 + r + 3);
+        let (s0, rest) = chunk[r * row_len..].split_at_mut(row_len);
+        let (s1, rest) = rest.split_at_mut(row_len);
+        let (s2, s3full) = rest.split_at_mut(row_len);
+        let s3 = &mut s3full[..row_len];
+        for d in 0..row_len {
+            let lo = offsets[d] as usize;
+            let hi = offsets[d + 1] as usize;
+            let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+            for k in lo..hi {
+                let src = gather_keys[k] as usize;
+                let aj = a[order[k] as usize];
+                a0 += m0[src] * aj;
+                a1 += m1[src] * aj;
+                a2 += m2[src] * aj;
+                a3 += m3[src] * aj;
+            }
+            s0[d] = a0;
+            s1[d] = a1;
+            s2[d] = a2;
+            s3[d] = a3;
+        }
+        r += 4;
+    }
+    for rr in r..rows_here {
+        let mrow = mat.row(row0 + rr);
+        let srow = &mut chunk[rr * row_len..(rr + 1) * row_len];
+        for d in 0..row_len {
+            let lo = offsets[d] as usize;
+            let hi = offsets[d + 1] as usize;
+            let mut acc = 0.0;
+            for k in lo..hi {
+                acc += mrow[gather_keys[k] as usize] * a[order[k] as usize];
+            }
+            srow[d] = acc;
+        }
+    }
+}
+
+/// Multi-RHS stage-2 sweep: `out[i, b] += c · Σ_d lhs[li[i], d] ·
+/// s[ri[i], d, b]` with `s` in `[r][d][b]` layout.
+#[allow(clippy::too_many_arguments)]
+fn stage2_rowdot_multi(
+    lhs: &Mat,
+    s: &[f64],
+    s_cols: usize,
+    b: usize,
+    li: &[u32],
+    ri: &[u32],
+    c: f64,
+    out: &mut Mat,
+) {
+    debug_assert_eq!(lhs.cols(), s_cols);
+    let row_len = s_cols * b;
+    let odata = out.as_mut_slice();
+    par::parallel_fill_rows(odata, b.max(1), 2048, |start, _end, chunk| {
+        let i0 = start / b.max(1);
+        let rows_here = if b == 0 { 0 } else { chunk.len() / b };
+        for t in 0..rows_here {
+            let i = i0 + t;
+            let lrow = lhs.row(li[i] as usize);
+            let sbase = ri[i] as usize * row_len;
+            let orow = &mut chunk[t * b..(t + 1) * b];
+            for d in 0..s_cols {
+                let l = c * lrow[d];
+                let cell = &s[sbase + d * b..sbase + (d + 1) * b];
+                for (ob, sb) in orow.iter_mut().zip(cell) {
+                    *ob += l * sb;
+                }
+            }
+        }
+    });
+}
+
+/// Multi-RHS generalized vec trick for a single Kronecker term:
+/// `P = R(rows) (A ⊗ B) R(cols)ᵀ AB` for a block `AB` of `B` coefficient
+/// vectors (`n × B`, row-major), streaming the index arrays once for the
+/// whole block. Returns the `n̄ × B` prediction block.
+pub fn gvt_matmat(
+    a_mat: &Mat,
+    b_mat: &Mat,
+    rows: &PairIndex,
+    cols: &PairIndex,
+    ab: &Mat,
+    policy: GvtPolicy,
+) -> Mat {
+    assert_eq!(ab.rows(), cols.len(), "gvt_matmat: block rows != column sample size");
+    assert_eq!(a_mat.rows(), rows.m(), "gvt_matmat: A rows != row-sample drug domain");
+    assert_eq!(a_mat.cols(), cols.m(), "gvt_matmat: A cols != col-sample drug domain");
+    assert_eq!(b_mat.rows(), rows.q(), "gvt_matmat: B rows != row-sample target domain");
+    assert_eq!(b_mat.cols(), cols.q(), "gvt_matmat: B cols != col-sample target domain");
+    let ctx = TermContext { d: a_mat, t: b_mat, dsq: None, tsq: None };
+    let term = KroneckerTerm::new(1.0, Factor::D, Factor::T, IndexMap::Id, IndexMap::Id);
+    let terms = [(term, rows.clone(), cols.clone())];
+    let plan = GvtPlan::build(&terms, &ctx, policy, rows.len(), cols.len());
+    let mut out = Mat::zeros(rows.len(), ab.cols());
+    let mut ws = GvtWorkspace::new();
+    plan.execute_multi(&ctx, ab, &mut out, &mut ws);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gvt::vec_trick::{gvt_matvec, naive_matvec};
+    use crate::rng::{dist, Xoshiro256};
+    use crate::testing::gen;
+
+    fn ctx_for<'a>(d: &'a Mat, t: &'a Mat) -> TermContext<'a> {
+        TermContext { d, t, dsq: None, tsq: None }
+    }
+
+    /// Fused single-term plan == the unfused gvt_matvec == naive oracle,
+    /// across sizes that exercise both the grouped (n ≥ s_cols) and
+    /// streamed (n < s_cols) stage-1 kernels.
+    #[test]
+    fn single_term_plan_matches_naive_for_all_modes() {
+        for (seed, n, nbar, m, q) in
+            [(11u64, 60, 45, 7, 9), (12, 9, 30, 24, 21), (13, 120, 80, 6, 5)]
+        {
+            let mut rng = Xoshiro256::seed_from(seed);
+            let am = Mat::from_vec(m, m, dist::normal_vec(&mut rng, m * m));
+            let bm = Mat::from_vec(q, q, dist::normal_vec(&mut rng, q * q));
+            let cols = gen::pair_sample(&mut rng, n, m, q);
+            let rows = gen::pair_sample(&mut rng, nbar, m, q);
+            let a = dist::normal_vec(&mut rng, n);
+            let expect = naive_matvec(&am, &bm, &rows, &cols, &a);
+            let ctx = ctx_for(&am, &bm);
+            let term =
+                KroneckerTerm::new(1.0, Factor::D, Factor::T, IndexMap::Id, IndexMap::Id);
+            for policy in [
+                GvtPolicy::Auto,
+                GvtPolicy::SparseLeft,
+                GvtPolicy::SparseRight,
+                GvtPolicy::Dense,
+            ] {
+                let terms = [(term, rows.clone(), cols.clone())];
+                let plan = GvtPlan::build(&terms, &ctx, policy, nbar, n);
+                let mut ws = GvtWorkspace::new();
+                let mut out = vec![0.0; nbar];
+                plan.execute(&ctx, &a, &mut out, &mut ws);
+                let err = crate::linalg::vecops::max_abs_diff(&out, &expect);
+                assert!(err < 1e-9, "seed {seed} {policy:?}: err {err}");
+                // And against the unfused path for good measure.
+                let unfused = gvt_matvec(&am, &bm, &rows, &cols, &a, policy);
+                let err2 = crate::linalg::vecops::max_abs_diff(&out, &unfused);
+                assert!(err2 < 1e-9, "seed {seed} {policy:?} vs unfused: err {err2}");
+            }
+        }
+    }
+
+    /// Shared stage-1 with distinct stage-2 row samples (the
+    /// Symmetric-kernel shape): one S, two sweeps, correct sum.
+    #[test]
+    fn shared_stage1_distinct_stage2() {
+        let mut rng = Xoshiro256::seed_from(21);
+        let m = 8;
+        let d = gen::psd_kernel(&mut rng, m);
+        let rows = gen::homogeneous_sample(&mut rng, 30, m);
+        let cols = gen::homogeneous_sample(&mut rng, 40, m);
+        let a = dist::normal_vec(&mut rng, 40);
+        let ctx = ctx_for(&d, &d);
+        let t1 = KroneckerTerm::new(1.0, Factor::D, Factor::D, IndexMap::Id, IndexMap::Id);
+        let t2 =
+            KroneckerTerm::new(-1.0, Factor::D, Factor::D, IndexMap::Swap, IndexMap::Id);
+        let terms = [
+            (t1, t1.row_map.apply(&rows), t1.col_map.apply(&cols)),
+            (t2, t2.row_map.apply(&rows), t2.col_map.apply(&cols)),
+        ];
+        let plan = GvtPlan::build(&terms, &ctx, GvtPolicy::SparseLeft, 30, 40);
+        assert_eq!(plan.stage1_count(), 1, "terms share one stage-1 pass");
+        assert_eq!(plan.stage2_count(), 2);
+        let mut ws = GvtWorkspace::new();
+        let mut out = vec![0.0; 30];
+        plan.execute(&ctx, &a, &mut out, &mut ws);
+        let mut expect = vec![0.0; 30];
+        for (term, r, c) in &terms {
+            term.matvec_transformed(&ctx, r, c, &a, GvtPolicy::SparseLeft, &mut expect);
+        }
+        let err = crate::linalg::vecops::max_abs_diff(&out, &expect);
+        assert!(err < 1e-9, "err {err}");
+    }
+
+    /// Stage-2 accumulation (shared rows, distinct cols — the MLPK cross
+    /// term shape): weighted S's merge into one sweep, matching per-term.
+    #[test]
+    fn stage2_accumulation_matches_per_term() {
+        let mut rng = Xoshiro256::seed_from(22);
+        let m = 7;
+        let d = gen::psd_kernel(&mut rng, m);
+        let rows = gen::homogeneous_sample(&mut rng, 25, m);
+        let cols = gen::homogeneous_sample(&mut rng, 35, m);
+        let a = dist::normal_vec(&mut rng, 35);
+        let ctx = ctx_for(&d, &d);
+        let t1 = KroneckerTerm::new(2.0, Factor::D, Factor::D, IndexMap::Id, IndexMap::Id);
+        let t2 =
+            KroneckerTerm::new(-2.0, Factor::D, Factor::D, IndexMap::Id, IndexMap::Swap);
+        let t3 = KroneckerTerm::new(
+            -2.0,
+            Factor::D,
+            Factor::D,
+            IndexMap::Id,
+            IndexMap::DupDrug,
+        );
+        let terms: Vec<_> = [t1, t2, t3]
+            .iter()
+            .map(|t| (*t, t.row_map.apply(&rows), t.col_map.apply(&cols)))
+            .collect();
+        let plan = GvtPlan::build(&terms, &ctx, GvtPolicy::SparseLeft, 25, 35);
+        assert_eq!(plan.stage1_count(), 3, "distinct col samples");
+        assert_eq!(plan.stage2_count(), 1, "one accumulated sweep");
+        let mut ws = GvtWorkspace::new();
+        let mut out = vec![0.0; 25];
+        plan.execute(&ctx, &a, &mut out, &mut ws);
+        let mut expect = vec![0.0; 25];
+        for (term, r, c) in &terms {
+            term.matvec_transformed(&ctx, r, c, &a, GvtPolicy::SparseLeft, &mut expect);
+        }
+        let err = crate::linalg::vecops::max_abs_diff(&out, &expect);
+        assert!(err < 1e-9, "err {err}");
+    }
+
+    /// gvt_matmat == per-column gvt_matvec.
+    #[test]
+    fn matmat_matches_column_loop() {
+        let mut rng = Xoshiro256::seed_from(23);
+        let (m, q, n, nbar, b) = (6, 8, 45, 30, 5);
+        let am = Mat::from_vec(m, m, dist::normal_vec(&mut rng, m * m));
+        let bm = Mat::from_vec(q, q, dist::normal_vec(&mut rng, q * q));
+        let cols = gen::pair_sample(&mut rng, n, m, q);
+        let rows = gen::pair_sample(&mut rng, nbar, m, q);
+        let colvecs: Vec<Vec<f64>> =
+            (0..b).map(|_| dist::normal_vec(&mut rng, n)).collect();
+        let refs: Vec<&[f64]> = colvecs.iter().map(|v| v.as_slice()).collect();
+        let ab = Mat::from_columns(&refs);
+        for policy in [GvtPolicy::Auto, GvtPolicy::SparseLeft, GvtPolicy::SparseRight] {
+            let got = gvt_matmat(&am, &bm, &rows, &cols, &ab, policy);
+            for (bb, col) in colvecs.iter().enumerate() {
+                let expect = gvt_matvec(&am, &bm, &rows, &cols, col, policy);
+                for i in 0..nbar {
+                    assert!(
+                        (got[(i, bb)] - expect[i]).abs() < 1e-9,
+                        "{policy:?} col {bb} row {i}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Workspace reuse: consecutive executions at the same shapes give
+    /// identical results (buffers fully overwritten, not accumulated).
+    #[test]
+    fn workspace_reuse_is_idempotent() {
+        let mut rng = Xoshiro256::seed_from(24);
+        let m = 9;
+        let d = gen::psd_kernel(&mut rng, m);
+        let rows = gen::homogeneous_sample(&mut rng, 40, m);
+        let cols = gen::homogeneous_sample(&mut rng, 40, m);
+        let a = dist::normal_vec(&mut rng, 40);
+        let ctx = ctx_for(&d, &d);
+        let t1 = KroneckerTerm::new(1.0, Factor::D, Factor::D, IndexMap::Id, IndexMap::Id);
+        let t2 =
+            KroneckerTerm::new(0.5, Factor::D, Factor::D, IndexMap::Swap, IndexMap::Swap);
+        let terms: Vec<_> = [t1, t2]
+            .iter()
+            .map(|t| (*t, t.row_map.apply(&rows), t.col_map.apply(&cols)))
+            .collect();
+        let plan = GvtPlan::build(&terms, &ctx, GvtPolicy::Auto, 40, 40);
+        let mut ws = GvtWorkspace::new();
+        let mut out1 = vec![0.0; 40];
+        plan.execute(&ctx, &a, &mut out1, &mut ws);
+        let mut out2 = vec![1e9; 40]; // dirty output buffer
+        plan.execute(&ctx, &a, &mut out2, &mut ws);
+        assert_eq!(out1, out2);
+    }
+
+    /// Empty samples flow through every unit kind without panicking.
+    #[test]
+    fn degenerate_samples_are_safe() {
+        let d = Mat::full(3, 3, 1.5);
+        let ctx = ctx_for(&d, &d);
+        let empty = PairIndex::new(vec![], vec![], 3, 3);
+        let some = PairIndex::new(vec![0, 2], vec![1, 1], 3, 3);
+        let t = KroneckerTerm::new(1.0, Factor::D, Factor::D, IndexMap::Id, IndexMap::Id);
+        // Empty column sample: output must be zeros.
+        let terms = [(t, some.clone(), empty.clone())];
+        let plan = GvtPlan::build(&terms, &ctx, GvtPolicy::Auto, 2, 0);
+        let mut ws = GvtWorkspace::new();
+        let mut out = vec![7.0; 2];
+        plan.execute(&ctx, &[], &mut out, &mut ws);
+        assert_eq!(out, vec![0.0, 0.0]);
+        // Empty row sample: empty output.
+        let terms = [(t, empty.clone(), some.clone())];
+        let plan = GvtPlan::build(&terms, &ctx, GvtPolicy::Auto, 0, 2);
+        let mut out: Vec<f64> = vec![];
+        plan.execute(&ctx, &[0.5, -0.5], &mut out, &mut ws);
+        assert!(out.is_empty());
+    }
+}

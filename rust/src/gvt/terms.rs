@@ -114,7 +114,7 @@ pub struct TermContext<'a> {
 }
 
 impl<'a> TermContext<'a> {
-    fn resolve(&self, f: Factor) -> SlotMatrix<'a> {
+    pub(crate) fn resolve(&self, f: Factor) -> SlotMatrix<'a> {
         match f {
             Factor::D => SlotMatrix::Dense(self.d),
             Factor::T => SlotMatrix::Dense(self.t),
@@ -154,7 +154,9 @@ impl KroneckerTerm {
     /// the transformed samples (`row_map(rows)`, `col_map(cols)`).
     ///
     /// Fast paths for `Ones`/`Identity` factors; dense×dense falls through
-    /// to [`gvt_matvec`].
+    /// to [`gvt_matvec`]. Allocates internal scratch — the hot path
+    /// ([`crate::gvt::plan::GvtPlan`]) uses
+    /// [`Self::matvec_transformed_with`] with a reused buffer instead.
     pub fn matvec_transformed(
         &self,
         ctx: &TermContext<'_>,
@@ -164,11 +166,35 @@ impl KroneckerTerm {
         policy: GvtPolicy,
         out: &mut [f64],
     ) {
+        let mut scratch = Vec::new();
+        self.matvec_transformed_with(ctx, rows_t, cols_t, a, policy, out, &mut scratch);
+    }
+
+    /// [`Self::matvec_transformed`] with caller-provided scratch: after the
+    /// first call at a given size, no heap allocation happens on any
+    /// `Ones`/`Identity` fast path (`scratch` is cleared and reused). The
+    /// dense×dense arm still allocates its own `S` — the fused plan never
+    /// routes dense×dense terms here.
+    pub(crate) fn matvec_transformed_with(
+        &self,
+        ctx: &TermContext<'_>,
+        rows_t: &PairIndex,
+        cols_t: &PairIndex,
+        a: &[f64],
+        policy: GvtPolicy,
+        out: &mut [f64],
+        scratch: &mut Vec<f64>,
+    ) {
         assert_eq!(out.len(), rows_t.len());
         assert_eq!(a.len(), cols_t.len());
         let left = ctx.resolve(self.left);
         let right = ctx.resolve(self.right);
         let c = self.coeff;
+        // Zeroed scratch of `len` without shrinking capacity.
+        let zeroed = |scratch: &mut Vec<f64>, len: usize| {
+            scratch.clear();
+            scratch.resize(len, 0.0);
+        };
         match (left, right) {
             (SlotMatrix::Ones, SlotMatrix::Ones) => {
                 // p_i = Σ_j a_j, constant.
@@ -180,21 +206,23 @@ impl KroneckerTerm {
             (SlotMatrix::Dense(am), SlotMatrix::Ones) => {
                 // Pool over drugs then one GEMV: p_i = (A w)[d̄_i],
                 // w[d] = Σ_{j: d_j = d} a_j.
-                let mut w = vec![0.0; am.cols()];
+                zeroed(scratch, am.cols() + am.rows());
+                let (w, v) = scratch.split_at_mut(am.cols());
                 for j in 0..a.len() {
                     w[cols_t.drug(j)] += a[j];
                 }
-                let v = am.matvec(&w);
+                am.matvec_into(w, v);
                 for (i, o) in out.iter_mut().enumerate() {
                     *o += c * v[rows_t.drug(i)];
                 }
             }
             (SlotMatrix::Ones, SlotMatrix::Dense(bm)) => {
-                let mut w = vec![0.0; bm.cols()];
+                zeroed(scratch, bm.cols() + bm.rows());
+                let (w, v) = scratch.split_at_mut(bm.cols());
                 for j in 0..a.len() {
                     w[cols_t.target(j)] += a[j];
                 }
-                let v = bm.matvec(&w);
+                bm.matvec_into(w, v);
                 for (i, o) in out.iter_mut().enumerate() {
                     *o += c * v[rows_t.target(i)];
                 }
@@ -207,11 +235,12 @@ impl KroneckerTerm {
                     cols_t.q(),
                     "Identity factor needs matching target domains"
                 );
-                let mut w = Mat::zeros(cols_t.q(), am.cols());
+                let wc = am.cols();
+                zeroed(scratch, cols_t.q() * wc);
                 for j in 0..a.len() {
-                    w[(cols_t.target(j), cols_t.drug(j))] += a[j];
+                    scratch[cols_t.target(j) * wc + cols_t.drug(j)] += a[j];
                 }
-                accumulate_rowdot(am, &w, rows_t.drugs(), rows_t.targets(), c, out);
+                accumulate_rowdot(am, scratch, wc, rows_t.drugs(), rows_t.targets(), c, out);
             }
             (SlotMatrix::Identity, SlotMatrix::Dense(bm)) => {
                 assert_eq!(
@@ -219,38 +248,40 @@ impl KroneckerTerm {
                     cols_t.m(),
                     "Identity factor needs matching drug domains"
                 );
-                let mut w = Mat::zeros(cols_t.m(), bm.cols());
+                let wc = bm.cols();
+                zeroed(scratch, cols_t.m() * wc);
                 for j in 0..a.len() {
-                    w[(cols_t.drug(j), cols_t.target(j))] += a[j];
+                    scratch[cols_t.drug(j) * wc + cols_t.target(j)] += a[j];
                 }
-                accumulate_rowdot(bm, &w, rows_t.targets(), rows_t.drugs(), c, out);
+                accumulate_rowdot(bm, scratch, wc, rows_t.targets(), rows_t.drugs(), c, out);
             }
             (SlotMatrix::Identity, SlotMatrix::Identity) => {
                 // p_i = Σ_{j: d_j=d̄_i, t_j=t̄_i} a_j — sparse diagonal-ish.
-                let mut w = Mat::zeros(cols_t.m(), cols_t.q());
+                let wc = cols_t.q();
+                zeroed(scratch, cols_t.m() * wc);
                 for j in 0..a.len() {
-                    w[(cols_t.drug(j), cols_t.target(j))] += a[j];
+                    scratch[cols_t.drug(j) * wc + cols_t.target(j)] += a[j];
                 }
                 for (i, o) in out.iter_mut().enumerate() {
-                    *o += c * w[(rows_t.drug(i), rows_t.target(i))];
+                    *o += c * scratch[rows_t.drug(i) * wc + rows_t.target(i)];
                 }
             }
             (SlotMatrix::Identity, SlotMatrix::Ones) => {
-                let mut w = vec![0.0; cols_t.m()];
+                zeroed(scratch, cols_t.m());
                 for j in 0..a.len() {
-                    w[cols_t.drug(j)] += a[j];
+                    scratch[cols_t.drug(j)] += a[j];
                 }
                 for (i, o) in out.iter_mut().enumerate() {
-                    *o += c * w[rows_t.drug(i)];
+                    *o += c * scratch[rows_t.drug(i)];
                 }
             }
             (SlotMatrix::Ones, SlotMatrix::Identity) => {
-                let mut w = vec![0.0; cols_t.q()];
+                zeroed(scratch, cols_t.q());
                 for j in 0..a.len() {
-                    w[cols_t.target(j)] += a[j];
+                    scratch[cols_t.target(j)] += a[j];
                 }
                 for (i, o) in out.iter_mut().enumerate() {
-                    *o += c * w[rows_t.target(i)];
+                    *o += c * scratch[rows_t.target(i)];
                 }
             }
             (SlotMatrix::Dense(am), SlotMatrix::Dense(bm)) => {
@@ -312,20 +343,25 @@ impl KroneckerTerm {
     }
 }
 
-/// `out[i] += c · ⟨lhs[li[i], :], w[ri[i], :]⟩`, threaded.
-fn accumulate_rowdot(
+/// `out[i] += c · ⟨lhs[li[i], :], w[ri[i]·w_cols .. +w_cols]⟩`, threaded.
+/// `w` is a row-major matrix given as a raw slice so callers can hand in
+/// reused workspace buffers (the fused plan) as well as `Mat` data.
+pub(crate) fn accumulate_rowdot(
     lhs: &Mat,
-    w: &Mat,
+    w: &[f64],
+    w_cols: usize,
     li: &[u32],
     ri: &[u32],
     c: f64,
     out: &mut [f64],
 ) {
-    debug_assert_eq!(lhs.cols(), w.cols());
+    debug_assert_eq!(lhs.cols(), w_cols);
+    debug_assert_eq!(w.len() % w_cols.max(1), 0);
     par::parallel_fill(out, 2048, |start, _end, chunk| {
         for (k, o) in chunk.iter_mut().enumerate() {
             let i = start + k;
-            *o += c * vecops::dot(lhs.row(li[i] as usize), w.row(ri[i] as usize));
+            let r = ri[i] as usize;
+            *o += c * vecops::dot(lhs.row(li[i] as usize), &w[r * w_cols..(r + 1) * w_cols]);
         }
     });
 }

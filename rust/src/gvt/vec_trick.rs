@@ -68,31 +68,45 @@ pub fn gvt_matvec(
         GvtPolicy::SparseRight => sparse_right(a_mat, b_mat, rows, cols, a),
         GvtPolicy::Dense => dense(a_mat, b_mat, rows, cols, a),
         GvtPolicy::Auto => {
-            let n = cols.len() as f64;
-            let nbar = rows.len() as f64;
-            let (m_r, m_c) = a_mat.shape();
-            let (q_r, q_c) = b_mat.shape();
-            let cost_left = n * q_r as f64 + nbar * m_c as f64;
-            let cost_right = n * m_r as f64 + nbar * q_c as f64;
-            // Dense path: GEMM flops with a vectorization discount, only
-            // competitive when the sample covers a decent fraction of the
-            // complete q×m grid. §Perf: the discount was measured at ~2×
-            // against the 4-row-blocked sparse stage 1 (an 8× guess made
-            // Auto pick Dense where SparseLeft was 1.5× faster — see
-            // rust/DESIGN.md §Perf).
-            let density = n / (q_c as f64 * m_c as f64).max(1.0);
-            let cost_dense =
-                (q_r as f64 * q_c as f64 * m_c as f64) / 2.0 + n + nbar * m_c as f64;
-            if density >= DENSE_DENSITY_THRESHOLD
-                && cost_dense < cost_left.min(cost_right)
-            {
-                dense(a_mat, b_mat, rows, cols, a)
-            } else if cost_left <= cost_right {
-                sparse_left(a_mat, b_mat, rows, cols, a)
-            } else {
-                sparse_right(a_mat, b_mat, rows, cols, a)
+            match choose_policy(cols.len(), rows.len(), a_mat.shape(), b_mat.shape()) {
+                GvtPolicy::Dense => dense(a_mat, b_mat, rows, cols, a),
+                GvtPolicy::SparseRight => sparse_right(a_mat, b_mat, rows, cols, a),
+                _ => sparse_left(a_mat, b_mat, rows, cols, a),
             }
         }
+    }
+}
+
+/// The `Auto` cost model, shared with the fused-plan builder
+/// ([`crate::gvt::plan::GvtPlan`]): returns the concrete factorization
+/// (`SparseLeft`/`SparseRight`/`Dense`, never `Auto`) the cost
+/// expressions favor for a term of the given shapes.
+pub(crate) fn choose_policy(
+    n: usize,
+    nbar: usize,
+    a_shape: (usize, usize),
+    b_shape: (usize, usize),
+) -> GvtPolicy {
+    let n = n as f64;
+    let nbar = nbar as f64;
+    let (m_r, m_c) = a_shape;
+    let (q_r, q_c) = b_shape;
+    let cost_left = n * q_r as f64 + nbar * m_c as f64;
+    let cost_right = n * m_r as f64 + nbar * q_c as f64;
+    // Dense path: GEMM flops with a vectorization discount, only
+    // competitive when the sample covers a decent fraction of the
+    // complete q×m grid. §Perf: the discount was measured at ~2×
+    // against the 4-row-blocked sparse stage 1 (an 8× guess made
+    // Auto pick Dense where SparseLeft was 1.5× faster — see
+    // rust/DESIGN.md §Perf).
+    let density = n / (q_c as f64 * m_c as f64).max(1.0);
+    let cost_dense = (q_r as f64 * q_c as f64 * m_c as f64) / 2.0 + n + nbar * m_c as f64;
+    if density >= DENSE_DENSITY_THRESHOLD && cost_dense < cost_left.min(cost_right) {
+        GvtPolicy::Dense
+    } else if cost_left <= cost_right {
+        GvtPolicy::SparseLeft
+    } else {
+        GvtPolicy::SparseRight
     }
 }
 
@@ -163,11 +177,34 @@ fn dense(
     let q_c = b_mat.cols();
     let m_c = a_mat.cols();
     let mut w = Mat::zeros(q_c, m_c);
-    for j in 0..a.len() {
-        w[(cols.target(j), cols.drug(j))] += a[j];
-    }
+    scatter_w_grouped(&mut w, cols, a);
     let s = b_mat.matmul(&w); // q_r × m_c
     stage2_rowdot(a_mat, &s, rows.drugs(), rows.targets())
+}
+
+/// `W[t_j, d_j] += a_j` over a zeroed `W` (`cols.q() × cols.m()`),
+/// parallelized via the cached `by_target` CSR grouping: each worker owns
+/// a band of W rows and walks only the pairs landing in it, so the
+/// scatter is race-free without atomics. §Perf: the previous serial loop
+/// was the only single-threaded stage of the dense path.
+pub(crate) fn scatter_w_grouped(w: &mut Mat, cols: &PairIndex, a: &[f64]) {
+    debug_assert_eq!(w.shape(), (cols.q(), cols.m()));
+    debug_assert_eq!(a.len(), cols.len());
+    let m_c = cols.m();
+    let grp = cols.by_target();
+    let drugs = cols.drugs();
+    let wdata = w.as_mut_slice();
+    par::parallel_fill_rows(wdata, m_c.max(1), 16 * m_c.max(1), |start_flat, _end, chunk| {
+        let t0 = start_flat / m_c.max(1);
+        let rows_here = if m_c == 0 { 0 } else { chunk.len() / m_c };
+        for r in 0..rows_here {
+            let t = t0 + r;
+            let wrow = &mut chunk[r * m_c..(r + 1) * m_c];
+            for &p in grp.group(t) {
+                wrow[drugs[p as usize] as usize] += a[p as usize];
+            }
+        }
+    });
 }
 
 /// Stage-1 kernel shared by both sparse factorizations: for each S row
@@ -178,7 +215,7 @@ fn dense(
 /// 12 B/pair) are loaded once per 4 rows instead of once per row — stage 1
 /// is index-bandwidth-bound, and this cut the n=16k Kronecker mat-vec by
 /// ~35% (see rust/DESIGN.md §Perf).
-fn stage1_scatter(
+pub(crate) fn stage1_scatter(
     mat: &Mat,
     row0: usize,
     chunk: &mut [f64],
@@ -223,14 +260,15 @@ fn stage1_scatter(
 }
 
 /// A/B escape hatch used by the §Perf ablation (bench_perf_ablation):
-/// `GVT_RLS_STAGE1_1ROW=1` disables [`stage1_scatter`]'s 4-row blocking.
+/// `GVT_RLS_STAGE1_1ROW=1` disables [`stage1_scatter`]'s 4-row blocking
+/// (and the grouped stage-1 kernel's, in `gvt/plan.rs`).
 ///
 /// Read once and cached: stage 1 runs on every worker chunk of every GVT
 /// mat-vec, and `env::var_os` takes a process-global lock on some
 /// platforms — exactly the hot path the blocking exists to speed up. The
 /// ablation sets the variable before the process starts, so a cached
 /// read is equivalent.
-fn stage1_single_row() -> bool {
+pub(crate) fn stage1_single_row() -> bool {
     static CACHED: OnceLock<bool> = OnceLock::new();
     *CACHED.get_or_init(|| std::env::var_os("GVT_RLS_STAGE1_1ROW").is_some())
 }

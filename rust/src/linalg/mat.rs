@@ -117,6 +117,28 @@ impl Mat {
         t
     }
 
+    /// Stack equal-length column vectors into a matrix (row-major, so row
+    /// `i` holds entry `i` of every column — the coefficient-block layout
+    /// the multi-RHS GVT streams).
+    pub fn from_columns(cols: &[&[f64]]) -> Mat {
+        let b = cols.len();
+        let n = cols.first().map_or(0, |c| c.len());
+        assert!(cols.iter().all(|c| c.len() == n), "ragged columns");
+        let mut m = Mat::zeros(n, b);
+        for (j, col) in cols.iter().enumerate() {
+            for i in 0..n {
+                m.data[i * b + j] = col[i];
+            }
+        }
+        m
+    }
+
+    /// Copy column `j` out as a vector.
+    pub fn column(&self, j: usize) -> Vec<f64> {
+        assert!(j < self.cols, "column index out of range");
+        (0..self.rows).map(|i| self.data[i * self.cols + j]).collect()
+    }
+
     /// Gather rows by index: result row `k` = `self` row `idx[k]`.
     pub fn gather_rows(&self, idx: &[usize]) -> Mat {
         let mut out = Mat::zeros(idx.len(), self.cols);
@@ -194,34 +216,51 @@ impl Mat {
 
     /// Dense matrix–vector product `y = self · x` (threaded over rows).
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
-        assert_eq!(x.len(), self.cols, "matvec dim mismatch");
         let mut y = vec![0.0; self.rows];
-        let cols = self.cols;
-        let data = &self.data;
-        par::parallel_fill(&mut y, 256, |start, _end, chunk| {
-            for (k, yi) in chunk.iter_mut().enumerate() {
-                let row = &data[(start + k) * cols..(start + k + 1) * cols];
-                let mut acc = 0.0;
-                for (a, b) in row.iter().zip(x) {
-                    acc += a * b;
-                }
-                *yi = acc;
-            }
-        });
+        self.matvec_into(x, &mut y);
         y
     }
 
-    /// Dense GEMM `self · other`, cache-blocked and threaded over row
-    /// panels. Inner loop is `C[i,:] += A[i,k] * B[k,:]` which LLVM
-    /// vectorizes well on row-major data.
+    /// `y = self · x` into a caller-provided buffer (hot path: the fused
+    /// GVT plan's pooled terms run one of these per solver iteration).
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols, "matvec dim mismatch");
+        assert_eq!(y.len(), self.rows, "matvec output dim mismatch");
+        let cols = self.cols;
+        let data = &self.data;
+        par::parallel_fill(y, 256, |start, _end, chunk| {
+            for (k, yi) in chunk.iter_mut().enumerate() {
+                let row = &data[(start + k) * cols..(start + k + 1) * cols];
+                *yi = crate::linalg::vecops::dot(row, x);
+            }
+        });
+    }
+
+    /// Dense GEMM `self · other` (allocating wrapper over
+    /// [`Self::matmul_into`]).
     pub fn matmul(&self, other: &Mat) -> Mat {
+        let mut c = Mat::zeros(self.rows, other.cols);
+        self.matmul_into(other, &mut c);
+        c
+    }
+
+    /// Dense GEMM `c = self · other` into a caller-provided matrix,
+    /// cache-blocked and threaded over row panels. Inner loop is
+    /// `C[i,:] += A[i,k] * B[k,:]` which LLVM vectorizes well on
+    /// row-major data. `c` is fully overwritten.
+    pub fn matmul_into(&self, other: &Mat, c: &mut Mat) {
         assert_eq!(self.cols, other.rows, "matmul dim mismatch");
-        let (m, k, n) = (self.rows, self.cols, other.cols);
-        let mut c = Mat::zeros(m, n);
+        assert_eq!(
+            c.shape(),
+            (self.rows, other.cols),
+            "matmul output shape mismatch"
+        );
+        let (_m, k, n) = (self.rows, self.cols, other.cols);
         let a = &self.data;
         let b = &other.data;
         // Row-panel parallelism; each worker owns disjoint C rows.
         let cdata = c.as_mut_slice();
+        cdata.fill(0.0);
         par::parallel_fill_rows(cdata, n.max(1), 8 * n.max(1), |row_start_flat, _end, chunk| {
             let row_start = row_start_flat / n;
             let rows_here = chunk.len() / n;
@@ -244,7 +283,6 @@ impl Mat {
                 }
             }
         });
-        c
     }
 
     /// `self · otherᵀ` without materializing the transpose: row-dot-row,
@@ -364,6 +402,31 @@ mod tests {
         for i in 0..23 {
             assert!((y[i] - ym[(i, 0)]).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn matmul_into_reuses_buffer() {
+        use crate::rng::{dist, Xoshiro256};
+        let mut rng = Xoshiro256::seed_from(8);
+        let a = Mat::from_vec(6, 5, dist::normal_vec(&mut rng, 30));
+        let b1 = Mat::from_vec(5, 4, dist::normal_vec(&mut rng, 20));
+        let b2 = Mat::from_vec(5, 4, dist::normal_vec(&mut rng, 20));
+        let mut c = Mat::zeros(6, 4);
+        a.matmul_into(&b1, &mut c);
+        // Second product into the same (dirty) buffer must fully overwrite.
+        a.matmul_into(&b2, &mut c);
+        assert!(c.max_abs_diff(&a.matmul(&b2)) < 1e-12);
+    }
+
+    #[test]
+    fn from_columns_and_column_roundtrip() {
+        let c0 = vec![1.0, 2.0, 3.0];
+        let c1 = vec![-1.0, 0.5, 4.0];
+        let m = Mat::from_columns(&[&c0, &c1]);
+        assert_eq!(m.shape(), (3, 2));
+        assert_eq!(m.column(0), c0);
+        assert_eq!(m.column(1), c1);
+        assert_eq!(m[(1, 1)], 0.5);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! "Falkon solves the resulting linear system using a preconditioned
 //! conjugate gradient optimizer") and as a cross-check on MINRES.
 
-use crate::linalg::vecops::{axpy, axpby, dot, norm2};
+use crate::linalg::vecops::{axpy, axpby, axpy_norm2, dot, norm2};
 use crate::solvers::linear_op::LinOp;
 use std::ops::ControlFlow;
 
@@ -72,9 +72,10 @@ where
         }
         let alpha = rz / pap;
         axpy(alpha, &p, &mut x);
-        axpy(-alpha, &ap, &mut r);
+        // Residual update and its norm in one pass over memory.
+        let rnorm = axpy_norm2(-alpha, &ap, &mut r);
         iterations = k;
-        rel = norm2(&r) / bnorm;
+        rel = rnorm / bnorm;
         if let ControlFlow::Break(()) = callback(k, &x, rel) {
             break;
         }

@@ -19,6 +19,32 @@ pub trait LinOp: Sync {
         self.apply_into(x, &mut y);
         y
     }
+
+    /// `Y = A X` for a block of `B` RHS vectors (`X: dim_in × B`,
+    /// `Y: dim_out × B`, both row-major — see
+    /// [`crate::linalg::Mat::from_columns`]). Default implementation is a
+    /// column loop; operators with a native multi-RHS path (the GVT
+    /// [`crate::gvt::PairwiseLinOp`], which streams its index arrays once
+    /// for the whole block) override it.
+    fn apply_block(&self, x: &crate::linalg::Mat, y: &mut crate::linalg::Mat) {
+        assert_eq!(x.rows(), self.dim_in(), "apply_block: input rows mismatch");
+        assert_eq!(
+            y.shape(),
+            (self.dim_out(), x.cols()),
+            "apply_block: output shape mismatch"
+        );
+        let mut xin = vec![0.0; self.dim_in()];
+        let mut yout = vec![0.0; self.dim_out()];
+        for b in 0..x.cols() {
+            for j in 0..x.rows() {
+                xin[j] = x[(j, b)];
+            }
+            self.apply_into(&xin, &mut yout);
+            for i in 0..self.dim_out() {
+                y[(i, b)] = yout[i];
+            }
+        }
+    }
 }
 
 /// `(A + λI) x` — the regularized system operator of Equation 1.
@@ -47,6 +73,13 @@ impl LinOp for ShiftedOp<'_> {
     fn apply_into(&self, x: &[f64], y: &mut [f64]) {
         self.op.apply_into(x, y);
         for (yi, xi) in y.iter_mut().zip(x) {
+            *yi += self.shift * xi;
+        }
+    }
+
+    fn apply_block(&self, x: &crate::linalg::Mat, y: &mut crate::linalg::Mat) {
+        self.op.apply_block(x, y);
+        for (yi, xi) in y.as_mut_slice().iter_mut().zip(x.as_slice()) {
             *yi += self.shift * xi;
         }
     }
@@ -101,5 +134,19 @@ mod tests {
     fn shifted_op_rejects_rectangular() {
         let op = DenseOp::new(Mat::zeros(2, 3));
         let _ = ShiftedOp::new(&op, 1.0);
+    }
+
+    #[test]
+    fn apply_block_matches_column_loop() {
+        let a = Mat::from_fn(3, 3, |i, j| (i * 3 + j) as f64);
+        let op = DenseOp::new(a);
+        let sh = ShiftedOp::new(&op, 2.0);
+        let c0 = vec![1.0, 0.0, -1.0];
+        let c1 = vec![0.5, 2.0, 1.5];
+        let x = Mat::from_columns(&[&c0, &c1]);
+        let mut y = Mat::zeros(3, 2);
+        sh.apply_block(&x, &mut y);
+        assert_eq!(y.column(0), sh.apply(&c0));
+        assert_eq!(y.column(1), sh.apply(&c1));
     }
 }

@@ -7,7 +7,7 @@
 //! per iteration it performs exactly one operator application plus `O(n)`
 //! vector work and zero allocations after setup.
 
-use crate::linalg::vecops::{axpy, dot, norm2};
+use crate::linalg::vecops::{axpy, dot, fused_direction, norm2, scale_into};
 use crate::solvers::linear_op::LinOp;
 use std::ops::ControlFlow;
 
@@ -131,10 +131,8 @@ where
         c = delta / rho1;
         s = beta_next / rho1;
 
-        // w_new = (v − ρ3 w_oold − ρ2 w_old) / ρ1.
-        for i in 0..n {
-            w_new[i] = (v[i] - rho3 * w_oold[i] - rho2 * w_old[i]) / rho1;
-        }
+        // w_new = (v − ρ3 w_oold − ρ2 w_old) / ρ1, one fused pass.
+        fused_direction(&mut w_new, &v, rho3, &w_oold, rho2, &w_old, 1.0 / rho1);
         // x += c · η · w_new.
         axpy(c * eta, &w_new, &mut x);
         eta = -s * eta;
@@ -144,9 +142,7 @@ where
         std::mem::swap(&mut w_old, &mut w_new);
         std::mem::swap(&mut v_prev, &mut v);
         if beta_next > 0.0 {
-            for i in 0..n {
-                v[i] = av[i] / beta_next;
-            }
+            scale_into(&mut v, &av, 1.0 / beta_next);
         }
         beta = beta_next;
 

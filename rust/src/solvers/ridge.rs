@@ -18,6 +18,7 @@ use crate::error::{bail, Context, Result};
 use crate::eval::auc;
 use crate::gvt::pairwise::{PairwiseKernel, PairwiseLinOp};
 use crate::gvt::vec_trick::GvtPolicy;
+use crate::linalg::Mat;
 use crate::solvers::linear_op::{LinOp, ShiftedOp};
 use crate::solvers::minres::{minres, MinresOptions};
 use crate::sparse::PairIndex;
@@ -111,6 +112,41 @@ impl RidgeModel {
     /// The training sample the dual coefficients refer to.
     pub fn train_pairs(&self) -> &PairIndex {
         &self.train_pairs
+    }
+
+    /// Batched prediction for several models trained on the **same**
+    /// sample (a λ grid, a fold's candidates): stacks the dual
+    /// coefficient vectors and runs **one** multi-RHS GVT block product
+    /// `P = R(test) K R(train)ᵀ [α₁ … α_B]` instead of `B` separate
+    /// operator builds and mat-vecs. Column `b` holds model `b`'s
+    /// predictions.
+    pub fn predict_batch(models: &[RidgeModel], pairs: &PairIndex) -> Result<Mat> {
+        let first = match models.first() {
+            Some(m) => m,
+            None => bail!("predict_batch: empty model list"),
+        };
+        for m in models.iter().skip(1) {
+            // same_pairs (not same_view): models reloaded from disk carry
+            // fresh index buffers but may still share the sample content.
+            if m.kernel != first.kernel
+                || !m.train_pairs.same_pairs(&first.train_pairs)
+            {
+                bail!(
+                    "predict_batch: models must share one kernel and training sample"
+                );
+            }
+        }
+        let op = PairwiseLinOp::new(
+            first.kernel,
+            first.d.clone(),
+            first.t.clone(),
+            pairs.clone(),
+            first.train_pairs.clone(),
+            first.policy,
+        )
+        .context("building batched prediction operator")?;
+        let alphas: Vec<&[f64]> = models.iter().map(|m| m.alpha.as_slice()).collect();
+        Ok(op.matmat(&Mat::from_columns(&alphas)))
     }
 
     /// Reassemble a model from persisted parts (see
@@ -309,6 +345,117 @@ impl PairwiseRidge {
         );
         (out.x, out.iterations)
     }
+
+    /// Fit one model per λ over a **shared** training operator: the fused
+    /// GVT plan, its grouping tables, and its workspace are built once and
+    /// reused by every MINRES run in the sweep (only the `+λI` shift
+    /// differs). The models share the training sample, so
+    /// [`RidgeModel::predict_batch`] can score the whole grid with one
+    /// multi-RHS product.
+    pub fn fit_lambda_grid(
+        data: &PairDataset,
+        kernel: PairwiseKernel,
+        cfg: &RidgeConfig,
+        lambdas: &[f64],
+    ) -> Result<Vec<RidgeModel>> {
+        let op = Self::train_op(data, kernel, cfg.policy)?;
+        lambdas
+            .iter()
+            .map(|&lambda| {
+                let shifted = ShiftedOp::new(&op, lambda);
+                let out = minres(
+                    &shifted,
+                    &data.y,
+                    &MinresOptions { max_iters: cfg.max_iters, rel_tol: cfg.rel_tol },
+                    |_, _, _| ControlFlow::Continue(()),
+                );
+                Ok(RidgeModel {
+                    kernel,
+                    d: data.d.clone(),
+                    t: data.t.clone(),
+                    train_pairs: data.pairs.clone(),
+                    policy: cfg.policy,
+                    alpha: out.x,
+                    iterations: out.iterations,
+                    history: Vec::new(),
+                })
+            })
+            .collect()
+    }
+
+    /// Setting-aware k-fold cross-validation over a λ grid: per fold, fit
+    /// every λ on the fold's training set ([`Self::fit_lambda_grid`], one
+    /// shared operator) and score the fold's test pairs for **all** λ with
+    /// one multi-RHS block product ([`RidgeModel::predict_batch`]).
+    pub fn cross_validate_lambda(
+        data: &PairDataset,
+        setting: u8,
+        kernel: PairwiseKernel,
+        lambdas: &[f64],
+        cfg: &RidgeConfig,
+        folds: usize,
+        seed: u64,
+    ) -> Result<LambdaCvReport> {
+        if lambdas.is_empty() {
+            bail!("cross_validate_lambda: empty lambda grid");
+        }
+        let cv = splits::cv_splits(data, setting, folds, seed);
+        let mut cells = Vec::new();
+        let mut sums = vec![0.0; lambdas.len()];
+        let mut counts = vec![0usize; lambdas.len()];
+        for (fold, split) in cv.iter().enumerate() {
+            if split.train.is_empty() || split.test.is_empty() {
+                continue;
+            }
+            let models = Self::fit_lambda_grid(&split.train, kernel, cfg, lambdas)?;
+            let preds = RidgeModel::predict_batch(&models, &split.test.pairs)?;
+            let labels = split.test.binary_labels();
+            for (li, model) in models.iter().enumerate() {
+                let col = preds.column(li);
+                let score = auc(&col, &labels).unwrap_or(0.5);
+                sums[li] += score;
+                counts[li] += 1;
+                cells.push(LambdaCvCell {
+                    lambda: lambdas[li],
+                    fold,
+                    auc: score,
+                    iterations: model.iterations,
+                });
+            }
+        }
+        let mean_auc: Vec<(f64, f64)> = lambdas
+            .iter()
+            .enumerate()
+            .map(|(li, &l)| (l, sums[li] / counts[li].max(1) as f64))
+            .collect();
+        let best_lambda = mean_auc
+            .iter()
+            .cloned()
+            .max_by(|a, b| a.1.partial_cmp(&b.1).expect("AUC is finite"))
+            .map(|(l, _)| l)
+            .unwrap_or(lambdas[0]);
+        Ok(LambdaCvReport { cells, mean_auc, best_lambda })
+    }
+}
+
+/// One (λ, fold) cell of [`PairwiseRidge::cross_validate_lambda`].
+#[derive(Clone, Debug)]
+pub struct LambdaCvCell {
+    pub lambda: f64,
+    pub fold: usize,
+    pub auc: f64,
+    pub iterations: usize,
+}
+
+/// Aggregated k-fold CV result over a λ grid.
+#[derive(Clone, Debug)]
+pub struct LambdaCvReport {
+    /// Every (λ, fold) evaluation.
+    pub cells: Vec<LambdaCvCell>,
+    /// `(λ, mean AUC over folds)` per grid point.
+    pub mean_auc: Vec<(f64, f64)>,
+    /// Grid point with the best mean AUC.
+    pub best_lambda: f64,
 }
 
 #[cfg(test)]
@@ -396,5 +543,63 @@ mod tests {
         let data = toy_dataset(104, 30, 5, 6);
         let r = PairwiseRidge::fit(&data, PairwiseKernel::Mlpk, &RidgeConfig::default());
         assert!(r.is_err());
+    }
+
+    /// The shared-operator λ grid must reproduce the per-λ fits exactly
+    /// (same operator, same MINRES trajectory), and the batched multi-RHS
+    /// prediction must match per-model prediction.
+    #[test]
+    fn lambda_grid_and_batch_predict_match_singles() {
+        let data = toy_dataset(105, 45, 7, 6);
+        let cfg = RidgeConfig { max_iters: 120, rel_tol: 1e-12, ..Default::default() };
+        let lambdas = [0.1, 1.0, 10.0];
+        let grid =
+            PairwiseRidge::fit_lambda_grid(&data, PairwiseKernel::Kronecker, &cfg, &lambdas)
+                .unwrap();
+        assert_eq!(grid.len(), 3);
+        let mut rng = Xoshiro256::seed_from(106);
+        let test_pairs = gen::pair_sample(&mut rng, 15, 7, 6);
+        let batch = RidgeModel::predict_batch(&grid, &test_pairs).unwrap();
+        assert_eq!(batch.shape(), (15, 3));
+        for (li, &lambda) in lambdas.iter().enumerate() {
+            let single = PairwiseRidge::fit(
+                &data,
+                PairwiseKernel::Kronecker,
+                &RidgeConfig { lambda, ..cfg.clone() },
+            )
+            .unwrap();
+            for (a, b) in grid[li].alpha.iter().zip(&single.alpha) {
+                assert!((a - b).abs() < 1e-10, "λ={lambda}: {a} vs {b}");
+            }
+            let preds = single.predict(&test_pairs).unwrap();
+            let col = batch.column(li);
+            for (a, b) in col.iter().zip(&preds) {
+                assert!((a - b).abs() < 1e-8, "λ={lambda} batched vs single");
+            }
+        }
+    }
+
+    #[test]
+    fn cross_validate_lambda_reports_grid() {
+        let mut data = toy_dataset(107, 90, 9, 8);
+        data.y = data.y.iter().map(|&v| if v > 0.0 { 1.0 } else { 0.0 }).collect();
+        let cfg = RidgeConfig { max_iters: 40, ..Default::default() };
+        let lambdas = [1e-3, 1.0];
+        let report = PairwiseRidge::cross_validate_lambda(
+            &data,
+            1,
+            PairwiseKernel::Kronecker,
+            &lambdas,
+            &cfg,
+            3,
+            11,
+        )
+        .unwrap();
+        assert_eq!(report.mean_auc.len(), 2);
+        assert_eq!(report.cells.len(), 6, "3 folds × 2 λ");
+        assert!(lambdas.contains(&report.best_lambda));
+        for (_, a) in &report.mean_auc {
+            assert!((0.0..=1.0).contains(a));
+        }
     }
 }

@@ -41,6 +41,21 @@ impl GroupBy {
         self.offsets.len() - 1
     }
 
+    /// The CSR offset array: `offsets()[k]..offsets()[k+1]` indexes
+    /// [`Self::positions`] for key `k`. Length `domain() + 1`.
+    #[inline]
+    pub fn offsets(&self) -> &[u32] {
+        &self.offsets
+    }
+
+    /// All row positions, grouped by key (the CSR payload). The GVT
+    /// stage-1 kernels stream this directly instead of calling
+    /// [`Self::group`] per key.
+    #[inline]
+    pub fn positions(&self) -> &[u32] {
+        &self.rows
+    }
+
     /// Row positions whose key is `k`.
     #[inline]
     pub fn group(&self, k: usize) -> &[u32] {

@@ -2,7 +2,7 @@
 //! pairs. Rows of any pairwise kernel matrix are indexed by such a sample.
 
 use crate::sparse::GroupBy;
-use std::sync::OnceLock;
+use std::sync::{Arc, OnceLock};
 
 /// A sample of `n` (drug, target) pairs over index domains
 /// `0..m` (drugs) and `0..q` (targets).
@@ -14,14 +14,21 @@ use std::sync::OnceLock;
 /// index plumbing only (`R(d,t)P = R(t,d)`, `R(d,t)Q = R(d,d)`), exposed
 /// here as [`PairIndex::swapped`] and [`PairIndex::dupe_drugs`] /
 /// [`PairIndex::dupe_targets`].
+///
+/// The index buffers are `Arc`-shared: cloning a sample, and every
+/// `P`/`Q` transform, is O(1) and allocation-free. An MLPK operator holds
+/// 10 transformed samples of its row and column samples — with shared
+/// buffers those are views, not copies. The `Arc` identity doubles as the
+/// sample-coincidence key used by [`crate::gvt::plan::GvtPlan`] to fuse
+/// terms whose stage-1 or stage-2 index streams are byte-identical.
 #[derive(Clone, Debug)]
 pub struct PairIndex {
-    drugs: Vec<u32>,
-    targets: Vec<u32>,
+    drugs: Arc<Vec<u32>>,
+    targets: Arc<Vec<u32>>,
     m: usize,
     q: usize,
-    by_drug: OnceLock<GroupBy>,
-    by_target: OnceLock<GroupBy>,
+    by_drug: OnceLock<Arc<GroupBy>>,
+    by_target: OnceLock<Arc<GroupBy>>,
 }
 
 impl PairIndex {
@@ -37,7 +44,14 @@ impl PairIndex {
             targets.iter().all(|&t| (t as usize) < q),
             "target index out of range (q={q})"
         );
-        Self { drugs, targets, m, q, by_drug: OnceLock::new(), by_target: OnceLock::new() }
+        Self {
+            drugs: Arc::new(drugs),
+            targets: Arc::new(targets),
+            m,
+            q,
+            by_drug: OnceLock::new(),
+            by_target: OnceLock::new(),
+        }
     }
 
     /// The complete sample: every (drug, target) combination, row-major in
@@ -93,30 +107,91 @@ impl PairIndex {
     /// Borrow the raw drug index vector.
     #[inline]
     pub fn drugs(&self) -> &[u32] {
-        &self.drugs
+        self.drugs.as_slice()
     }
 
     /// Borrow the raw target index vector.
     #[inline]
     pub fn targets(&self) -> &[u32] {
-        &self.targets
+        self.targets.as_slice()
+    }
+
+    /// Opaque identity of the drug-index buffer (Arc pointer). Two samples
+    /// sharing a buffer (via clone or a `P`/`Q` transform) report the same
+    /// key; [`crate::gvt::plan::GvtPlan`] uses this to detect coinciding
+    /// index streams without comparing contents.
+    #[inline]
+    pub fn drugs_key(&self) -> usize {
+        Arc::as_ptr(&self.drugs) as usize
+    }
+
+    /// Opaque identity of the target-index buffer (see [`Self::drugs_key`]).
+    #[inline]
+    pub fn targets_key(&self) -> usize {
+        Arc::as_ptr(&self.targets) as usize
+    }
+
+    /// Do two samples index the *same* pairs over the same domains, as
+    /// witnessed by shared buffers? (No content comparison: `false` only
+    /// means "not provably identical".)
+    pub fn same_view(&self, other: &PairIndex) -> bool {
+        self.m == other.m
+            && self.q == other.q
+            && Arc::ptr_eq(&self.drugs, &other.drugs)
+            && Arc::ptr_eq(&self.targets, &other.targets)
+    }
+
+    /// Do two samples index the same pairs over the same domains? Fast
+    /// path via [`Self::same_view`] (shared buffers), falling back to an
+    /// `O(n)` content comparison — use this where correctness, not plan
+    /// dedup, is at stake (e.g. batching models reloaded from disk whose
+    /// buffers are fresh allocations).
+    pub fn same_pairs(&self, other: &PairIndex) -> bool {
+        self.same_view(other)
+            || (self.m == other.m
+                && self.q == other.q
+                && self.drugs() == other.drugs()
+                && self.targets() == other.targets())
     }
 
     /// `R(d,t) P = R(t,d)` — swap the roles of drugs and targets.
     /// Only meaningful when composed against operators over the matching
-    /// domains (homogeneous case, or a `T ⊗ D` term).
+    /// domains (homogeneous case, or a `T ⊗ D` term). O(1): buffers are
+    /// shared, and already-built groupings carry over with roles swapped.
     pub fn swapped(&self) -> PairIndex {
-        PairIndex::new(self.targets.clone(), self.drugs.clone(), self.q, self.m)
+        PairIndex {
+            drugs: self.targets.clone(),
+            targets: self.drugs.clone(),
+            m: self.q,
+            q: self.m,
+            by_drug: self.by_target.clone(),
+            by_target: self.by_drug.clone(),
+        }
     }
 
     /// `R(d,t) Q = R(d,d)` — duplicate the drug index into both slots.
+    /// O(1): both slots share the drug buffer (and its grouping cache).
     pub fn dupe_drugs(&self) -> PairIndex {
-        PairIndex::new(self.drugs.clone(), self.drugs.clone(), self.m, self.m)
+        PairIndex {
+            drugs: self.drugs.clone(),
+            targets: self.drugs.clone(),
+            m: self.m,
+            q: self.m,
+            by_drug: self.by_drug.clone(),
+            by_target: self.by_drug.clone(),
+        }
     }
 
     /// `R(d,t) P Q = R(t,t)` — duplicate the target index into both slots.
     pub fn dupe_targets(&self) -> PairIndex {
-        PairIndex::new(self.targets.clone(), self.targets.clone(), self.q, self.q)
+        PairIndex {
+            drugs: self.targets.clone(),
+            targets: self.targets.clone(),
+            m: self.q,
+            q: self.q,
+            by_drug: self.by_target.clone(),
+            by_target: self.by_target.clone(),
+        }
     }
 
     /// Take the sub-sample at `rows` (for train/test splits).
@@ -130,7 +205,7 @@ impl PairIndex {
     pub fn distinct_drugs(&self) -> usize {
         let mut seen = vec![false; self.m];
         let mut c = 0;
-        for &d in &self.drugs {
+        for &d in self.drugs.iter() {
             if !seen[d as usize] {
                 seen[d as usize] = true;
                 c += 1;
@@ -143,7 +218,7 @@ impl PairIndex {
     pub fn distinct_targets(&self) -> usize {
         let mut seen = vec![false; self.q];
         let mut c = 0;
-        for &t in &self.targets {
+        for &t in self.targets.iter() {
             if !seen[t as usize] {
                 seen[t as usize] = true;
                 c += 1;
@@ -152,14 +227,31 @@ impl PairIndex {
         c
     }
 
-    /// CSR grouping of pair rows by drug index (cached; built once).
+    /// CSR grouping of pair rows by drug index (cached; built once and
+    /// shared across clones/transforms made *after* the build).
     pub fn by_drug(&self) -> &GroupBy {
-        self.by_drug.get_or_init(|| GroupBy::build(&self.drugs, self.m))
+        self.by_drug
+            .get_or_init(|| Arc::new(GroupBy::build(self.drugs.as_slice(), self.m)))
+            .as_ref()
     }
 
     /// CSR grouping of pair rows by target index (cached; built once).
     pub fn by_target(&self) -> &GroupBy {
-        self.by_target.get_or_init(|| GroupBy::build(&self.targets, self.q))
+        self.by_target
+            .get_or_init(|| Arc::new(GroupBy::build(self.targets.as_slice(), self.q)))
+            .as_ref()
+    }
+
+    /// Shared handle to the drug grouping (builds it if needed).
+    pub fn by_drug_arc(&self) -> Arc<GroupBy> {
+        self.by_drug();
+        self.by_drug.get().expect("just initialized").clone()
+    }
+
+    /// Shared handle to the target grouping (builds it if needed).
+    pub fn by_target_arc(&self) -> Arc<GroupBy> {
+        self.by_target();
+        self.by_target.get().expect("just initialized").clone()
     }
 }
 
@@ -223,5 +315,40 @@ mod tests {
     #[should_panic(expected = "out of range")]
     fn rejects_out_of_range() {
         PairIndex::new(vec![3], vec![0], 3, 3);
+    }
+
+    #[test]
+    fn transforms_share_buffers() {
+        let p = sample();
+        // Clones and transforms alias the original buffers (O(1), no copy).
+        assert_eq!(p.clone().drugs_key(), p.drugs_key());
+        let sw = p.swapped();
+        assert_eq!(sw.drugs_key(), p.targets_key());
+        assert_eq!(sw.targets_key(), p.drugs_key());
+        let dd = p.dupe_drugs();
+        assert_eq!(dd.drugs_key(), p.drugs_key());
+        assert_eq!(dd.targets_key(), p.drugs_key());
+        // Identical transforms are provably the same view.
+        assert!(p.dupe_drugs().same_view(&dd));
+        assert!(p.swapped().same_view(&sw));
+        assert!(!sw.same_view(&p));
+        // A deep copy via new() is NOT provably identical (fresh buffers)
+        // — but the content-comparing predicate still recognizes it.
+        let fresh = PairIndex::new(p.drugs().to_vec(), p.targets().to_vec(), 3, 3);
+        assert!(!fresh.same_view(&p));
+        assert!(fresh.same_pairs(&p));
+        assert!(!fresh.same_pairs(&p.swapped()));
+    }
+
+    #[test]
+    fn swapped_inherits_grouping_cache() {
+        let p = sample();
+        // Build the target grouping, then check the swapped view's drug
+        // grouping is the same object (groups of the shared buffer).
+        let _ = p.by_target();
+        let sw = p.swapped();
+        for k in 0..3 {
+            assert_eq!(sw.by_drug().group(k), p.by_target().group(k));
+        }
     }
 }

@@ -1,0 +1,155 @@
+//! Zero-allocation guarantee for solver inner loops: after workspace
+//! warmup, `PairwiseLinOp::apply_into` — the entire per-iteration cost of
+//! MINRES/CG training — performs **no heap allocation**. Verified with a
+//! counting global allocator.
+//!
+//! The whole file runs with `GVT_RLS_THREADS=1` (set before any
+//! parallel-path call; the thread-count cache is process-global, hence
+//! the dedicated test binary with a single test): scoped-thread spawns
+//! allocate, and forcing the inline path keeps the measurement about the
+//! GVT workspace, which is what the guarantee covers — multi-threaded
+//! runs allocate only thread stacks, never GVT intermediates.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::ops::ControlFlow;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTING: CountingAlloc = CountingAlloc;
+
+fn allocations() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+#[test]
+fn solver_iterations_are_allocation_free_after_warmup() {
+    std::env::set_var("GVT_RLS_THREADS", "1");
+
+    use gvt_rls::gvt::pairwise::{PairwiseKernel, PairwiseLinOp};
+    use gvt_rls::gvt::vec_trick::GvtPolicy;
+    use gvt_rls::rng::{dist, Xoshiro256};
+    use gvt_rls::solvers::cg::{cg, CgOptions};
+    use gvt_rls::solvers::linear_op::{LinOp, ShiftedOp};
+    use gvt_rls::solvers::minres::{minres, MinresOptions};
+    use gvt_rls::testing::gen;
+    use std::sync::Arc;
+
+    let mut rng = Xoshiro256::seed_from(9);
+    let m = 12;
+    let n = 60;
+    let d = Arc::new(gen::psd_kernel(&mut rng, m));
+    let sample = gen::homogeneous_sample(&mut rng, n, m);
+    let a = dist::normal_vec(&mut rng, n);
+    let y = dist::normal_vec(&mut rng, n);
+
+    // --- direct apply_into, every kernel (MLPK covers pooled + shared
+    // stage-1 + accumulated stage-2; Cartesian covers the misc scratch
+    // path) -------------------------------------------------------------
+    for kernel in PairwiseKernel::ALL {
+        let op = PairwiseLinOp::new(
+            kernel,
+            d.clone(),
+            d.clone(),
+            sample.clone(),
+            sample.clone(),
+            GvtPolicy::Auto,
+        )
+        .unwrap();
+        let mut out = vec![0.0; n];
+        // Warmup: sizes the workspace, builds grouping caches, reads the
+        // cached env knobs.
+        op.apply_into(&a, &mut out);
+        op.apply_into(&a, &mut out);
+        let before = allocations();
+        op.apply_into(&a, &mut out);
+        op.apply_into(&a, &mut out);
+        let after = allocations();
+        assert_eq!(
+            after - before,
+            0,
+            "{kernel:?}: apply_into allocated after warmup"
+        );
+    }
+
+    // --- MINRES: no allocations between consecutive iterations after
+    // the first (workspace-warming) iteration ---------------------------
+    let op = PairwiseLinOp::new(
+        PairwiseKernel::Mlpk,
+        d.clone(),
+        d.clone(),
+        sample.clone(),
+        sample.clone(),
+        GvtPolicy::Auto,
+    )
+    .unwrap();
+    let shifted = ShiftedOp::new(&op, 1e-3);
+    let mut counts = [0u64; 8];
+    let mut last_k = 0usize;
+    let _ = minres(
+        &shifted,
+        &y,
+        &MinresOptions { max_iters: 6, rel_tol: 0.0 },
+        |k, _x, _rel| {
+            if k <= counts.len() {
+                counts[k - 1] = allocations();
+            }
+            last_k = k;
+            ControlFlow::Continue(())
+        },
+    );
+    assert!(last_k >= 4, "MINRES stopped too early for the check ({last_k})");
+    for k in 2..last_k.min(counts.len()) {
+        assert_eq!(
+            counts[k],
+            counts[k - 1],
+            "MINRES iteration {} allocated on the heap",
+            k + 1
+        );
+    }
+
+    // --- CG: same guarantee (K + λI is SPD) ----------------------------
+    let mut counts = [0u64; 8];
+    let mut last_k = 0usize;
+    let _ = cg(
+        &shifted,
+        &y,
+        None,
+        &CgOptions { max_iters: 6, rel_tol: 0.0 },
+        |k, _x, _rel| {
+            if k <= counts.len() {
+                counts[k - 1] = allocations();
+            }
+            last_k = k;
+            ControlFlow::Continue(())
+        },
+    );
+    assert!(last_k >= 4, "CG stopped too early for the check ({last_k})");
+    for k in 2..last_k.min(counts.len()) {
+        assert_eq!(
+            counts[k],
+            counts[k - 1],
+            "CG iteration {} allocated on the heap",
+            k + 1
+        );
+    }
+}

@@ -1,0 +1,225 @@
+//! Fused-plan integration properties: the compiled [`GvtPlan`] execution
+//! must be indistinguishable from (a) the isolated per-term path and
+//! (b) the `O(terms)` scalar entry oracle, for every kernel, on
+//! homogeneous and heterogeneous samples; the multi-RHS block product
+//! must equal a column loop; and workspace reuse must be idempotent.
+
+use gvt_rls::gvt::pairwise::{PairwiseKernel, PairwiseLinOp};
+use gvt_rls::gvt::plan::gvt_matmat;
+use gvt_rls::gvt::vec_trick::{gvt_matvec, GvtPolicy};
+use gvt_rls::linalg::Mat;
+use gvt_rls::rng::{dist, Xoshiro256};
+use gvt_rls::solvers::linear_op::LinOp;
+use gvt_rls::testing::{gen, property, Prop};
+use std::sync::Arc;
+
+/// `K a` via the per-entry scalar oracle — independent of both GVT paths.
+fn entry_oracle(op: &PairwiseLinOp, a: &[f64]) -> Vec<f64> {
+    let nbar = op.rows().len();
+    let n = op.cols().len();
+    let mut out = vec![0.0; nbar];
+    for i in 0..nbar {
+        let mut acc = 0.0;
+        for j in 0..n {
+            acc += op.entry(i, j) * a[j];
+        }
+        out[i] = acc;
+    }
+    out
+}
+
+#[test]
+fn fused_matches_unfused_and_oracle_homogeneous() {
+    property("fused == unfused == oracle (homogeneous)", 20, |rng, size| {
+        let m = 3 + size / 4;
+        let n = 4 + size * 3;
+        let nbar = 3 + size * 2;
+        let d = Arc::new(gen::psd_kernel(rng, m));
+        let rows = gen::homogeneous_sample(rng, nbar, m);
+        let cols = gen::homogeneous_sample(rng, n, m);
+        let a = dist::normal_vec(rng, n);
+        for kernel in PairwiseKernel::ALL {
+            let op = PairwiseLinOp::new(
+                kernel,
+                d.clone(),
+                d.clone(),
+                rows.clone(),
+                cols.clone(),
+                GvtPolicy::Auto,
+            )
+            .unwrap();
+            let fused = op.matvec(&a);
+            let mut unfused = vec![0.0; nbar];
+            op.matvec_into_unfused(&a, &mut unfused);
+            let oracle = entry_oracle(&op, &a);
+            if let p @ Prop::Fail(_) = Prop::all_close(
+                &fused,
+                &unfused,
+                1e-9,
+                &format!("{kernel:?}: fused vs unfused"),
+            ) {
+                return p;
+            }
+            if let p @ Prop::Fail(_) = Prop::all_close(
+                &fused,
+                &oracle,
+                1e-8,
+                &format!("{kernel:?}: fused vs entry oracle"),
+            ) {
+                return p;
+            }
+        }
+        Prop::Pass
+    });
+}
+
+#[test]
+fn fused_matches_unfused_and_oracle_heterogeneous() {
+    property("fused == unfused == oracle (heterogeneous)", 20, |rng, size| {
+        let m = 3 + size / 3;
+        let q = 2 + size / 2;
+        let n = 4 + size * 3;
+        let nbar = 3 + size * 2;
+        let d = Arc::new(gen::psd_kernel(rng, m));
+        let t = Arc::new(gen::psd_kernel(rng, q));
+        let rows = gen::pair_sample(rng, nbar, m, q);
+        let cols = gen::pair_sample(rng, n, m, q);
+        let a = dist::normal_vec(rng, n);
+        for kernel in PairwiseKernel::ALL {
+            if !kernel.supports_heterogeneous() {
+                continue;
+            }
+            let op = PairwiseLinOp::new(
+                kernel,
+                d.clone(),
+                t.clone(),
+                rows.clone(),
+                cols.clone(),
+                GvtPolicy::Auto,
+            )
+            .unwrap();
+            let fused = op.matvec(&a);
+            let mut unfused = vec![0.0; nbar];
+            op.matvec_into_unfused(&a, &mut unfused);
+            let oracle = entry_oracle(&op, &a);
+            if let p @ Prop::Fail(_) = Prop::all_close(
+                &fused,
+                &unfused,
+                1e-9,
+                &format!("{kernel:?}: fused vs unfused"),
+            ) {
+                return p;
+            }
+            if let p @ Prop::Fail(_) = Prop::all_close(
+                &fused,
+                &oracle,
+                1e-8,
+                &format!("{kernel:?}: fused vs entry oracle"),
+            ) {
+                return p;
+            }
+        }
+        Prop::Pass
+    });
+}
+
+#[test]
+fn operator_matmat_matches_column_loop() {
+    property("matmat == column loop (all kernels)", 12, |rng, size| {
+        let m = 3 + size / 4;
+        let n = 6 + size * 2;
+        let nbar = 4 + size;
+        let b = 1 + size % 5;
+        let d = Arc::new(gen::psd_kernel(rng, m));
+        let rows = gen::homogeneous_sample(rng, nbar, m);
+        let cols = gen::homogeneous_sample(rng, n, m);
+        let columns: Vec<Vec<f64>> = (0..b).map(|_| dist::normal_vec(rng, n)).collect();
+        let refs: Vec<&[f64]> = columns.iter().map(|v| v.as_slice()).collect();
+        let ab = Mat::from_columns(&refs);
+        for kernel in PairwiseKernel::ALL {
+            let op = PairwiseLinOp::new(
+                kernel,
+                d.clone(),
+                d.clone(),
+                rows.clone(),
+                cols.clone(),
+                GvtPolicy::Auto,
+            )
+            .unwrap();
+            let block = op.matmat(&ab);
+            for (bb, col) in columns.iter().enumerate() {
+                let single = op.matvec(col);
+                if let p @ Prop::Fail(_) = Prop::all_close(
+                    &block.column(bb),
+                    &single,
+                    1e-9,
+                    &format!("{kernel:?}: matmat col {bb}"),
+                ) {
+                    return p;
+                }
+            }
+        }
+        Prop::Pass
+    });
+}
+
+#[test]
+fn free_gvt_matmat_matches_column_loop() {
+    property("gvt_matmat == per-column gvt_matvec", 16, |rng, size| {
+        let m = 3 + size / 3;
+        let q = 2 + size / 2;
+        let n = 5 + size * 2;
+        let nbar = 4 + size;
+        let b = 1 + size % 4;
+        let am = gen::psd_kernel(rng, m);
+        let bm = gen::psd_kernel(rng, q);
+        let rows = gen::pair_sample(rng, nbar, m, q);
+        let cols = gen::pair_sample(rng, n, m, q);
+        let columns: Vec<Vec<f64>> = (0..b).map(|_| dist::normal_vec(rng, n)).collect();
+        let refs: Vec<&[f64]> = columns.iter().map(|v| v.as_slice()).collect();
+        let ab = Mat::from_columns(&refs);
+        for policy in [GvtPolicy::Auto, GvtPolicy::SparseLeft, GvtPolicy::SparseRight] {
+            let block = gvt_matmat(&am, &bm, &rows, &cols, &ab, policy);
+            for (bb, col) in columns.iter().enumerate() {
+                let single = gvt_matvec(&am, &bm, &rows, &cols, col, policy);
+                if let p @ Prop::Fail(_) = Prop::all_close(
+                    &block.column(bb),
+                    &single,
+                    1e-9,
+                    &format!("{policy:?}: col {bb}"),
+                ) {
+                    return p;
+                }
+            }
+        }
+        Prop::Pass
+    });
+}
+
+/// Two consecutive `apply_into` calls through the operator-owned
+/// workspace must give bit-identical results (buffers are fully
+/// overwritten, never accumulated across calls).
+#[test]
+fn workspace_reuse_identical_results() {
+    let mut rng = Xoshiro256::seed_from(77);
+    let m = 10;
+    let d = Arc::new(gen::psd_kernel(&mut rng, m));
+    let sample = gen::homogeneous_sample(&mut rng, 60, m);
+    let a = dist::normal_vec(&mut rng, 60);
+    for kernel in PairwiseKernel::ALL {
+        let op = PairwiseLinOp::new(
+            kernel,
+            d.clone(),
+            d.clone(),
+            sample.clone(),
+            sample.clone(),
+            GvtPolicy::Auto,
+        )
+        .unwrap();
+        let mut y1 = vec![0.0; 60];
+        let mut y2 = vec![f64::NAN; 60]; // dirty output buffer
+        op.apply_into(&a, &mut y1);
+        op.apply_into(&a, &mut y2);
+        assert_eq!(y1, y2, "{kernel:?}: workspace reuse changed the result");
+    }
+}

@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# Perf-trajectory seeding: run the per-kernel GVT mat-vec bench
+# (n ∈ {4k, 16k}, all 8 kernels, fused + unfused ablation rows) and write
+# the results to BENCH_gvt.json at the repo root so future PRs can prove
+# speedups against recorded numbers.
+#
+# Usage: scripts/bench.sh            # full sizes (~minutes)
+#        GVT_RLS_BENCH_QUICK=1 scripts/bench.sh   # small sizes, fast
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+# Quick/smoke runs use reduced problem sizes — keep them away from the
+# canonical BENCH_gvt.json so they can't clobber the full-size
+# perf-trajectory numbers.
+if [[ -n "${GVT_RLS_BENCH_QUICK:-}" || -n "${GVT_BENCH_SMOKE:-}" ]]; then
+  default_json="$PWD/BENCH_gvt_quick.json"
+else
+  default_json="$PWD/BENCH_gvt.json"
+fi
+export GVT_RLS_BENCH_JSON="${GVT_RLS_BENCH_JSON:-$default_json}"
+
+echo "== bench_pairwise_kernels → ${GVT_RLS_BENCH_JSON} =="
+cargo bench --offline --bench bench_pairwise_kernels
+
+echo "bench.sh: wrote ${GVT_RLS_BENCH_JSON}"

@@ -16,4 +16,16 @@ cargo test -q --offline
 echo "== benches + examples compile (kept in the workspace) =="
 cargo build --offline --benches --examples
 
+echo "== benches execute (smoke mode: 1 warmup + 1 iter, tiny sizes) =="
+# GVT_BENCH_SMOKE=1 makes every harness = false bench run a minimal
+# configuration (see rust/src/bench/mod.rs) so bench code is executed —
+# not just compiled — on every verify and cannot bit-rot silently. The
+# list is derived from rust/benches/*.rs so new benches are picked up
+# automatically.
+for bench_file in rust/benches/*.rs; do
+  bench="$(basename "$bench_file" .rs)"
+  echo "-- $bench (smoke)"
+  GVT_BENCH_SMOKE=1 cargo bench --offline --bench "$bench" >/dev/null
+done
+
 echo "verify.sh: OK"
