@@ -1,0 +1,200 @@
+//! Serving-path benchmark: micro-batched vs per-request scoring, plus
+//! request-latency percentiles through a live batcher.
+//!
+//! For each batch size `b ∈ {1, 8, 64, 256}` two rows are measured:
+//!
+//! * `serve batched     b=N` — one `Predictor::score` call carrying `b`
+//!   pairs (one operator build + one GVT pass for the batch);
+//! * `serve per-request b=N` — `b` separate 1-pair `score` calls (the
+//!   no-batching ablation: every request pays the full stage-1 streaming
+//!   of the training sample's index arrays).
+//!
+//! The acceptance signal is the batched row beating `b ×` the per-pair
+//! cost of the per-request row from `b ≥ 8` — the `speedup@b` meta
+//! entries in BENCH_serve.json record exactly that ratio. A final
+//! section drives a live [`Batcher`] with concurrent 1-pair clients and
+//! reports p50/p99 request latency per batching window.
+//!
+//! Set `GVT_RLS_BENCH_JSON=<path>` to emit the suite as JSON —
+//! scripts/bench.sh points it at BENCH_serve.json in the repo root.
+
+use gvt_rls::bench::{reduced_size, BenchConfig, BenchSuite};
+use gvt_rls::data::metz::MetzConfig;
+use gvt_rls::gvt::pairwise::PairwiseKernel;
+use gvt_rls::rng::Xoshiro256;
+use gvt_rls::serve::{BatchConfig as ServeBatch, Batcher, Predictor, QueryPair, ServeOptions};
+use gvt_rls::solvers::ridge::{PairwiseRidge, RidgeConfig};
+use gvt_rls::testing::gen;
+use std::hint::black_box;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn percentile(sorted: &[Duration], p: f64) -> Duration {
+    if sorted.is_empty() {
+        return Duration::ZERO;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let mut suite = BenchSuite::new();
+
+    // Problem: a Metz-like drug–target task. The serving cost model is
+    // dominated by the training-sample size n (stage 1 streams it once
+    // per pass), so n is the knob.
+    let data = if reduced_size() {
+        MetzConfig::small().generate(42)
+    } else {
+        MetzConfig::paper().generate(42)
+    };
+    let (m, q) = (data.pairs.m(), data.pairs.q());
+    println!(
+        "# bench_serve — online inference over '{}' ({} training pairs, {}x{} domains)\n",
+        data.name,
+        data.len(),
+        m,
+        q
+    );
+    let ridge_cfg = RidgeConfig {
+        max_iters: if reduced_size() { 15 } else { 60 },
+        ..Default::default()
+    };
+    let model = PairwiseRidge::fit(&data, PairwiseKernel::Kronecker, &ridge_cfg)
+        .expect("training the serving model");
+    let predictor =
+        Arc::new(Predictor::new(model, None, None, ServeOptions::default()).unwrap());
+    println!(
+        "policy {} | plan [{}]\n",
+        predictor.policy().name(),
+        predictor.plan_summary()
+    );
+
+    // A pool of in-domain queries to draw batches from.
+    let mut rng = Xoshiro256::seed_from(7);
+    let pool_size = 4096.max(256);
+    let pool_idx = gen::pair_sample(&mut rng, pool_size, m, q);
+    let pool: Vec<QueryPair> = (0..pool_size)
+        .map(|i| QueryPair::known(pool_idx.drug(i) as u32, pool_idx.target(i) as u32))
+        .collect();
+
+    let batch_sizes: &[usize] = if reduced_size() { &[1, 8, 64] } else { &[1, 8, 64, 256] };
+    let mut speedups: Vec<(usize, f64)> = Vec::new();
+    for &b in batch_sizes {
+        let mut off = 0usize;
+        let batched_mean = suite
+            .run(&format!("serve batched     b={b:<3}"), &cfg, || {
+                let chunk = &pool[off..off + b];
+                off = (off + b) % (pool.len() - b);
+                black_box(predictor.score(black_box(chunk)).unwrap());
+            })
+            .mean
+            .as_secs_f64();
+        let mut off2 = 0usize;
+        let per_req_mean = suite
+            .run(&format!("serve per-request b={b:<3}"), &cfg, || {
+                for k in 0..b {
+                    let at = (off2 + k) % pool.len();
+                    let one = &pool[at..at + 1];
+                    black_box(predictor.score(black_box(one)).unwrap());
+                }
+                off2 = (off2 + b) % (pool.len() - b);
+            })
+            .mean
+            .as_secs_f64();
+        let speedup = per_req_mean / batched_mean.max(1e-12);
+        let thru = b as f64 / batched_mean.max(1e-12);
+        println!(
+            "    b={b}: batched {:.3} ms ({:.0} pairs/s) vs per-request {:.3} ms → {speedup:.2}x",
+            batched_mean * 1e3,
+            thru,
+            per_req_mean * 1e3
+        );
+        speedups.push((b, speedup));
+    }
+
+    // Latency distribution through the live dispatcher: concurrent
+    // 1-pair clients, one batching window.
+    let clients = 4usize;
+    let per_client = if reduced_size() { 8usize } else { 64 };
+    let mut latency_meta: Vec<(usize, Duration, Duration)> = Vec::new();
+    for &window_us in &[0u64, 200] {
+        let batcher = Batcher::start(
+            predictor.clone(),
+            ServeBatch {
+                max_batch: 64,
+                max_wait: Duration::from_micros(window_us),
+            },
+        );
+        let mut threads = Vec::new();
+        for c in 0..clients {
+            let handle = batcher.handle();
+            let queries: Vec<QueryPair> = (0..per_client)
+                .map(|k| pool[(c * per_client + k) % pool.len()].clone())
+                .collect();
+            threads.push(std::thread::spawn(move || {
+                let mut lat = Vec::with_capacity(queries.len());
+                for query in queries {
+                    let t0 = Instant::now();
+                    let _ = handle.score(vec![query]).unwrap();
+                    lat.push(t0.elapsed());
+                }
+                lat
+            }));
+        }
+        let mut lat: Vec<Duration> = Vec::new();
+        for th in threads {
+            lat.extend(th.join().unwrap());
+        }
+        batcher.shutdown();
+        lat.sort();
+        let (p50, p99) = (percentile(&lat, 0.50), percentile(&lat, 0.99));
+        println!(
+            "latency window={window_us}us clients={clients}: p50 {:.1} µs, p99 {:.1} µs ({} reqs)",
+            p50.as_secs_f64() * 1e6,
+            p99.as_secs_f64() * 1e6,
+            lat.len()
+        );
+        latency_meta.push((window_us as usize, p50, p99));
+    }
+
+    let stats = predictor.stats();
+    println!(
+        "\ndispatcher: {} requests in {} batches (max {} pairs/batch)\n",
+        stats.requests, stats.batches, stats.batch_pairs_max
+    );
+    println!("{}", suite.table());
+
+    if let Ok(path) = std::env::var("GVT_RLS_BENCH_JSON") {
+        let mut meta: Vec<(&str, String)> = vec![
+            ("bench", "bench_serve".to_string()),
+            ("train_pairs", data.len().to_string()),
+            ("domains", format!("{m}x{q}")),
+            ("kernel", "kronecker".to_string()),
+            ("policy", predictor.policy().name().to_string()),
+            (
+                "speedups",
+                speedups
+                    .iter()
+                    .map(|(b, s)| format!("batched@{b}={s:.3}x"))
+                    .collect::<Vec<_>>()
+                    .join(";"),
+            ),
+        ];
+        let latency = latency_meta
+            .iter()
+            .map(|(w, p50, p99)| {
+                format!(
+                    "window{w}us:p50={:.1}us,p99={:.1}us",
+                    p50.as_secs_f64() * 1e6,
+                    p99.as_secs_f64() * 1e6
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(";");
+        meta.push(("latency", latency));
+        suite.write_json(&path, &meta).expect("writing bench JSON");
+        println!("wrote {path}");
+    }
+}

@@ -83,6 +83,11 @@ impl Cli {
         }
     }
 
+    /// A mandatory option (`predict`/`serve` require `--model` etc.).
+    pub fn require_opt(&self, name: &str) -> Result<&str> {
+        self.opt(name).ok_or_else(|| gvt_err!("missing required option --{name}"))
+    }
+
     pub fn has_switch(&self, name: &str) -> bool {
         self.switches.iter().any(|s| s == name)
     }
@@ -118,5 +123,13 @@ mod tests {
     fn numeric_errors() {
         let c = parse("x --n abc");
         assert!(c.opt_usize("n", 1).is_err());
+    }
+
+    #[test]
+    fn require_opt_reports_the_flag() {
+        let c = parse("serve --model m.txt");
+        assert_eq!(c.require_opt("model").unwrap(), "m.txt");
+        let err = format!("{}", c.require_opt("pairs").unwrap_err());
+        assert!(err.contains("--pairs"), "{err}");
     }
 }

@@ -178,8 +178,11 @@ pub struct PairwiseLinOp {
     kernel: PairwiseKernel,
     d: Arc<Mat>,
     t: Arc<Mat>,
-    dsq: Option<Mat>,
-    tsq: Option<Mat>,
+    /// `D^{⊙2}` / `T^{⊙2}`, Arc-shared so [`Self::with_rows`] rebuilds
+    /// (serving: a fresh row sample per request batch) skip recomputing
+    /// the Hadamard squares of the full-domain matrices.
+    dsq: Option<Arc<Mat>>,
+    tsq: Option<Arc<Mat>>,
     rows: PairIndex,
     cols: PairIndex,
     policy: GvtPolicy,
@@ -207,6 +210,27 @@ impl PairwiseLinOp {
         kernel: PairwiseKernel,
         d: Arc<Mat>,
         t: Arc<Mat>,
+        rows: PairIndex,
+        cols: PairIndex,
+        policy: GvtPolicy,
+    ) -> Result<Self> {
+        let needs_sq = kernel.needs_squares();
+        let dsq = if needs_sq { Some(Arc::new(d.hadamard_square())) } else { None };
+        let tsq = if needs_sq { Some(Arc::new(t.hadamard_square())) } else { None };
+        Self::assemble(kernel, d, t, dsq, tsq, rows, cols, policy)
+    }
+
+    /// Shared constructor body: validate shapes, pre-apply index
+    /// transforms, compile the fused plan. The squared matrices are
+    /// passed in (already wrapped) so the serving-path rebuilds can
+    /// share them across operator instances.
+    #[allow(clippy::too_many_arguments)]
+    fn assemble(
+        kernel: PairwiseKernel,
+        d: Arc<Mat>,
+        t: Arc<Mat>,
+        dsq: Option<Arc<Mat>>,
+        tsq: Option<Arc<Mat>>,
         rows: PairIndex,
         cols: PairIndex,
         policy: GvtPolicy,
@@ -242,9 +266,6 @@ impl PairwiseLinOp {
                 );
             }
         }
-        let needs_sq = kernel.needs_squares();
-        let dsq = needs_sq.then(|| d.hadamard_square());
-        let tsq = needs_sq.then(|| t.hadamard_square());
         // Pre-apply the P/Q index transforms once. With Arc-backed
         // PairIndex buffers each transform is an O(1) view, and identical
         // transforms share buffers — which is exactly what the plan
@@ -261,8 +282,8 @@ impl PairwiseLinOp {
         let ctx = TermContext {
             d: d.as_ref(),
             t: t.as_ref(),
-            dsq: dsq.as_ref(),
-            tsq: tsq.as_ref(),
+            dsq: dsq.as_deref(),
+            tsq: tsq.as_deref(),
         };
         let plan = GvtPlan::build(&terms, &ctx, policy, rows.len(), cols.len());
         Ok(Self {
@@ -278,6 +299,91 @@ impl PairwiseLinOp {
             plan,
             ws: Mutex::new(GvtWorkspace::new()),
         })
+    }
+
+    /// Rebuild this operator for a **new row sample** over the same
+    /// kernel matrices, column sample and policy — the serving hot path
+    /// (each request batch is a fresh row sample against the fixed
+    /// training sample). Reuses the `Arc`-shared kernel matrices and
+    /// their Hadamard squares, and the column sample's buffers and
+    /// grouping caches; only the (small) row-side transforms and the
+    /// plan's unit tables are rebuilt.
+    pub fn with_rows(&self, rows: PairIndex) -> Result<Self> {
+        Self::assemble(
+            self.kernel,
+            self.d.clone(),
+            self.t.clone(),
+            self.dsq.clone(),
+            self.tsq.clone(),
+            rows,
+            self.cols.clone(),
+            self.policy,
+        )
+    }
+
+    /// Rebuild for a new row sample **and** new row-side kernel
+    /// matrices (serving queries that reference objects outside the
+    /// training domains: `d`/`t` are batch-local cross-kernel matrices,
+    /// `rows.m()/q()` index their rows, columns still index the training
+    /// domains). The squares are recomputed — they are squares of the
+    /// batch-local matrices, `O(batch × domain)`.
+    pub fn reindexed(&self, d: Arc<Mat>, t: Arc<Mat>, rows: PairIndex) -> Result<Self> {
+        let needs_sq = self.kernel.needs_squares();
+        let dsq = if needs_sq { Some(Arc::new(d.hadamard_square())) } else { None };
+        let tsq = if needs_sq { Some(Arc::new(t.hadamard_square())) } else { None };
+        Self::assemble(
+            self.kernel,
+            d,
+            t,
+            dsq,
+            tsq,
+            rows,
+            self.cols.clone(),
+            self.policy,
+        )
+    }
+
+    /// Rebuild with a different factorization policy over the same
+    /// matrices and samples (serving pins `Auto` to a concrete mode at
+    /// startup). Shares the kernel matrices and their Hadamard squares;
+    /// only the plan is recompiled.
+    pub fn with_policy(&self, policy: GvtPolicy) -> Result<Self> {
+        Self::assemble(
+            self.kernel,
+            self.d.clone(),
+            self.t.clone(),
+            self.dsq.clone(),
+            self.tsq.clone(),
+            self.rows.clone(),
+            self.cols.clone(),
+            policy,
+        )
+    }
+
+    /// Take this operator's workspace out, leaving a fresh one. Paired
+    /// with [`Self::install_workspace`], this lets a long-lived owner (the
+    /// serving [`crate::serve::Predictor`]) carry one warm workspace
+    /// across many short-lived per-batch operators: buffers grow to the
+    /// training-side shapes once and are reused by every later batch.
+    pub fn take_workspace(&self) -> GvtWorkspace {
+        std::mem::take(&mut *self.ws.lock().expect("GVT workspace poisoned"))
+    }
+
+    /// Replace this operator's workspace (see [`Self::take_workspace`]).
+    pub fn install_workspace(&self, ws: GvtWorkspace) {
+        *self.ws.lock().expect("GVT workspace poisoned") = ws;
+    }
+
+    /// The concrete factorization the compiled plan executes (`Auto`
+    /// resolved; see [`GvtPlan::mode`]). Serving pins this so batched and
+    /// one-shot prediction share one floating-point evaluation order.
+    pub fn resolved_mode(&self) -> GvtPolicy {
+        self.plan.mode()
+    }
+
+    /// The policy this operator was built with (possibly `Auto`).
+    pub fn policy(&self) -> GvtPolicy {
+        self.policy
     }
 
     pub fn kernel(&self) -> PairwiseKernel {
@@ -302,8 +408,8 @@ impl PairwiseLinOp {
         TermContext {
             d: &self.d,
             t: &self.t,
-            dsq: self.dsq.as_ref(),
-            tsq: self.tsq.as_ref(),
+            dsq: self.dsq.as_deref(),
+            tsq: self.tsq.as_deref(),
         }
     }
 
@@ -537,6 +643,82 @@ mod tests {
         let kron = op(PairwiseKernel::Kronecker);
         assert_eq!(kron.plan().stage1_count(), 1);
         assert_eq!(kron.plan().stage2_count(), 1);
+    }
+
+    /// `with_rows` (the serving rebuild) must behave exactly like a
+    /// freshly constructed operator over the new row sample — including
+    /// for square-needing kernels, whose `D^{⊙2}`/`T^{⊙2}` it reuses.
+    #[test]
+    fn with_rows_matches_fresh_operator() {
+        let mut rng = Xoshiro256::seed_from(60);
+        let m = 6;
+        let d = Arc::new(gen::psd_kernel(&mut rng, m));
+        let train = gen::homogeneous_sample(&mut rng, 25, m);
+        let batch = gen::homogeneous_sample(&mut rng, 7, m);
+        let a = dist::normal_vec(&mut rng, 25);
+        for kernel in PairwiseKernel::ALL {
+            let template = PairwiseLinOp::new(
+                kernel,
+                d.clone(),
+                d.clone(),
+                train.clone(),
+                train.clone(),
+                GvtPolicy::SparseLeft,
+            )
+            .unwrap();
+            let rebuilt = template.with_rows(batch.clone()).unwrap();
+            // Warm-workspace carry-over: run the template once, then move
+            // its workspace into the rebuilt operator.
+            let _ = template.matvec(&a);
+            rebuilt.install_workspace(template.take_workspace());
+            let fresh = PairwiseLinOp::new(
+                kernel,
+                d.clone(),
+                d.clone(),
+                batch.clone(),
+                train.clone(),
+                GvtPolicy::SparseLeft,
+            )
+            .unwrap();
+            let p1 = rebuilt.matvec(&a);
+            let p2 = fresh.matvec(&a);
+            assert_eq!(p1, p2, "{kernel:?}: with_rows vs fresh");
+        }
+    }
+
+    /// `reindexed` swaps in batch-local (rectangular) cross matrices;
+    /// rows copied out of the full matrices must reproduce the full
+    /// operator's outputs bit-for-bit.
+    #[test]
+    fn reindexed_matches_submatrix_rows() {
+        let mut rng = Xoshiro256::seed_from(61);
+        let (m, q) = (5, 7);
+        let d = Arc::new(gen::psd_kernel(&mut rng, m));
+        let t = Arc::new(gen::psd_kernel(&mut rng, q));
+        let train = gen::pair_sample(&mut rng, 30, m, q);
+        let test = gen::pair_sample(&mut rng, 9, m, q);
+        let a = dist::normal_vec(&mut rng, 30);
+        let template = PairwiseLinOp::new(
+            PairwiseKernel::Poly2D,
+            d.clone(),
+            t.clone(),
+            train.clone(),
+            train.clone(),
+            GvtPolicy::SparseLeft,
+        )
+        .unwrap();
+        // Batch-local domains: one row per test pair (duplicates allowed).
+        let d_batch = Arc::new(d.gather_rows(&(0..test.len()).map(|i| test.drug(i)).collect::<Vec<_>>()));
+        let t_batch = Arc::new(t.gather_rows(&(0..test.len()).map(|i| test.target(i)).collect::<Vec<_>>()));
+        let rows = PairIndex::new(
+            (0..test.len() as u32).collect(),
+            (0..test.len() as u32).collect(),
+            test.len(),
+            test.len(),
+        );
+        let op = template.reindexed(d_batch, t_batch, rows).unwrap();
+        let full = template.with_rows(test.clone()).unwrap();
+        assert_eq!(op.matvec(&a), full.matvec(&a));
     }
 
     // Fused-vs-unfused equivalence (all kernels, homogeneous and

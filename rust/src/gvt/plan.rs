@@ -396,6 +396,18 @@ impl GvtPlan {
         }
     }
 
+    /// The concrete factorization the plan resolved for its dense×dense
+    /// terms — never `Auto` (an `Auto` build consults the cost model,
+    /// whose inputs include the *row sample size*). The serving layer
+    /// ([`crate::serve`]) reads this to pin one factorization across all
+    /// per-batch operator builds: with the mode fixed, every output entry
+    /// is computed by the same sequence of floating-point operations
+    /// regardless of how queries are batched, so micro-batched responses
+    /// are bit-identical to one-shot prediction.
+    pub fn mode(&self) -> GvtPolicy {
+        self.mode
+    }
+
     /// Number of stage-1 passes over the column sample (vs one per
     /// dense×dense term unfused).
     pub fn stage1_count(&self) -> usize {

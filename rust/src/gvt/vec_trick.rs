@@ -43,6 +43,29 @@ pub enum GvtPolicy {
     Dense,
 }
 
+impl GvtPolicy {
+    /// Canonical name (model artifacts, CLI flags, bench labels).
+    pub fn name(&self) -> &'static str {
+        match self {
+            GvtPolicy::Auto => "auto",
+            GvtPolicy::SparseLeft => "sparse-left",
+            GvtPolicy::SparseRight => "sparse-right",
+            GvtPolicy::Dense => "dense",
+        }
+    }
+
+    /// Parse a policy name (inverse of [`Self::name`], plus aliases).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Some(Self::Auto),
+            "sparse-left" | "sparseleft" | "left" => Some(Self::SparseLeft),
+            "sparse-right" | "sparseright" | "right" => Some(Self::SparseRight),
+            "dense" => Some(Self::Dense),
+            _ => None,
+        }
+    }
+}
+
 /// Density threshold above which `Auto` prefers the dense GEMM path.
 /// Tuned in the §Perf pass (see rust/DESIGN.md §Cost-Model): the GEMM
 /// runs ~8 f64 FMAs/cycle while the sparse path does ~1 gather-multiply
@@ -465,6 +488,19 @@ mod tests {
             let got = gvt_matvec(&am, &bm, &empty, &empty, &[], policy);
             assert_eq!(got, Vec::<f64>::new(), "{policy:?}");
         }
+    }
+
+    #[test]
+    fn policy_name_parse_roundtrip() {
+        for p in [
+            GvtPolicy::Auto,
+            GvtPolicy::SparseLeft,
+            GvtPolicy::SparseRight,
+            GvtPolicy::Dense,
+        ] {
+            assert_eq!(GvtPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(GvtPolicy::parse("nope"), None);
     }
 
     #[test]

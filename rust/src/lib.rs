@@ -26,6 +26,8 @@
 //!   evaluation datasets, plus Settings 1–4 splitters (Table 1).
 //! * [`coordinator`] — experiment orchestration: leader/worker job queue,
 //!   cross-validation, early stopping, memory accounting, reports.
+//! * [`serve`] — online inference: a micro-batched prediction server
+//!   over compiled GVT plans (`gvt-rls serve` / `gvt-rls predict`).
 //! * [`runtime`] — PJRT bridge: loads AOT-compiled JAX/Pallas artifacts
 //!   (HLO text) and runs the dense complete-data Kronecker mat-vec.
 //! * [`linalg`], [`sparse`], [`rng`], [`eval`], [`bench`], [`testing`],
@@ -61,6 +63,7 @@ pub mod kernels;
 pub mod linalg;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod solvers;
 pub mod sparse;
 pub mod testing;

@@ -3,7 +3,12 @@
 //! Subcommands:
 //!
 //! * `datasets` — print Table 5 (dataset statistics) for the generators.
-//! * `train` — train one model and report test AUC across settings.
+//! * `train` — train one model and report test AUC across settings
+//!   (`--save-model` writes a self-contained v2 artifact).
+//! * `predict` — offline scoring: read `drug target` pairs from a file,
+//!   score them with one block product against a saved model.
+//! * `serve` — online scoring: micro-batched prediction server over
+//!   line-delimited JSON (TCP or stdio). See `rust/src/serve/`.
 //! * `experiment <fig3|fig4|fig5|fig6|fig8>` — regenerate a paper figure.
 //! * `gvt-demo` — timing demo: GVT vs explicit mat-vec on one problem.
 //! * `runtime-info` — list AOT artifacts and smoke-run one.
@@ -29,6 +34,8 @@ fn main() {
     let result = match cli.command.as_str() {
         "datasets" => cmd_datasets(&cli),
         "train" => cmd_train(&cli),
+        "predict" => cmd_predict(&cli),
+        "serve" => cmd_serve(&cli),
         "experiment" => cmd_experiment(&cli),
         "gvt-demo" => cmd_gvt_demo(&cli),
         "runtime-info" => cmd_runtime_info(&cli),
@@ -54,7 +61,10 @@ fn print_help() {
          USAGE: gvt-rls <command> [options]\n\n\
          COMMANDS:\n\
          \x20 datasets                      print Table 5 dataset statistics\n\
-         \x20 train                         train one model (--dataset --kernel --setting)\n\
+         \x20 train                         train one model (--kernel --setting; --save-model FILE)\n\
+         \x20 predict                       score a pair list offline (--model --pairs [--out])\n\
+         \x20 serve                         prediction server (--model; --listen ADDR | --stdio;\n\
+         \x20                               --max-batch N --max-wait-us U --cache N)\n\
          \x20 experiment <fig3|fig4|fig5|fig6|fig8>   regenerate a paper figure\n\
          \x20 gvt-demo                      GVT vs explicit mat-vec timing\n\
          \x20 runtime-info                  list + smoke-run AOT artifacts\n\n\
@@ -131,7 +141,101 @@ fn cmd_train(cli: &Cli) -> Result<()> {
         secs,
         a.map(|v| format!("{v:.4}")).unwrap_or_else(|| "n/a".into())
     );
+    if let Some(path) = cli.opt("save-model") {
+        use gvt_rls::solvers::persist::{save_model_v2, EmbedV2};
+        let embed = EmbedV2 { matrices: true, ..Default::default() };
+        save_model_v2(&model, std::path::Path::new(path), &embed)?;
+        println!("saved v2 model artifact (kernel matrices embedded) to {path}");
+    }
     Ok(())
+}
+
+/// Read a `drug target` pair list (one pair per line, `#` comments and
+/// blank lines skipped).
+fn read_pair_list(path: &std::path::Path) -> Result<Vec<gvt_rls::serve::QueryPair>> {
+    use gvt_rls::error::Context;
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let mut pairs = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (d, t) = line
+            .split_once(char::is_whitespace)
+            .ok_or_else(|| gvt_err!("line {}: expected 'drug target'", lineno + 1))?;
+        let d: u32 = d
+            .trim()
+            .parse()
+            .map_err(|_| gvt_err!("line {}: bad drug index {d:?}", lineno + 1))?;
+        let t: u32 = t
+            .trim()
+            .parse()
+            .map_err(|_| gvt_err!("line {}: bad target index {t:?}", lineno + 1))?;
+        pairs.push(gvt_rls::serve::QueryPair::known(d, t));
+    }
+    Ok(pairs)
+}
+
+fn cmd_predict(cli: &Cli) -> Result<()> {
+    use gvt_rls::serve::{Predictor, ServeOptions};
+    use std::io::Write;
+
+    let model_path = cli.require_opt("model")?;
+    let pairs_path = cli.require_opt("pairs")?;
+    let predictor = Predictor::from_file(
+        std::path::Path::new(model_path),
+        ServeOptions { cache_capacity: cli.opt_usize("cache", 1024)? },
+    )?;
+    let pairs = read_pair_list(std::path::Path::new(pairs_path))?;
+    // One block product for the whole file — not one GVT pass per line.
+    let scores = predictor.score(&pairs)?;
+    let mut rendered = String::with_capacity(scores.len() * 26);
+    for s in &scores {
+        rendered.push_str(&gvt_rls::serve::protocol::fmt_score(*s));
+        rendered.push('\n');
+    }
+    match cli.opt("out") {
+        Some(path) => {
+            std::fs::write(path, rendered)
+                .map_err(|e| gvt_err!("writing {path}: {e}"))?;
+            eprintln!("wrote {} scores to {path}", scores.len());
+        }
+        None => {
+            print!("{rendered}");
+            std::io::stdout().flush().ok();
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(cli: &Cli) -> Result<()> {
+    use gvt_rls::serve::{serve_stdio, serve_tcp, BatchConfig, Predictor, ServeOptions};
+    use std::sync::Arc;
+
+    let model_path = cli.require_opt("model")?;
+    let predictor = Arc::new(Predictor::from_file(
+        std::path::Path::new(model_path),
+        ServeOptions { cache_capacity: cli.opt_usize("cache", 1024)? },
+    )?);
+    let batch = BatchConfig {
+        max_batch: cli.opt_usize("max-batch", 256)?,
+        max_wait: std::time::Duration::from_micros(cli.opt_u64("max-wait-us", 500)?),
+    };
+    eprintln!(
+        "serving {} (policy {}, {} training pairs; plan: {})",
+        model_path,
+        predictor.policy().name(),
+        predictor.model().train_size(),
+        predictor.plan_summary()
+    );
+    if cli.has_switch("stdio") {
+        serve_stdio(predictor, batch)
+    } else {
+        let listen = cli.opt_or("listen", "127.0.0.1:0");
+        serve_tcp(predictor, &listen, batch)
+    }
 }
 
 fn cmd_experiment(cli: &Cli) -> Result<()> {

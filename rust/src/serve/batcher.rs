@@ -1,0 +1,366 @@
+//! Micro-batching dispatcher: coalesce concurrent requests into one GVT
+//! pass.
+//!
+//! Every scoring pass over a batch of query pairs pays a fixed cost that
+//! is independent of the batch size — the stage-1 streaming of the
+//! training sample's index arrays (`O(n·m + n·q)` for the paper's
+//! kernels) plus the per-batch operator assembly. Micro-batching
+//! amortizes that cost: concurrent requests land on an mpsc queue, and a
+//! single dispatcher thread drains up to [`BatchConfig::max_batch`]
+//! pairs (waiting at most [`BatchConfig::max_wait`] after the first
+//! request) into **one** [`Predictor::score`] call, then splits the
+//! result vector back across the callers.
+//!
+//! Correctness is unconditional, not statistical: the predictor pins one
+//! GVT factorization and every output entry is computed by a
+//! row-independent operation sequence, so a request's scores are
+//! bit-identical whether it was scored alone or coalesced with others
+//! (pinned by `tests/serve_concurrency.rs`).
+
+use crate::error::{gvt_err, Result};
+use crate::serve::predictor::{Predictor, QueryPair};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Dispatcher tuning.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchConfig {
+    /// Hard cap on the *pairs* coalesced into one pass: a job that would
+    /// push the batch over this opens the next batch instead. A single
+    /// over-sized request is never split — it runs as its own (large)
+    /// batch.
+    pub max_batch: usize,
+    /// How long the dispatcher waits for more requests after the first
+    /// one of a batch arrives.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        Self { max_batch: 256, max_wait: Duration::from_micros(500) }
+    }
+}
+
+/// One queued request: the query pairs plus the caller's reply channel.
+struct Job {
+    pairs: Vec<QueryPair>,
+    reply: mpsc::Sender<std::result::Result<Vec<f64>, String>>,
+}
+
+/// Cloneable client handle onto the dispatcher queue.
+#[derive(Clone)]
+pub struct BatcherHandle {
+    tx: mpsc::Sender<Job>,
+}
+
+impl BatcherHandle {
+    /// Score `pairs`, blocking until the dispatcher's batch containing
+    /// them completes. Thread-safe; call from any number of client
+    /// threads.
+    pub fn score(&self, pairs: Vec<QueryPair>) -> Result<Vec<f64>> {
+        if pairs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Job { pairs, reply: reply_tx })
+            .map_err(|_| gvt_err!("batcher is shut down"))?;
+        match reply_rx.recv() {
+            Ok(Ok(scores)) => Ok(scores),
+            Ok(Err(msg)) => Err(gvt_err!("{msg}")),
+            Err(_) => Err(gvt_err!("batcher dropped the request")),
+        }
+    }
+}
+
+/// The running dispatcher. Dropping (or [`Batcher::shutdown`]) closes
+/// the queue and joins the worker.
+pub struct Batcher {
+    handle: BatcherHandle,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Batcher {
+    /// Spawn the dispatcher thread over `predictor`.
+    pub fn start(predictor: Arc<Predictor>, cfg: BatchConfig) -> Batcher {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let worker = std::thread::Builder::new()
+            .name("gvt-serve-batcher".into())
+            .spawn(move || dispatch_loop(rx, predictor, cfg))
+            .expect("spawning batcher thread");
+        Batcher { handle: BatcherHandle { tx }, worker: Some(worker) }
+    }
+
+    /// A new client handle.
+    pub fn handle(&self) -> BatcherHandle {
+        self.handle.clone()
+    }
+
+    /// Close the queue and wait for the dispatcher to drain. **Blocks
+    /// until every [`BatcherHandle`] clone has been dropped** — handles
+    /// keep the queue open, so drop them (or join the threads owning
+    /// them) first.
+    pub fn shutdown(self) {
+        // Drop does the work: replaces the live sender, joins the worker.
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        // Replace the live sender so the worker can observe disconnect.
+        self.handle = BatcherHandle { tx: dead_sender() };
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+/// A sender whose receiver is already gone (used to drop the live one).
+fn dead_sender() -> mpsc::Sender<Job> {
+    let (tx, _rx) = mpsc::channel();
+    tx
+}
+
+fn dispatch_loop(rx: mpsc::Receiver<Job>, predictor: Arc<Predictor>, cfg: BatchConfig) {
+    // A job that would push the current batch past max_batch is not
+    // merged; it opens the next batch instead.
+    let mut carry: Option<Job> = None;
+    loop {
+        // Block for the first request of the next batch.
+        let first = match carry.take() {
+            Some(job) => job,
+            None => match rx.recv() {
+                Ok(job) => job,
+                Err(_) => return, // all handles dropped
+            },
+        };
+        // Pairs are MOVED into one contiguous batch as jobs arrive (no
+        // per-request clones — featured queries carry feature vectors);
+        // `replies` remembers each job's reply channel and pair count.
+        let mut batch: Vec<QueryPair> = first.pairs;
+        let mut replies: Vec<(mpsc::Sender<std::result::Result<Vec<f64>, String>>, usize)> =
+            vec![(first.reply, batch.len())];
+        let deadline = Instant::now() + cfg.max_wait;
+        while batch.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(mut job) => {
+                    if batch.len() + job.pairs.len() > cfg.max_batch {
+                        // Over the cap: this job starts the next batch
+                        // (a single over-sized request still runs alone,
+                        // as its own large batch).
+                        carry = Some(job);
+                        break;
+                    }
+                    let n = job.pairs.len();
+                    batch.append(&mut job.pairs);
+                    replies.push((job.reply, n));
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        // One fused pass for the whole batch.
+        predictor
+            .serve_stats()
+            .record_batch(replies.len() as u64, batch.len() as u64);
+        match predictor.score(&batch) {
+            Ok(scores) => {
+                let mut offset = 0;
+                for (reply, n) in &replies {
+                    let slice = scores[offset..offset + n].to_vec();
+                    offset += n;
+                    let _ = reply.send(Ok(slice));
+                }
+            }
+            Err(e) if replies.len() == 1 => {
+                let _ = replies[0].0.send(Err(format!("{e:#}")));
+            }
+            Err(_) => {
+                // One bad request (e.g. an out-of-domain index) must not
+                // fail its riders: retry each job alone so only the
+                // offender errors. Per-job scoring is bit-identical to
+                // the batched pass, so honest jobs lose nothing. The
+                // failed pass's counters are backed out first — each
+                // retry re-counts its own pairs.
+                predictor.serve_stats().unrecord_score(batch.len() as u64);
+                let mut offset = 0;
+                for (reply, n) in &replies {
+                    let res = match predictor.score(&batch[offset..offset + n]) {
+                        Ok(scores) => Ok(scores),
+                        Err(e) => Err(format!("{e:#}")),
+                    };
+                    offset += n;
+                    let _ = reply.send(res);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::PairDataset;
+    use crate::gvt::pairwise::PairwiseKernel;
+    use crate::rng::{dist, Xoshiro256};
+    use crate::solvers::ridge::{PairwiseRidge, RidgeConfig};
+    use crate::serve::predictor::ServeOptions;
+    use crate::testing::gen;
+    use std::sync::Arc;
+
+    fn toy_predictor(seed: u64) -> (Arc<Predictor>, PairDataset) {
+        let mut rng = Xoshiro256::seed_from(seed);
+        let d = Arc::new(gen::psd_kernel(&mut rng, 6));
+        let t = Arc::new(gen::psd_kernel(&mut rng, 7));
+        let pairs = gen::pair_sample(&mut rng, 35, 6, 7);
+        let data = PairDataset {
+            name: "batcher-toy".into(),
+            d,
+            t,
+            pairs,
+            y: dist::normal_vec(&mut rng, 35),
+            homogeneous: false,
+        };
+        let cfg = RidgeConfig { max_iters: 20, ..Default::default() };
+        let model = PairwiseRidge::fit(&data, PairwiseKernel::Kronecker, &cfg).unwrap();
+        (
+            Arc::new(Predictor::new(model, None, None, ServeOptions::default()).unwrap()),
+            data,
+        )
+    }
+
+    #[test]
+    fn batched_replies_match_direct_scoring() {
+        let (pred, _) = toy_predictor(110);
+        let expect = pred
+            .score(&[QueryPair::known(1, 2), QueryPair::known(3, 4)])
+            .unwrap();
+        let batcher = Batcher::start(pred.clone(), BatchConfig::default());
+        let handle = batcher.handle();
+        let got = handle
+            .score(vec![QueryPair::known(1, 2), QueryPair::known(3, 4)])
+            .unwrap();
+        assert_eq!(got, expect);
+        drop(handle);
+        batcher.shutdown();
+    }
+
+    #[test]
+    fn errors_propagate_to_callers() {
+        let (pred, _) = toy_predictor(111);
+        let batcher = Batcher::start(pred, BatchConfig::default());
+        let handle = batcher.handle();
+        // Out-of-domain index: the request must fail, not panic the
+        // dispatcher — and the dispatcher must survive for later calls.
+        assert!(handle.score(vec![QueryPair::known(99, 0)]).is_err());
+        assert!(handle.score(vec![QueryPair::known(0, 0)]).is_ok());
+        drop(handle);
+        batcher.shutdown();
+    }
+
+    #[test]
+    fn max_batch_is_a_hard_cap() {
+        let (pred, _) = toy_predictor(115);
+        let cfg = BatchConfig { max_batch: 4, max_wait: Duration::from_millis(150) };
+        let batcher = Batcher::start(pred.clone(), cfg);
+        let barrier = Arc::new(std::sync::Barrier::new(2));
+        let small = {
+            let h = batcher.handle();
+            let b = barrier.clone();
+            std::thread::spawn(move || {
+                b.wait();
+                h.score(vec![QueryPair::known(0, 0)]).unwrap()
+            })
+        };
+        let big = {
+            let h = batcher.handle();
+            let b = barrier.clone();
+            std::thread::spawn(move || {
+                b.wait();
+                // 10 pairs > max_batch: must run as its own batch, never
+                // merged with the 1-pair request.
+                let pairs: Vec<QueryPair> =
+                    (0..10u32).map(|k| QueryPair::known(k % 6, k % 7)).collect();
+                h.score(pairs).unwrap()
+            })
+        };
+        assert_eq!(small.join().unwrap().len(), 1);
+        assert_eq!(big.join().unwrap().len(), 10);
+        let stats = pred.stats();
+        assert_eq!(stats.batches, 2, "cap must split the passes: {stats:?}");
+        assert_eq!(stats.batch_pairs_max, 10, "{stats:?}");
+        batcher.shutdown();
+    }
+
+    #[test]
+    fn bad_rider_does_not_poison_the_batch() {
+        let (pred, _) = toy_predictor(114);
+        let cfg = BatchConfig { max_batch: 64, max_wait: Duration::from_millis(150) };
+        let batcher = Batcher::start(pred, cfg);
+        let barrier = Arc::new(std::sync::Barrier::new(2));
+        let good = {
+            let h = batcher.handle();
+            let b = barrier.clone();
+            std::thread::spawn(move || {
+                b.wait();
+                h.score(vec![QueryPair::known(2, 3)])
+            })
+        };
+        let bad = {
+            let h = batcher.handle();
+            let b = barrier.clone();
+            std::thread::spawn(move || {
+                b.wait();
+                h.score(vec![QueryPair::known(99, 0)])
+            })
+        };
+        assert!(good.join().unwrap().is_ok());
+        assert!(bad.join().unwrap().is_err());
+        batcher.shutdown();
+    }
+
+    #[test]
+    fn empty_request_short_circuits() {
+        let (pred, _) = toy_predictor(112);
+        let batcher = Batcher::start(pred, BatchConfig::default());
+        assert_eq!(batcher.handle().score(Vec::new()).unwrap(), Vec::<f64>::new());
+        batcher.shutdown();
+    }
+
+    #[test]
+    fn concurrent_requests_coalesce() {
+        let (pred, _) = toy_predictor(113);
+        let cfg = BatchConfig { max_batch: 64, max_wait: Duration::from_millis(150) };
+        let batcher = Batcher::start(pred.clone(), cfg);
+        let barrier = Arc::new(std::sync::Barrier::new(8));
+        let mut threads = Vec::new();
+        for k in 0..8u32 {
+            let h = batcher.handle();
+            let b = barrier.clone();
+            threads.push(std::thread::spawn(move || {
+                b.wait();
+                h.score(vec![QueryPair::known(k % 6, k % 7)]).unwrap()
+            }));
+        }
+        for th in threads {
+            let scores = th.join().unwrap();
+            assert_eq!(scores.len(), 1);
+        }
+        let stats = pred.stats();
+        assert_eq!(stats.requests, 8);
+        // With a 150 ms window and simultaneous release, at least one
+        // dispatcher pass must have carried more than one request.
+        assert!(
+            stats.batch_jobs_max >= 2,
+            "no coalescing observed: {stats:?}"
+        );
+        assert!(stats.batches < 8, "every request ran alone: {stats:?}");
+        batcher.shutdown();
+    }
+}

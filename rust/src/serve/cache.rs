@@ -1,0 +1,160 @@
+//! Bounded LRU cache for per-object serving intermediates.
+//!
+//! The expensive per-object work in serving is assembling the
+//! cross-kernel row `k(x, X_train)` of an unseen object against every
+//! training object — `O(m · p)` kernel evaluations that feed stage 1 of
+//! the GVT product. Hot drugs/targets recur across requests (a few
+//! popular compounds dominate real traffic), so the [`Predictor`]
+//! (`crate::serve::Predictor`) keeps one bounded LRU per side, keyed by
+//! the client-supplied object id.
+//!
+//! Implementation: `HashMap` for storage plus a `BTreeMap` recency index
+//! (monotonic tick → key). Both `get` and `insert` are `O(log n)`; no
+//! unsafe, no external crates, no background threads.
+
+use std::collections::{BTreeMap, HashMap};
+use std::hash::Hash;
+
+/// A bounded least-recently-used cache.
+pub struct LruCache<K: Eq + Hash + Clone, V> {
+    cap: usize,
+    map: HashMap<K, (V, u64)>,
+    recency: BTreeMap<u64, K>,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
+    /// A cache holding at most `cap` entries. `cap == 0` disables
+    /// caching entirely (every `get` misses, `insert` is a no-op).
+    pub fn new(cap: usize) -> Self {
+        Self {
+            cap,
+            map: HashMap::new(),
+            recency: BTreeMap::new(),
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Look up `key`, marking it most-recently-used on a hit.
+    pub fn get(&mut self, key: &K) -> Option<&V> {
+        self.tick += 1;
+        let tick = self.tick;
+        let old_stamp = match self.map.get_mut(key) {
+            Some((_, stamp)) => {
+                let old = *stamp;
+                *stamp = tick;
+                old
+            }
+            None => {
+                self.misses += 1;
+                return None;
+            }
+        };
+        self.recency.remove(&old_stamp);
+        self.recency.insert(tick, key.clone());
+        self.hits += 1;
+        self.map.get(key).map(|(v, _)| v)
+    }
+
+    /// Insert (or refresh) `key`, evicting the least-recently-used entry
+    /// if the cache is full.
+    pub fn insert(&mut self, key: K, value: V) {
+        if self.cap == 0 {
+            return;
+        }
+        self.tick += 1;
+        if let Some((_, old_stamp)) = self.map.remove(&key) {
+            self.recency.remove(&old_stamp);
+        }
+        while self.map.len() >= self.cap {
+            // Oldest tick = least recently used.
+            let (&oldest, _) = self.recency.iter().next().expect("recency tracks map");
+            let victim = self.recency.remove(&oldest).expect("just seen");
+            self.map.remove(&victim);
+            self.evictions += 1;
+        }
+        self.map.insert(key.clone(), (value, self.tick));
+        self.recency.insert(self.tick, key);
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c: LruCache<u32, &'static str> = LruCache::new(2);
+        c.insert(1, "a");
+        c.insert(2, "b");
+        assert_eq!(c.get(&1), Some(&"a")); // 1 is now most recent
+        c.insert(3, "c"); // evicts 2
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.get(&2), None);
+        assert_eq!(c.get(&1), Some(&"a"));
+        assert_eq!(c.get(&3), Some(&"c"));
+        assert_eq!(c.evictions(), 1);
+    }
+
+    #[test]
+    fn reinsert_refreshes_without_growth() {
+        let mut c: LruCache<u32, u32> = LruCache::new(2);
+        c.insert(1, 10);
+        c.insert(2, 20);
+        c.insert(1, 11); // refresh, not a third entry
+        assert_eq!(c.len(), 2);
+        c.insert(3, 30); // evicts 2 (1 was refreshed later)
+        assert_eq!(c.get(&2), None);
+        assert_eq!(c.get(&1), Some(&11));
+    }
+
+    #[test]
+    fn zero_capacity_disables_caching() {
+        let mut c: LruCache<u32, u32> = LruCache::new(0);
+        c.insert(1, 10);
+        assert!(c.is_empty());
+        assert_eq!(c.get(&1), None);
+        assert_eq!(c.misses(), 1);
+        assert_eq!(c.hits(), 0);
+    }
+
+    #[test]
+    fn counters_track_hits_and_misses() {
+        let mut c: LruCache<&'static str, u32> = LruCache::new(4);
+        assert_eq!(c.get(&"x"), None);
+        c.insert("x", 1);
+        assert_eq!(c.get(&"x"), Some(&1));
+        assert_eq!(c.get(&"x"), Some(&1));
+        assert_eq!((c.hits(), c.misses()), (2, 1));
+    }
+}

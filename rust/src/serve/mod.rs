@@ -1,0 +1,46 @@
+//! Online inference: serve predictions from a fitted model at request
+//! time.
+//!
+//! The paper frames the `O(nm + nq)` generalized vec trick as a
+//! *training* speedup, but prediction is the same machinery — a
+//! cross-kernel GVT product with the training sample,
+//! `p = R(query) K R(train)ᵀ α` — and it is what makes answering
+//! millions of (drug, target) queries feasible. This module turns the
+//! compiled-plan primitives of [`crate::gvt::plan`] into a
+//! request-serving engine:
+//!
+//! * [`predictor`] — [`Predictor`]: loads a fitted [`RidgeModel`]
+//!   (typically from a self-contained v2 artifact,
+//!   [`crate::solvers::persist`]), compiles the prediction-side operator
+//!   against the training sample **once**, keeps its GVT workspace warm,
+//!   pins the factorization for bit-stable batching, and answers all
+//!   four out-of-sample settings — in-domain queries by index, unseen
+//!   objects by feature vector (cross-kernel rows assembled from the
+//!   artifact's feature spaces).
+//! * [`batcher`] — [`Batcher`]: an mpsc micro-batching dispatcher that
+//!   coalesces concurrent requests into one GVT pass, amortizing the
+//!   per-pass streaming of the training sample's index arrays.
+//! * [`cache`] — [`cache::LruCache`]: bounded LRU over per-object
+//!   cross-kernel rows, so hot drugs/targets pay feature-space row
+//!   assembly once.
+//! * [`protocol`] / [`server`] — line-delimited JSON over stdin/stdout
+//!   or TCP, exposed as the `gvt-rls serve` and `gvt-rls predict` CLI
+//!   subcommands.
+//!
+//! Serving guarantees (pinned by `tests/serve_concurrency.rs`): batched
+//! responses are **bit-identical** to sequential
+//! [`RidgeModel::predict`] with the predictor's pinned policy, for every
+//! pairwise kernel, however requests are interleaved or coalesced.
+//!
+//! [`RidgeModel`]: crate::solvers::ridge::RidgeModel
+//! [`RidgeModel::predict`]: crate::solvers::ridge::RidgeModel::predict
+
+pub mod batcher;
+pub mod cache;
+pub mod predictor;
+pub mod protocol;
+pub mod server;
+
+pub use batcher::{BatchConfig, Batcher, BatcherHandle};
+pub use predictor::{ObjectRef, Predictor, QueryPair, ServeOptions, StatsSnapshot};
+pub use server::{serve_on, serve_stdio, serve_tcp};

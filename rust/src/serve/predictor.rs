@@ -1,0 +1,860 @@
+//! The [`Predictor`]: a fitted ridge model compiled for online serving.
+//!
+//! Prediction is a cross-kernel GVT product with the training sample:
+//! `p = R(query) K R(train)ᵀ α`. Everything on the training side of that
+//! product is fixed at load time, so the predictor compiles it **once**:
+//!
+//! * the prediction-side [`PairwiseLinOp`] / `GvtPlan` is built against
+//!   the training sample at construction (the *template*); per-batch
+//!   operators are derived from it with
+//!   [`PairwiseLinOp::with_rows`] / [`PairwiseLinOp::reindexed`], which
+//!   reuse the kernel matrices, their Hadamard squares, and the training
+//!   sample's buffers and CSR grouping caches;
+//! * one [`GvtWorkspace`] is kept warm across batches
+//!   ([`PairwiseLinOp::install_workspace`] /
+//!   [`PairwiseLinOp::take_workspace`]) — after the first batch at the
+//!   training shapes, stage buffers are reused verbatim;
+//! * the GVT factorization is **pinned** to the concrete mode the
+//!   training-shaped plan resolves ([`PairwiseLinOp::resolved_mode`]).
+//!   `Auto`'s cost model consults the row-sample size, which varies per
+//!   batch; with the mode pinned, every output entry is produced by the
+//!   same floating-point operation sequence no matter how requests are
+//!   micro-batched, so batched responses are **bit-identical** to
+//!   sequential [`RidgeModel::predict`].
+//!
+//! A query references each object either by training-domain index
+//! ([`ObjectRef::Known`] — covers all four out-of-sample settings of
+//! Table 1, since the domain kernel matrices span objects absent from
+//! the training *sample*) or by raw feature vector
+//! ([`ObjectRef::Featured`] — objects outside the domain entirely). For
+//! featured objects the predictor assembles the cross-kernel row
+//! `k(x, X_train)` from the artifact's embedded [`FeatureSpace`], with a
+//! bounded LRU over client-supplied object ids so hot drugs/targets pay
+//! the `O(m·p)` row assembly once (see [`crate::serve::cache`]).
+
+use crate::error::{bail, gvt_err, Context, Result};
+use crate::gvt::pairwise::{PairwiseKernel, PairwiseLinOp};
+use crate::gvt::plan::GvtWorkspace;
+use crate::gvt::vec_trick::GvtPolicy;
+use crate::linalg::Mat;
+use crate::serve::cache::LruCache;
+use crate::solvers::persist::{FeatureSpace, ModelFile};
+use crate::solvers::ridge::RidgeModel;
+use crate::sparse::PairIndex;
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// How a query names one object.
+#[derive(Clone, Debug)]
+pub enum ObjectRef {
+    /// Index into the training domain (the object's row in the
+    /// full-domain kernel matrix).
+    Known(u32),
+    /// An object outside the training domain, described by its raw
+    /// feature vector. `id` (if any) keys the cross-kernel row cache.
+    Featured { id: Option<String>, x: Vec<f64> },
+}
+
+/// One (drug, target) query.
+#[derive(Clone, Debug)]
+pub struct QueryPair {
+    pub drug: ObjectRef,
+    pub target: ObjectRef,
+}
+
+impl QueryPair {
+    /// In-domain pair by indices.
+    pub fn known(drug: u32, target: u32) -> QueryPair {
+        QueryPair { drug: ObjectRef::Known(drug), target: ObjectRef::Known(target) }
+    }
+}
+
+/// Predictor construction options.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOptions {
+    /// Per-side capacity of the featured-object cross-kernel row cache
+    /// (0 disables caching).
+    pub cache_capacity: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self { cache_capacity: 1024 }
+    }
+}
+
+/// Monotonic serving counters (lock-free; snapshot via
+/// [`Predictor::stats`]).
+#[derive(Default)]
+pub struct ServeStats {
+    /// `score` invocations (one per executed batch or direct call).
+    score_calls: AtomicU64,
+    /// Query pairs scored, total.
+    pairs: AtomicU64,
+    /// Dispatcher batches executed (see [`crate::serve::Batcher`]).
+    batches: AtomicU64,
+    /// Client requests that passed through the dispatcher.
+    requests: AtomicU64,
+    /// Most requests coalesced into one batch.
+    batch_jobs_max: AtomicU64,
+    /// Most pairs coalesced into one batch.
+    batch_pairs_max: AtomicU64,
+}
+
+impl ServeStats {
+    /// Record one dispatcher batch of `jobs` requests / `pairs` pairs.
+    pub fn record_batch(&self, jobs: u64, pairs: u64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.requests.fetch_add(jobs, Ordering::Relaxed);
+        self.batch_jobs_max.fetch_max(jobs, Ordering::Relaxed);
+        self.batch_pairs_max.fetch_max(pairs, Ordering::Relaxed);
+    }
+
+    /// Back out one failed batched `score` call's counters before its
+    /// jobs are retried individually (each retry re-counts its own
+    /// pairs; without this the poisoned batch would be counted twice).
+    pub fn unrecord_score(&self, pairs: u64) {
+        self.score_calls.fetch_sub(1, Ordering::Relaxed);
+        self.pairs.fetch_sub(pairs, Ordering::Relaxed);
+    }
+}
+
+/// A point-in-time copy of every serving counter.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StatsSnapshot {
+    pub score_calls: u64,
+    pub pairs: u64,
+    pub batches: u64,
+    pub requests: u64,
+    pub batch_jobs_max: u64,
+    pub batch_pairs_max: u64,
+    pub drug_cache_hits: u64,
+    pub drug_cache_misses: u64,
+    pub drug_cache_len: usize,
+    pub target_cache_hits: u64,
+    pub target_cache_misses: u64,
+    pub target_cache_len: usize,
+}
+
+/// Which side of the pair an object reference sits on. Kernels over a
+/// homogeneous domain (`m == q`, Symmetric/AntiSymmetric/Ranking/MLPK)
+/// unify both slots into one object domain.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Side {
+    Drug,
+    Target,
+    Unified,
+}
+
+impl Side {
+    fn name(self) -> &'static str {
+        match self {
+            Side::Drug => "drug",
+            Side::Target => "target",
+            Side::Unified => "object",
+        }
+    }
+}
+
+/// See module docs.
+pub struct Predictor {
+    model: RidgeModel,
+    /// The compiled prediction-side operator against the training
+    /// sample; per-batch operators derive from it.
+    template: PairwiseLinOp,
+    /// Concrete (never `Auto`) factorization every batch executes.
+    policy: GvtPolicy,
+    d_features: Option<FeatureSpace>,
+    t_features: Option<FeatureSpace>,
+    drug_cache: Mutex<LruCache<String, Arc<CachedRow>>>,
+    target_cache: Mutex<LruCache<String, Arc<CachedRow>>>,
+    /// Warm GVT workspace carried across per-batch operators.
+    ws: Mutex<GvtWorkspace>,
+    stats: ServeStats,
+}
+
+impl Predictor {
+    /// Compile a fitted model for serving. Feature spaces (optional)
+    /// enable [`ObjectRef::Featured`] queries on the respective side.
+    pub fn new(
+        model: RidgeModel,
+        d_features: Option<FeatureSpace>,
+        t_features: Option<FeatureSpace>,
+        opts: ServeOptions,
+    ) -> Result<Predictor> {
+        let train = model.train_pairs().clone();
+        // Build the grouping caches on the canonical training sample
+        // *before* the first operator build: clones and P/Q transforms
+        // inherit the built `Arc`s, so no per-batch operator ever
+        // re-derives a CSR grouping of the training sample.
+        train.by_drug();
+        train.by_target();
+        let template = PairwiseLinOp::new(
+            model.kernel(),
+            model.d(),
+            model.t(),
+            train.clone(),
+            train.clone(),
+            model.policy(),
+        )
+        .context("compiling the serving template operator")?;
+        // Pin `Auto` to the concrete factorization the training-shaped
+        // plan picked (see module docs: bit-identical micro-batching).
+        // The re-pin shares the first build's matrices and Hadamard
+        // squares — only the plan is recompiled.
+        let policy = template.resolved_mode();
+        let template = if policy == template.policy() {
+            template
+        } else {
+            template
+                .with_policy(policy)
+                .context("re-pinning the serving template operator")?
+        };
+        // A feature space must reproduce the model's operator matrix:
+        // serving mixes matrix rows (known objects) with feature-derived
+        // cross rows (featured objects), so an inconsistent space — e.g.
+        // a kernel that was normalized after `kernel_matrix` — would
+        // silently serve wrong featured scores. One-time O(m²·p) check.
+        if let Some(fs) = &d_features {
+            if !fs.reproduces(&model.d()) {
+                bail!(
+                    "drug feature space does not reproduce the model's drug kernel \
+                     matrix (rows {}, domain {})",
+                    fs.x.rows(),
+                    model.train_pairs().m()
+                );
+            }
+        }
+        if let Some(fs) = &t_features {
+            if !fs.reproduces(&model.t()) {
+                bail!(
+                    "target feature space does not reproduce the model's target kernel \
+                     matrix (rows {}, domain {})",
+                    fs.x.rows(),
+                    model.train_pairs().q()
+                );
+            }
+        }
+        Ok(Predictor {
+            model,
+            template,
+            policy,
+            d_features,
+            t_features,
+            drug_cache: Mutex::new(LruCache::new(opts.cache_capacity)),
+            target_cache: Mutex::new(LruCache::new(opts.cache_capacity)),
+            ws: Mutex::new(GvtWorkspace::new()),
+            stats: ServeStats::default(),
+        })
+    }
+
+    /// Load a self-contained v2 artifact and compile it for serving.
+    pub fn from_file(path: &Path, opts: ServeOptions) -> Result<Predictor> {
+        let mut file = ModelFile::read(path)?;
+        // Take the feature spaces out (they live on in the predictor —
+        // cloning them would double transient memory for large feature
+        // matrices) and resolve the kernel matrices here, so feature-only
+        // artifacts still work without them inside `into_model`.
+        let d_features = file.d_features.take();
+        let t_features = file.t_features.take();
+        let d = match file.d.take() {
+            Some(m) => Some(Arc::new(m)),
+            None => d_features.as_ref().map(|fs| Arc::new(fs.kernel_matrix())),
+        };
+        let t = match file.t.take() {
+            Some(m) => Some(Arc::new(m)),
+            None => t_features.as_ref().map(|fs| Arc::new(fs.kernel_matrix())),
+        };
+        let model = file
+            .into_model(d, t)
+            .with_context(|| format!("loading {}", path.display()))?;
+        Self::new(model, d_features, t_features, opts)
+    }
+
+    /// Score a batch of queries: one GVT product for the whole batch —
+    /// the stage-1 pass over the training sample (`O(n·q + n·m)` index
+    /// streaming) is paid once and amortized over every pair in the
+    /// batch. Output order matches input order, and each entry is
+    /// bit-identical to scoring that pair alone (see module docs).
+    pub fn score(&self, pairs: &[QueryPair]) -> Result<Vec<f64>> {
+        if pairs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let op = self.batch_op(pairs)?;
+        Ok(self.with_warm_workspace(&op, |op| op.matvec(&self.model.alpha)))
+    }
+
+    /// Score a batch for **several** models sharing this predictor's
+    /// kernel and training sample (a λ grid served side by side): one
+    /// multi-RHS block product ([`PairwiseLinOp::matmat`] /
+    /// `GvtPlan::execute_multi`) instead of one pass per model. Column
+    /// `b` holds `models[b]`'s scores; this predictor's own model is
+    /// always column 0.
+    pub fn score_grid(&self, pairs: &[QueryPair], extra: &[RidgeModel]) -> Result<Mat> {
+        // Same kernel matrices too, not just the same pair indices: an
+        // extra model solved against different D/T would be scored with
+        // *this* predictor's matrices — silently wrong. Arc identity
+        // covers the common case (one λ grid); content equality covers
+        // models reloaded from artifacts.
+        let same_matrix = |a: &Arc<Mat>, b: &Arc<Mat>| {
+            Arc::ptr_eq(a, b) || (a.shape() == b.shape() && a.max_abs_diff(b) == 0.0)
+        };
+        for m in extra {
+            if m.kernel() != self.model.kernel()
+                || !m.train_pairs().same_pairs(self.model.train_pairs())
+                || !same_matrix(&m.d(), &self.model.d())
+                || !same_matrix(&m.t(), &self.model.t())
+            {
+                bail!(
+                    "score_grid: models must share one kernel, training sample, \
+                     and kernel matrices"
+                );
+            }
+        }
+        let op = self.batch_op(pairs)?;
+        let mut cols: Vec<&[f64]> = Vec::with_capacity(1 + extra.len());
+        cols.push(&self.model.alpha);
+        for m in extra {
+            cols.push(&m.alpha);
+        }
+        let block = Mat::from_columns(&cols);
+        Ok(self.with_warm_workspace(&op, |op| op.matmat(&block)))
+    }
+
+    /// Shared per-batch front half of [`Self::score`] / [`Self::score_grid`]:
+    /// bump the counters and build the batch operator (in-domain fast
+    /// path when every reference is a `Known` index).
+    fn batch_op(&self, pairs: &[QueryPair]) -> Result<PairwiseLinOp> {
+        self.stats.score_calls.fetch_add(1, Ordering::Relaxed);
+        self.stats.pairs.fetch_add(pairs.len() as u64, Ordering::Relaxed);
+        let all_known = pairs.iter().all(|p| {
+            matches!(p.drug, ObjectRef::Known(_)) && matches!(p.target, ObjectRef::Known(_))
+        });
+        if all_known {
+            self.in_domain_op(pairs)
+        } else {
+            self.extended_op(pairs)
+        }
+    }
+
+    /// Thread the predictor's long-lived warm workspace through one
+    /// per-batch operator for the duration of `f`.
+    fn with_warm_workspace<T>(
+        &self,
+        op: &PairwiseLinOp,
+        f: impl FnOnce(&PairwiseLinOp) -> T,
+    ) -> T {
+        op.install_workspace(std::mem::take(
+            &mut *self.ws.lock().expect("serve workspace poisoned"),
+        ));
+        let out = f(op);
+        *self.ws.lock().expect("serve workspace poisoned") = op.take_workspace();
+        out
+    }
+
+    /// Per-batch operator for all-in-domain queries: a fresh row sample
+    /// over the training domains, everything else reused from the
+    /// template.
+    fn in_domain_op(&self, pairs: &[QueryPair]) -> Result<PairwiseLinOp> {
+        let (m, q) = (self.model.train_pairs().m(), self.model.train_pairs().q());
+        let mut drugs = Vec::with_capacity(pairs.len());
+        let mut targets = Vec::with_capacity(pairs.len());
+        for p in pairs {
+            let (ObjectRef::Known(d), ObjectRef::Known(t)) = (&p.drug, &p.target) else {
+                bail!("in_domain_op called with a featured object");
+            };
+            if *d as usize >= m {
+                bail!("drug index {d} outside the domain 0..{m}");
+            }
+            if *t as usize >= q {
+                bail!("target index {t} outside the domain 0..{q}");
+            }
+            drugs.push(*d);
+            targets.push(*t);
+        }
+        self.template.with_rows(PairIndex::new(drugs, targets, m, q))
+    }
+
+    /// Per-batch operator when some queries carry feature vectors:
+    /// batch-local domains, one cross-kernel matrix row per distinct
+    /// object (known objects copy their full-domain row; featured
+    /// objects assemble `k(x, X_train)`, cached by id).
+    fn extended_op(&self, pairs: &[QueryPair]) -> Result<PairwiseLinOp> {
+        if self.model.kernel() == PairwiseKernel::Cartesian {
+            // Cartesian couples objects through identity factors
+            // (`k_D·δ(t=t̄) + δ(d=d̄)·k_T`); a δ against an object outside
+            // the domain is identically zero, so featured queries are
+            // not defined for it.
+            bail!("the cartesian kernel does not support featured (out-of-domain) objects");
+        }
+        if self.model.kernel().supports_heterogeneous() {
+            let mut db = SideBuilder::new(self.model.train_pairs().m());
+            let mut tb = SideBuilder::new(self.model.train_pairs().q());
+            let mut drugs = Vec::with_capacity(pairs.len());
+            let mut targets = Vec::with_capacity(pairs.len());
+            for p in pairs {
+                drugs.push(db.resolve(self, Side::Drug, &p.drug)?);
+                targets.push(tb.resolve(self, Side::Target, &p.target)?);
+            }
+            let dm = Arc::new(db.into_mat());
+            let tm = Arc::new(tb.into_mat());
+            let rows = PairIndex::new(drugs, targets, dm.rows(), tm.rows());
+            self.template.reindexed(dm, tm, rows)
+        } else {
+            // Homogeneous kernel: one shared object domain for both slots.
+            let mut b = SideBuilder::new(self.model.train_pairs().m());
+            let mut drugs = Vec::with_capacity(pairs.len());
+            let mut targets = Vec::with_capacity(pairs.len());
+            for p in pairs {
+                drugs.push(b.resolve(self, Side::Unified, &p.drug)?);
+                targets.push(b.resolve(self, Side::Unified, &p.target)?);
+            }
+            let mat = Arc::new(b.into_mat());
+            let rows = PairIndex::new(drugs, targets, mat.rows(), mat.rows());
+            self.template.reindexed(mat.clone(), mat, rows)
+        }
+    }
+
+    /// Full-domain kernel matrix for one side.
+    fn side_matrix(&self, side: Side) -> Arc<Mat> {
+        match side {
+            Side::Target => self.model.t(),
+            Side::Drug | Side::Unified => self.model.d(),
+        }
+    }
+
+    /// Cross-kernel row for a featured object (cache-aware; a cached id
+    /// is only trusted when its stored features match the query's).
+    fn featured_row(
+        &self,
+        side: Side,
+        id: &Option<String>,
+        x: &[f64],
+    ) -> Result<Arc<CachedRow>> {
+        let fs = match side {
+            Side::Drug => self.d_features.as_ref(),
+            Side::Target => self.t_features.as_ref(),
+            Side::Unified => self.d_features.as_ref().or(self.t_features.as_ref()),
+        };
+        let fs = fs.ok_or_else(|| {
+            gvt_err!(
+                "model artifact bundles no {} feature space; cannot score unseen objects",
+                side.name()
+            )
+        })?;
+        let cache = match side {
+            Side::Target => &self.target_cache,
+            Side::Drug | Side::Unified => &self.drug_cache,
+        };
+        if let Some(id) = id {
+            if let Some(hit) = cache.lock().expect("serve cache poisoned").get(id) {
+                if hit.x == x {
+                    return Ok(hit.clone());
+                }
+                // Same id, different features: fall through and replace.
+            }
+        }
+        let row = fs.cross_row(x).with_context(|| {
+            format!("assembling the cross-kernel row of {} {:?}", side.name(), id)
+        })?;
+        let entry = Arc::new(CachedRow { x: x.to_vec(), row });
+        if let Some(id) = id {
+            cache
+                .lock()
+                .expect("serve cache poisoned")
+                .insert(id.clone(), entry.clone());
+        }
+        Ok(entry)
+    }
+
+    /// The pinned concrete GVT factorization (see module docs).
+    pub fn policy(&self) -> GvtPolicy {
+        self.policy
+    }
+
+    /// The served model.
+    pub fn model(&self) -> &RidgeModel {
+        &self.model
+    }
+
+    /// The compiled template plan's structure summary.
+    pub fn plan_summary(&self) -> String {
+        self.template.plan_summary()
+    }
+
+    /// Serving counters (shared with the batcher).
+    pub fn serve_stats(&self) -> &ServeStats {
+        &self.stats
+    }
+
+    /// Snapshot every counter, including the per-side cache counters.
+    pub fn stats(&self) -> StatsSnapshot {
+        let dc = self.drug_cache.lock().expect("serve cache poisoned");
+        let tc = self.target_cache.lock().expect("serve cache poisoned");
+        StatsSnapshot {
+            score_calls: self.stats.score_calls.load(Ordering::Relaxed),
+            pairs: self.stats.pairs.load(Ordering::Relaxed),
+            batches: self.stats.batches.load(Ordering::Relaxed),
+            requests: self.stats.requests.load(Ordering::Relaxed),
+            batch_jobs_max: self.stats.batch_jobs_max.load(Ordering::Relaxed),
+            batch_pairs_max: self.stats.batch_pairs_max.load(Ordering::Relaxed),
+            drug_cache_hits: dc.hits(),
+            drug_cache_misses: dc.misses(),
+            drug_cache_len: dc.len(),
+            target_cache_hits: tc.hits(),
+            target_cache_misses: tc.misses(),
+            target_cache_len: tc.len(),
+        }
+    }
+
+    /// Counters + configuration as a JSON object (the `stats` wire
+    /// command).
+    pub fn stats_json(&self) -> String {
+        let s = self.stats();
+        format!(
+            "{{\"kernel\": \"{}\", \"policy\": \"{}\", \"train_pairs\": {}, \
+             \"plan\": \"{}\", \"score_calls\": {}, \"pairs\": {}, \
+             \"batches\": {}, \"requests\": {}, \"batch_jobs_max\": {}, \
+             \"batch_pairs_max\": {}, \"drug_cache\": {{\"hits\": {}, \
+             \"misses\": {}, \"len\": {}}}, \"target_cache\": {{\"hits\": {}, \
+             \"misses\": {}, \"len\": {}}}}}",
+            self.model.kernel().name(),
+            self.policy.name(),
+            self.model.train_size(),
+            self.plan_summary(),
+            s.score_calls,
+            s.pairs,
+            s.batches,
+            s.requests,
+            s.batch_jobs_max,
+            s.batch_pairs_max,
+            s.drug_cache_hits,
+            s.drug_cache_misses,
+            s.drug_cache_len,
+            s.target_cache_hits,
+            s.target_cache_misses,
+            s.target_cache_len,
+        )
+    }
+}
+
+/// A cached cross-kernel row, stored with the features that produced it:
+/// an id is client-supplied and may be reused with different features
+/// (stale client, colliding namespaces) — a hit only counts if the
+/// features match, otherwise the row is recomputed and replaced.
+struct CachedRow {
+    x: Vec<f64>,
+    row: Vec<f64>,
+}
+
+/// Accumulates one batch-local cross-kernel matrix: one row per distinct
+/// object referenced on this side, deduped by training index or
+/// client-supplied id (featured objects without an id always get a fresh
+/// row).
+struct SideBuilder {
+    width: usize,
+    flat: Vec<f64>,
+    count: u32,
+    known: HashMap<u32, u32>,
+    /// id → (row index, features): a repeated id only dedups when its
+    /// features match (ids are client-supplied and may collide).
+    by_id: HashMap<String, (u32, Vec<f64>)>,
+}
+
+impl SideBuilder {
+    fn new(width: usize) -> SideBuilder {
+        SideBuilder {
+            width,
+            flat: Vec::new(),
+            count: 0,
+            known: HashMap::new(),
+            by_id: HashMap::new(),
+        }
+    }
+
+    fn push_row(&mut self, row: &[f64]) -> u32 {
+        debug_assert_eq!(row.len(), self.width);
+        self.flat.extend_from_slice(row);
+        self.count += 1;
+        self.count - 1
+    }
+
+    fn resolve(
+        &mut self,
+        pred: &Predictor,
+        side: Side,
+        obj: &ObjectRef,
+    ) -> Result<u32> {
+        match obj {
+            ObjectRef::Known(g) => {
+                if let Some(&i) = self.known.get(g) {
+                    return Ok(i);
+                }
+                let mat = pred.side_matrix(side);
+                if *g as usize >= mat.rows() {
+                    bail!(
+                        "{} index {g} outside the domain 0..{}",
+                        side.name(),
+                        mat.rows()
+                    );
+                }
+                let i = self.push_row(mat.row(*g as usize));
+                self.known.insert(*g, i);
+                Ok(i)
+            }
+            ObjectRef::Featured { id, x } => {
+                if let Some(id) = id {
+                    if let Some((i, feats)) = self.by_id.get(id) {
+                        if feats == x {
+                            return Ok(*i);
+                        }
+                    }
+                }
+                let row = pred.featured_row(side, id, x)?;
+                let i = self.push_row(&row.row);
+                if let Some(id) = id {
+                    self.by_id.insert(id.clone(), (i, x.clone()));
+                }
+                Ok(i)
+            }
+        }
+    }
+
+    fn into_mat(self) -> Mat {
+        Mat::from_vec(self.count as usize, self.width, self.flat)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::PairDataset;
+    use crate::gvt::pairwise::PairwiseKernel;
+    use crate::kernels::{kernel_matrix, BaseKernel, KernelParams};
+    use crate::rng::{dist, Xoshiro256};
+    use crate::solvers::ridge::{PairwiseRidge, RidgeConfig};
+    use crate::testing::gen;
+
+    fn feature_dataset(seed: u64, m: usize, q: usize, p: usize) -> (PairDataset, Mat, Mat) {
+        let mut rng = Xoshiro256::seed_from(seed);
+        let xd = Mat::from_vec(m, p, dist::normal_vec(&mut rng, m * p));
+        let xt = Mat::from_vec(q, p, dist::normal_vec(&mut rng, q * p));
+        let params = KernelParams::default();
+        let d = Arc::new(kernel_matrix(BaseKernel::Linear, &params, &xd));
+        let t = Arc::new(kernel_matrix(BaseKernel::Linear, &params, &xt));
+        let pairs = gen::pair_sample(&mut rng, 6 * m, m, q);
+        let y = dist::normal_vec(&mut rng, 6 * m);
+        (
+            PairDataset { name: "serve-toy".into(), d, t, pairs, y, homogeneous: m == q },
+            xd,
+            xt,
+        )
+    }
+
+    #[test]
+    fn score_matches_ridge_predict_bitwise() {
+        let (data, _, _) = feature_dataset(90, 8, 9, 5);
+        let cfg = RidgeConfig { max_iters: 30, ..Default::default() };
+        let model = PairwiseRidge::fit(&data, PairwiseKernel::Kronecker, &cfg).unwrap();
+        let mut rng = Xoshiro256::seed_from(91);
+        let test = gen::pair_sample(&mut rng, 17, 8, 9);
+        // Oracle with the predictor's pinned policy.
+        let alpha = model.alpha.clone();
+        let lambda = model.lambda;
+        let pred = Predictor::new(model, None, None, ServeOptions::default()).unwrap();
+        let oracle = RidgeModel::from_parts(
+            PairwiseKernel::Kronecker,
+            data.d.clone(),
+            data.t.clone(),
+            data.pairs.clone(),
+            pred.policy(),
+            alpha,
+            lambda,
+        )
+        .unwrap();
+        let expect = oracle.predict(&test).unwrap();
+        let queries: Vec<QueryPair> = (0..test.len())
+            .map(|i| QueryPair::known(test.drug(i) as u32, test.target(i) as u32))
+            .collect();
+        // Whole batch, then assorted sub-batches: all bit-identical.
+        assert_eq!(pred.score(&queries).unwrap(), expect);
+        let mut got = Vec::new();
+        for chunk in queries.chunks(3) {
+            got.extend(pred.score(chunk).unwrap());
+        }
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn featured_refs_of_domain_objects_match_known_refs() {
+        let (data, xd, xt) = feature_dataset(92, 7, 6, 4);
+        let cfg = RidgeConfig { max_iters: 25, ..Default::default() };
+        let model = PairwiseRidge::fit(&data, PairwiseKernel::Poly2D, &cfg).unwrap();
+        let params = KernelParams::default();
+        let dfs = FeatureSpace { x: xd.clone(), kernel: BaseKernel::Linear, params };
+        let tfs = FeatureSpace { x: xt.clone(), kernel: BaseKernel::Linear, params };
+        let pred =
+            Predictor::new(model, Some(dfs), Some(tfs), ServeOptions::default()).unwrap();
+        let known: Vec<QueryPair> =
+            (0..6usize).map(|i| QueryPair::known(i as u32, (i % 6) as u32)).collect();
+        let featured: Vec<QueryPair> = (0..6usize)
+            .map(|i| QueryPair {
+                drug: ObjectRef::Featured {
+                    id: Some(format!("d{i}")),
+                    x: xd.row(i).to_vec(),
+                },
+                target: ObjectRef::Featured {
+                    id: Some(format!("t{}", i % 6)),
+                    x: xt.row(i % 6).to_vec(),
+                },
+            })
+            .collect();
+        // A featured object whose features equal a domain object's row
+        // reproduces that object's cross-kernel row exactly (same base
+        // kernel, same evaluation order) — scores are bit-identical.
+        assert_eq!(pred.score(&known).unwrap(), pred.score(&featured).unwrap());
+        // Second pass hits the id-keyed cache.
+        let before = pred.stats();
+        let _ = pred.score(&featured).unwrap();
+        let after = pred.stats();
+        assert!(after.drug_cache_hits > before.drug_cache_hits);
+        assert_eq!(after.drug_cache_misses, before.drug_cache_misses);
+    }
+
+    #[test]
+    fn homogeneous_kernels_serve_featured_objects() {
+        let mut rng = Xoshiro256::seed_from(93);
+        let (m, p) = (8, 4);
+        let x = Mat::from_vec(m, p, dist::normal_vec(&mut rng, m * p));
+        let params = KernelParams::default();
+        let d = Arc::new(kernel_matrix(BaseKernel::Linear, &params, &x));
+        let pairs = gen::homogeneous_sample(&mut rng, 40, m);
+        let data = PairDataset {
+            name: "homo".into(),
+            d: d.clone(),
+            t: d.clone(),
+            pairs,
+            y: dist::normal_vec(&mut rng, 40),
+            homogeneous: true,
+        };
+        let cfg = RidgeConfig { max_iters: 25, ..Default::default() };
+        for kernel in [PairwiseKernel::Symmetric, PairwiseKernel::Mlpk] {
+            let model = PairwiseRidge::fit(&data, kernel, &cfg).unwrap();
+            let fs = FeatureSpace { x: x.clone(), kernel: BaseKernel::Linear, params };
+            let pred =
+                Predictor::new(model, Some(fs), None, ServeOptions::default()).unwrap();
+            let known: Vec<QueryPair> =
+                (0..m).map(|i| QueryPair::known(i as u32, ((i + 1) % m) as u32)).collect();
+            let featured: Vec<QueryPair> = (0..m)
+                .map(|i| QueryPair {
+                    drug: ObjectRef::Featured { id: None, x: x.row(i).to_vec() },
+                    target: ObjectRef::Known(((i + 1) % m) as u32),
+                })
+                .collect();
+            assert_eq!(
+                pred.score(&known).unwrap(),
+                pred.score(&featured).unwrap(),
+                "{kernel:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_out_of_domain_indices_cleanly() {
+        let (data, _, _) = feature_dataset(94, 5, 5, 3);
+        let cfg = RidgeConfig { max_iters: 10, ..Default::default() };
+        let model = PairwiseRidge::fit(&data, PairwiseKernel::Kronecker, &cfg).unwrap();
+        let pred = Predictor::new(model, None, None, ServeOptions::default()).unwrap();
+        assert!(pred.score(&[QueryPair::known(5, 0)]).is_err());
+        assert!(pred.score(&[QueryPair::known(0, 99)]).is_err());
+        // Featured query without a feature space: clean error, no panic.
+        let q = QueryPair {
+            drug: ObjectRef::Featured { id: None, x: vec![0.0; 3] },
+            target: ObjectRef::Known(0),
+        };
+        assert!(pred.score(&[q]).is_err());
+    }
+
+    /// A reused object id with *different* features must not be served
+    /// from the cache (or deduped within a batch): ids are
+    /// client-supplied and may collide or go stale.
+    #[test]
+    fn reused_id_with_new_features_is_not_served_stale() {
+        let (data, xd, xt) = feature_dataset(98, 6, 6, 4);
+        let cfg = RidgeConfig { max_iters: 20, ..Default::default() };
+        let model = PairwiseRidge::fit(&data, PairwiseKernel::Kronecker, &cfg).unwrap();
+        let params = KernelParams::default();
+        let dfs = FeatureSpace { x: xd.clone(), kernel: BaseKernel::Linear, params };
+        let tfs = FeatureSpace { x: xt.clone(), kernel: BaseKernel::Linear, params };
+        let pred =
+            Predictor::new(model, Some(dfs), Some(tfs), ServeOptions::default()).unwrap();
+        let query = |drug_obj: usize| {
+            vec![QueryPair {
+                drug: ObjectRef::Featured {
+                    id: Some("shared-id".into()),
+                    x: xd.row(drug_obj).to_vec(),
+                },
+                target: ObjectRef::Known(2),
+            }]
+        };
+        let s0 = pred.score(&query(0)).unwrap();
+        // Same id, object 1's features: must match Known(1), not s0.
+        let s1 = pred.score(&query(1)).unwrap();
+        let known1 = pred.score(&[QueryPair::known(1, 2)]).unwrap();
+        assert_eq!(s1, known1, "stale cache row served for a reused id");
+        assert_ne!(s0, s1);
+        // Within ONE batch too: same id, different features → two rows.
+        let mixed = vec![query(0).remove(0), query(1).remove(0)];
+        let both = pred.score(&mixed).unwrap();
+        assert_eq!(both[0], s0[0]);
+        assert_eq!(both[1], s1[0]);
+    }
+
+    #[test]
+    fn cartesian_rejects_featured_objects() {
+        let (data, xd, _) = feature_dataset(97, 5, 5, 3);
+        let cfg = RidgeConfig { max_iters: 10, ..Default::default() };
+        let model = PairwiseRidge::fit(&data, PairwiseKernel::Cartesian, &cfg).unwrap();
+        let params = KernelParams::default();
+        let dfs = FeatureSpace { x: xd.clone(), kernel: BaseKernel::Linear, params };
+        let pred =
+            Predictor::new(model, Some(dfs), None, ServeOptions::default()).unwrap();
+        // In-domain works…
+        assert!(pred.score(&[QueryPair::known(0, 1)]).is_ok());
+        // …featured is a clean error, not an assertion failure.
+        let q = QueryPair {
+            drug: ObjectRef::Featured { id: None, x: xd.row(0).to_vec() },
+            target: ObjectRef::Known(0),
+        };
+        assert!(pred.score(&[q]).is_err());
+    }
+
+    #[test]
+    fn score_grid_matches_predict_batch() {
+        let (data, _, _) = feature_dataset(95, 6, 7, 4);
+        let cfg = RidgeConfig { max_iters: 40, rel_tol: 1e-12, ..Default::default() };
+        let lambdas = [0.1, 1.0, 5.0];
+        let grid =
+            PairwiseRidge::fit_lambda_grid(&data, PairwiseKernel::Kronecker, &cfg, &lambdas)
+                .unwrap();
+        let mut rng = Xoshiro256::seed_from(96);
+        let test = gen::pair_sample(&mut rng, 11, 6, 7);
+        let queries: Vec<QueryPair> = (0..test.len())
+            .map(|i| QueryPair::known(test.drug(i) as u32, test.target(i) as u32))
+            .collect();
+        let mut it = grid.into_iter();
+        let primary = it.next().unwrap();
+        let extra: Vec<RidgeModel> = it.collect();
+        let pred = Predictor::new(primary, None, None, ServeOptions::default()).unwrap();
+        let block = pred.score_grid(&queries, &extra).unwrap();
+        assert_eq!(block.shape(), (11, 3));
+        // Column 0 is the primary model; agreement with the single-RHS
+        // path is within multi-RHS reassociation tolerance.
+        let single = pred.score(&queries).unwrap();
+        for (i, s) in single.iter().enumerate() {
+            assert!((block[(i, 0)] - s).abs() < 1e-10);
+        }
+    }
+}

@@ -1,0 +1,265 @@
+//! Line-delimited JSON wire protocol (stdin/stdout and TCP share it).
+//!
+//! One request per line, one response line per request:
+//!
+//! ```text
+//! → {"id": 7, "pairs": [[0, 3], [5, 1]]}
+//! ← {"id": 7, "scores": [1.25000000000000000e0, -7.50000000000000000e-1]}
+//!
+//! → {"id": 8, "pairs": [{"drug": {"id": "CHEMBL25", "features": [0.1, 0.7]},
+//!                        "target": 4}]}
+//! ← {"id": 8, "scores": [3.10000000000000000e0]}
+//!
+//! → {"cmd": "stats"}
+//! ← {"stats": {...}}
+//!
+//! → {"cmd": "shutdown"}
+//! ← {"ok": true}
+//! ```
+//!
+//! A pair is either `[drug, target]` (both in-domain indices) or an
+//! object `{"drug": <ref>, "target": <ref>}` where each `<ref>` is an
+//! in-domain index or `{"features": [...], "id": "..."}` (`id` optional
+//! — it keys the server-side cross-kernel row cache). Malformed requests
+//! produce `{"id": ..., "error": "..."}` and leave the connection open.
+//!
+//! Scores are rendered with 17 significant digits (`{:.17e}`), the exact
+//! `f64` round-trip format the offline `gvt-rls predict` output uses —
+//! `scripts/verify.sh` diffs the two textually.
+
+use crate::error::{bail, gvt_err, Context, Result};
+use crate::runtime::json::Json;
+use crate::serve::predictor::{ObjectRef, QueryPair};
+
+/// A parsed request line.
+pub enum Request {
+    Score { id: Option<f64>, pairs: Vec<QueryPair> },
+    Stats { id: Option<f64> },
+    Shutdown { id: Option<f64> },
+}
+
+/// Parse one request line.
+pub fn parse_request(line: &str) -> Result<Request> {
+    let json = Json::parse(line).context("malformed JSON")?;
+    // Reject non-numeric ids up front: silently dropping the id would
+    // leave pipelined clients unable to correlate responses.
+    let id = match json.get("id") {
+        None => None,
+        Some(j) => {
+            Some(j.as_f64().ok_or_else(|| gvt_err!("'id' must be a number"))?)
+        }
+    };
+    if let Some(cmd) = json.get("cmd") {
+        return match cmd.as_str() {
+            Some("stats") => Ok(Request::Stats { id }),
+            Some("shutdown") => Ok(Request::Shutdown { id }),
+            Some(other) => bail!("unknown cmd {other:?}"),
+            None => bail!("cmd must be a string"),
+        };
+    }
+    let pairs_json = json
+        .get("pairs")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| gvt_err!("request needs a 'pairs' array or a 'cmd'"))?;
+    let mut pairs = Vec::with_capacity(pairs_json.len());
+    for (i, p) in pairs_json.iter().enumerate() {
+        pairs.push(parse_pair(p).with_context(|| format!("pair {i}"))?);
+    }
+    Ok(Request::Score { id, pairs })
+}
+
+fn parse_pair(j: &Json) -> Result<QueryPair> {
+    if let Some(arr) = j.as_arr() {
+        if arr.len() != 2 {
+            bail!("pair array must be [drug, target]");
+        }
+        return Ok(QueryPair {
+            drug: parse_ref(&arr[0], "drug")?,
+            target: parse_ref(&arr[1], "target")?,
+        });
+    }
+    if j.as_obj().is_some() {
+        let d = j.get("drug").ok_or_else(|| gvt_err!("pair object needs 'drug'"))?;
+        let t = j.get("target").ok_or_else(|| gvt_err!("pair object needs 'target'"))?;
+        return Ok(QueryPair {
+            drug: parse_ref(d, "drug")?,
+            target: parse_ref(t, "target")?,
+        });
+    }
+    bail!("pair must be [drug, target] or {{\"drug\": ..., \"target\": ...}}")
+}
+
+fn parse_ref(j: &Json, side: &str) -> Result<ObjectRef> {
+    if let Some(n) = j.as_f64() {
+        if n < 0.0 || n.fract() != 0.0 || n > u32::MAX as f64 {
+            bail!("{side} index {n} is not a valid object index");
+        }
+        return Ok(ObjectRef::Known(n as u32));
+    }
+    if j.as_obj().is_some() {
+        let feats = j
+            .get("features")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| gvt_err!("{side} object needs a 'features' array"))?;
+        let mut x = Vec::with_capacity(feats.len());
+        for f in feats {
+            x.push(
+                f.as_f64()
+                    .ok_or_else(|| gvt_err!("{side} features must be numbers"))?,
+            );
+        }
+        let id = j.get("id").and_then(Json::as_str).map(str::to_string);
+        return Ok(ObjectRef::Featured { id, x });
+    }
+    bail!("{side} must be an index or {{\"features\": [...]}}")
+}
+
+/// `f64` → JSON number with exact round-trip precision (17 significant
+/// digits). Non-finite values render as `null` — JSON has no NaN/Inf.
+pub fn fmt_score(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.17e}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn fmt_id(id: &Option<f64>) -> String {
+    match id {
+        None => String::new(),
+        Some(v) if v.fract() == 0.0 && v.abs() < 9.0e15 => {
+            format!("\"id\": {}, ", *v as i64)
+        }
+        Some(v) => format!("\"id\": {v}, "),
+    }
+}
+
+/// Success response for a score request.
+pub fn scores_response(id: &Option<f64>, scores: &[f64]) -> String {
+    let mut out = String::with_capacity(32 + scores.len() * 26);
+    out.push('{');
+    out.push_str(&fmt_id(id));
+    out.push_str("\"scores\": [");
+    for (i, s) in scores.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        out.push_str(&fmt_score(*s));
+    }
+    out.push_str("]}");
+    out
+}
+
+/// Error response (any request kind).
+pub fn error_response(id: &Option<f64>, msg: &str) -> String {
+    format!("{{{}\"error\": \"{}\"}}", fmt_id(id), json_escape(msg))
+}
+
+/// Stats response wrapping a pre-rendered JSON object.
+pub fn stats_response(id: &Option<f64>, stats_obj: &str) -> String {
+    format!("{{{}\"stats\": {stats_obj}}}", fmt_id(id))
+}
+
+/// Acknowledgement (shutdown).
+pub fn ok_response(id: &Option<f64>) -> String {
+    format!("{{{}\"ok\": true}}", fmt_id(id))
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_index_pairs() {
+        let r = parse_request(r#"{"id": 3, "pairs": [[0, 2], [5, 1]]}"#).unwrap();
+        let Request::Score { id, pairs } = r else { panic!("not a score request") };
+        assert_eq!(id, Some(3.0));
+        assert_eq!(pairs.len(), 2);
+        assert!(matches!(pairs[0].drug, ObjectRef::Known(0)));
+        assert!(matches!(pairs[1].target, ObjectRef::Known(1)));
+    }
+
+    #[test]
+    fn parses_featured_refs() {
+        let r = parse_request(
+            r#"{"pairs": [{"drug": {"id": "x", "features": [0.5, -1.0]}, "target": 7}]}"#,
+        )
+        .unwrap();
+        let Request::Score { id, pairs } = r else { panic!("not a score request") };
+        assert!(id.is_none());
+        match &pairs[0].drug {
+            ObjectRef::Featured { id, x } => {
+                assert_eq!(id.as_deref(), Some("x"));
+                assert_eq!(x, &vec![0.5, -1.0]);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(matches!(pairs[0].target, ObjectRef::Known(7)));
+    }
+
+    #[test]
+    fn parses_commands() {
+        assert!(matches!(
+            parse_request(r#"{"cmd": "stats"}"#).unwrap(),
+            Request::Stats { .. }
+        ));
+        assert!(matches!(
+            parse_request(r#"{"cmd": "shutdown", "id": 9}"#).unwrap(),
+            Request::Shutdown { id: Some(_) }
+        ));
+    }
+
+    #[test]
+    fn rejects_malformed_requests() {
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request(r#"{"pairs": [[1]]}"#).is_err());
+        assert!(parse_request(r#"{"pairs": [[-1, 0]]}"#).is_err());
+        assert!(parse_request(r#"{"pairs": [[0.5, 0]]}"#).is_err());
+        assert!(parse_request(r#"{"cmd": "reboot"}"#).is_err());
+        assert!(parse_request(r#"{"hello": 1}"#).is_err());
+        // String ids are rejected, not silently dropped.
+        assert!(parse_request(r#"{"id": "req-7", "pairs": [[0, 1]]}"#).is_err());
+    }
+
+    #[test]
+    fn score_rendering_roundtrips_exactly() {
+        let values = [1.25, -0.1, 3.14159265358979312e-7, f64::MIN_POSITIVE, 0.0];
+        for v in values {
+            let line = scores_response(&Some(1.0), &[v]);
+            let parsed = Json::parse(&line).unwrap();
+            let back = parsed.get("scores").unwrap().as_arr().unwrap()[0]
+                .as_f64()
+                .unwrap();
+            assert_eq!(back.to_bits(), v.to_bits(), "{v}");
+        }
+    }
+
+    #[test]
+    fn responses_are_valid_json() {
+        for line in [
+            scores_response(&None, &[1.0, 2.0]),
+            scores_response(&Some(42.0), &[]),
+            error_response(&Some(1.0), "bad \"thing\"\n"),
+            ok_response(&None),
+            stats_response(&None, "{\"x\": 1}"),
+        ] {
+            assert!(Json::parse(&line).is_ok(), "{line}");
+        }
+    }
+}

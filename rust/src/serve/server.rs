@@ -1,0 +1,405 @@
+//! Transport layer: serve the wire protocol over stdin/stdout or TCP.
+//!
+//! Both transports share one request loop: read a line, parse it
+//! ([`crate::serve::protocol`]), hand score requests to the
+//! [`Batcher`] (blocking until the coalesced pass completes), write one
+//! response line. Concurrency — and therefore micro-batching — comes
+//! from multiple TCP connections: each connection gets its own handler
+//! thread, so requests from different clients land on the dispatcher
+//! queue together and ride one GVT pass.
+//!
+//! Shutdown: any client may send `{"cmd": "shutdown"}`. The handler
+//! acknowledges, raises the stop flag, and pokes the listener with a
+//! throwaway connection so the accept loop observes the flag; the server
+//! then joins its handler threads and drains the batcher.
+
+use crate::error::{gvt_err, Context, GvtError, Result};
+use crate::serve::batcher::{BatchConfig, Batcher, BatcherHandle};
+use crate::serve::predictor::Predictor;
+use crate::serve::protocol::{self, Request};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Hard cap on one request line's byte length (features arrays are the
+/// only large payload; 8 MiB ≈ 400k f64 literals, far beyond any real
+/// feature dimension). Longer lines answer an in-band error and close.
+const MAX_REQUEST_LINE: usize = 8 * 1024 * 1024;
+
+/// What one bounded line read produced.
+enum LineRead {
+    /// A complete newline-terminated line is in the buffer.
+    Line,
+    /// The stream ended (a final unterminated line may be in the buffer).
+    Eof,
+    /// The cap was hit mid-line; the connection cannot resync.
+    TooLong,
+}
+
+/// Append one line into `buf`, capped at [`MAX_REQUEST_LINE`] **inside**
+/// the read (`read_until` alone would not return while a newline-less
+/// stream keeps delivering bytes, so an after-the-fact length check
+/// could never fire). Bytes are accumulated raw — a timeout error from
+/// the underlying reader leaves any partial line (even one splitting a
+/// multi-byte UTF-8 character) in `buf` for the next call; validation
+/// to UTF-8 happens only once a full line has arrived.
+fn read_bounded_line<R: BufRead>(
+    reader: &mut R,
+    buf: &mut Vec<u8>,
+) -> std::io::Result<LineRead> {
+    // One byte of headroom so a capped read is distinguishable from EOF.
+    let limit = (MAX_REQUEST_LINE + 1 - buf.len()) as u64;
+    match (&mut *reader).take(limit).read_until(b'\n', buf) {
+        Ok(0) => Ok(LineRead::Eof),
+        Ok(_) if buf.len() > MAX_REQUEST_LINE => Ok(LineRead::TooLong),
+        Ok(_) if buf.last() != Some(&b'\n') => Ok(LineRead::Eof),
+        Ok(_) => Ok(LineRead::Line),
+        Err(e) => Err(e),
+    }
+}
+
+/// Outcome of handling one request line.
+enum LineOutcome {
+    Respond(String),
+    ShutdownAfter(String),
+}
+
+fn handle_line(
+    line: &str,
+    handle: &BatcherHandle,
+    predictor: &Predictor,
+) -> LineOutcome {
+    match protocol::parse_request(line) {
+        Ok(Request::Score { id, pairs }) => match handle.score(pairs) {
+            Ok(scores) => LineOutcome::Respond(protocol::scores_response(&id, &scores)),
+            Err(e) => {
+                LineOutcome::Respond(protocol::error_response(&id, &format!("{e:#}")))
+            }
+        },
+        Ok(Request::Stats { id }) => {
+            LineOutcome::Respond(protocol::stats_response(&id, &predictor.stats_json()))
+        }
+        Ok(Request::Shutdown { id }) => {
+            LineOutcome::ShutdownAfter(protocol::ok_response(&id))
+        }
+        Err(e) => {
+            LineOutcome::Respond(protocol::error_response(&None, &format!("{e:#}")))
+        }
+    }
+}
+
+/// Serve the protocol over stdin/stdout until EOF or `shutdown`.
+/// Single-client by construction; the batcher still mediates so the
+/// code path matches TCP serving exactly.
+pub fn serve_stdio(predictor: Arc<Predictor>, cfg: BatchConfig) -> Result<()> {
+    let batcher = Batcher::start(predictor.clone(), cfg);
+    let handle = batcher.handle();
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let mut input = stdin.lock();
+    let mut out = stdout.lock();
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let status = read_bounded_line(&mut input, &mut buf).context("reading stdin")?;
+        if matches!(status, LineRead::TooLong) {
+            let resp = protocol::error_response(&None, "request line too long");
+            writeln!(out, "{resp}")?;
+            out.flush()?;
+            break;
+        }
+        let mut done = matches!(status, LineRead::Eof);
+        if !buf.is_empty() {
+            let outcome = match std::str::from_utf8(&buf) {
+                Ok(text) if text.trim().is_empty() => None,
+                Ok(text) => Some(handle_line(text.trim(), &handle, &predictor)),
+                Err(_) => Some(LineOutcome::Respond(protocol::error_response(
+                    &None,
+                    "request line is not valid UTF-8",
+                ))),
+            };
+            buf.clear();
+            match outcome {
+                None => {}
+                Some(LineOutcome::Respond(resp)) => {
+                    writeln!(out, "{resp}")?;
+                    out.flush()?;
+                }
+                Some(LineOutcome::ShutdownAfter(resp)) => {
+                    writeln!(out, "{resp}")?;
+                    out.flush()?;
+                    done = true;
+                }
+            }
+        }
+        if done {
+            break;
+        }
+    }
+    drop(handle);
+    batcher.shutdown();
+    Ok(())
+}
+
+/// Bind `listen` (use port 0 for an ephemeral port), announce
+/// `gvt-rls-serve listening on <addr>` on stdout (scripts parse this
+/// line), and run the accept loop until a client sends `shutdown`.
+pub fn serve_tcp(predictor: Arc<Predictor>, listen: &str, cfg: BatchConfig) -> Result<()> {
+    let listener =
+        TcpListener::bind(listen).with_context(|| format!("binding {listen}"))?;
+    let addr = listener.local_addr().context("reading bound address")?;
+    println!("gvt-rls-serve listening on {addr}");
+    std::io::stdout().flush().ok();
+    serve_on(listener, predictor, cfg)
+}
+
+/// The accept loop over an already-bound listener (tests bind their own
+/// so they know the port). Blocks until shutdown; joins every
+/// connection handler and drains the batcher before returning.
+pub fn serve_on(
+    listener: TcpListener,
+    predictor: Arc<Predictor>,
+    cfg: BatchConfig,
+) -> Result<()> {
+    let addr = listener.local_addr().context("reading bound address")?;
+    // The shutdown self-poke must target a *connectable* address: for a
+    // wildcard bind (0.0.0.0 / [::]) the local address is unspecified
+    // and connecting to it is platform-dependent — use the loopback of
+    // the same family instead.
+    let poke_addr = {
+        let mut a = addr;
+        if a.ip().is_unspecified() {
+            a.set_ip(match a.ip() {
+                std::net::IpAddr::V4(_) => {
+                    std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST)
+                }
+                std::net::IpAddr::V6(_) => {
+                    std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST)
+                }
+            });
+        }
+        a
+    };
+    let batcher = Batcher::start(predictor.clone(), cfg);
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    let mut spawn_err: Option<GvtError> = None;
+    for stream in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match stream {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        // Reap finished connection handlers so a long-lived server's
+        // handle list doesn't grow with every connection ever accepted.
+        handlers.retain(|h| !h.is_finished());
+        let handle = batcher.handle();
+        let pred = predictor.clone();
+        let stop_flag = stop.clone();
+        match std::thread::Builder::new().name("gvt-serve-conn".into()).spawn(move || {
+            handle_connection(stream, handle, pred, stop_flag, poke_addr)
+        }) {
+            Ok(h) => handlers.push(h),
+            Err(e) => {
+                // Tear down in order: raise the stop flag FIRST so live
+                // handlers exit on their next poll tick and release
+                // their batcher handles — returning the error directly
+                // would hang in Batcher::drop waiting on them.
+                stop.store(true, Ordering::SeqCst);
+                spawn_err = Some(gvt_err!("spawning connection handler: {e}"));
+                break;
+            }
+        }
+    }
+    stop.store(true, Ordering::SeqCst);
+    for h in handlers {
+        let _ = h.join();
+    }
+    batcher.shutdown();
+    match spawn_err {
+        None => Ok(()),
+        Some(e) => Err(e),
+    }
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    handle: BatcherHandle,
+    predictor: Arc<Predictor>,
+    stop: Arc<AtomicBool>,
+    addr: SocketAddr,
+) {
+    // Poll with a read timeout instead of blocking forever: serve_on
+    // joins every handler at shutdown, and an idle connection parked in
+    // a blocking read would hang the whole server. On each timeout tick
+    // the handler re-checks the stop flag and exits if another client
+    // shut the server down.
+    //
+    // Lines are accumulated as BYTES (`read_until`), not via
+    // `read_line`: on an error `read_line` truncates any partial
+    // not-yet-valid-UTF-8 tail off its buffer, so a timeout landing
+    // inside a multi-byte character would silently drop the bytes read
+    // so far. `read_until` keeps them; UTF-8 is validated only once a
+    // full line has arrived.
+    let _ = stream.set_read_timeout(Some(std::time::Duration::from_millis(200)));
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let status = match read_bounded_line(&mut reader, &mut buf) {
+            Ok(s) => s,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) =>
+            {
+                // Timeout tick; partial bytes stay in `buf`.
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                continue;
+            }
+            Err(_) => break,
+        };
+        if matches!(status, LineRead::TooLong) {
+            // Cap hit mid-line: no way to resync, answer in-band and
+            // drop the connection.
+            let resp = protocol::error_response(&None, "request line too long");
+            let _ = writeln!(writer, "{resp}").and_then(|_| writer.flush());
+            break;
+        }
+        let eof = matches!(status, LineRead::Eof);
+        if !buf.is_empty() {
+            let outcome = match std::str::from_utf8(&buf) {
+                Ok(text) if text.trim().is_empty() => None,
+                Ok(text) => Some(handle_line(text.trim(), &handle, &predictor)),
+                Err(_) => Some(LineOutcome::Respond(protocol::error_response(
+                    &None,
+                    "request line is not valid UTF-8",
+                ))),
+            };
+            buf.clear();
+            match outcome {
+                None => {}
+                Some(LineOutcome::Respond(resp)) => {
+                    if writeln!(writer, "{resp}").and_then(|_| writer.flush()).is_err() {
+                        break;
+                    }
+                }
+                Some(LineOutcome::ShutdownAfter(resp)) => {
+                    let _ = writeln!(writer, "{resp}").and_then(|_| writer.flush());
+                    stop.store(true, Ordering::SeqCst);
+                    // Poke the accept loop so it observes the flag.
+                    let _ = TcpStream::connect(addr);
+                    break;
+                }
+            }
+        }
+        if eof {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::PairDataset;
+    use crate::gvt::pairwise::PairwiseKernel;
+    use crate::rng::{dist, Xoshiro256};
+    use crate::runtime::json::Json;
+    use crate::serve::predictor::{QueryPair, ServeOptions};
+    use crate::serve::protocol::fmt_score;
+    use crate::solvers::ridge::{PairwiseRidge, RidgeConfig};
+    use crate::testing::gen;
+    use std::time::Duration;
+
+    fn toy_predictor(seed: u64) -> Arc<Predictor> {
+        let mut rng = Xoshiro256::seed_from(seed);
+        let d = Arc::new(gen::psd_kernel(&mut rng, 5));
+        let t = Arc::new(gen::psd_kernel(&mut rng, 6));
+        let pairs = gen::pair_sample(&mut rng, 25, 5, 6);
+        let data = PairDataset {
+            name: "server-toy".into(),
+            d,
+            t,
+            pairs,
+            y: dist::normal_vec(&mut rng, 25),
+            homogeneous: false,
+        };
+        let cfg = RidgeConfig { max_iters: 15, ..Default::default() };
+        let model = PairwiseRidge::fit(&data, PairwiseKernel::Kronecker, &cfg).unwrap();
+        Arc::new(Predictor::new(model, None, None, ServeOptions::default()).unwrap())
+    }
+
+    fn request_line(stream: &mut TcpStream, line: &str) -> String {
+        writeln!(stream, "{line}").unwrap();
+        stream.flush().unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        resp.trim_end().to_string()
+    }
+
+    /// Full TCP round trip on an ephemeral port: responses textually
+    /// match direct scoring, stats and malformed lines answer in-band,
+    /// and `shutdown` terminates the accept loop cleanly.
+    #[test]
+    fn tcp_round_trip_and_shutdown() {
+        let predictor = toy_predictor(120);
+        let expect = predictor.score(&[QueryPair::known(1, 2)]).unwrap();
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let pred = predictor.clone();
+        let server = std::thread::spawn(move || {
+            serve_on(
+                listener,
+                pred,
+                BatchConfig { max_batch: 16, max_wait: Duration::from_micros(200) },
+            )
+            .unwrap();
+        });
+
+        let mut conn = TcpStream::connect(addr).unwrap();
+        let resp = request_line(&mut conn, r#"{"id": 1, "pairs": [[1, 2]]}"#);
+        assert_eq!(
+            resp,
+            format!("{{\"id\": 1, \"scores\": [{}]}}", fmt_score(expect[0]))
+        );
+        // Malformed request: in-band error, connection stays usable.
+        let resp = request_line(&mut conn, "garbage");
+        assert!(resp.contains("\"error\""), "{resp}");
+        let resp = request_line(&mut conn, r#"{"id": 2, "pairs": [[1, 2]]}"#);
+        assert!(resp.contains("\"scores\""), "{resp}");
+        // Stats come back as JSON with our counters.
+        let resp = request_line(&mut conn, r#"{"cmd": "stats"}"#);
+        let parsed = Json::parse(&resp).unwrap();
+        let stats = parsed.get("stats").unwrap();
+        assert!(stats.get("pairs").unwrap().as_f64().unwrap() >= 2.0);
+        assert_eq!(
+            stats.get("policy").unwrap().as_str().unwrap(),
+            predictor.policy().name()
+        );
+        // A second concurrent connection works.
+        let mut conn2 = TcpStream::connect(addr).unwrap();
+        let resp = request_line(&mut conn2, r#"{"id": 7, "pairs": [[0, 0], [4, 5]]}"#);
+        assert!(resp.starts_with("{\"id\": 7, \"scores\": ["), "{resp}");
+        // Shutdown while conn2 is STILL OPEN and idle: its handler must
+        // notice the stop flag on a poll tick, so the server exits
+        // without waiting for every client to hang up.
+        let resp = request_line(&mut conn, r#"{"cmd": "shutdown"}"#);
+        assert_eq!(resp, "{\"ok\": true}");
+        drop(conn);
+        server.join().unwrap();
+        drop(conn2);
+    }
+}

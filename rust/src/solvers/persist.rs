@@ -1,9 +1,12 @@
 //! Model persistence: save/load fitted ridge models so the coordinator
-//! can train once and serve later (kernel matrices are reloaded from the
-//! dataset side; the model file stores what the representer theorem needs
-//! — the dual coefficients and the training sample).
+//! can train once and serve later. The model file stores what the
+//! representer theorem needs — the dual coefficients and the training
+//! sample — plus, in v2, everything a prediction server needs to start
+//! from a single file.
 //!
-//! Format (versioned, line-oriented text — no serde offline):
+//! Two versioned, line-oriented text formats (no serde offline):
+//!
+//! **v1** (legacy, still loadable; kernel matrices supplied by the caller):
 //!
 //! ```text
 //! gvt-rls-model v1
@@ -16,10 +19,43 @@
 //! <a_0>
 //! …
 //! ```
+//!
+//! **v2** adds the GVT policy, the training λ, and optional embedded
+//! payloads, terminated by an explicit `end`:
+//!
+//! ```text
+//! gvt-rls-model v2
+//! kernel <name>
+//! policy <auto|sparse-left|sparse-right|dense>
+//! lambda <float or 'unknown'>
+//! domains <m> <q>
+//! pairs <n>
+//! <d_0> <t_0>
+//! …
+//! alpha
+//! <a_0>
+//! …
+//! dmatrix <rows> <cols>          # optional: full-domain drug kernel
+//! <row of floats>
+//! …
+//! tmatrix <rows> <cols>          # optional: full-domain target kernel
+//! …
+//! dfeatures <rows> <cols> <base-kernel> <gamma> <degree> <coef0>
+//! <row of floats>                # optional: drug features + base kernel,
+//! …                              # for cross-kernel rows of unseen drugs
+//! tfeatures <rows> <cols> <base-kernel> <gamma> <degree> <coef0>
+//! …
+//! end
+//! ```
+//!
+//! All floats are written with 17 significant decimal digits (`{:.17e}`),
+//! which round-trips `f64` exactly — the round-trip property test below
+//! pins bit-exact `alpha` reproduction.
 
 use crate::error::{bail, Context, Result};
 use crate::gvt::pairwise::PairwiseKernel;
 use crate::gvt::vec_trick::GvtPolicy;
+use crate::kernels::{cross_kernel_matrix, kernel_matrix, BaseKernel, KernelParams};
 use crate::linalg::Mat;
 use crate::solvers::ridge::RidgeModel;
 use crate::sparse::PairIndex;
@@ -27,7 +63,316 @@ use std::io::Write;
 use std::path::Path;
 use std::sync::Arc;
 
-/// Serialize a fitted model to `path`.
+/// A feature space bundled in a v2 artifact: the training objects' raw
+/// feature matrix plus the base kernel that derived the operator matrix
+/// from it. A server uses this to assemble cross-kernel rows
+/// `k(x_new, X[j,:])` for objects it has never seen.
+#[derive(Clone)]
+pub struct FeatureSpace {
+    /// One training object per row.
+    pub x: Mat,
+    pub kernel: BaseKernel,
+    pub params: KernelParams,
+}
+
+impl FeatureSpace {
+    /// Cross-kernel row of a query object against every training object
+    /// (the 1-row case of [`cross_kernel_matrix`]).
+    pub fn cross_row(&self, query: &[f64]) -> Result<Vec<f64>> {
+        if query.len() != self.x.cols() {
+            bail!(
+                "feature dimension {} != training feature dimension {}",
+                query.len(),
+                self.x.cols()
+            );
+        }
+        let q = Mat::from_vec(1, query.len(), query.to_vec());
+        Ok(cross_kernel_matrix(self.kernel, &self.params, &q, &self.x).into_vec())
+    }
+
+    /// The full-domain operator matrix this space derives.
+    pub fn kernel_matrix(&self) -> Mat {
+        kernel_matrix(self.kernel, &self.params, &self.x)
+    }
+
+    /// Does this space reproduce `mat` (the model's operator matrix)?
+    /// False for any post-hoc transform the `(features, base kernel)`
+    /// pair cannot represent — e.g. `normalize_kernel` applied after
+    /// `kernel_matrix`, as the Metz/Merget pipelines do. Serving mixes
+    /// rows of `mat` (known objects) with `cross_row`s (featured
+    /// objects), so an inconsistent space would silently scale featured
+    /// scores wrong; callers reject it up front instead.
+    pub fn reproduces(&self, mat: &Mat) -> bool {
+        if mat.shape() != (self.x.rows(), self.x.rows()) {
+            return false;
+        }
+        let derived = self.kernel_matrix();
+        let scale = mat
+            .as_slice()
+            .iter()
+            .fold(1.0_f64, |m, v| m.max(v.abs()));
+        derived.max_abs_diff(mat) <= 1e-9 * scale
+    }
+}
+
+/// Everything a model file contains, before kernel-matrix resolution.
+pub struct ModelFile {
+    pub version: u8,
+    pub kernel: PairwiseKernel,
+    /// `Auto` for v1 files (which predate the field).
+    pub policy: GvtPolicy,
+    /// `NaN` when the file does not record λ (v1, or `lambda unknown`).
+    pub lambda: f64,
+    pub m: usize,
+    pub q: usize,
+    pub drugs: Vec<u32>,
+    pub targets: Vec<u32>,
+    pub alpha: Vec<f64>,
+    /// Embedded full-domain kernel matrices (v2, optional).
+    pub d: Option<Mat>,
+    pub t: Option<Mat>,
+    /// Embedded feature spaces (v2, optional).
+    pub d_features: Option<FeatureSpace>,
+    pub t_features: Option<FeatureSpace>,
+}
+
+impl ModelFile {
+    /// Parse a v1 or v2 model file.
+    pub fn read(path: &Path) -> Result<ModelFile> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut lines = text.lines();
+        let header = lines.next().context("empty model file")?;
+        let version = match header {
+            "gvt-rls-model v1" => 1u8,
+            "gvt-rls-model v2" => 2u8,
+            other => bail!("unsupported model header {other:?}"),
+        };
+        let kernel_line = lines.next().context("missing kernel line")?;
+        let kernel_name =
+            kernel_line.strip_prefix("kernel ").context("malformed kernel line")?;
+        let kernel = PairwiseKernel::parse(kernel_name)
+            .with_context(|| format!("unknown kernel {kernel_name:?}"))?;
+        let (policy, lambda) = if version >= 2 {
+            let pl = lines.next().context("missing policy line")?;
+            let pname = pl.strip_prefix("policy ").context("malformed policy line")?;
+            let policy = GvtPolicy::parse(pname)
+                .with_context(|| format!("unknown policy {pname:?}"))?;
+            let ll = lines.next().context("missing lambda line")?;
+            let lstr = ll.strip_prefix("lambda ").context("malformed lambda line")?;
+            let lambda =
+                if lstr == "unknown" { f64::NAN } else { lstr.parse::<f64>()? };
+            (policy, lambda)
+        } else {
+            (GvtPolicy::Auto, f64::NAN)
+        };
+        let domains = lines.next().context("missing domains line")?;
+        let mut it =
+            domains.strip_prefix("domains ").context("malformed domains")?.split(' ');
+        let m: usize = it.next().context("missing m")?.parse()?;
+        let q: usize = it.next().context("missing q")?.parse()?;
+        let npairs_line = lines.next().context("missing pairs line")?;
+        let n: usize =
+            npairs_line.strip_prefix("pairs ").context("malformed pairs line")?.parse()?;
+        let mut drugs = Vec::with_capacity(n);
+        let mut targets = Vec::with_capacity(n);
+        for _ in 0..n {
+            let line = lines.next().context("truncated pair list")?;
+            let (dstr, tstr) = line.split_once(' ').context("malformed pair")?;
+            let d = dstr.parse::<u32>()?;
+            let t = tstr.parse::<u32>()?;
+            if d as usize >= m || t as usize >= q {
+                bail!("pair ({d}, {t}) outside domains ({m}, {q})");
+            }
+            drugs.push(d);
+            targets.push(t);
+        }
+        if lines.next() != Some("alpha") {
+            bail!("missing alpha section");
+        }
+        let mut alpha = Vec::with_capacity(n);
+        for _ in 0..n {
+            alpha.push(lines.next().context("truncated alpha")?.parse::<f64>()?);
+        }
+
+        let mut file = ModelFile {
+            version,
+            kernel,
+            policy,
+            lambda,
+            m,
+            q,
+            drugs,
+            targets,
+            alpha,
+            d: None,
+            t: None,
+            d_features: None,
+            t_features: None,
+        };
+        if version >= 2 {
+            loop {
+                let line = lines.next().context("v2 file missing 'end' terminator")?;
+                if line == "end" {
+                    break;
+                }
+                let mut fields = line.split(' ');
+                let section = fields.next().context("empty section header")?;
+                match section {
+                    "dmatrix" | "tmatrix" => {
+                        let rows: usize = fields.next().context("matrix rows")?.parse()?;
+                        let cols: usize = fields.next().context("matrix cols")?.parse()?;
+                        let mat = read_matrix(&mut lines, rows, cols)
+                            .with_context(|| format!("reading {section}"))?;
+                        if section == "dmatrix" {
+                            file.d = Some(mat);
+                        } else {
+                            file.t = Some(mat);
+                        }
+                    }
+                    "dfeatures" | "tfeatures" => {
+                        let rows: usize = fields.next().context("feature rows")?.parse()?;
+                        let cols: usize = fields.next().context("feature cols")?.parse()?;
+                        let kname = fields.next().context("feature base kernel")?;
+                        let base = BaseKernel::parse(kname)
+                            .with_context(|| format!("unknown base kernel {kname:?}"))?;
+                        let gamma: f64 = fields.next().context("gamma")?.parse()?;
+                        let degree: u32 = fields.next().context("degree")?.parse()?;
+                        let coef0: f64 = fields.next().context("coef0")?.parse()?;
+                        let x = read_matrix(&mut lines, rows, cols)
+                            .with_context(|| format!("reading {section}"))?;
+                        let fs = FeatureSpace {
+                            x,
+                            kernel: base,
+                            params: KernelParams { gamma, degree, coef0 },
+                        };
+                        if section == "dfeatures" {
+                            file.d_features = Some(fs);
+                        } else {
+                            file.t_features = Some(fs);
+                        }
+                    }
+                    other => bail!("unknown v2 section {other:?}"),
+                }
+            }
+        }
+        Ok(file)
+    }
+
+    /// Build the fitted model, resolving each kernel matrix in priority
+    /// order: caller-supplied > embedded matrix > recomputed from an
+    /// embedded feature space.
+    pub fn into_model(
+        self,
+        d: Option<Arc<Mat>>,
+        t: Option<Arc<Mat>>,
+    ) -> Result<RidgeModel> {
+        let ModelFile {
+            kernel,
+            policy,
+            lambda,
+            m,
+            q,
+            drugs,
+            targets,
+            alpha,
+            d: d_embedded,
+            t: t_embedded,
+            d_features,
+            t_features,
+            ..
+        } = self;
+        let d = resolve_matrix("drug", d, d_embedded, d_features.as_ref())?;
+        let t = resolve_matrix("target", t, t_embedded, t_features.as_ref())?;
+        if d.rows() != m || t.rows() != q {
+            bail!(
+                "kernel matrices ({}, {}) do not match model domains ({m}, {q})",
+                d.rows(),
+                t.rows()
+            );
+        }
+        RidgeModel::from_parts(
+            kernel,
+            d,
+            t,
+            PairIndex::new(drugs, targets, m, q),
+            policy,
+            alpha,
+            lambda,
+        )
+    }
+}
+
+fn resolve_matrix(
+    side: &str,
+    supplied: Option<Arc<Mat>>,
+    embedded: Option<Mat>,
+    features: Option<&FeatureSpace>,
+) -> Result<Arc<Mat>> {
+    if let Some(m) = supplied {
+        return Ok(m);
+    }
+    if let Some(m) = embedded {
+        return Ok(Arc::new(m));
+    }
+    if let Some(fs) = features {
+        return Ok(Arc::new(fs.kernel_matrix()));
+    }
+    bail!(
+        "cannot resolve the {side} kernel matrix: not supplied by the caller \
+         and the artifact embeds neither a matrix nor a feature space"
+    )
+}
+
+fn read_matrix<'a>(
+    lines: &mut impl Iterator<Item = &'a str>,
+    rows: usize,
+    cols: usize,
+) -> Result<Mat> {
+    let mut data = Vec::with_capacity(rows * cols);
+    for r in 0..rows {
+        let line = lines.next().with_context(|| format!("truncated matrix at row {r}"))?;
+        let before = data.len();
+        for tok in line.split(' ') {
+            data.push(tok.parse::<f64>()?);
+        }
+        if data.len() - before != cols {
+            bail!("matrix row {r} has {} entries, expected {cols}", data.len() - before);
+        }
+    }
+    Ok(Mat::from_vec(rows, cols, data))
+}
+
+fn write_matrix(f: &mut impl Write, mat: &Mat) -> Result<()> {
+    for r in 0..mat.rows() {
+        let row = mat.row(r);
+        let mut line = String::with_capacity(row.len() * 24);
+        for (i, v) in row.iter().enumerate() {
+            if i > 0 {
+                line.push(' ');
+            }
+            line.push_str(&format!("{v:.17e}"));
+        }
+        writeln!(f, "{line}")?;
+    }
+    Ok(())
+}
+
+/// Optional embedded payloads for [`save_model_v2`].
+#[derive(Default)]
+pub struct EmbedV2<'a> {
+    /// Embed the full-domain kernel matrices — the artifact alone can
+    /// then serve every in-domain query (all four prediction settings).
+    pub matrices: bool,
+    /// Embed drug features + the base kernel deriving `D` — enables
+    /// cross-kernel rows for drugs outside the training domain.
+    pub d_features: Option<(&'a Mat, BaseKernel, KernelParams)>,
+    /// Target-side counterpart of `d_features`.
+    pub t_features: Option<(&'a Mat, BaseKernel, KernelParams)>,
+}
+
+/// Serialize a fitted model to `path` in the **v1** format (kernel
+/// matrices reloaded from the dataset side at load time).
 pub fn save_model(model: &RidgeModel, path: &Path) -> Result<()> {
     let mut f = std::io::BufWriter::new(
         std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
@@ -48,73 +393,105 @@ pub fn save_model(model: &RidgeModel, path: &Path) -> Result<()> {
     Ok(())
 }
 
-/// Load a model saved by [`save_model`]. The kernel matrices are supplied
-/// by the caller (they belong to the dataset, not the model).
+/// Serialize a fitted model to `path` in the **v2** format, optionally
+/// bundling kernel matrices and/or feature spaces so a prediction server
+/// starts from this single file (see [`crate::serve`]).
+pub fn save_model_v2(model: &RidgeModel, path: &Path, embed: &EmbedV2<'_>) -> Result<()> {
+    // Refuse to bundle a feature space that cannot reproduce the model's
+    // operator matrix (e.g. a post-hoc normalized kernel): a server
+    // would mix matrix rows (known objects) with feature-derived rows
+    // (featured objects) on different scales — silently wrong scores.
+    for (side, spec, mat) in [
+        ("drug", &embed.d_features, model.d()),
+        ("target", &embed.t_features, model.t()),
+    ] {
+        if let Some((x, base, params)) = spec {
+            let fs = FeatureSpace { x: (*x).clone(), kernel: *base, params: *params };
+            if !fs.reproduces(&mat) {
+                bail!(
+                    "{side} feature space does not reproduce the model's {side} kernel \
+                     matrix — (features, base kernel) cannot represent post-hoc \
+                     transforms such as normalize_kernel; embed matrices only"
+                );
+            }
+        }
+    }
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
+    );
+    let pairs = model.train_pairs();
+    writeln!(f, "gvt-rls-model v2")?;
+    writeln!(f, "kernel {}", model.kernel().name())?;
+    writeln!(f, "policy {}", model.policy().name())?;
+    if model.lambda.is_finite() {
+        writeln!(f, "lambda {:.17e}", model.lambda)?;
+    } else {
+        writeln!(f, "lambda unknown")?;
+    }
+    writeln!(f, "domains {} {}", pairs.m(), pairs.q())?;
+    writeln!(f, "pairs {}", pairs.len())?;
+    for i in 0..pairs.len() {
+        writeln!(f, "{} {}", pairs.drug(i), pairs.target(i))?;
+    }
+    writeln!(f, "alpha")?;
+    for a in &model.alpha {
+        writeln!(f, "{a:.17e}")?;
+    }
+    if embed.matrices {
+        let d = model.d();
+        writeln!(f, "dmatrix {} {}", d.rows(), d.cols())?;
+        write_matrix(&mut f, &d)?;
+        let t = model.t();
+        writeln!(f, "tmatrix {} {}", t.rows(), t.cols())?;
+        write_matrix(&mut f, &t)?;
+    }
+    for (section, spec) in
+        [("dfeatures", &embed.d_features), ("tfeatures", &embed.t_features)]
+    {
+        if let Some((x, base, params)) = spec {
+            writeln!(
+                f,
+                "{section} {} {} {} {:.17e} {} {:.17e}",
+                x.rows(),
+                x.cols(),
+                base.name(),
+                params.gamma,
+                params.degree,
+                params.coef0
+            )?;
+            write_matrix(&mut f, x)?;
+        }
+    }
+    writeln!(f, "end")?;
+    Ok(())
+}
+
+/// Load a model saved by [`save_model`] (v1) or [`save_model_v2`]. The
+/// kernel matrices are supplied by the caller; for self-contained v2
+/// artifacts use [`ModelFile::read`] + [`ModelFile::into_model`] with
+/// `None` instead.
 pub fn load_model(path: &Path, d: Arc<Mat>, t: Arc<Mat>) -> Result<RidgeModel> {
-    let text = std::fs::read_to_string(path)
-        .with_context(|| format!("reading {}", path.display()))?;
-    let mut lines = text.lines();
-    let header = lines.next().context("empty model file")?;
-    if header != "gvt-rls-model v1" {
-        bail!("unsupported model header {header:?}");
-    }
-    let kernel_line = lines.next().context("missing kernel line")?;
-    let kernel_name =
-        kernel_line.strip_prefix("kernel ").context("malformed kernel line")?;
-    let kernel = PairwiseKernel::parse(kernel_name)
-        .with_context(|| format!("unknown kernel {kernel_name:?}"))?;
-    let domains = lines.next().context("missing domains line")?;
-    let mut it = domains.strip_prefix("domains ").context("malformed domains")?.split(' ');
-    let m: usize = it.next().context("missing m")?.parse()?;
-    let q: usize = it.next().context("missing q")?.parse()?;
-    let npairs_line = lines.next().context("missing pairs line")?;
-    let n: usize =
-        npairs_line.strip_prefix("pairs ").context("malformed pairs line")?.parse()?;
-    let mut drugs = Vec::with_capacity(n);
-    let mut targets = Vec::with_capacity(n);
-    for _ in 0..n {
-        let line = lines.next().context("truncated pair list")?;
-        let (dstr, tstr) = line.split_once(' ').context("malformed pair")?;
-        drugs.push(dstr.parse::<u32>()?);
-        targets.push(tstr.parse::<u32>()?);
-    }
-    if lines.next() != Some("alpha") {
-        bail!("missing alpha section");
-    }
-    let mut alpha = Vec::with_capacity(n);
-    for _ in 0..n {
-        alpha.push(lines.next().context("truncated alpha")?.parse::<f64>()?);
-    }
-    if d.rows() != m || t.rows() != q {
-        bail!(
-            "kernel matrices ({}, {}) do not match model domains ({m}, {q})",
-            d.rows(),
-            t.rows()
-        );
-    }
-    RidgeModel::from_parts(
-        kernel,
-        d,
-        t,
-        PairIndex::new(drugs, targets, m, q),
-        GvtPolicy::Auto,
-        alpha,
-    )
+    ModelFile::read(path)?.into_model(Some(d), Some(t))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::metz::MetzConfig;
+    use crate::rng::{dist, Xoshiro256};
     use crate::solvers::ridge::{PairwiseRidge, RidgeConfig};
     use crate::testing::gen;
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("gvt_model_{tag}_{}.txt", std::process::id()))
+    }
 
     #[test]
     fn roundtrip_preserves_predictions() {
         let data = MetzConfig::small().generate(70);
         let cfg = RidgeConfig { max_iters: 40, ..Default::default() };
         let model = PairwiseRidge::fit(&data, PairwiseKernel::Kronecker, &cfg).unwrap();
-        let path = std::env::temp_dir().join(format!("gvt_model_{}.txt", std::process::id()));
+        let path = tmp("v1rt");
         save_model(&model, &path).unwrap();
         let loaded = load_model(&path, data.d.clone(), data.t.clone()).unwrap();
         let mut rng = crate::rng::Xoshiro256::seed_from(71);
@@ -130,7 +507,7 @@ mod tests {
         let data = MetzConfig::small().generate(72);
         let cfg = RidgeConfig { max_iters: 10, ..Default::default() };
         let model = PairwiseRidge::fit(&data, PairwiseKernel::Linear, &cfg).unwrap();
-        let path = std::env::temp_dir().join(format!("gvt_model2_{}.txt", std::process::id()));
+        let path = tmp("v1mk");
         save_model(&model, &path).unwrap();
         // Wrong-domain kernel matrix must be rejected, not silently used.
         let mut rng = crate::rng::Xoshiro256::seed_from(73);
@@ -141,10 +518,149 @@ mod tests {
 
     #[test]
     fn rejects_garbage_file() {
-        let path = std::env::temp_dir().join(format!("gvt_model3_{}.txt", std::process::id()));
+        let path = tmp("garbage");
         std::fs::write(&path, "not a model").unwrap();
         let data = MetzConfig::small().generate(74);
         assert!(load_model(&path, data.d.clone(), data.t.clone()).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// The v2 round-trip property the serving stack depends on: a fully
+    /// self-contained artifact (matrices + feature spaces) must reproduce
+    /// `alpha` **bit-exactly**, carry kernel/policy/λ through, and the
+    /// reloaded model must predict identically with no caller-side data.
+    #[test]
+    fn v2_roundtrip_is_exact_and_self_contained() {
+        let mut rng = Xoshiro256::seed_from(75);
+        let (m, q, p) = (9, 7, 4);
+        let xd = Mat::from_vec(m, p, dist::normal_vec(&mut rng, m * p));
+        let xt = Mat::from_vec(q, p, dist::normal_vec(&mut rng, q * p));
+        let params = KernelParams { gamma: 0.3, degree: 2, coef0: 1.0 };
+        let d = Arc::new(kernel_matrix(BaseKernel::Gaussian, &params, &xd));
+        let t = Arc::new(kernel_matrix(BaseKernel::Gaussian, &params, &xt));
+        let pairs = gen::pair_sample(&mut rng, 40, m, q);
+        let data = crate::data::PairDataset {
+            name: "v2rt".into(),
+            d: d.clone(),
+            t: t.clone(),
+            pairs,
+            y: dist::normal_vec(&mut rng, 40),
+            homogeneous: false,
+        };
+        let cfg = RidgeConfig { lambda: 0.25, max_iters: 60, ..Default::default() };
+        let model = PairwiseRidge::fit(&data, PairwiseKernel::Poly2D, &cfg).unwrap();
+
+        let path = tmp("v2rt");
+        let embed = EmbedV2 {
+            matrices: true,
+            d_features: Some((&xd, BaseKernel::Gaussian, params)),
+            t_features: Some((&xt, BaseKernel::Gaussian, params)),
+        };
+        save_model_v2(&model, &path, &embed).unwrap();
+
+        let file = ModelFile::read(&path).unwrap();
+        assert_eq!(file.version, 2);
+        assert_eq!(file.kernel, PairwiseKernel::Poly2D);
+        assert_eq!(file.policy, model.policy());
+        assert_eq!(file.lambda, 0.25);
+        // Bit-exact alpha (17-significant-digit round-trip).
+        assert_eq!(file.alpha, model.alpha);
+        // Embedded matrices and features survive exactly too.
+        assert_eq!(file.d.as_ref().unwrap().as_slice(), d.as_slice());
+        assert_eq!(file.t.as_ref().unwrap().as_slice(), t.as_slice());
+        let dfs = file.d_features.as_ref().unwrap();
+        assert_eq!(dfs.x.as_slice(), xd.as_slice());
+        assert_eq!(dfs.kernel, BaseKernel::Gaussian);
+        assert_eq!(dfs.params, params);
+
+        // Self-contained load: no caller-side matrices at all.
+        let loaded = file.into_model(None, None).unwrap();
+        let test = gen::pair_sample(&mut rng, 20, m, q);
+        assert_eq!(model.predict(&test).unwrap(), loaded.predict(&test).unwrap());
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Feature-space-only artifact: the kernel matrix is recomputed from
+    /// the embedded features at load and must match the training-time
+    /// matrix exactly (same `kernel_matrix` code path).
+    #[test]
+    fn v2_feature_only_artifact_recomputes_matrices() {
+        let mut rng = Xoshiro256::seed_from(76);
+        let (m, p) = (8, 5);
+        let x = Mat::from_vec(m, p, dist::normal_vec(&mut rng, m * p));
+        let params = KernelParams::default();
+        let d = Arc::new(kernel_matrix(BaseKernel::Linear, &params, &x));
+        let pairs = gen::homogeneous_sample(&mut rng, 30, m);
+        let data = crate::data::PairDataset {
+            name: "v2feat".into(),
+            d: d.clone(),
+            t: d.clone(),
+            pairs,
+            y: dist::normal_vec(&mut rng, 30),
+            homogeneous: true,
+        };
+        let cfg = RidgeConfig { max_iters: 30, ..Default::default() };
+        let model = PairwiseRidge::fit(&data, PairwiseKernel::Symmetric, &cfg).unwrap();
+        let path = tmp("v2feat");
+        let embed = EmbedV2 {
+            matrices: false,
+            d_features: Some((&x, BaseKernel::Linear, params)),
+            t_features: Some((&x, BaseKernel::Linear, params)),
+        };
+        save_model_v2(&model, &path, &embed).unwrap();
+        let loaded = ModelFile::read(&path).unwrap().into_model(None, None).unwrap();
+        let test = gen::homogeneous_sample(&mut rng, 12, m);
+        assert_eq!(model.predict(&test).unwrap(), loaded.predict(&test).unwrap());
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// A feature space that cannot reproduce the model's operator matrix
+    /// (here: the kernel was cosine-normalized after `kernel_matrix`, as
+    /// the Metz/Merget pipelines do) must be rejected at save — bundling
+    /// it would silently serve featured objects on the wrong scale.
+    #[test]
+    fn v2_rejects_inconsistent_feature_space() {
+        let mut rng = Xoshiro256::seed_from(78);
+        let (m, p) = (7, 4);
+        let x = Mat::from_vec(m, p, dist::normal_vec(&mut rng, m * p));
+        let params = KernelParams::default();
+        let mut dmat = kernel_matrix(BaseKernel::Linear, &params, &x);
+        crate::kernels::normalize_kernel(&mut dmat);
+        let d = Arc::new(dmat);
+        let pairs = gen::homogeneous_sample(&mut rng, 25, m);
+        let data = crate::data::PairDataset {
+            name: "v2norm".into(),
+            d: d.clone(),
+            t: d.clone(),
+            pairs,
+            y: dist::normal_vec(&mut rng, 25),
+            homogeneous: true,
+        };
+        let cfg = RidgeConfig { max_iters: 10, ..Default::default() };
+        let model = PairwiseRidge::fit(&data, PairwiseKernel::Kronecker, &cfg).unwrap();
+        let path = tmp("v2norm");
+        let embed = EmbedV2 {
+            matrices: true,
+            d_features: Some((&x, BaseKernel::Linear, params)),
+            t_features: None,
+        };
+        let err = save_model_v2(&model, &path, &embed);
+        assert!(err.is_err(), "normalized kernel must not pass the consistency check");
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// A v2 file with no embedded payloads still loads the v1 way —
+    /// caller supplies matrices — and errors clearly when it can't.
+    #[test]
+    fn v2_bare_artifact_needs_caller_matrices() {
+        let data = MetzConfig::small().generate(77);
+        let cfg = RidgeConfig { max_iters: 10, ..Default::default() };
+        let model = PairwiseRidge::fit(&data, PairwiseKernel::Kronecker, &cfg).unwrap();
+        let path = tmp("v2bare");
+        save_model_v2(&model, &path, &EmbedV2::default()).unwrap();
+        assert!(ModelFile::read(&path).unwrap().into_model(None, None).is_err());
+        let loaded = load_model(&path, data.d.clone(), data.t.clone()).unwrap();
+        assert_eq!(loaded.alpha, model.alpha);
         std::fs::remove_file(&path).ok();
     }
 }

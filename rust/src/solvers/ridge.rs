@@ -78,6 +78,10 @@ pub struct RidgeModel {
     policy: GvtPolicy,
     /// Dual coefficients `a` (one per training pair).
     pub alpha: Vec<f64>,
+    /// Tikhonov λ the model was trained with — metadata for persistence
+    /// and serving (`alpha` already encodes the solution). `NaN` when
+    /// unknown (e.g. models loaded from a v1 artifact).
+    pub lambda: f64,
     /// MINRES iterations actually run.
     pub iterations: usize,
     /// Validation curve, if trained with early stopping.
@@ -103,6 +107,21 @@ impl RidgeModel {
 
     pub fn kernel(&self) -> PairwiseKernel {
         self.kernel
+    }
+
+    /// Drug kernel over the full drug domain (shared handle).
+    pub fn d(&self) -> Arc<crate::linalg::Mat> {
+        self.d.clone()
+    }
+
+    /// Target kernel over the full target domain (shared handle).
+    pub fn t(&self) -> Arc<crate::linalg::Mat> {
+        self.t.clone()
+    }
+
+    /// The GVT factorization policy the model predicts with.
+    pub fn policy(&self) -> GvtPolicy {
+        self.policy
     }
 
     pub fn train_size(&self) -> usize {
@@ -158,6 +177,7 @@ impl RidgeModel {
         train_pairs: PairIndex,
         policy: GvtPolicy,
         alpha: Vec<f64>,
+        lambda: f64,
     ) -> Result<RidgeModel> {
         if alpha.len() != train_pairs.len() {
             bail!(
@@ -173,6 +193,7 @@ impl RidgeModel {
             train_pairs,
             policy,
             alpha,
+            lambda,
             iterations: 0,
             history: Vec::new(),
         })
@@ -238,6 +259,7 @@ impl PairwiseRidge {
             train_pairs: data.pairs.clone(),
             policy: cfg.policy,
             alpha: out.x,
+            lambda: cfg.lambda,
             iterations: out.iterations,
             history: Vec::new(),
         })
@@ -376,6 +398,7 @@ impl PairwiseRidge {
                     train_pairs: data.pairs.clone(),
                     policy: cfg.policy,
                     alpha: out.x,
+                    lambda,
                     iterations: out.iterations,
                     history: Vec::new(),
                 })

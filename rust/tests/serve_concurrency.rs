@@ -1,0 +1,219 @@
+//! Serving correctness under concurrency: N client threads hammering the
+//! micro-batching dispatcher must produce **bit-identical** results to
+//! sequential `RidgeModel::predict` — for all 8 pairwise kernels and all
+//! four out-of-sample settings of Table 1.
+//!
+//! Why this can be exact (not a tolerance): the `Predictor` pins the GVT
+//! factorization to one concrete mode, stage-1 work depends only on the
+//! (fixed) training sample and `α`, and every stage-2 / pooled / misc
+//! path computes each output entry by a row-independent operation
+//! sequence. Coalescing therefore cannot change a single bit of any
+//! response, no matter how requests interleave.
+//!
+//! The `GVT_RLS_NO_FUSE` ablation is covered by running this whole test
+//! binary under both values — scripts/verify.sh executes it with
+//! `GVT_RLS_NO_FUSE=1` in addition to the default `cargo test` run (the
+//! flag is read once per process, so both paths need their own run).
+
+use gvt_rls::data::PairDataset;
+use gvt_rls::gvt::pairwise::PairwiseKernel;
+use gvt_rls::rng::{dist, Xoshiro256};
+use gvt_rls::serve::{BatchConfig, Batcher, Predictor, QueryPair, ServeOptions};
+use gvt_rls::solvers::ridge::{PairwiseRidge, RidgeConfig, RidgeModel};
+use gvt_rls::testing::gen;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Homogeneous dataset (m == q, shared kernel matrix) so every kernel,
+/// including Symmetric/AntiSymmetric/Ranking/MLPK, is applicable.
+fn homogeneous_dataset(seed: u64, m: usize, n: usize) -> PairDataset {
+    let mut rng = Xoshiro256::seed_from(seed);
+    let d = Arc::new(gen::psd_kernel(&mut rng, m));
+    let pairs = gen::homogeneous_sample(&mut rng, n, m);
+    let y: Vec<f64> =
+        dist::normal_vec(&mut rng, n).iter().map(|v| if *v > 0.0 { 1.0 } else { 0.0 }).collect();
+    PairDataset { name: "serve-conc".into(), d: d.clone(), t: d, pairs, y, homogeneous: true }
+}
+
+fn heterogeneous_dataset(seed: u64, m: usize, q: usize, n: usize) -> PairDataset {
+    let mut rng = Xoshiro256::seed_from(seed);
+    let d = Arc::new(gen::psd_kernel(&mut rng, m));
+    let t = Arc::new(gen::psd_kernel(&mut rng, q));
+    let pairs = gen::pair_sample(&mut rng, n, m, q);
+    let y = dist::normal_vec(&mut rng, n);
+    PairDataset { name: "serve-conc-het".into(), d, t, pairs, y, homogeneous: false }
+}
+
+/// Build the sequential oracle: the same model, predicted through
+/// `RidgeModel::predict` with the predictor's pinned policy.
+fn oracle_for(pred: &Predictor, data: &PairDataset) -> RidgeModel {
+    let m = pred.model();
+    RidgeModel::from_parts(
+        m.kernel(),
+        data.d.clone(),
+        data.t.clone(),
+        m.train_pairs().clone(),
+        pred.policy(),
+        m.alpha.clone(),
+        m.lambda,
+    )
+    .unwrap()
+}
+
+/// Hammer the batcher with `threads` clients, each scoring its share of
+/// `queries` in small chunks, and assert every reply is bit-identical to
+/// the oracle's entry.
+fn hammer_and_check(
+    pred: Arc<Predictor>,
+    queries: &[QueryPair],
+    expect: &[f64],
+    threads: usize,
+    label: &str,
+) {
+    let batcher = Batcher::start(
+        pred,
+        BatchConfig { max_batch: 32, max_wait: Duration::from_micros(300) },
+    );
+    let mut workers = Vec::new();
+    for w in 0..threads {
+        let handle = batcher.handle();
+        // Strided assignment so concurrent batches mix distant pairs.
+        let mine: Vec<(usize, QueryPair)> = queries
+            .iter()
+            .cloned()
+            .enumerate()
+            .filter(|(i, _)| i % threads == w)
+            .collect();
+        workers.push(std::thread::spawn(move || {
+            let mut flat: Vec<(usize, f64)> = Vec::new();
+            for chunk in mine.chunks(3) {
+                let pairs: Vec<QueryPair> = chunk.iter().map(|(_, p)| p.clone()).collect();
+                let scores = handle.score(pairs).unwrap();
+                assert_eq!(scores.len(), chunk.len());
+                for ((i, _), s) in chunk.iter().zip(&scores) {
+                    flat.push((*i, *s));
+                }
+            }
+            flat
+        }));
+    }
+    for worker in workers {
+        for (i, s) in worker.join().unwrap() {
+            assert_eq!(
+                s.to_bits(),
+                expect[i].to_bits(),
+                "{label}: pair {i} differs from sequential predict ({s} vs {})",
+                expect[i]
+            );
+        }
+    }
+    batcher.shutdown();
+}
+
+/// The acceptance matrix: all 8 kernels × the four out-of-sample
+/// settings, batched server scoring vs sequential `RidgeModel::predict`.
+#[test]
+fn batched_is_bit_identical_to_sequential_predict() {
+    let data = homogeneous_dataset(7, 10, 150);
+    let cfg = RidgeConfig { max_iters: 15, ..Default::default() };
+    for kernel in PairwiseKernel::ALL {
+        for setting in 1u8..=4 {
+            let split = data.split_setting(setting, 0.3, 11);
+            if split.train.is_empty() || split.test.is_empty() {
+                continue;
+            }
+            let model =
+                PairwiseRidge::fit_fixed_iters(&split.train, kernel, &cfg, 15).unwrap();
+            let pred =
+                Arc::new(Predictor::new(model, None, None, ServeOptions::default()).unwrap());
+            let oracle = oracle_for(&pred, &split.train);
+            let expect = oracle.predict(&split.test.pairs).unwrap();
+            let queries: Vec<QueryPair> = (0..split.test.pairs.len())
+                .map(|i| {
+                    QueryPair::known(
+                        split.test.pairs.drug(i) as u32,
+                        split.test.pairs.target(i) as u32,
+                    )
+                })
+                .collect();
+            hammer_and_check(
+                pred,
+                &queries,
+                &expect,
+                4,
+                &format!("{} setting {setting}", kernel.name()),
+            );
+        }
+    }
+}
+
+/// Same matrix on a heterogeneous dataset for the kernels that allow it.
+#[test]
+fn heterogeneous_kernels_bit_identical_under_batching() {
+    let data = heterogeneous_dataset(13, 9, 12, 160);
+    let cfg = RidgeConfig { max_iters: 15, ..Default::default() };
+    for kernel in [
+        PairwiseKernel::Linear,
+        PairwiseKernel::Poly2D,
+        PairwiseKernel::Kronecker,
+        PairwiseKernel::Cartesian,
+    ] {
+        for setting in 1u8..=4 {
+            let split = data.split_setting(setting, 0.3, 17);
+            if split.train.is_empty() || split.test.is_empty() {
+                continue;
+            }
+            let model =
+                PairwiseRidge::fit_fixed_iters(&split.train, kernel, &cfg, 15).unwrap();
+            let pred =
+                Arc::new(Predictor::new(model, None, None, ServeOptions::default()).unwrap());
+            let oracle = oracle_for(&pred, &split.train);
+            let expect = oracle.predict(&split.test.pairs).unwrap();
+            let queries: Vec<QueryPair> = (0..split.test.pairs.len())
+                .map(|i| {
+                    QueryPair::known(
+                        split.test.pairs.drug(i) as u32,
+                        split.test.pairs.target(i) as u32,
+                    )
+                })
+                .collect();
+            hammer_and_check(
+                pred,
+                &queries,
+                &expect,
+                4,
+                &format!("het {} setting {setting}", kernel.name()),
+            );
+        }
+    }
+}
+
+/// Direct (non-batcher) `Predictor::score` over arbitrary sub-batches is
+/// also bit-identical to one whole-sample predict — the property the
+/// dispatcher's correctness rests on, checked without any threading.
+#[test]
+fn arbitrary_batch_partitions_are_bit_stable() {
+    let data = homogeneous_dataset(23, 8, 120);
+    let cfg = RidgeConfig { max_iters: 12, ..Default::default() };
+    for kernel in [PairwiseKernel::Ranking, PairwiseKernel::Mlpk, PairwiseKernel::Kronecker] {
+        let model = PairwiseRidge::fit_fixed_iters(&data, kernel, &cfg, 12).unwrap();
+        let pred = Predictor::new(model, None, None, ServeOptions::default()).unwrap();
+        let mut rng = Xoshiro256::seed_from(24);
+        let test = gen::homogeneous_sample(&mut rng, 41, 8);
+        let queries: Vec<QueryPair> = (0..test.len())
+            .map(|i| QueryPair::known(test.drug(i) as u32, test.target(i) as u32))
+            .collect();
+        let whole = pred.score(&queries).unwrap();
+        for chunk_size in [1usize, 2, 7, 41] {
+            let mut got = Vec::new();
+            for chunk in queries.chunks(chunk_size) {
+                got.extend(pred.score(chunk).unwrap());
+            }
+            let bits_equal = whole
+                .iter()
+                .zip(&got)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(bits_equal, "{kernel:?} chunk_size {chunk_size}");
+        }
+    }
+}

@@ -1,7 +1,9 @@
 #!/usr/bin/env bash
 # Perf-trajectory seeding: run the per-kernel GVT mat-vec bench
-# (n ∈ {4k, 16k}, all 8 kernels, fused + unfused ablation rows) and write
-# the results to BENCH_gvt.json at the repo root so future PRs can prove
+# (n ∈ {4k, 16k}, all 8 kernels, fused + unfused ablation rows) into
+# BENCH_gvt.json, and the serving bench (micro-batched vs per-request
+# scoring, batch sizes {1, 8, 64, 256}, p50/p99 latency) into
+# BENCH_serve.json, both at the repo root so future PRs can prove
 # speedups against recorded numbers.
 #
 # Usage: scripts/bench.sh            # full sizes (~minutes)
@@ -11,16 +13,22 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 # Quick/smoke runs use reduced problem sizes — keep them away from the
-# canonical BENCH_gvt.json so they can't clobber the full-size
+# canonical JSON files so they can't clobber the full-size
 # perf-trajectory numbers.
 if [[ -n "${GVT_RLS_BENCH_QUICK:-}" || -n "${GVT_BENCH_SMOKE:-}" ]]; then
-  default_json="$PWD/BENCH_gvt_quick.json"
+  gvt_json="$PWD/BENCH_gvt_quick.json"
+  serve_json="$PWD/BENCH_serve_quick.json"
 else
-  default_json="$PWD/BENCH_gvt.json"
+  gvt_json="$PWD/BENCH_gvt.json"
+  serve_json="$PWD/BENCH_serve.json"
 fi
-export GVT_RLS_BENCH_JSON="${GVT_RLS_BENCH_JSON:-$default_json}"
 
-echo "== bench_pairwise_kernels → ${GVT_RLS_BENCH_JSON} =="
-cargo bench --offline --bench bench_pairwise_kernels
+echo "== bench_pairwise_kernels → ${gvt_json} =="
+GVT_RLS_BENCH_JSON="${GVT_RLS_BENCH_JSON:-$gvt_json}" \
+  cargo bench --offline --bench bench_pairwise_kernels
 
-echo "bench.sh: wrote ${GVT_RLS_BENCH_JSON}"
+echo "== bench_serve → ${serve_json} =="
+GVT_RLS_BENCH_JSON="$serve_json" \
+  cargo bench --offline --bench bench_serve
+
+echo "bench.sh: wrote ${GVT_RLS_BENCH_JSON:-$gvt_json} and ${serve_json}"

@@ -16,6 +16,77 @@ cargo test -q --offline
 echo "== benches + examples compile (kept in the workspace) =="
 cargo build --offline --benches --examples
 
+echo "== serve: bit-identity under the unfused ablation (GVT_RLS_NO_FUSE=1) =="
+# The flag is read once per process, so the fused run above and this
+# unfused run each cover one side of the ablation.
+GVT_RLS_NO_FUSE=1 cargo test -q --offline --test serve_concurrency
+
+echo "== serve: offline predict vs TCP server round trip =="
+bin=target/release/gvt-rls
+workdir="$(mktemp -d)"
+cleanup() {
+  [[ -n "${server_pid:-}" ]] && kill "$server_pid" 2>/dev/null || true
+  rm -rf "$workdir"
+}
+trap cleanup EXIT
+
+"$bin" train --quick --max-iters 25 --save-model "$workdir/model.txt" >/dev/null
+
+# Pair list spanning both domains (sizes parsed from the artifact).
+read -r _ m q < <(grep '^domains ' "$workdir/model.txt")
+for i in $(seq 0 23); do
+  echo "$(( (i * 5) % m )) $(( (i * 11) % q ))"
+done > "$workdir/pairs.txt"
+
+"$bin" predict --model "$workdir/model.txt" --pairs "$workdir/pairs.txt" \
+  --out "$workdir/offline.txt"
+
+"$bin" serve --model "$workdir/model.txt" --listen 127.0.0.1:0 \
+  --max-batch 64 --max-wait-us 2000 > "$workdir/server.log" 2>"$workdir/server.err" &
+server_pid=$!
+port=""
+for _ in $(seq 1 100); do
+  port="$(sed -n 's/.*listening on .*:\([0-9][0-9]*\)$/\1/p' "$workdir/server.log" | head -1)"
+  [[ -n "$port" ]] && break
+  sleep 0.1
+done
+[[ -n "$port" ]] || { echo "server did not come up"; cat "$workdir/server.err"; exit 1; }
+
+# Burst the pair list at the server over two concurrent connections
+# (odd/even split), all requests written before any response is read —
+# the dispatcher coalesces what lands inside the 2 ms window.
+exec 3<>"/dev/tcp/127.0.0.1/$port"
+exec 4<>"/dev/tcp/127.0.0.1/$port"
+i=0
+while read -r d t; do
+  fd=$(( 3 + i % 2 ))
+  printf '{"id": %d, "pairs": [[%d, %d]]}\n' "$i" "$d" "$t" >&"$fd"
+  i=$(( i + 1 ))
+done < "$workdir/pairs.txt"
+: > "$workdir/server_scores.txt"
+for (( j = 0; j < i; j++ )); do
+  fd=$(( 3 + j % 2 ))
+  read -r resp <&"$fd"
+  id="$(sed -n 's/.*"id": \([0-9][0-9]*\),.*/\1/p' <<< "$resp")"
+  score="$(sed -n 's/.*"scores": \[\(.*\)\].*/\1/p' <<< "$resp")"
+  [[ -n "$id" && -n "$score" ]] || { echo "bad response: $resp"; exit 1; }
+  echo "$id $score" >> "$workdir/server_scores.txt"
+done
+sort -n "$workdir/server_scores.txt" | cut -d' ' -f2- > "$workdir/server_sorted.txt"
+exec 4>&-
+
+# Server responses must match the offline predictions TEXTUALLY — both
+# paths render with the exact-round-trip {:.17e} format and the batcher
+# is bit-identical to one-shot scoring.
+diff "$workdir/offline.txt" "$workdir/server_sorted.txt"
+
+printf '{"cmd": "shutdown"}\n' >&3
+read -r ack <&3 || true
+exec 3>&-
+wait "$server_pid"
+server_pid=""
+echo "serve round trip: OK ($i requests, 2 connections)"
+
 echo "== benches execute (smoke mode: 1 warmup + 1 iter, tiny sizes) =="
 # GVT_BENCH_SMOKE=1 makes every harness = false bench run a minimal
 # configuration (see rust/src/bench/mod.rs) so bench code is executed —
