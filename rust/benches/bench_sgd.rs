@@ -1,0 +1,140 @@
+//! Stochastic vec trick vs exact CG: time-to-ε on the training objective.
+//!
+//! For each kernel and problem size, solve `(K + λI)α = y` two ways —
+//! exact CG (one full GVT product per iteration) and mini-batched SGD
+//! (one batch-shaped product per step, [`gvt_rls::solvers::SgdTrainer`])
+//! — both run until the relative residual / gradient norm drops below
+//! the same ε, and report wall-clock time plus iteration/step counts.
+//! The interesting regime is `n ≫ m, q`, where the exact iteration's
+//! `O(n·m)` stage-2 sweep dominates and the batch step's `O(b·m)` wins.
+//!
+//! Set `GVT_RLS_BENCH_JSON=<path>` to emit the suite as JSON —
+//! scripts/bench.sh points it at BENCH_sgd.json in the repo root to seed
+//! the perf trajectory (full sizes: n ∈ {16k, 64k}, all 8 kernels).
+
+use gvt_rls::bench::{reduced_size, smoke, BenchConfig, BenchSuite};
+use gvt_rls::data::kernel_filling::KernelFillingConfig;
+use gvt_rls::gvt::pairwise::{PairwiseKernel, PairwiseLinOp};
+use gvt_rls::gvt::vec_trick::GvtPolicy;
+use gvt_rls::solvers::cg::{cg, CgOptions};
+use gvt_rls::solvers::linear_op::ShiftedOp;
+use gvt_rls::solvers::{SgdConfig, SgdTrainer};
+use std::hint::black_box;
+use std::ops::ControlFlow;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let mut suite = BenchSuite::new();
+    // ε: the stochastic solver's practical accuracy regime — both
+    // solvers stop at the same relative residual so times compare.
+    let epsilon = 1e-3;
+    let lambda = 1e-2;
+    let (k, sizes, kernels): (usize, &[usize], &[PairwiseKernel]) = if smoke() {
+        (32, &[400], &[PairwiseKernel::Kronecker, PairwiseKernel::Ranking])
+    } else if reduced_size() {
+        (48, &[1_500], &PairwiseKernel::ALL)
+    } else {
+        (256, &[16_000, 64_000], &PairwiseKernel::ALL)
+    };
+    let (batch, max_epochs) = if smoke() { (64, 40) } else { (1_024, 400) };
+
+    println!(
+        "# bench_sgd — exact CG vs stochastic vec trick, time-to-ε \
+         (ε = {epsilon:.0e}, λ = {lambda}, batch = {batch})\n"
+    );
+
+    let mut rows: Vec<(String, usize, f64, f64)> = Vec::new();
+    for &n in sizes {
+        let data = KernelFillingConfig::small().generate(k, n, 42);
+        for &kernel in kernels {
+            // --- exact CG to ε -------------------------------------
+            let op = PairwiseLinOp::new(
+                kernel,
+                data.d.clone(),
+                data.t.clone(),
+                data.pairs.clone(),
+                data.pairs.clone(),
+                GvtPolicy::Auto,
+            )
+            .unwrap();
+            let mut cg_iters = 0;
+            let r_cg = suite.run(
+                &format!("{:<14} n={n:<6} cg  →ε", kernel.name()),
+                &cfg,
+                || {
+                    let shifted = ShiftedOp::new(&op, lambda);
+                    let out = cg(
+                        &shifted,
+                        black_box(&data.y),
+                        None,
+                        &CgOptions { max_iters: 10_000, rel_tol: epsilon },
+                        |_, _, _| ControlFlow::Continue(()),
+                    );
+                    cg_iters = out.iterations;
+                    black_box(out.x);
+                },
+            );
+            let cg_secs = r_cg.mean.as_secs_f64();
+
+            // --- stochastic vec trick to ε -------------------------
+            // Trainer built once outside the timed region: the compiled
+            // template + power-iteration step bound are one-off setup a
+            // λ grid amortizes; the timed quantity is the training loop.
+            let scfg = SgdConfig {
+                batch_size: batch,
+                epochs: max_epochs,
+                tol: epsilon,
+                check_every: 1,
+                ..Default::default()
+            };
+            let trainer = SgdTrainer::new(&data, kernel, scfg).unwrap();
+            let mut sgd_epochs = 0;
+            let mut sgd_converged = false;
+            let r_sgd = suite.run(
+                &format!("{:<14} n={n:<6} sgd →ε", kernel.name()),
+                &cfg,
+                || {
+                    let run = trainer.fit(lambda, 7).unwrap();
+                    sgd_epochs = run.epochs;
+                    sgd_converged = run.converged;
+                    black_box(run.alpha);
+                },
+            );
+            let sgd_secs = r_sgd.mean.as_secs_f64();
+            println!(
+                "    {} n={n}: cg {cg_iters} iters {:.1}ms | sgd {sgd_epochs} epochs \
+                 {:.1}ms (converged={sgd_converged}) | ratio {:.2}x",
+                kernel.name(),
+                cg_secs * 1e3,
+                sgd_secs * 1e3,
+                cg_secs / sgd_secs.max(1e-12)
+            );
+            rows.push((kernel.name().to_string(), n, cg_secs, sgd_secs));
+        }
+    }
+
+    println!("\n{}", suite.table());
+
+    if let Ok(path) = std::env::var("GVT_RLS_BENCH_JSON") {
+        let meta: Vec<(&str, String)> = vec![
+            ("bench", "bench_sgd".to_string()),
+            ("epsilon", format!("{epsilon:e}")),
+            ("lambda", lambda.to_string()),
+            ("batch", batch.to_string()),
+            ("domain", k.to_string()),
+            (
+                "sizes",
+                sizes.iter().map(|s| s.to_string()).collect::<Vec<_>>().join(","),
+            ),
+            (
+                "time_to_eps",
+                rows.iter()
+                    .map(|(nm, n, c, s)| format!("{nm}@{n}:cg={c:.4}s,sgd={s:.4}s"))
+                    .collect::<Vec<_>>()
+                    .join(";"),
+            ),
+        ];
+        suite.write_json(&path, &meta).expect("writing bench JSON");
+        println!("wrote {path}");
+    }
+}

@@ -88,6 +88,18 @@ impl Cli {
         self.opt(name).ok_or_else(|| gvt_err!("missing required option --{name}"))
     }
 
+    /// An option constrained to a fixed vocabulary (`--solver`,
+    /// `--schedule`): unknown values error with the accepted list
+    /// instead of a bare parse failure downstream.
+    pub fn opt_choice(&self, name: &str, default: &str, choices: &[&str]) -> Result<String> {
+        let v = self.opt_or(name, default).to_ascii_lowercase();
+        if choices.iter().any(|c| *c == v) {
+            Ok(v)
+        } else {
+            bail!("--{name} {v}: expected one of {}", choices.join("|"))
+        }
+    }
+
     pub fn has_switch(&self, name: &str) -> bool {
         self.switches.iter().any(|s| s == name)
     }
@@ -123,6 +135,23 @@ mod tests {
     fn numeric_errors() {
         let c = parse("x --n abc");
         assert!(c.opt_usize("n", 1).is_err());
+    }
+
+    #[test]
+    fn opt_choice_validates_vocabulary() {
+        let c = parse("train --solver SGD");
+        assert_eq!(
+            c.opt_choice("solver", "minres", &["minres", "cg", "sgd"]).unwrap(),
+            "sgd"
+        );
+        let d = parse("train");
+        assert_eq!(
+            d.opt_choice("solver", "minres", &["minres", "cg", "sgd"]).unwrap(),
+            "minres"
+        );
+        let e = parse("train --solver newton");
+        let err = format!("{}", e.opt_choice("solver", "minres", &["minres", "cg"]).unwrap_err());
+        assert!(err.contains("minres|cg"), "{err}");
     }
 
     #[test]

@@ -8,6 +8,7 @@ use crate::error::Result;
 use crate::eval::auc;
 use crate::gvt::pairwise::PairwiseKernel;
 use crate::solvers::ridge::{PairwiseRidge, RidgeConfig, RidgeModel};
+use crate::solvers::sgd::{SgdConfig, SgdTrainer};
 
 /// One evaluated candidate.
 #[derive(Clone, Debug)]
@@ -37,11 +38,23 @@ pub fn select_lambda(
 ) -> Result<(Candidate, Vec<Candidate>)> {
     let inner_split = splits::split_setting(train, setting, cfg.validation_fraction, seed);
     let (inner, validation) = (&inner_split.train, &inner_split.test);
-    let val_labels = validation.binary_labels();
     let models = PairwiseRidge::fit_lambda_grid(inner, kernel, cfg, lambdas)?;
+    sweep_lambda_grid(&models, lambdas, kernel, validation)
+}
+
+/// Shared back half of the λ searches: score a fitted grid on the
+/// validation split with **one** multi-RHS block product
+/// ([`RidgeModel::predict_batch`]) and pick the best candidate.
+fn sweep_lambda_grid(
+    models: &[RidgeModel],
+    lambdas: &[f64],
+    kernel: PairwiseKernel,
+    validation: &PairDataset,
+) -> Result<(Candidate, Vec<Candidate>)> {
+    let val_labels = validation.binary_labels();
     let mut sweep = Vec::new();
     if !models.is_empty() {
-        let preds = RidgeModel::predict_batch(&models, &validation.pairs)?;
+        let preds = RidgeModel::predict_batch(models, &validation.pairs)?;
         for (li, (model, &lambda)) in models.iter().zip(lambdas).enumerate() {
             let col = preds.column(li);
             sweep.push(Candidate {
@@ -58,6 +71,34 @@ pub fn select_lambda(
         .max_by(|a, b| a.validation_auc.partial_cmp(&b.validation_auc).unwrap())
         .expect("empty lambda grid");
     Ok((best, sweep))
+}
+
+/// λ selection under the stochastic solver: like [`select_lambda`] but
+/// each candidate is trained with mini-batched SGD. The whole sweep
+/// shares **one** [`SgdTrainer`] — the compiled training operator, its
+/// pinned factorization, the warm workspace, and the power-iteration
+/// step-size bound are built once (λ only shifts the diagonal, which the
+/// trainer applies per fit) — and, as in the exact path, validation
+/// predictions for all λ come from a single multi-RHS block product.
+/// Every candidate fit shares `seed`, so the sweep isolates λ (identical
+/// epoch shuffles across the grid).
+pub fn select_lambda_sgd(
+    train: &PairDataset,
+    setting: u8,
+    kernel: PairwiseKernel,
+    lambdas: &[f64],
+    cfg: &SgdConfig,
+    validation_fraction: f64,
+    seed: u64,
+) -> Result<(Candidate, Vec<Candidate>)> {
+    let inner_split = splits::split_setting(train, setting, validation_fraction, seed);
+    let (inner, validation) = (&inner_split.train, &inner_split.test);
+    let trainer = SgdTrainer::new(inner, kernel, cfg.clone())?;
+    let models = lambdas
+        .iter()
+        .map(|&lambda| trainer.fit_model(lambda, seed))
+        .collect::<Result<Vec<_>>>()?;
+    sweep_lambda_grid(&models, lambdas, kernel, validation)
 }
 
 /// Select the pairwise kernel on an inner validation split using the
@@ -115,6 +156,29 @@ mod tests {
         )
         .unwrap();
         assert_eq!(sweep.len(), 3);
+        assert!(sweep.iter().all(|c| c.validation_auc <= best.validation_auc + 1e-12));
+    }
+
+    #[test]
+    fn sgd_lambda_sweep_reports_all_candidates() {
+        let data = MetzConfig::small().generate(83);
+        let cfg = SgdConfig {
+            batch_size: 64,
+            epochs: 40,
+            tol: 1e-3,
+            check_every: 5,
+            ..Default::default()
+        };
+        let lambdas = [1e-3, 1e-1, 1e1];
+        let (best, sweep) =
+            select_lambda_sgd(&data, 1, PairwiseKernel::Kronecker, &lambdas, &cfg, 0.25, 9)
+                .unwrap();
+        assert_eq!(sweep.len(), 3);
+        assert!(lambdas.contains(&best.lambda));
+        for c in &sweep {
+            assert!((0.0..=1.0).contains(&c.validation_auc));
+            assert!(c.iterations > 0, "sgd candidates record their step count");
+        }
         assert!(sweep.iter().all(|c| c.validation_auc <= best.validation_auc + 1e-12));
     }
 

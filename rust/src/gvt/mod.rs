@@ -12,7 +12,7 @@
 //!   shared across Kronecker terms, CSR-grouped stage 1, reusable
 //!   workspaces (zero allocation per solver iteration), and the
 //!   multi-RHS [`plan::gvt_matmat`] block product.
-//! * [`pairwise`] — Corollary 1: the nine pairwise kernels as term sums,
+//! * [`pairwise`] — Corollary 1: the eight pairwise kernels as term sums,
 //!   and [`pairwise::PairwiseLinOp`], the `K`-as-linear-operator used by
 //!   the iterative solvers.
 //! * [`explicit`] — the `O(n n̄)` explicit kernel matrices computed straight

@@ -1,4 +1,4 @@
-//! Corollary 1 — the nine pairwise kernels as Kronecker-term sums, and the
+//! Corollary 1 — the eight pairwise kernels as Kronecker-term sums, and the
 //! linear-operator form consumed by the iterative solvers.
 //!
 //! Term derivations (`R(d,t)P = R(t,d)`, `R(d,t)Q = R(d,d)`,

@@ -199,6 +199,7 @@ pub struct GvtWorkspace {
 }
 
 impl GvtWorkspace {
+    /// Empty workspace; buffers grow to the plan's shapes on first use.
     pub fn new() -> Self {
         Self {
             s: Vec::new(),

@@ -7,7 +7,7 @@
 //! Pairwise learning predicts labels for (drug, target) pairs. With `n`
 //! training pairs over `m` unique drugs and `q` unique targets, explicit
 //! pairwise kernel matrices cost `O(n²)` time and memory. This library
-//! expresses all standard pairwise kernels — Linear, Poly2D, Kronecker,
+//! expresses all eight standard pairwise kernels — Linear, Poly2D, Kronecker,
 //! Symmetric, Anti-Symmetric, Ranking, MLPK, Cartesian — as sums of permuted
 //! Kronecker products (the paper's operator framework, Corollary 1) and
 //! computes every kernel mat-vec in `O(nm + nq)` with the generalized vec
@@ -17,9 +17,10 @@
 //! ## Layout
 //!
 //! * [`gvt`] — the paper's contribution: sparse GVT mat-vec, the operator
-//!   framework, and the nine pairwise kernels as Kronecker-term sums.
+//!   framework, and the eight pairwise kernels as Kronecker-term sums.
 //! * [`solvers`] — MINRES / CG / early-stopping kernel ridge /
-//!   Falkon-style Nyström baseline.
+//!   Falkon-style Nyström baseline / the mini-batched stochastic vec
+//!   trick trainer (`gvt-rls train --solver sgd`).
 //! * [`kernels`] — object-level (drug/target) kernels: linear, polynomial,
 //!   Gaussian, Tanimoto.
 //! * [`data`] — synthetic dataset generators mirroring the paper's four

@@ -4,7 +4,9 @@
 //!
 //! * `datasets` — print Table 5 (dataset statistics) for the generators.
 //! * `train` — train one model and report test AUC across settings
-//!   (`--save-model` writes a self-contained v2 artifact).
+//!   (`--solver minres|cg|sgd` picks the exact Krylov solvers or the
+//!   mini-batched stochastic vec trick; `--save-model` writes a
+//!   self-contained v2 artifact whichever solver produced α).
 //! * `predict` — offline scoring: read `drug target` pairs from a file,
 //!   score them with one block product against a saved model.
 //! * `serve` — online scoring: micro-batched prediction server over
@@ -61,7 +63,10 @@ fn print_help() {
          USAGE: gvt-rls <command> [options]\n\n\
          COMMANDS:\n\
          \x20 datasets                      print Table 5 dataset statistics\n\
-         \x20 train                         train one model (--kernel --setting; --save-model FILE)\n\
+         \x20 train                         train one model (--kernel --setting; --save-model FILE;\n\
+         \x20                               --solver minres|cg|sgd; sgd: --batch-size N --epochs N\n\
+         \x20                               --lr X --schedule constant|invt|cosine --momentum X\n\
+         \x20                               --tol X --check-every N --patience N --average)\n\
          \x20 predict                       score a pair list offline (--model --pairs [--out])\n\
          \x20 serve                         prediction server (--model; --listen ADDR | --stdio;\n\
          \x20                               --max-batch N --max-wait-us U --cache N)\n\
@@ -108,14 +113,20 @@ fn cmd_train(cli: &Cli) -> Result<()> {
     use gvt_rls::eval::auc;
     use gvt_rls::gvt::pairwise::PairwiseKernel;
     use gvt_rls::solvers::ridge::{PairwiseRidge, RidgeConfig};
+    use gvt_rls::solvers::{SgdConfig, SgdTrainer, Solver, StepSchedule};
 
     let seed = cli.opt_u64("seed", 42)?;
     let kernel = PairwiseKernel::parse(&cli.opt_or("kernel", "kronecker"))
         .ok_or_else(|| gvt_err!("unknown --kernel"))?;
     let setting = cli.opt_usize("setting", 1)? as u8;
     let quick = cli.has_switch("quick");
+    // Whitelist derived from the enum so the two vocabularies cannot
+    // drift (a drifted whitelist would turn a bad flag into a panic).
+    let solver_names = Solver::ALL.map(|s| s.name());
+    let solver = Solver::parse(&cli.opt_choice("solver", "minres", &solver_names)?)
+        .expect("opt_choice validated the solver token");
     let cfg = RidgeConfig {
-        lambda: cli.opt_f64("lambda", 1e-5)?,
+        lambda: cli.opt_f64("lambda", if solver.is_stochastic() { 1e-2 } else { 1e-5 })?,
         max_iters: cli.opt_usize("max-iters", if quick { 50 } else { 400 })?,
         ..Default::default()
     };
@@ -130,13 +141,47 @@ fn cmd_train(cli: &Cli) -> Result<()> {
         split.test.len()
     );
     let t0 = std::time::Instant::now();
-    let model = PairwiseRidge::fit_early_stopping(&split.train, setting, kernel, &cfg, seed)?;
+    let model = match solver {
+        // MINRES keeps the paper's full early-stopping protocol.
+        Solver::Minres => {
+            PairwiseRidge::fit_early_stopping(&split.train, setting, kernel, &cfg, seed)?
+        }
+        // CG: plain Tikhonov fit to tolerance (SPD system for λ > 0).
+        Solver::Cg => {
+            PairwiseRidge::fit_exact(&split.train, kernel, &cfg, cfg.max_iters, Solver::Cg)?
+        }
+        // Stochastic vec trick: mini-batched steps on batch-shaped
+        // operators derived from one compiled template.
+        Solver::Sgd => {
+            let scfg = SgdConfig {
+                batch_size: cli.opt_usize("batch-size", 512)?,
+                epochs: cli.opt_usize("epochs", if quick { 60 } else { 200 })?,
+                lr: cli.opt_f64("lr", 1.0)?,
+                momentum: cli.opt_f64("momentum", 0.0)?,
+                averaging: cli.has_switch("average"),
+                schedule: StepSchedule::parse(&cli.opt_choice(
+                    "schedule",
+                    "constant",
+                    &StepSchedule::NAMES,
+                )?)
+                .expect("opt_choice validated the schedule token"),
+                tol: cli.opt_f64("tol", 1e-6)?,
+                check_every: cli.opt_usize("check-every", 1)?,
+                patience: cli.opt_usize("patience", 20)?,
+                ..Default::default()
+            };
+            let trainer = SgdTrainer::new(&split.train, kernel, scfg)?;
+            trainer.fit_model(cfg.lambda, seed)?
+        }
+    };
     let secs = t0.elapsed().as_secs_f64();
     let preds = model.predict(&split.test.pairs)?;
     let a = auc(&preds, &split.test.binary_labels());
     println!(
-        "kernel {} | iterations {} | train {:.2}s | test AUC {}",
+        "kernel {} | solver {} | {} {} | train {:.2}s | test AUC {}",
         kernel.name(),
+        solver.name(),
+        if solver.is_stochastic() { "steps" } else { "iterations" },
         model.iterations,
         secs,
         a.map(|v| format!("{v:.4}")).unwrap_or_else(|| "n/a".into())

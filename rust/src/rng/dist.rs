@@ -72,6 +72,36 @@ pub fn sample_without_replacement<R: Rng>(rng: &mut R, n: usize, k: usize) -> Ve
     pool
 }
 
+/// Reusable shuffled-epoch index stream for mini-batch training: owns one
+/// permutation buffer of `0..n` and re-shuffles it in place per epoch, so
+/// the epoch *shuffle* is allocation-free after construction. (The
+/// stochastic trainer's steps still allocate their batch sample and
+/// operator; this only keeps the sampling side out of that budget.)
+pub struct EpochShuffler {
+    perm: Vec<usize>,
+}
+
+impl EpochShuffler {
+    /// Identity permutation over `0..n` (first epoch must call
+    /// [`Self::shuffle`] before consuming).
+    pub fn new(n: usize) -> EpochShuffler {
+        EpochShuffler { perm: (0..n).collect() }
+    }
+
+    /// Re-shuffle in place and return the epoch's visiting order. A
+    /// Fisher–Yates pass over an existing permutation is again uniform,
+    /// so no identity reset is needed between epochs.
+    pub fn shuffle<R: Rng>(&mut self, rng: &mut R) -> &[usize] {
+        shuffle(rng, &mut self.perm);
+        &self.perm
+    }
+
+    /// The current epoch order without re-shuffling.
+    pub fn current(&self) -> &[usize] {
+        &self.perm
+    }
+}
+
 /// Split `0..n` into `folds` contiguous-in-permutation folds of near-equal
 /// size. Returns fold assignment per index.
 pub fn fold_assignment<R: Rng>(rng: &mut R, n: usize, folds: usize) -> Vec<usize> {
@@ -134,6 +164,22 @@ mod tests {
         }
         let (min, max) = (counts.iter().min().unwrap(), counts.iter().max().unwrap());
         assert!(max - min <= 1, "unbalanced: {counts:?}");
+    }
+
+    #[test]
+    fn epoch_shuffler_stays_a_permutation() {
+        let mut rng = Xoshiro256::seed_from(8);
+        let mut es = EpochShuffler::new(37);
+        for _ in 0..5 {
+            let order = es.shuffle(&mut rng).to_vec();
+            let mut seen = vec![false; 37];
+            for &i in &order {
+                assert!(!seen[i]);
+                seen[i] = true;
+            }
+            assert!(seen.iter().all(|&s| s));
+            assert_eq!(es.current(), order.as_slice());
+        }
     }
 
     #[test]

@@ -83,26 +83,32 @@ impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
         self.recency.insert(self.tick, key);
     }
 
+    /// Entries currently cached.
     pub fn len(&self) -> usize {
         self.map.len()
     }
 
+    /// Is the cache empty?
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }
 
+    /// Maximum entries (0 = caching disabled).
     pub fn capacity(&self) -> usize {
         self.cap
     }
 
+    /// Lifetime hit count ([`Self::get`] found the key).
     pub fn hits(&self) -> u64 {
         self.hits
     }
 
+    /// Lifetime miss count.
     pub fn misses(&self) -> u64 {
         self.misses
     }
 
+    /// Lifetime evictions (inserts that displaced the LRU entry).
     pub fn evictions(&self) -> u64 {
         self.evictions
     }

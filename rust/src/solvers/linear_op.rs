@@ -91,10 +91,12 @@ pub struct DenseOp {
 }
 
 impl DenseOp {
+    /// Wrap a dense matrix.
     pub fn new(m: crate::linalg::Mat) -> Self {
         Self { m }
     }
 
+    /// The wrapped matrix.
     pub fn matrix(&self) -> &crate::linalg::Mat {
         &self.m
     }

@@ -1,5 +1,5 @@
-//! Iterative and direct solvers for the regularized least-squares problem
-//! `(K + λI) a = y` (Equation 1 of the paper).
+//! Iterative, direct, and stochastic solvers for the regularized
+//! least-squares problem `(K + λI) a = y` (Equation 1 of the paper).
 //!
 //! * [`linear_op`] — the operator abstraction: anything that can multiply
 //!   a vector (GVT ops, explicit matrices, shifted/scaled compositions).
@@ -7,10 +7,18 @@
 //!   the paper's training algorithm (`scipy.sparse.linalg.minres`
 //!   equivalent) with per-iteration callbacks for early stopping.
 //! * [`cg`] — conjugate gradient, used by the Nyström/Falkon baseline.
+//! * [`sgd`] — mini-batched stochastic vec trick trainer: batch-shaped
+//!   GVT products instead of full passes, for `n` beyond the exact
+//!   solvers' reach (plus [`schedule`], its step-size schedules).
 //! * [`ridge`] — kernel ridge regression over pairwise kernels with
 //!   validation-based early stopping (the paper's training protocol).
 //! * [`nystrom`] — Falkon-style Nyström approximation baseline (§6.5).
 //! * [`closed_form`] — `O(n³)` Cholesky oracle for tests/small problems.
+//! * [`persist`] — model artifacts (v1/v2) shared with `gvt-rls
+//!   predict`/`serve`.
+//!
+//! [`Solver`] names the training algorithms the CLI and coordinator
+//! dispatch over.
 
 pub mod cg;
 pub mod closed_form;
@@ -20,7 +28,75 @@ pub mod minres;
 pub mod nystrom;
 pub mod persist;
 pub mod ridge;
+pub mod schedule;
+pub mod sgd;
 
 pub use linear_op::{LinOp, ShiftedOp};
 pub use minres::{minres, MinresOptions, MinresOutcome};
 pub use ridge::{PairwiseRidge, RidgeConfig, RidgeModel};
+pub use schedule::StepSchedule;
+pub use sgd::{fit_sgd, SgdConfig, SgdRun, SgdTrainer};
+
+/// The training algorithms `gvt-rls train --solver` (and the
+/// coordinator's tuning paths) select between. MINRES and CG are exact
+/// Krylov solvers — one full GVT product per iteration; SGD is the
+/// stochastic vec trick trainer — one batch-shaped product per step
+/// (see [`sgd`] for the cost model).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Solver {
+    /// MINRES (the paper's solver; handles symmetric indefinite shifts).
+    Minres,
+    /// Conjugate gradient (SPD systems; the Falkon baseline's solver).
+    Cg,
+    /// Mini-batched stochastic vec trick ([`SgdTrainer`]).
+    Sgd,
+}
+
+impl Solver {
+    /// All solvers, exact first.
+    pub const ALL: [Solver; 3] = [Solver::Minres, Solver::Cg, Solver::Sgd];
+
+    /// Canonical name (CLI flags, bench labels, reports).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Solver::Minres => "minres",
+            Solver::Cg => "cg",
+            Solver::Sgd => "sgd",
+        }
+    }
+
+    /// Parse a CLI token (exactly the [`Self::name`] vocabulary — the
+    /// CLI's `opt_choice` whitelist and this parser must stay one
+    /// vocabulary).
+    pub fn parse(s: &str) -> Option<Solver> {
+        match s.to_ascii_lowercase().as_str() {
+            "minres" => Some(Solver::Minres),
+            "cg" => Some(Solver::Cg),
+            "sgd" => Some(Solver::Sgd),
+            _ => None,
+        }
+    }
+
+    /// Does this solver take stochastic (mini-batched) steps rather than
+    /// exact Krylov iterations? Stochastic solvers need the pairwise
+    /// training structure (batch row sampling), not just a [`LinOp`].
+    pub fn is_stochastic(&self) -> bool {
+        matches!(self, Solver::Sgd)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solver_parse_roundtrip() {
+        for s in Solver::ALL {
+            assert_eq!(Solver::parse(s.name()), Some(s));
+        }
+        assert_eq!(Solver::parse("newton"), None);
+        assert!(Solver::Sgd.is_stochastic());
+        assert!(!Solver::Minres.is_stochastic());
+        assert!(!Solver::Cg.is_stochastic());
+    }
+}

@@ -256,6 +256,7 @@ impl NystromModel {
         kx.matvec(&self.beta)
     }
 
+    /// Number of Nyström centers the model was fit with.
     pub fn num_centers(&self) -> usize {
         self.centers.len()
     }

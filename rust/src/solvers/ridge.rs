@@ -19,8 +19,10 @@ use crate::eval::auc;
 use crate::gvt::pairwise::{PairwiseKernel, PairwiseLinOp};
 use crate::gvt::vec_trick::GvtPolicy;
 use crate::linalg::Mat;
+use crate::solvers::cg;
 use crate::solvers::linear_op::{LinOp, ShiftedOp};
 use crate::solvers::minres::{minres, MinresOptions};
+use crate::solvers::Solver;
 use crate::sparse::PairIndex;
 use std::ops::ControlFlow;
 use std::sync::Arc;
@@ -105,6 +107,7 @@ impl RidgeModel {
         Ok(op.matvec(&self.alpha))
     }
 
+    /// The pairwise kernel the model was trained with.
     pub fn kernel(&self) -> PairwiseKernel {
         self.kernel
     }
@@ -124,6 +127,7 @@ impl RidgeModel {
         self.policy
     }
 
+    /// Number of training pairs (the length of `alpha`).
     pub fn train_size(&self) -> usize {
         self.train_pairs.len()
     }
@@ -244,23 +248,54 @@ impl PairwiseRidge {
         cfg: &RidgeConfig,
         iters: usize,
     ) -> Result<RidgeModel> {
+        Self::fit_exact(data, kernel, cfg, iters, Solver::Minres)
+    }
+
+    /// Fit with one of the **exact** Krylov solvers (`(K+λI)` is SPD for
+    /// λ > 0, so CG applies as well as MINRES; the two agree to solver
+    /// tolerance). The stochastic solver is dispatched separately —
+    /// [`crate::solvers::sgd::SgdTrainer`] needs the pairwise batch
+    /// structure, not just the assembled operator.
+    pub fn fit_exact(
+        data: &PairDataset,
+        kernel: PairwiseKernel,
+        cfg: &RidgeConfig,
+        iters: usize,
+        solver: Solver,
+    ) -> Result<RidgeModel> {
         let op = Self::train_op(data, kernel, cfg.policy)?;
         let shifted = ShiftedOp::new(&op, cfg.lambda);
-        let out = minres(
-            &shifted,
-            &data.y,
-            &MinresOptions { max_iters: iters, rel_tol: cfg.rel_tol },
-            |_, _, _| ControlFlow::Continue(()),
-        );
+        let opts = MinresOptions { max_iters: iters, rel_tol: cfg.rel_tol };
+        let (alpha, iterations) = match solver {
+            Solver::Minres => {
+                let out = minres(&shifted, &data.y, &opts, |_, _, _| {
+                    ControlFlow::Continue(())
+                });
+                (out.x, out.iterations)
+            }
+            Solver::Cg => {
+                let out = cg::cg(
+                    &shifted,
+                    &data.y,
+                    None,
+                    &cg::CgOptions { max_iters: iters, rel_tol: cfg.rel_tol },
+                    |_, _, _| ControlFlow::Continue(()),
+                );
+                (out.x, out.iterations)
+            }
+            Solver::Sgd => bail!(
+                "fit_exact: sgd is a stochastic solver — use solvers::sgd::SgdTrainer"
+            ),
+        };
         Ok(RidgeModel {
             kernel,
             d: data.d.clone(),
             t: data.t.clone(),
             train_pairs: data.pairs.clone(),
             policy: cfg.policy,
-            alpha: out.x,
+            alpha,
             lambda: cfg.lambda,
-            iterations: out.iterations,
+            iterations,
             history: Vec::new(),
         })
     }
@@ -600,6 +635,45 @@ mod tests {
                 assert!((a - b).abs() < 1e-8, "λ={lambda} batched vs single");
             }
         }
+    }
+
+    #[test]
+    fn cg_fit_matches_minres_fit() {
+        let data = toy_dataset(108, 40, 6, 7);
+        let cfg = RidgeConfig {
+            lambda: 1.0,
+            max_iters: 800,
+            rel_tol: 1e-12,
+            ..Default::default()
+        };
+        let m1 = PairwiseRidge::fit_exact(
+            &data,
+            PairwiseKernel::Kronecker,
+            &cfg,
+            cfg.max_iters,
+            Solver::Minres,
+        )
+        .unwrap();
+        let m2 = PairwiseRidge::fit_exact(
+            &data,
+            PairwiseKernel::Kronecker,
+            &cfg,
+            cfg.max_iters,
+            Solver::Cg,
+        )
+        .unwrap();
+        for (a, b) in m1.alpha.iter().zip(&m2.alpha) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+        // The stochastic solver must be routed through SgdTrainer.
+        assert!(PairwiseRidge::fit_exact(
+            &data,
+            PairwiseKernel::Kronecker,
+            &cfg,
+            10,
+            Solver::Sgd
+        )
+        .is_err());
     }
 
     #[test]

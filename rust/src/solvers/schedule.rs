@@ -1,0 +1,136 @@
+//! Step-size schedules for the stochastic trainer ([`crate::solvers::sgd`]).
+//!
+//! A schedule maps a step index to a multiplier in `(0, 1]` applied to the
+//! trainer's auto-scaled base step `η₀ = lr / (λ̂_max + λ)`:
+//!
+//! * [`StepSchedule::Constant`] — `1` forever. With the base step at the
+//!   block-Lipschitz bound this is randomized block coordinate descent,
+//!   which converges linearly on the (strongly convex) ridge objective —
+//!   the default, and what the convergence tests pin.
+//! * [`StepSchedule::InvT`] — `1 / (1 + decay·t)`, the classic
+//!   Robbins–Monro `O(1/t)` decay. Satisfies `Ση = ∞`, `Ση² < ∞`;
+//!   preferred with momentum or large batches where the constant-step
+//!   noise floor matters more than the linear rate.
+//! * [`StepSchedule::Cosine`] — cosine annealing from `1` down to `floor`
+//!   over the full step budget (Loshchilov & Hutter 2017 without
+//!   restarts). A fixed-budget schedule: it needs the total step count,
+//!   which the trainer passes in per call.
+
+/// Step-size multiplier as a function of the step index (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StepSchedule {
+    /// Constant multiplier `1`.
+    Constant,
+    /// `1 / (1 + decay·t)` with the given decay rate.
+    InvT {
+        /// Decay rate; `1e-3` is the CLI default (`--schedule invt`).
+        decay: f64,
+    },
+    /// Cosine annealing `floor + (1 − floor)·(1 + cos(π t/T)) / 2`.
+    Cosine {
+        /// Multiplier the schedule anneals down to at `t = T`.
+        floor: f64,
+    },
+}
+
+impl StepSchedule {
+    /// Multiplier for step `t` of `total` (0-based; `total` only matters
+    /// for fixed-budget schedules). Always in `(0, 1]`.
+    pub fn factor(&self, t: usize, total: usize) -> f64 {
+        match *self {
+            StepSchedule::Constant => 1.0,
+            StepSchedule::InvT { decay } => 1.0 / (1.0 + decay * t as f64),
+            StepSchedule::Cosine { floor } => {
+                let total = total.max(1);
+                let frac = (t.min(total) as f64) / total as f64;
+                floor + (1.0 - floor) * 0.5 * (1.0 + (std::f64::consts::PI * frac).cos())
+            }
+        }
+    }
+
+    /// The canonical CLI vocabulary, aligned with [`Self::parse`] (the
+    /// CLI's `opt_choice` whitelist derives from this — one source of
+    /// truth).
+    pub const NAMES: [&'static str; 3] = ["constant", "invt", "cosine"];
+
+    /// Canonical name (CLI flags, bench labels).
+    pub fn name(&self) -> &'static str {
+        match self {
+            StepSchedule::Constant => "constant",
+            StepSchedule::InvT { .. } => "invt",
+            StepSchedule::Cosine { .. } => "cosine",
+        }
+    }
+
+    /// Parse a CLI token (exactly [`Self::NAMES`]); parameterized
+    /// schedules get their defaults (`invt` → decay `1e-3`, `cosine` →
+    /// floor `0.05`).
+    pub fn parse(s: &str) -> Option<StepSchedule> {
+        match s.to_ascii_lowercase().as_str() {
+            "constant" => Some(StepSchedule::Constant),
+            "invt" => Some(StepSchedule::InvT { decay: 1e-3 }),
+            "cosine" => Some(StepSchedule::Cosine { floor: 0.05 }),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_one() {
+        for t in [0, 1, 10, 1_000_000] {
+            assert_eq!(StepSchedule::Constant.factor(t, 100), 1.0);
+        }
+    }
+
+    #[test]
+    fn invt_decays_monotonically_from_one() {
+        let s = StepSchedule::InvT { decay: 0.1 };
+        assert_eq!(s.factor(0, 1), 1.0);
+        let mut prev = f64::INFINITY;
+        for t in 0..200 {
+            let f = s.factor(t, 1);
+            assert!(f <= prev && f > 0.0);
+            prev = f;
+        }
+        assert!((s.factor(10, 1) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_anneals_to_floor() {
+        let s = StepSchedule::Cosine { floor: 0.05 };
+        let total = 1000;
+        assert!((s.factor(0, total) - 1.0).abs() < 1e-12);
+        assert!((s.factor(total, total) - 0.05).abs() < 1e-12);
+        // Past the budget it clamps at the floor rather than rebounding.
+        assert!((s.factor(total * 2, total) - 0.05).abs() < 1e-12);
+        let mid = s.factor(total / 2, total);
+        assert!((mid - (0.05 + 0.95 * 0.5)).abs() < 1e-12);
+        let mut prev = f64::INFINITY;
+        for t in 0..=total {
+            let f = s.factor(t, total);
+            assert!(f <= prev + 1e-15 && f >= 0.05 - 1e-15);
+            prev = f;
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in [
+            StepSchedule::Constant,
+            StepSchedule::InvT { decay: 1e-3 },
+            StepSchedule::Cosine { floor: 0.05 },
+        ] {
+            assert_eq!(StepSchedule::parse(s.name()), Some(s));
+        }
+        assert_eq!(StepSchedule::parse("warmup"), None);
+        // The CLI whitelist and the parser are one vocabulary.
+        for name in StepSchedule::NAMES {
+            let parsed = StepSchedule::parse(name).expect(name);
+            assert_eq!(parsed.name(), name);
+        }
+    }
+}

@@ -1,0 +1,636 @@
+//! Stochastic vec trick training — mini-batched SGD on the ridge dual.
+//!
+//! The exact solvers (MINRES/CG) pay one **full** GVT product per
+//! iteration: `O(n·m_c + n·q_c)` with the stage-2 row sweep over all `n`
+//! training pairs dominating for `n ≫ m, q`. Following the stochastic
+//! vec trick idea (Karmitsa, Pahikkala, Airola), this module instead
+//! minimizes the same objective
+//!
+//! ```text
+//! J(α) = ½ αᵀ(K + λI)α − αᵀy        (∇J = (K + λI)α − y)
+//! ```
+//!
+//! by sampling a mini-batch `B` of training pairs per step and updating
+//! only the batch coordinates with the batch block of the gradient,
+//! `α_B ← α_B − η_t · ((Kα)_B + λα_B − y_B)` — randomized block
+//! coordinate descent, a.k.a. SGD under the coordinate decomposition of
+//! `J`. The batch rows `(Kα)_B` are one **batch-shaped** GVT product:
+//! the [`SgdTrainer`] compiles the training operator once and derives
+//! each step's operator from it via [`PairwiseLinOp::with_rows`]
+//! (Arc-shared kernel matrices, Hadamard squares, and training-sample
+//! grouping caches — the same template path the serving
+//! [`crate::serve::Predictor`] uses), threading one warm
+//! [`GvtWorkspace`] through every step. A batch step costs
+//! `O(n + q_c·m_c + b·m_c)` against the exact iteration's
+//! `O(n + q_c·m_c + n·m_c)` — the `n ≫ b` stage-2 saving that opens
+//! data-set sizes where even one full pass per iteration is too slow.
+//!
+//! Stability without tuning: the base step is `lr / (1.1·λ̂_max + λ)`
+//! where `λ̂_max` is a power-iteration estimate of the kernel operator's
+//! top eigenvalue (a handful of full GVT products, paid once per
+//! trainer). Since every principal submatrix satisfies
+//! `λ_max(K_BB) ≤ λ_max(K)`, the default `lr = 1` is inside the block
+//! descent regime for every batch size, giving linear convergence in
+//! expectation on the strongly convex objective — no learning-rate
+//! search required. [`StepSchedule`]s (constant / 1-over-t / cosine),
+//! heavy-ball momentum, and tail iterate averaging layer on top; see
+//! rust/DESIGN.md §Stochastic-Solver for the cost model and when to
+//! prefer SGD over CG.
+//!
+//! Epoch sampling is a shuffled pass over the training pairs
+//! ([`crate::rng::dist::EpochShuffler`], Fisher–Yates under the
+//! deterministic [`Xoshiro256`]), so a run is exactly reproducible from
+//! its seed. A convergence monitor evaluates the full objective and
+//! relative gradient norm every [`SgdConfig::check_every`] epochs (one
+//! exact GVT pass via the template), stopping early on
+//! [`SgdConfig::tol`] or when the objective stalls for
+//! [`SgdConfig::patience`] checks.
+
+use crate::data::PairDataset;
+use crate::error::{bail, Context, Result};
+use crate::gvt::pairwise::{PairwiseKernel, PairwiseLinOp};
+use crate::gvt::plan::GvtWorkspace;
+use crate::gvt::vec_trick::GvtPolicy;
+use crate::linalg::vecops::{axpy, dot, norm2, scale};
+use crate::rng::dist::EpochShuffler;
+use crate::rng::{dist, Xoshiro256};
+use crate::solvers::ridge::RidgeModel;
+use crate::solvers::schedule::StepSchedule;
+use crate::sparse::PairIndex;
+use std::sync::{Arc, Mutex};
+
+/// Hyperparameters of the stochastic trainer (λ is per-fit, see
+/// [`SgdTrainer::fit`], so one trainer serves a whole λ grid).
+#[derive(Clone, Debug)]
+pub struct SgdConfig {
+    /// Mini-batch size `b` (clamped to `[1, n]` at fit time).
+    pub batch_size: usize,
+    /// Maximum shuffled passes over the training pairs.
+    pub epochs: usize,
+    /// Step-size multiplier on the auto-scaled base step
+    /// `1 / (1.1·λ̂_max + λ)`. `1.0` (default) is always stable; values
+    /// above ~2 leave the block descent regime.
+    pub lr: f64,
+    /// Heavy-ball momentum μ (`0` disables; disabling keeps the
+    /// per-step cost at `O(b)` vector work — momentum's velocity update
+    /// is `O(n)` per step).
+    pub momentum: f64,
+    /// Tail iterate averaging: return the average of the iterates seen
+    /// in the second half of the epoch budget instead of the last
+    /// iterate. Lowers the noise floor of decayed-step runs; off by
+    /// default because with the constant safe step the last iterate
+    /// converges linearly and averaging only lags it.
+    pub averaging: bool,
+    /// Step-size schedule (multiplies the base step).
+    pub schedule: StepSchedule,
+    /// GVT factorization policy; `Auto` is resolved once on the
+    /// training-shaped plan and pinned for every batch, so the step
+    /// arithmetic does not depend on the batch size.
+    pub policy: GvtPolicy,
+    /// Convergence monitor: stop when `‖(K+λI)α − y‖ / ‖y‖ ≤ tol`.
+    pub tol: f64,
+    /// Run the (full-pass) monitor every this many epochs.
+    pub check_every: usize,
+    /// Stop when the monitored objective has not improved for this many
+    /// consecutive checks.
+    pub patience: usize,
+    /// Power-iteration count for the λ̂_max estimate (paid once per
+    /// trainer; each iteration is one full GVT product).
+    pub power_iters: usize,
+}
+
+impl Default for SgdConfig {
+    fn default() -> Self {
+        Self {
+            batch_size: 512,
+            epochs: 200,
+            lr: 1.0,
+            momentum: 0.0,
+            averaging: false,
+            schedule: StepSchedule::Constant,
+            policy: GvtPolicy::Auto,
+            tol: 1e-6,
+            check_every: 1,
+            patience: 20,
+            power_iters: 24,
+        }
+    }
+}
+
+/// One convergence-monitor checkpoint (a full-pass evaluation).
+#[derive(Clone, Copy, Debug)]
+pub struct SgdCheckpoint {
+    /// Epochs completed when the check ran.
+    pub epoch: usize,
+    /// Ridge dual objective `½αᵀ(K+λI)α − αᵀy` of the candidate iterate.
+    pub objective: f64,
+    /// Relative gradient norm `‖(K+λI)α − y‖ / ‖y‖`.
+    pub rel_grad: f64,
+}
+
+/// Result of one [`SgdTrainer::fit`] run.
+#[derive(Clone, Debug)]
+pub struct SgdRun {
+    /// Final dual coefficients (the tail average when
+    /// [`SgdConfig::averaging`] is on and the tail was reached).
+    pub alpha: Vec<f64>,
+    /// Epochs completed.
+    pub epochs: usize,
+    /// Mini-batch steps taken.
+    pub steps: usize,
+    /// Whether the gradient-norm tolerance was reached.
+    pub converged: bool,
+    /// Final relative gradient norm (from the last monitor pass).
+    pub rel_grad: f64,
+    /// Final objective value (from the last monitor pass).
+    pub objective: f64,
+    /// The monitor trajectory (one entry per check).
+    pub history: Vec<SgdCheckpoint>,
+    /// The auto-scaled base step the run used (before the schedule).
+    pub base_step: f64,
+}
+
+/// Compiled stochastic trainer for one (dataset, kernel): the training
+/// operator template, its pinned factorization, the warm workspace, and
+/// the power-iteration λ̂_max estimate are all built **once** and shared
+/// by every [`Self::fit`] call (a λ grid re-uses all of it — only the
+/// diagonal shift differs). See module docs.
+pub struct SgdTrainer {
+    kernel: PairwiseKernel,
+    d: Arc<crate::linalg::Mat>,
+    t: Arc<crate::linalg::Mat>,
+    pairs: PairIndex,
+    y: Vec<f64>,
+    /// Training-shaped operator (`rows == cols == train`): monitor
+    /// passes and the `with_rows` template for batch operators.
+    template: PairwiseLinOp,
+    /// Concrete (never `Auto`) factorization every step executes.
+    policy: GvtPolicy,
+    /// Power-iteration estimate of `λ_max(K)` over the training sample.
+    lmax: f64,
+    cfg: SgdConfig,
+    /// Warm workspace carried across the per-batch operators (the
+    /// template keeps its own, staying warm at the full shape for
+    /// monitor passes).
+    ws: Mutex<GvtWorkspace>,
+}
+
+impl SgdTrainer {
+    /// Compile a trainer for `data` under `kernel`. Builds the training
+    /// operator, pins `Auto` to the concrete factorization the
+    /// training-shaped plan resolves, pre-warms the training sample's
+    /// CSR grouping caches (shared by every batch operator), and runs
+    /// the power iteration for the step-size bound.
+    pub fn new(data: &PairDataset, kernel: PairwiseKernel, cfg: SgdConfig) -> Result<SgdTrainer> {
+        if !kernel.supports_heterogeneous() && !data.homogeneous {
+            bail!(
+                "{} requires a homogeneous dataset but '{}' is heterogeneous",
+                kernel.name(),
+                data.name
+            );
+        }
+        if data.is_empty() {
+            bail!("sgd: empty training set");
+        }
+        let train = data.pairs.clone();
+        // Build the grouping caches on the canonical sample before the
+        // first operator build so every per-batch operator inherits the
+        // built `Arc`s (same pre-warm as the serving predictor).
+        train.by_drug();
+        train.by_target();
+        let template = PairwiseLinOp::new(
+            kernel,
+            data.d.clone(),
+            data.t.clone(),
+            train.clone(),
+            train.clone(),
+            cfg.policy,
+        )
+        .context("compiling the sgd training operator")?;
+        let policy = template.resolved_mode();
+        let template = if policy == template.policy() {
+            template
+        } else {
+            template
+                .with_policy(policy)
+                .context("re-pinning the sgd training operator")?
+        };
+        let lmax = estimate_lambda_max(&template, cfg.power_iters.max(4));
+        Ok(SgdTrainer {
+            kernel,
+            d: data.d.clone(),
+            t: data.t.clone(),
+            pairs: train,
+            y: data.y.clone(),
+            template,
+            policy,
+            lmax,
+            cfg,
+            ws: Mutex::new(GvtWorkspace::new()),
+        })
+    }
+
+    /// The power-iteration estimate of the kernel operator's top
+    /// eigenvalue (before the 10% safety margin the step applies).
+    pub fn lambda_max(&self) -> f64 {
+        self.lmax
+    }
+
+    /// The pinned concrete GVT factorization (see [`SgdConfig::policy`]).
+    pub fn policy(&self) -> GvtPolicy {
+        self.policy
+    }
+
+    /// Run mini-batched SGD for Tikhonov parameter `lambda`. The run is
+    /// exactly reproducible from `seed` (epoch shuffles are the only
+    /// randomness).
+    pub fn fit(&self, lambda: f64, seed: u64) -> Result<SgdRun> {
+        if !(lambda >= 0.0) {
+            bail!("sgd: lambda must be non-negative, got {lambda}");
+        }
+        let n = self.pairs.len();
+        let ynorm = norm2(&self.y);
+        if ynorm == 0.0 {
+            return Ok(SgdRun {
+                alpha: vec![0.0; n],
+                epochs: 0,
+                steps: 0,
+                converged: true,
+                rel_grad: 0.0,
+                objective: 0.0,
+                history: Vec::new(),
+                base_step: 0.0,
+            });
+        }
+        let b = self.cfg.batch_size.clamp(1, n);
+        let steps_per_epoch = (n + b - 1) / b;
+        let total_steps = self.cfg.epochs * steps_per_epoch;
+        let base_step = self.cfg.lr / (1.1 * self.lmax + lambda).max(f64::MIN_POSITIVE);
+        // Tail averaging starts at the midpoint of the epoch budget.
+        let avg_from_epoch = self.cfg.epochs / 2;
+
+        let mut rng = Xoshiro256::seed_from(seed);
+        let mut shuffler = EpochShuffler::new(n);
+        let mut alpha = vec![0.0; n];
+        let mut velocity = if self.cfg.momentum > 0.0 { Some(vec![0.0; n]) } else { None };
+        let mut avg = if self.cfg.averaging { Some((vec![0.0; n], 0usize)) } else { None };
+        let mut kb: Vec<f64> = Vec::with_capacity(b);
+        let mut candidate = vec![0.0; n];
+        let mut grad = vec![0.0; n];
+        let mut history = Vec::new();
+
+        let mut steps = 0usize;
+        let mut epochs = 0usize;
+        let mut converged = false;
+        let mut rel_grad = 1.0;
+        let mut objective = 0.0;
+        let mut best_obj = f64::INFINITY;
+        let mut stalled = 0usize;
+
+        'train: for epoch in 0..self.cfg.epochs {
+            let order = shuffler.shuffle(&mut rng);
+            for chunk in order.chunks(b) {
+                // Batch-shaped operator from the template: Arc-shared
+                // matrices/squares, pre-warmed grouping caches; only the
+                // O(b) row sample and its plan tables are fresh.
+                let batch = self.pairs.subset(chunk);
+                let op = self.template.with_rows(batch)?;
+                op.install_workspace(std::mem::take(
+                    &mut *self.ws.lock().expect("sgd workspace poisoned"),
+                ));
+                kb.clear();
+                kb.resize(chunk.len(), 0.0);
+                op.matvec_into(&alpha, &mut kb);
+                *self.ws.lock().expect("sgd workspace poisoned") = op.take_workspace();
+
+                let step = base_step * self.cfg.schedule.factor(steps, total_steps);
+                match velocity.as_mut() {
+                    None => {
+                        // Pure block step: O(b) beyond the GVT product.
+                        for (j, &i) in chunk.iter().enumerate() {
+                            let g = kb[j] + lambda * alpha[i] - self.y[i];
+                            alpha[i] -= step * g;
+                        }
+                    }
+                    Some(v) => {
+                        // Heavy ball: v ← μv + ĝ; α ← α − η_t v.
+                        scale(v, self.cfg.momentum);
+                        for (j, &i) in chunk.iter().enumerate() {
+                            v[i] += kb[j] + lambda * alpha[i] - self.y[i];
+                        }
+                        axpy(-step, v, &mut alpha);
+                    }
+                }
+                if let Some((sum, count)) = avg.as_mut() {
+                    if epoch >= avg_from_epoch {
+                        axpy(1.0, &alpha, sum);
+                        *count += 1;
+                    }
+                }
+                steps += 1;
+            }
+            epochs = epoch + 1;
+
+            let last_epoch = epochs == self.cfg.epochs;
+            if epochs % self.cfg.check_every.max(1) != 0 && !last_epoch {
+                continue;
+            }
+            // Full-pass monitor on the candidate iterate (the tail
+            // average once it has samples, else the current iterate).
+            let cand: &[f64] = match &avg {
+                Some((sum, count)) if *count > 0 => {
+                    let inv = 1.0 / *count as f64;
+                    for (c, s) in candidate.iter_mut().zip(sum) {
+                        *c = s * inv;
+                    }
+                    &candidate
+                }
+                _ => &alpha,
+            };
+            self.template.matvec_into(cand, &mut grad);
+            for ((g, &a), &yi) in grad.iter_mut().zip(cand).zip(&self.y) {
+                *g += lambda * a - yi;
+            }
+            // With g = (K+λI)α − y: αᵀ(K+λI)α = αᵀ(g + y), so
+            // J = ½αᵀ(K+λI)α − αᵀy = ½αᵀ(g + y) − αᵀy = ½·αᵀ(g − y).
+            objective = 0.5 * (dot(cand, &grad) - dot(cand, &self.y));
+            rel_grad = norm2(&grad) / ynorm;
+            history.push(SgdCheckpoint { epoch: epochs, objective, rel_grad });
+            if !objective.is_finite() || !rel_grad.is_finite() {
+                // Divergence (lr past the stability bound): fail loudly
+                // instead of burning the epoch budget and returning NaNs.
+                bail!(
+                    "sgd diverged at epoch {epochs} (objective {objective}, \
+                     rel grad {rel_grad}) — reduce the step multiplier (lr {})",
+                    self.cfg.lr
+                );
+            }
+            if rel_grad <= self.cfg.tol {
+                converged = true;
+                break 'train;
+            }
+            let improved = !best_obj.is_finite()
+                || objective < best_obj - 1e-12 * best_obj.abs().max(1.0);
+            if improved {
+                best_obj = objective;
+                stalled = 0;
+            } else {
+                stalled += 1;
+                if stalled >= self.cfg.patience.max(1) {
+                    break 'train;
+                }
+            }
+        }
+
+        let alpha = match avg {
+            Some((sum, count)) if count > 0 => {
+                let inv = 1.0 / count as f64;
+                sum.iter().map(|s| s * inv).collect()
+            }
+            _ => alpha,
+        };
+        Ok(SgdRun {
+            alpha,
+            epochs,
+            steps,
+            converged,
+            rel_grad,
+            objective,
+            history,
+            base_step,
+        })
+    }
+
+    /// [`Self::fit`] wrapped into a [`RidgeModel`] (same artifact shape
+    /// as the exact solvers: `gvt-rls predict`/`serve` work unchanged).
+    pub fn fit_model(&self, lambda: f64, seed: u64) -> Result<RidgeModel> {
+        let run = self.fit(lambda, seed)?;
+        let mut model = RidgeModel::from_parts(
+            self.kernel,
+            self.d.clone(),
+            self.t.clone(),
+            self.pairs.clone(),
+            self.policy,
+            run.alpha,
+            lambda,
+        )?;
+        model.iterations = run.steps;
+        Ok(model)
+    }
+}
+
+/// One-shot convenience: compile a trainer and fit once.
+pub fn fit_sgd(
+    data: &PairDataset,
+    kernel: PairwiseKernel,
+    lambda: f64,
+    cfg: &SgdConfig,
+    seed: u64,
+) -> Result<RidgeModel> {
+    SgdTrainer::new(data, kernel, cfg.clone())?.fit_model(lambda, seed)
+}
+
+/// Power-iteration estimate of the training operator's top eigenvalue
+/// (`K` is symmetric PSD on the training sample, so the Rayleigh
+/// quotient of the iterate converges to `λ_max` from below). Seeded with
+/// a fixed constant — the estimate is part of the deterministic trainer
+/// state, independent of the per-fit seed.
+fn estimate_lambda_max(op: &PairwiseLinOp, iters: usize) -> f64 {
+    let n = op.rows().len();
+    let mut rng = Xoshiro256::seed_from(0x9e37_79b9_7f4a_7c15);
+    let mut v = dist::normal_vec(&mut rng, n);
+    let mut kv = vec![0.0; n];
+    let mut lmax = 0.0;
+    for _ in 0..iters {
+        let vnorm = norm2(&v);
+        if vnorm == 0.0 || !vnorm.is_finite() {
+            break;
+        }
+        scale(&mut v, 1.0 / vnorm);
+        op.matvec_into(&v, &mut kv);
+        lmax = dot(&v, &kv);
+        std::mem::swap(&mut v, &mut kv);
+    }
+    lmax.max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gvt::explicit::explicit_matrix;
+    use crate::linalg::chol::solve_regularized;
+    use crate::rng::dist as rdist;
+    use crate::testing::gen;
+
+    fn toy(seed: u64, n: usize, m: usize, q: usize) -> PairDataset {
+        let mut rng = Xoshiro256::seed_from(seed);
+        let d = Arc::new(gen::psd_kernel(&mut rng, m));
+        let t = Arc::new(gen::psd_kernel(&mut rng, q));
+        let pairs = gen::pair_sample(&mut rng, n, m, q);
+        let y = rdist::normal_vec(&mut rng, n);
+        PairDataset { name: "sgd-toy".into(), d, t, pairs, y, homogeneous: m == q }
+    }
+
+    #[test]
+    fn lambda_max_estimate_matches_explicit_matrix() {
+        let data = toy(300, 35, 6, 7);
+        let trainer = SgdTrainer::new(&data, PairwiseKernel::Kronecker, SgdConfig::default())
+            .unwrap();
+        // Oracle: many power iterations on the explicit matrix.
+        let k = explicit_matrix(
+            PairwiseKernel::Kronecker,
+            &data.d,
+            &data.t,
+            &data.pairs,
+            &data.pairs,
+        );
+        let mut v = vec![1.0; 35];
+        let mut oracle = 0.0;
+        for _ in 0..300 {
+            let kv = k.matvec(&v);
+            let nrm = norm2(&kv);
+            oracle = dot(&v, &kv) / dot(&v, &v);
+            v = kv.iter().map(|x| x / nrm).collect();
+        }
+        let est = trainer.lambda_max();
+        assert!(est > 0.0);
+        assert!(
+            (est - oracle).abs() < 0.2 * oracle,
+            "power-iteration estimate {est} vs oracle {oracle}"
+        );
+    }
+
+    #[test]
+    fn converges_to_closed_form_on_small_problem() {
+        let data = toy(301, 40, 6, 7);
+        let cfg = SgdConfig {
+            batch_size: 8,
+            epochs: 20_000,
+            tol: 1e-8,
+            check_every: 25,
+            patience: 200,
+            ..Default::default()
+        };
+        let lambda = 2.0;
+        let trainer = SgdTrainer::new(&data, PairwiseKernel::Kronecker, cfg).unwrap();
+        let run = trainer.fit(lambda, 11).unwrap();
+        assert!(run.converged, "rel_grad {} after {} epochs", run.rel_grad, run.epochs);
+        let k = explicit_matrix(
+            PairwiseKernel::Kronecker,
+            &data.d,
+            &data.t,
+            &data.pairs,
+            &data.pairs,
+        );
+        let oracle = solve_regularized(&k, lambda, &data.y).unwrap();
+        for (a, o) in run.alpha.iter().zip(&oracle) {
+            assert!((a - o).abs() < 1e-5, "{a} vs {o}");
+        }
+        // Monitor trajectory is recorded and the objective decreases
+        // from first to last check.
+        assert!(run.history.len() >= 2);
+        assert!(run.history.last().unwrap().objective < run.history[0].objective);
+    }
+
+    #[test]
+    fn deterministic_under_fixed_seed() {
+        let data = toy(302, 36, 6, 6);
+        let cfg = SgdConfig {
+            batch_size: 8,
+            epochs: 7,
+            tol: 0.0,
+            ..Default::default()
+        };
+        let trainer = SgdTrainer::new(&data, PairwiseKernel::Linear, cfg).unwrap();
+        let a = trainer.fit(0.5, 42).unwrap().alpha;
+        let b = trainer.fit(0.5, 42).unwrap().alpha;
+        assert_eq!(
+            a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "same seed must reproduce the trajectory bit-for-bit"
+        );
+        let c = trainer.fit(0.5, 43).unwrap().alpha;
+        assert_ne!(a, c, "different seeds shuffle differently");
+    }
+
+    #[test]
+    fn momentum_averaging_and_schedules_still_converge() {
+        let data = toy(303, 32, 5, 5);
+        let lambda = 2.0;
+        let variants = [
+            SgdConfig {
+                momentum: 0.5,
+                schedule: StepSchedule::Constant,
+                ..loose()
+            },
+            SgdConfig {
+                schedule: StepSchedule::InvT { decay: 1e-4 },
+                ..loose()
+            },
+            SgdConfig {
+                schedule: StepSchedule::Cosine { floor: 0.2 },
+                averaging: true,
+                ..loose()
+            },
+        ];
+        fn loose() -> SgdConfig {
+            SgdConfig {
+                batch_size: 8,
+                epochs: 8_000,
+                tol: 1e-3,
+                check_every: 25,
+                patience: 100,
+                ..Default::default()
+            }
+        }
+        for cfg in variants {
+            let label = format!("schedule={} momentum={}", cfg.schedule.name(), cfg.momentum);
+            let trainer = SgdTrainer::new(&data, PairwiseKernel::Kronecker, cfg).unwrap();
+            let run = trainer.fit(lambda, 5).unwrap();
+            assert!(
+                run.rel_grad < 0.05,
+                "{label}: rel_grad {} after {} epochs",
+                run.rel_grad,
+                run.epochs
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_homogeneous_kernel_on_heterogeneous_data() {
+        let data = toy(304, 20, 4, 5);
+        assert!(SgdTrainer::new(&data, PairwiseKernel::Mlpk, SgdConfig::default()).is_err());
+    }
+
+    #[test]
+    fn divergent_lr_fails_loudly() {
+        let data = toy(306, 30, 5, 5);
+        // lr far past the stability bound; patience high so the
+        // non-finite monitor check (not the stall check) fires.
+        let cfg = SgdConfig {
+            batch_size: 30,
+            epochs: 500,
+            lr: 100.0,
+            check_every: 1,
+            patience: 10_000,
+            ..Default::default()
+        };
+        let trainer = SgdTrainer::new(&data, PairwiseKernel::Kronecker, cfg).unwrap();
+        let err = trainer.fit(1e-3, 1);
+        assert!(err.is_err(), "divergence must error, not return NaN α");
+        let msg = format!("{}", err.unwrap_err());
+        assert!(msg.contains("diverged"), "{msg}");
+    }
+
+    #[test]
+    fn zero_rhs_returns_zero_immediately() {
+        let mut data = toy(305, 15, 4, 4);
+        data.y = vec![0.0; 15];
+        let trainer = SgdTrainer::new(&data, PairwiseKernel::Kronecker, SgdConfig::default())
+            .unwrap();
+        let run = trainer.fit(1.0, 1).unwrap();
+        assert!(run.converged);
+        assert_eq!(run.steps, 0);
+        assert!(run.alpha.iter().all(|&a| a == 0.0));
+    }
+}

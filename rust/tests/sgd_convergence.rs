@@ -1,0 +1,210 @@
+//! Stochastic-solver acceptance: mini-batched SGD reaches the exact
+//! (CG) solution of `(K + λI)α = y` on every pairwise kernel across the
+//! four split settings, runs are bit-reproducible from their seed, and
+//! an SGD-trained v2 artifact serves bit-stably through the `gvt-rls
+//! predict` machinery.
+//!
+//! Documented tolerance (see rust/DESIGN.md §Stochastic-Solver): with
+//! the monitor stopping at relative gradient norm `tol`, the solution
+//! error is bounded by `‖α − α*‖ ≤ tol·‖y‖ / λ_min(K + λI) ≤
+//! tol·‖y‖/λ`; the assertions below use `tol = 1e-7` with λ = 1.5 and
+//! check α and predictions to 1e-4.
+
+use gvt_rls::data::PairDataset;
+use gvt_rls::gvt::pairwise::{PairwiseKernel, PairwiseLinOp};
+use gvt_rls::gvt::vec_trick::GvtPolicy;
+use gvt_rls::rng::{dist, Xoshiro256};
+use gvt_rls::serve::{Predictor, QueryPair, ServeOptions};
+use gvt_rls::solvers::cg::{cg, CgOptions};
+use gvt_rls::solvers::linear_op::ShiftedOp;
+use gvt_rls::solvers::persist::{save_model_v2, EmbedV2};
+use gvt_rls::solvers::ridge::RidgeModel;
+use gvt_rls::solvers::{SgdConfig, SgdTrainer};
+use gvt_rls::testing::gen;
+use std::ops::ControlFlow;
+use std::sync::Arc;
+
+/// Homogeneous toy dataset with a **normalized** object kernel
+/// (`k_ij / √(k_ii k_jj)`, unit diagonal) so the pairwise operator's
+/// conditioning stays moderate and the convergence loop below is fast.
+fn homogeneous_toy(seed: u64, n: usize, m: usize) -> PairDataset {
+    let mut rng = Xoshiro256::seed_from(seed);
+    let raw = gen::psd_kernel(&mut rng, m);
+    let mut d = raw.clone();
+    for i in 0..m {
+        for j in 0..m {
+            d[(i, j)] = raw[(i, j)] / (raw[(i, i)] * raw[(j, j)]).sqrt();
+        }
+    }
+    let d = Arc::new(d);
+    let pairs = gen::homogeneous_sample(&mut rng, n, m);
+    let y = dist::normal_vec(&mut rng, n);
+    PairDataset { name: "sgd-conv".into(), d: d.clone(), t: d, pairs, y, homogeneous: true }
+}
+
+/// Exact dual coefficients via CG on the same training operator.
+fn cg_alpha(train: &PairDataset, kernel: PairwiseKernel, lambda: f64) -> Vec<f64> {
+    let op = PairwiseLinOp::new(
+        kernel,
+        train.d.clone(),
+        train.t.clone(),
+        train.pairs.clone(),
+        train.pairs.clone(),
+        GvtPolicy::Auto,
+    )
+    .unwrap();
+    let shifted = ShiftedOp::new(&op, lambda);
+    let out = cg(
+        &shifted,
+        &train.y,
+        None,
+        &CgOptions { max_iters: 20_000, rel_tol: 1e-12 },
+        |_, _, _| ControlFlow::Continue(()),
+    );
+    assert!(out.converged, "CG oracle failed to converge");
+    out.x
+}
+
+/// All 8 kernels, cycling the four split settings (kernel `i` trains on
+/// the setting-`(i mod 4)+1` training split): SGD α matches the exact CG
+/// solution and so do held-out predictions.
+#[test]
+fn sgd_matches_cg_on_all_kernels_across_settings() {
+    let data = homogeneous_toy(500, 90, 10);
+    let lambda = 1.5;
+    for (i, kernel) in PairwiseKernel::ALL.into_iter().enumerate() {
+        let setting = (i % 4) as u8 + 1;
+        let split = data.split_setting(setting, 0.25, 41);
+        assert!(
+            split.train.len() >= 8 && !split.test.is_empty(),
+            "degenerate setting-{setting} split in the fixture"
+        );
+        let cfg = SgdConfig {
+            batch_size: 16,
+            epochs: 30_000,
+            tol: 1e-7,
+            check_every: 25,
+            patience: 600,
+            ..Default::default()
+        };
+        let trainer = SgdTrainer::new(&split.train, kernel, cfg).unwrap();
+        let run = trainer.fit(lambda, 13).unwrap();
+        assert!(
+            run.converged,
+            "{kernel:?} setting {setting}: rel_grad {} after {} epochs",
+            run.rel_grad,
+            run.epochs
+        );
+        let exact = cg_alpha(&split.train, kernel, lambda);
+        for (a, o) in run.alpha.iter().zip(&exact) {
+            assert!(
+                (a - o).abs() < 1e-4,
+                "{kernel:?} setting {setting}: alpha {a} vs exact {o}"
+            );
+        }
+        // Held-out predictions agree too (documented tolerance). The
+        // model is assembled from the run's α — not refit — so this
+        // costs one prediction pass per side.
+        let sgd_model = RidgeModel::from_parts(
+            kernel,
+            split.train.d.clone(),
+            split.train.t.clone(),
+            split.train.pairs.clone(),
+            trainer.policy(),
+            run.alpha.clone(),
+            lambda,
+        )
+        .unwrap();
+        let exact_model = RidgeModel::from_parts(
+            kernel,
+            split.train.d.clone(),
+            split.train.t.clone(),
+            split.train.pairs.clone(),
+            trainer.policy(),
+            exact,
+            lambda,
+        )
+        .unwrap();
+        let p_sgd = sgd_model.predict(&split.test.pairs).unwrap();
+        let p_exact = exact_model.predict(&split.test.pairs).unwrap();
+        for (a, b) in p_sgd.iter().zip(&p_exact) {
+            assert!(
+                (a - b).abs() < 1e-4,
+                "{kernel:?} setting {setting}: prediction {a} vs {b}"
+            );
+        }
+    }
+}
+
+/// Fixed seed → bit-identical trajectory; different seed → different
+/// epoch shuffles (stopped mid-run so trajectories are distinguishable).
+#[test]
+fn sgd_is_deterministic_under_a_fixed_seed() {
+    let data = homogeneous_toy(501, 60, 8);
+    let cfg = SgdConfig {
+        batch_size: 8,
+        epochs: 9,
+        tol: 0.0,
+        ..Default::default()
+    };
+    let trainer = SgdTrainer::new(&data, PairwiseKernel::Poly2D, cfg).unwrap();
+    let a = trainer.fit(0.8, 7).unwrap();
+    let b = trainer.fit(0.8, 7).unwrap();
+    assert_eq!(a.steps, b.steps);
+    assert_eq!(
+        a.alpha.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        b.alpha.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        "same seed must reproduce α bit-for-bit"
+    );
+    let c = trainer.fit(0.8, 8).unwrap();
+    assert_ne!(a.alpha, c.alpha, "different seeds must shuffle differently");
+}
+
+/// An SGD-trained model saved as a v2 artifact round-trips through the
+/// serving/predict machinery bit-stably: α survives bit-for-bit, and
+/// the Predictor (the engine behind `gvt-rls predict`) scores pairs
+/// bit-identically to in-process `RidgeModel::predict` — including the
+/// exact `{:.17e}` wire rendering.
+#[test]
+fn sgd_v2_artifact_roundtrips_bitstably_through_predict() {
+    let data = homogeneous_toy(502, 70, 9);
+    let cfg = SgdConfig {
+        batch_size: 16,
+        epochs: 400,
+        tol: 1e-5,
+        check_every: 10,
+        ..Default::default()
+    };
+    let trainer = SgdTrainer::new(&data, PairwiseKernel::Kronecker, cfg).unwrap();
+    let model = trainer.fit_model(0.5, 3).unwrap();
+    let alpha_bits: Vec<u64> = model.alpha.iter().map(|x| x.to_bits()).collect();
+
+    let path = std::env::temp_dir().join(format!("gvt_sgd_roundtrip_{}.txt", std::process::id()));
+    save_model_v2(&model, &path, &EmbedV2 { matrices: true, ..Default::default() }).unwrap();
+    let pred = Predictor::from_file(&path, ServeOptions::default()).unwrap();
+    let _ = std::fs::remove_file(&path);
+
+    // α round-trips bit-for-bit through the artifact.
+    let loaded_bits: Vec<u64> = pred.model().alpha.iter().map(|x| x.to_bits()).collect();
+    assert_eq!(alpha_bits, loaded_bits);
+
+    // Scores through the predict path are bit-identical to the model's.
+    let mut rng = Xoshiro256::seed_from(503);
+    let test = gen::homogeneous_sample(&mut rng, 23, 9);
+    let queries: Vec<QueryPair> = (0..test.len())
+        .map(|i| QueryPair::known(test.drug(i) as u32, test.target(i) as u32))
+        .collect();
+    let offline = model.predict(&test).unwrap();
+    let served = pred.score(&queries).unwrap();
+    assert_eq!(
+        offline.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        served.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        "predict path must be bit-identical to RidgeModel::predict"
+    );
+    for (a, b) in offline.iter().zip(&served) {
+        assert_eq!(
+            gvt_rls::serve::protocol::fmt_score(*a),
+            gvt_rls::serve::protocol::fmt_score(*b)
+        );
+    }
+}

@@ -1,9 +1,11 @@
 #!/usr/bin/env bash
 # Perf-trajectory seeding: run the per-kernel GVT mat-vec bench
 # (n ∈ {4k, 16k}, all 8 kernels, fused + unfused ablation rows) into
-# BENCH_gvt.json, and the serving bench (micro-batched vs per-request
+# BENCH_gvt.json, the serving bench (micro-batched vs per-request
 # scoring, batch sizes {1, 8, 64, 256}, p50/p99 latency) into
-# BENCH_serve.json, both at the repo root so future PRs can prove
+# BENCH_serve.json, and the stochastic-solver bench (exact CG vs
+# mini-batched SGD time-to-ε, n ∈ {16k, 64k}, all 8 kernels) into
+# BENCH_sgd.json, all at the repo root so future PRs can prove
 # speedups against recorded numbers.
 #
 # Usage: scripts/bench.sh            # full sizes (~minutes)
@@ -18,9 +20,11 @@ cd "$(dirname "$0")/.."
 if [[ -n "${GVT_RLS_BENCH_QUICK:-}" || -n "${GVT_BENCH_SMOKE:-}" ]]; then
   gvt_json="$PWD/BENCH_gvt_quick.json"
   serve_json="$PWD/BENCH_serve_quick.json"
+  sgd_json="$PWD/BENCH_sgd_quick.json"
 else
   gvt_json="$PWD/BENCH_gvt.json"
   serve_json="$PWD/BENCH_serve.json"
+  sgd_json="$PWD/BENCH_sgd.json"
 fi
 
 echo "== bench_pairwise_kernels → ${gvt_json} =="
@@ -31,4 +35,8 @@ echo "== bench_serve → ${serve_json} =="
 GVT_RLS_BENCH_JSON="$serve_json" \
   cargo bench --offline --bench bench_serve
 
-echo "bench.sh: wrote ${GVT_RLS_BENCH_JSON:-$gvt_json} and ${serve_json}"
+echo "== bench_sgd → ${sgd_json} =="
+GVT_RLS_BENCH_JSON="$sgd_json" \
+  cargo bench --offline --bench bench_sgd
+
+echo "bench.sh: wrote ${GVT_RLS_BENCH_JSON:-$gvt_json}, ${serve_json} and ${sgd_json}"

@@ -16,6 +16,11 @@ cargo test -q --offline
 echo "== benches + examples compile (kept in the workspace) =="
 cargo build --offline --benches --examples
 
+echo "== rustdoc builds (public-API docs cannot rot) =="
+# -D warnings: broken intra-doc links are rustdoc *warnings* and would
+# otherwise exit 0 — deny them so the doc gate actually gates.
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --offline
+
 echo "== serve: bit-identity under the unfused ablation (GVT_RLS_NO_FUSE=1) =="
 # The flag is read once per process, so the fused run above and this
 # unfused run each cover one side of the ablation.
