@@ -1,0 +1,155 @@
+//! Runtime-pool ablation: persistent parked workers vs the pre-pool
+//! scoped-spawn path (`GVT_RLS_POOL=0`), A/B'd in-process via
+//! [`gvt_rls::runtime::pool::set_pool_enabled`]. Three views:
+//!
+//! 1. **Region dispatch** — a fixed-size trivial fill, isolating the
+//!    per-parallel-region overhead (condvar wake vs thread spawn/join)
+//!    that every GVT stage pays.
+//! 2. **GVT mat-vec latency** — Kronecker (1 term) and MLPK (10 terms,
+//!    concurrent multi-unit stage 1) at n ∈ {4k, 16k, 64k}.
+//! 3. **Per-iteration solver overhead** — a fixed-iteration MINRES run
+//!    divided by its iteration count: the number a training run
+//!    multiplies by thousands.
+//!
+//! Both paths produce bit-identical results (tests/pool_determinism.rs);
+//! this bench records what the determinism costs or saves. Set
+//! `GVT_RLS_BENCH_JSON=<path>` to emit JSON — scripts/bench.sh points it
+//! at BENCH_pool.json.
+
+use gvt_rls::bench::{reduced_size, BenchConfig, BenchSuite};
+use gvt_rls::data::kernel_filling::KernelFillingConfig;
+use gvt_rls::gvt::pairwise::{PairwiseKernel, PairwiseLinOp};
+use gvt_rls::gvt::vec_trick::GvtPolicy;
+use gvt_rls::linalg::par;
+use gvt_rls::runtime::pool;
+use gvt_rls::solvers::linear_op::{LinOp, ShiftedOp};
+use gvt_rls::solvers::minres::{minres, MinresOptions};
+use std::hint::black_box;
+use std::ops::ControlFlow;
+
+const MODES: [(&str, bool); 2] = [("pooled", true), ("scoped", false)];
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let mut suite = BenchSuite::new();
+    let (k, sizes): (usize, &[usize]) =
+        if reduced_size() { (48, &[800]) } else { (192, &[4_000, 16_000, 64_000]) };
+    pool::warm();
+
+    // 1. Region-dispatch overhead on a trivial fixed-size fill.
+    println!("# bench_pool — persistent pool vs scoped spawn\n");
+    let mut buf = vec![0.0f64; 64 * 1024];
+    for (label, on) in MODES {
+        pool::set_pool_enabled(Some(on));
+        suite.run(&format!("region-dispatch 64k-fill        {label}"), &cfg, || {
+            par::parallel_fill(&mut buf, 1024, |start, _end, chunk| {
+                for (i, v) in chunk.iter_mut().enumerate() {
+                    *v = (start + i) as f64;
+                }
+            });
+            black_box(&buf);
+        });
+    }
+
+    // 2 + 3. GVT mat-vec latency and per-iteration solver overhead.
+    let mut speedups: Vec<(String, usize, f64)> = Vec::new();
+    for &n in sizes {
+        let data = KernelFillingConfig::small().generate(k, n, 42);
+        let a: Vec<f64> = (0..n).map(|i| ((i % 9) as f64) - 4.0).collect();
+        let y: Vec<f64> = (0..n).map(|i| ((i % 7) as f64) - 3.0).collect();
+        println!("\n## n = {n}, m = q = {k}\n");
+        for kernel in [PairwiseKernel::Kronecker, PairwiseKernel::Mlpk] {
+            let op = PairwiseLinOp::new(
+                kernel,
+                data.d.clone(),
+                data.t.clone(),
+                data.pairs.clone(),
+                data.pairs.clone(),
+                GvtPolicy::Auto,
+            )
+            .unwrap();
+            let mut out = vec![0.0; n];
+            let mut means = [0.0f64; 2];
+            for (mi, &(label, on)) in MODES.iter().enumerate() {
+                pool::set_pool_enabled(Some(on));
+                let r = suite.run(
+                    &format!("{:<10} n={n:<6} matvec      {label}", kernel.name()),
+                    &cfg,
+                    || {
+                        op.apply_into(black_box(&a), black_box(&mut out));
+                    },
+                );
+                means[mi] = r.mean.as_secs_f64();
+            }
+            let s = means[1] / means[0].max(1e-12);
+            println!("    {} n={n}: pooled speedup {s:.2}x over scoped", kernel.name());
+            speedups.push((format!("{}-matvec", kernel.name()), n, s));
+        }
+
+        // Per-iteration solver overhead (MINRES, fixed 8 iterations).
+        let op = PairwiseLinOp::new(
+            PairwiseKernel::Kronecker,
+            data.d.clone(),
+            data.t.clone(),
+            data.pairs.clone(),
+            data.pairs.clone(),
+            GvtPolicy::Auto,
+        )
+        .unwrap();
+        let shifted = ShiftedOp::new(&op, 1e-3);
+        let iters = 8usize;
+        let mut means = [0.0f64; 2];
+        for (mi, &(label, on)) in MODES.iter().enumerate() {
+            pool::set_pool_enabled(Some(on));
+            let r = suite.run(
+                &format!("minres-{iters}it  n={n:<6} solver      {label}"),
+                &cfg,
+                || {
+                    let out = minres(
+                        &shifted,
+                        black_box(&y),
+                        &MinresOptions { max_iters: iters, rel_tol: 0.0 },
+                        |_, _, _| ControlFlow::Continue(()),
+                    );
+                    black_box(out.x);
+                },
+            );
+            means[mi] = r.mean.as_secs_f64();
+            println!(
+                "    per-iteration ({label}): {:.1} µs",
+                r.mean.as_secs_f64() * 1e6 / iters as f64
+            );
+        }
+        let s = means[1] / means[0].max(1e-12);
+        println!("    minres n={n}: pooled speedup {s:.2}x over scoped");
+        speedups.push(("minres-iter".to_string(), n, s));
+    }
+    pool::set_pool_enabled(None);
+
+    println!("\n{}", suite.table());
+    for (name, n, s) in &speedups {
+        println!("pooled speedup {name} n={n}: {s:.2}x");
+    }
+
+    if let Ok(path) = std::env::var("GVT_RLS_BENCH_JSON") {
+        let meta: Vec<(&str, String)> = vec![
+            ("bench", "bench_pool".to_string()),
+            ("domain", k.to_string()),
+            ("threads", par::num_threads().to_string()),
+            (
+                "sizes",
+                sizes.iter().map(|s| s.to_string()).collect::<Vec<_>>().join(","),
+            ),
+            (
+                "speedups",
+                speedups
+                    .iter()
+                    .map(|(nm, n, s)| format!("{nm}@{n}={s:.3}x"))
+                    .collect::<Vec<_>>()
+                    .join(";"),
+            ),
+        ];
+        suite.write_json(&path, &meta).expect("writing bench JSON");
+        println!("wrote {path}");
+    }
+}

@@ -5,6 +5,11 @@
 //! shrinks to smoke-test size; `--full` uses the paper's dimensions.
 //! Benches (`cargo bench`) cover Figures 7 and 9, which are
 //! time/memory-scaling figures.
+//!
+//! The grid figures (4–6) also accept `--solver minres|cg|sgd|all`:
+//! `all` duplicates every cell across the training algorithms, so
+//! CG-vs-SGD AUC/time columns land in the same report as the paper's
+//! MINRES rows (rows tagged `·cg` / `·sgd`).
 
 use crate::cli::Cli;
 use crate::coordinator::report::{auc_table, results_csv, Series};
@@ -20,6 +25,7 @@ use crate::gvt::pairwise::PairwiseKernel;
 use crate::kernels::BaseKernel;
 use crate::solvers::nystrom::{NystromConfig, NystromModel};
 use crate::solvers::ridge::{PairwiseRidge, RidgeConfig};
+use crate::solvers::Solver;
 
 /// Scale selector shared by all figures.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -68,6 +74,29 @@ fn common_ridge(cli: &Cli, scale: Scale) -> Result<RidgeConfig> {
 
 fn folds(cli: &Cli, scale: Scale) -> Result<usize> {
     cli.opt_usize("folds", if scale == Scale::Quick { 3 } else { 9 })
+}
+
+/// Parse `--solver` for a figure grid: one training algorithm, or `all`
+/// to run every cell once per solver so CG-vs-SGD columns land in the
+/// report next to the exact-MINRES rows (`gvt-rls experiment fig5
+/// --solver all`). Non-MINRES rows are tagged `·<solver>` in the dataset
+/// name, keeping the report emitters unchanged.
+fn grid_solvers(cli: &Cli) -> Result<Vec<Solver>> {
+    let tok = cli.opt_choice("solver", "minres", &["minres", "cg", "sgd", "all"])?;
+    Ok(if tok == "all" {
+        Solver::ALL.to_vec()
+    } else {
+        vec![Solver::parse(&tok).expect("opt_choice validated the solver token")]
+    })
+}
+
+/// Dataset-name tag for a grid row's solver (MINRES is the untagged
+/// baseline, matching the paper's tables).
+fn tag_name(name: &str, solver: Solver) -> String {
+    match solver {
+        Solver::Minres => name.to_string(),
+        s => format!("{name}·{}", s.name()),
+    }
 }
 
 fn grid(specs: Vec<ExperimentSpec>, cli: &Cli) -> Result<Vec<crate::coordinator::ExperimentResult>> {
@@ -176,20 +205,24 @@ fn fig4(cli: &Cli) -> Result<()> {
         PairwiseKernel::Symmetric,
         PairwiseKernel::Mlpk,
     ];
+    let solvers = grid_solvers(cli)?;
     let mut specs = Vec::new();
     for feature in ProteinFeature::ALL {
         let data = cfg.generate(feature, seed);
         for kernel in kernels {
             for setting in 1..=4u8 {
-                specs.push(ExperimentSpec {
-                    name: data.name.clone(),
-                    data: data.clone(),
-                    kernel,
-                    setting,
-                    folds,
-                    ridge: ridge.clone(),
-                    seed,
-                });
+                for &solver in &solvers {
+                    specs.push(ExperimentSpec {
+                        name: tag_name(&data.name, solver),
+                        data: data.clone(),
+                        kernel,
+                        setting,
+                        folds,
+                        ridge: ridge.clone(),
+                        solver,
+                        seed,
+                    });
+                }
             }
         }
     }
@@ -213,6 +246,7 @@ fn fig5(cli: &Cli) -> Result<()> {
         },
         Scale::Full => MetzConfig::paper(),
     };
+    let solvers = grid_solvers(cli)?;
     let mut specs = Vec::new();
     for base in [BaseKernel::Linear, BaseKernel::Gaussian] {
         let mut data = base_cfg.clone().with_kernel(base).generate(seed);
@@ -224,15 +258,18 @@ fn fig5(cli: &Cli) -> Result<()> {
             PairwiseKernel::Cartesian,
         ] {
             for setting in 1..=4u8 {
-                specs.push(ExperimentSpec {
-                    name: data.name.clone(),
-                    data: data.clone(),
-                    kernel,
-                    setting,
-                    folds,
-                    ridge: ridge.clone(),
-                    seed,
-                });
+                for &solver in &solvers {
+                    specs.push(ExperimentSpec {
+                        name: tag_name(&data.name, solver),
+                        data: data.clone(),
+                        kernel,
+                        setting,
+                        folds,
+                        ridge: ridge.clone(),
+                        solver,
+                        seed,
+                    });
+                }
             }
         }
     }
@@ -257,6 +294,7 @@ fn fig6(cli: &Cli) -> Result<()> {
     };
     // The paper reports the first two (drug, target) kernel pairs.
     let pairs = [(0usize, 0usize), (1, 0)];
+    let solvers = grid_solvers(cli)?;
     let mut specs = Vec::new();
     for (dk, tk) in pairs {
         let data: PairDataset = base_cfg.generate(dk, tk, seed);
@@ -267,15 +305,18 @@ fn fig6(cli: &Cli) -> Result<()> {
             PairwiseKernel::Cartesian,
         ] {
             for setting in 1..=4u8 {
-                specs.push(ExperimentSpec {
-                    name: data.name.clone(),
-                    data: data.clone(),
-                    kernel,
-                    setting,
-                    folds,
-                    ridge: ridge.clone(),
-                    seed,
-                });
+                for &solver in &solvers {
+                    specs.push(ExperimentSpec {
+                        name: tag_name(&data.name, solver),
+                        data: data.clone(),
+                        kernel,
+                        setting,
+                        folds,
+                        ridge: ridge.clone(),
+                        solver,
+                        seed,
+                    });
+                }
             }
         }
     }

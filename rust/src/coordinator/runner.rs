@@ -2,10 +2,12 @@
 //!
 //! The experiment grids (Figures 4–6 sweep dozens of cells) parallelize at
 //! the cell level: a leader thread owns the job queue, workers pull cells
-//! and run the fold loop. Inside a cell, the GVT mat-vecs themselves are
-//! threaded (see [`crate::linalg::par`]); to avoid oversubscription the
-//! runner caps cell-level workers and relies on the mat-vec threading for
-//! the rest.
+//! and run the fold loop. Inside a cell, the GVT mat-vecs run on the
+//! **shared** runtime pool (see [`crate::linalg::par`] /
+//! [`crate::runtime::pool`]) — concurrent cells submit jobs to one
+//! worker set instead of each spawning scoped threads, so the runner
+//! caps cell-level workers only to bound memory, not to avoid
+//! oversubscription.
 
 use crate::coordinator::experiment::{run_cv_experiment, ExperimentResult, ExperimentSpec};
 use crate::error::Result;
@@ -100,6 +102,7 @@ mod tests {
             setting,
             folds: 2,
             ridge: RidgeConfig { max_iters: 20, patience: 3, ..Default::default() },
+            solver: crate::solvers::Solver::Minres,
             seed,
         }
     }

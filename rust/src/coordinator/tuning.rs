@@ -9,6 +9,7 @@ use crate::eval::auc;
 use crate::gvt::pairwise::PairwiseKernel;
 use crate::solvers::ridge::{PairwiseRidge, RidgeConfig, RidgeModel};
 use crate::solvers::sgd::{SgdConfig, SgdTrainer};
+use crate::solvers::Solver;
 
 /// One evaluated candidate.
 #[derive(Clone, Debug)]
@@ -101,6 +102,42 @@ pub fn select_lambda_sgd(
     sweep_lambda_grid(&models, lambdas, kernel, validation)
 }
 
+/// Solver-dispatching λ selection for `--solver`-style callers: routes
+/// the stochastic solver to [`select_lambda_sgd`] (one shared
+/// [`SgdTrainer`] for the grid) and both exact solvers to
+/// [`select_lambda`] (one shared operator; the converged MINRES sweep
+/// solutions are the same Tikhonov optima CG reaches, so the exact path
+/// serves both). The figure grids train at fixed λ and dispatch solvers
+/// in [`crate::coordinator::experiment::run_cv_experiment`]; this is
+/// the matching entry point for λ *searches* (a future `tune`
+/// subcommand) so the two sweeps cannot drift.
+#[allow(clippy::too_many_arguments)]
+pub fn select_lambda_for(
+    solver: Solver,
+    train: &PairDataset,
+    setting: u8,
+    kernel: PairwiseKernel,
+    lambdas: &[f64],
+    cfg: &RidgeConfig,
+    sgd: &SgdConfig,
+    seed: u64,
+) -> Result<(Candidate, Vec<Candidate>)> {
+    match solver {
+        Solver::Sgd => select_lambda_sgd(
+            train,
+            setting,
+            kernel,
+            lambdas,
+            sgd,
+            cfg.validation_fraction,
+            seed,
+        ),
+        Solver::Minres | Solver::Cg => {
+            select_lambda(train, setting, kernel, lambdas, cfg, seed)
+        }
+    }
+}
+
 /// Select the pairwise kernel on an inner validation split using the
 /// early-stopping protocol per candidate. Skips kernels incompatible with
 /// the dataset's domain structure.
@@ -180,6 +217,66 @@ mod tests {
             assert!(c.iterations > 0, "sgd candidates record their step count");
         }
         assert!(sweep.iter().all(|c| c.validation_auc <= best.validation_auc + 1e-12));
+    }
+
+    /// The solver dispatcher must route to the matching sweep: the SGD
+    /// arm reproduces `select_lambda_sgd` and the exact arm reproduces
+    /// `select_lambda` (identical candidates — same seeds, same paths).
+    #[test]
+    fn select_lambda_for_matches_direct_paths() {
+        let data = MetzConfig::small().generate(85);
+        let cfg = RidgeConfig { max_iters: 25, ..Default::default() };
+        let scfg = SgdConfig {
+            batch_size: 64,
+            epochs: 30,
+            tol: 1e-3,
+            check_every: 5,
+            ..Default::default()
+        };
+        let lambdas = [1e-3, 1e-1];
+        let (_, via_exact) = select_lambda_for(
+            Solver::Minres,
+            &data,
+            1,
+            PairwiseKernel::Kronecker,
+            &lambdas,
+            &cfg,
+            &scfg,
+            4,
+        )
+        .unwrap();
+        let (_, direct_exact) =
+            select_lambda(&data, 1, PairwiseKernel::Kronecker, &lambdas, &cfg, 4).unwrap();
+        assert_eq!(via_exact.len(), direct_exact.len());
+        for (a, b) in via_exact.iter().zip(&direct_exact) {
+            assert_eq!(a.validation_auc, b.validation_auc);
+            assert_eq!(a.iterations, b.iterations);
+        }
+        let (_, via_sgd) = select_lambda_for(
+            Solver::Sgd,
+            &data,
+            1,
+            PairwiseKernel::Kronecker,
+            &lambdas,
+            &cfg,
+            &scfg,
+            4,
+        )
+        .unwrap();
+        let (_, direct_sgd) = select_lambda_sgd(
+            &data,
+            1,
+            PairwiseKernel::Kronecker,
+            &lambdas,
+            &scfg,
+            cfg.validation_fraction,
+            4,
+        )
+        .unwrap();
+        for (a, b) in via_sgd.iter().zip(&direct_sgd) {
+            assert_eq!(a.validation_auc, b.validation_auc);
+            assert_eq!(a.iterations, b.iterations);
+        }
     }
 
     #[test]

@@ -34,6 +34,13 @@
 //!    operator threads through `LinOp::apply_into` — after the first
 //!    (warmup) application, solver iterations perform zero heap
 //!    allocations.
+//! 4. **Pooled execution.** Every sweep runs on the persistent worker
+//!    pool ([`crate::runtime::pool`]) through the
+//!    [`crate::linalg::par`] façade — no thread is spawned per mat-vec —
+//!    and the *independent* stage-1 passes of distinct fused units are
+//!    submitted as one chunk-claim job (they write disjoint `S`
+//!    buffers), so a multi-unit kernel pays one synchronization round
+//!    per application instead of one per unit.
 //!
 //! The plan also executes **multi-RHS blocks** ([`GvtPlan::execute_multi`]
 //! / [`gvt_matmat`]): the index arrays are streamed once for a block of
@@ -196,6 +203,13 @@ pub struct GvtWorkspace {
     /// Per-column scratch for multi-RHS misc/fallback execution.
     col_in: Vec<f64>,
     col_out: Vec<f64>,
+    /// Chunk table for the concurrent stage-1 sweep: `(unit, row0, row1)`
+    /// per chunk, rebuilt (capacity reused — no allocation after warmup)
+    /// every [`GvtPlan::execute`].
+    s1_chunks: Vec<(u32, u32, u32)>,
+    /// Per-unit `S` base pointers for the sweep, usize-erased so the
+    /// chunk-claim closure can address all units' disjoint buffers.
+    s1_bases: Vec<usize>,
 }
 
 impl GvtWorkspace {
@@ -213,6 +227,8 @@ impl GvtWorkspace {
             pv: Vec::new(),
             col_in: Vec::new(),
             col_out: Vec::new(),
+            s1_chunks: Vec::new(),
+            s1_bases: Vec::new(),
         }
     }
 }
@@ -463,9 +479,21 @@ impl GvtPlan {
         while ws.s.len() < self.stage1.len() {
             ws.s.push(Mat::zeros(0, 0));
         }
-        for (k, unit) in self.stage1.iter().enumerate() {
-            let w = unit_mat(&mut ws.w, k);
-            self.exec_stage1(unit, ctx, a, &mut ws.s[k], w);
+        if self.mode != GvtPolicy::Dense
+            && self.stage1.len() > 1
+            && par::num_threads() > 1
+            && !par::in_parallel_region()
+        {
+            // Distinct stage-1 units write disjoint S buffers, so all
+            // their row chunks go into ONE chunk-claim job: units run
+            // concurrently and idle workers drain whichever unit still
+            // has rows left instead of idling at per-unit barriers.
+            self.exec_stage1_concurrent(ctx, a, ws);
+        } else {
+            for (k, unit) in self.stage1.iter().enumerate() {
+                let w = unit_mat(&mut ws.w, k);
+                self.exec_stage1(unit, ctx, a, &mut ws.s[k], w);
+            }
         }
 
         while ws.s_acc.len() < self.stage2.len() {
@@ -584,6 +612,103 @@ impl GvtPlan {
                 });
             }
         }
+    }
+
+    /// Execute every (sparse-mode) stage-1 unit as **one** chunk-claim
+    /// job on the shared runtime pool: units write disjoint `S` buffers,
+    /// so their row chunks are mutually independent and can interleave
+    /// freely across workers. The serial per-unit loop runs one
+    /// `parallel_fill_rows` barrier per unit — MLPK's 4 stage-1 passes
+    /// paid 4 synchronization rounds per mat-vec; this path pays one.
+    ///
+    /// Determinism: the unit of work is whole `S` rows with per-row
+    /// operation sequences identical to the per-unit path (the 4-row
+    /// blocking in the kernels changes interleaving *across* rows, never
+    /// the op order *within* a row), so the output is bit-identical to
+    /// the serial loop for any worker count and claim order — pinned by
+    /// `tests/pool_determinism.rs`.
+    ///
+    /// Chunk tables live in the workspace; after warmup this performs no
+    /// heap allocation (pinned by `tests/alloc_free.rs`).
+    fn exec_stage1_concurrent(
+        &self,
+        ctx: &TermContext<'_>,
+        a: &[f64],
+        ws: &mut GvtWorkspace,
+    ) {
+        let threads = par::num_threads();
+        ws.s1_chunks.clear();
+        ws.s1_bases.clear();
+        for (k, unit) in self.stage1.iter().enumerate() {
+            let s = &mut ws.s[k];
+            ensure_mat(s, unit.s_rows, unit.s_cols);
+            ws.s1_bases.push(s.as_mut_slice().as_mut_ptr() as usize);
+            if unit.s_rows == 0 || unit.s_cols == 0 {
+                continue;
+            }
+            if unit.grouped.is_none() {
+                // The streamed kernel accumulates into S; the grouped
+                // kernel stores every cell (same contract as
+                // `exec_stage1`).
+                s.as_mut_slice().fill(0.0);
+            }
+            // Same granularity as the per-unit path (min_per_thread =
+            // 4·s_cols there ⇒ ≥ 4 rows per chunk), up to 4 chunks per
+            // worker so stragglers get stolen.
+            let rows = unit.s_rows;
+            let max_chunks = (rows / 4).max(1);
+            let chunks = (threads * 4).min(max_chunks);
+            let chunk_rows = rows.div_ceil(chunks);
+            let mut r0 = 0usize;
+            while r0 < rows {
+                let r1 = (r0 + chunk_rows).min(rows);
+                ws.s1_chunks.push((k as u32, r0 as u32, r1 as u32));
+                r0 = r1;
+            }
+        }
+        if ws.s1_chunks.is_empty() {
+            return;
+        }
+        let table = &ws.s1_chunks;
+        let bases = &ws.s1_bases;
+        let units = &self.stage1;
+        let mode = self.mode;
+        par::run_chunks(table.len(), |ci| {
+            let (uk, r0, r1) = table[ci];
+            let (uk, r0, r1) = (uk as usize, r0 as usize, r1 as usize);
+            let unit = &units[uk];
+            let mat = dense_mat(ctx, unit.mat);
+            let s_cols = unit.s_cols;
+            // SAFETY: chunk indices map to disjoint row ranges of
+            // per-unit-distinct S buffers (sized by `ensure_mat` above,
+            // untouched through references while `run_chunks` blocks);
+            // each chunk is claimed by exactly one thread.
+            let chunk = unsafe {
+                std::slice::from_raw_parts_mut(
+                    (bases[uk] as *mut f64).add(r0 * s_cols),
+                    (r1 - r0) * s_cols,
+                )
+            };
+            match &unit.grouped {
+                Some(g) => stage1_grouped(
+                    mat,
+                    r0,
+                    chunk,
+                    s_cols,
+                    g.grp.offsets(),
+                    g.grp.positions(),
+                    &g.gather_keys,
+                    a,
+                ),
+                None => {
+                    let (scatter, gather) = match mode {
+                        GvtPolicy::SparseRight => (unit.cols.targets(), unit.cols.drugs()),
+                        _ => (unit.cols.drugs(), unit.cols.targets()),
+                    };
+                    stage1_scatter(mat, r0, chunk, s_cols, scatter, gather, a);
+                }
+            }
+        });
     }
 
     /// Multi-RHS execution: `out = Σ_terms coeff · GVT(term) · ab`, where

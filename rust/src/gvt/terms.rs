@@ -357,7 +357,8 @@ pub(crate) fn accumulate_rowdot(
 ) {
     debug_assert_eq!(lhs.cols(), w_cols);
     debug_assert_eq!(w.len() % w_cols.max(1), 0);
-    par::parallel_fill(out, 2048, |start, _end, chunk| {
+    // 1024 rows/chunk (re-tuned from 2048 for the pooled runtime).
+    par::parallel_fill(out, 1024, |start, _end, chunk| {
         for (k, o) in chunk.iter_mut().enumerate() {
             let i = start + k;
             let r = ri[i] as usize;

@@ -300,7 +300,9 @@ pub(crate) fn stage1_single_row() -> bool {
 fn stage2_rowdot(lhs: &Mat, s: &Mat, li: &[u32], ri: &[u32]) -> Vec<f64> {
     debug_assert_eq!(lhs.cols(), s.cols());
     let mut p = vec![0.0; li.len()];
-    par::parallel_fill(&mut p, 2048, |start, _end, chunk| {
+    // 1024 rows/chunk (re-tuned from 2048 for the pooled runtime — the
+    // cheaper dispatch pays off on smaller row samples).
+    par::parallel_fill(&mut p, 1024, |start, _end, chunk| {
         for (k, pi) in chunk.iter_mut().enumerate() {
             let i = start + k;
             let lrow = lhs.row(li[i] as usize);

@@ -29,8 +29,10 @@
 //!   cross-validation, early stopping, memory accounting, reports.
 //! * [`serve`] — online inference: a micro-batched prediction server
 //!   over compiled GVT plans (`gvt-rls serve` / `gvt-rls predict`).
-//! * [`runtime`] — PJRT bridge: loads AOT-compiled JAX/Pallas artifacts
-//!   (HLO text) and runs the dense complete-data Kronecker mat-vec.
+//! * [`runtime`] — execution runtime: the persistent worker pool
+//!   ([`runtime::pool`]) every parallel loop in the crate runs on, plus
+//!   the PJRT bridge loading AOT-compiled JAX/Pallas artifacts (HLO
+//!   text) for the dense complete-data Kronecker mat-vec.
 //! * [`linalg`], [`sparse`], [`rng`], [`eval`], [`bench`], [`testing`],
 //!   [`error`] — from-scratch substrates (the sandbox has no rand/rayon/
 //!   criterion/proptest or error-handling crates; the crate builds with

@@ -228,7 +228,12 @@ impl Mat {
         assert_eq!(y.len(), self.rows, "matvec output dim mismatch");
         let cols = self.cols;
         let data = &self.data;
-        par::parallel_fill(y, 256, |start, _end, chunk| {
+        // Re-tuned for the pooled runtime (a condvar wake is ~1–2 µs vs
+        // ~10 µs per scoped spawn): fan out once a chunk carries ≥ ~8k
+        // MACs instead of the old fixed 256-row floor, so wide-but-short
+        // GEMVs (the fused plan's pooled terms) parallelize too.
+        let min_rows = (8192 / cols.max(1)).max(4);
+        par::parallel_fill(y, min_rows, |start, _end, chunk| {
             for (k, yi) in chunk.iter_mut().enumerate() {
                 let row = &data[(start + k) * cols..(start + k + 1) * cols];
                 *yi = crate::linalg::vecops::dot(row, x);

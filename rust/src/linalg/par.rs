@@ -1,56 +1,64 @@
-//! Scoped-thread parallelism helper. `rayon` is not available offline, so
-//! the hot paths fan work out over `std::thread::scope` with static
-//! chunking — adequate because our parallel loops are regular (rows of a
-//! matrix, chunks of an output vector).
+//! Parallel-for façade over the persistent worker pool
+//! ([`crate::runtime::pool`]).
+//!
+//! `rayon` is not available offline, so the hot paths fan work out over
+//! the in-tree runtime. Historically this module spawned a fresh
+//! `std::thread::scope` per call (~10 µs each) — with every GVT stage,
+//! every GEMM/GEMV, and every solver iteration calling in here, that
+//! spawn/join cost dominated at the `O(nm + nq)` per-product sizes the
+//! paper makes possible. The entry points below keep their original
+//! signatures but now compile each call into a chunk-claim job on the
+//! shared pool: parked workers (plus the calling thread) dynamically
+//! claim chunks, so load imbalance self-corrects and nothing is spawned.
+//!
+//! Chunking is **row-aligned and output-disjoint**: the unit of work is
+//! always a whole run of output rows, each computed from scratch by
+//! whichever thread claims it. Results are therefore bit-identical for
+//! any thread count, any chunk-claim order, and under the
+//! `GVT_RLS_POOL=0` scoped-spawn ablation (pinned by
+//! `tests/pool_determinism.rs`).
+//!
+//! Small inputs (`len / min_per_thread <= 1`) run inline — a condvar
+//! wake is ~1–2 µs, still not worth it for trivial work. Calls from
+//! inside a parallel chunk also run inline (the pool's
+//! nested-parallelism guard), so helpers here can be used freely from
+//! other parallel bodies.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+pub use crate::runtime::pool::{in_parallel_region, num_threads, run_chunks};
 
-/// Number of worker threads to use: `GVT_RLS_THREADS` env override, else
-/// available parallelism, clamped to at least 1.
-pub fn num_threads() -> usize {
-    static CACHED: AtomicUsize = AtomicUsize::new(0);
-    let cached = CACHED.load(Ordering::Relaxed);
-    if cached != 0 {
-        return cached;
-    }
-    let n = std::env::var("GVT_RLS_THREADS")
-        .ok()
-        .and_then(|s| s.parse::<usize>().ok())
-        .filter(|&n| n >= 1)
-        .unwrap_or_else(|| {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-        });
-    CACHED.store(n, Ordering::Relaxed);
-    n
-}
+/// Chunks offered per worker thread. More chunks than workers lets idle
+/// workers steal the tail of a slow worker's share; 4 keeps the
+/// per-chunk claim overhead (one `fetch_add`) negligible against chunk
+/// bodies that are ≥ `min_per_thread` elements by construction.
+const CHUNKS_PER_WORKER: usize = 4;
 
 /// Run `f(chunk_index, start, end)` over `0..len` split into contiguous
-/// chunks, one per worker. Falls back to inline execution for small `len`
-/// (thread spawn ≈ 10 µs; not worth it under ~16k elements of trivial work).
+/// chunks of at least `min_per_thread` elements, dynamically claimed by
+/// the pool's workers. Falls back to one inline `f(0, 0, len)` call for
+/// small `len`.
 ///
 /// `f` must be `Sync` because it is shared across workers; interior
 /// mutability (disjoint output slices via raw parts, atomics) is the
-/// caller's responsibility — see `split_mut_chunks` for the safe pattern.
+/// caller's responsibility — see [`split_mut_chunks`] and
+/// [`parallel_fill_rows`] for the safe patterns.
 pub fn parallel_ranges<F>(len: usize, min_per_thread: usize, f: F)
 where
     F: Fn(usize, usize, usize) + Sync,
 {
-    let workers = num_threads().min(len / min_per_thread.max(1)).max(1);
-    if workers == 1 {
+    let min = min_per_thread.max(1);
+    let threads = num_threads();
+    let max_chunks = len / min;
+    if threads == 1 || max_chunks <= 1 || in_parallel_region() {
         f(0, 0, len);
         return;
     }
-    let chunk = len.div_ceil(workers);
-    std::thread::scope(|s| {
-        for w in 0..workers {
-            let start = w * chunk;
-            let end = ((w + 1) * chunk).min(len);
-            if start >= end {
-                break;
-            }
-            let f = &f;
-            s.spawn(move || f(w, start, end));
-        }
+    let chunks = (threads * CHUNKS_PER_WORKER).min(max_chunks);
+    let chunk = len.div_ceil(chunks);
+    let chunks = len.div_ceil(chunk);
+    run_chunks(chunks, |ci| {
+        let start = ci * chunk;
+        let end = ((ci + 1) * chunk).min(len);
+        f(ci, start, end);
     });
 }
 
@@ -85,24 +93,28 @@ where
     assert!(row_len >= 1 && len % row_len == 0, "parallel_fill_rows: ragged rows");
     let rows = len / row_len;
     let min_rows = min_per_thread.div_ceil(row_len).max(1);
-    let workers = num_threads().min(rows / min_rows).max(1);
-    if workers == 1 {
+    let threads = num_threads();
+    let max_chunks = rows / min_rows;
+    if threads == 1 || max_chunks <= 1 || in_parallel_region() {
         f(0, len, out);
         return;
     }
-    let chunk_rows = rows.div_ceil(workers);
-    let chunk = chunk_rows * row_len;
-    std::thread::scope(|s| {
-        let mut rest = out;
-        let mut start = 0;
-        while !rest.is_empty() {
-            let take = chunk.min(rest.len());
-            let (head, tail) = rest.split_at_mut(take);
-            let f = &f;
-            s.spawn(move || f(start, start + take, head));
-            rest = tail;
-            start += take;
-        }
+    let chunks = (threads * CHUNKS_PER_WORKER).min(max_chunks);
+    let chunk_rows = rows.div_ceil(chunks);
+    let chunks = rows.div_ceil(chunk_rows);
+    let base = out.as_mut_ptr() as usize;
+    run_chunks(chunks, |ci| {
+        let r0 = ci * chunk_rows;
+        let r1 = ((ci + 1) * chunk_rows).min(rows);
+        let (start, end) = (r0 * row_len, r1 * row_len);
+        // SAFETY: distinct chunk indices map to disjoint element ranges
+        // of `out` (row-aligned, non-overlapping by construction), each
+        // claimed by exactly one thread; `out` is exclusively borrowed
+        // for the duration of the blocking `run_chunks` call; `T: Send`.
+        let chunk = unsafe {
+            std::slice::from_raw_parts_mut((base as *mut T).add(start), end - start)
+        };
+        f(start, end, chunk);
     });
 }
 
@@ -145,5 +157,43 @@ mod tests {
             }
         });
         assert!(out.iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn row_alignment_is_respected() {
+        // 33 rows of 7: every chunk boundary must land on a multiple of 7.
+        let mut out = vec![0u32; 33 * 7];
+        parallel_fill_rows(&mut out, 7, 7, |start, end, chunk| {
+            assert_eq!(start % 7, 0);
+            assert_eq!(end % 7, 0);
+            assert_eq!(chunk.len(), end - start);
+            for (i, v) in chunk.iter_mut().enumerate() {
+                *v = (start + i) as u32;
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i as u32);
+        }
+    }
+
+    #[test]
+    fn nested_fill_from_parallel_body_runs_inline() {
+        // A parallel body may call back into the façade; the pool's
+        // region guard must route the inner call inline.
+        let mut out = vec![0.0f64; 4096];
+        parallel_fill(&mut out, 1, |start, _end, chunk| {
+            let mut inner = vec![0.0f64; 64];
+            parallel_fill(&mut inner, 1, |s, _e, c| {
+                for (i, v) in c.iter_mut().enumerate() {
+                    *v = (s + i) as f64;
+                }
+            });
+            for (i, v) in chunk.iter_mut().enumerate() {
+                *v = inner[(start + i) % 64];
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, (i % 64) as f64);
+        }
     }
 }

@@ -120,6 +120,91 @@ pub fn fused_direction(z: &mut [f64], x: &[f64], a: f64, u: &[f64], b: f64, w: &
     }
 }
 
+// ---------------------------------------------------------------------
+// Pooled variants — solver hot loops at large n
+// ---------------------------------------------------------------------
+//
+// The elementwise primitives below fan out over the persistent worker
+// pool once vectors are long enough that memory bandwidth beats a single
+// core (`PAR_MIN_LEN`); below the threshold they are exactly the serial
+// kernels. Only *elementwise* ops get pooled variants: each output
+// element is computed by the same expression wherever the chunk
+// boundaries fall, so results are bit-identical to the serial kernels
+// for any worker count. Reductions (`dot`, `norm2`, `axpy_norm2`) stay
+// serial on purpose — a parallel reduction's combine order would depend
+// on the chunking, breaking the crate's bit-determinism contract (see
+// rust/DESIGN.md §Runtime).
+
+/// Length at which the pooled elementwise kernels start fanning out:
+/// below this, a condvar wake (~1–2 µs) costs more than the loop.
+const PAR_MIN_LEN: usize = 1 << 16;
+
+/// Per-chunk floor for the pooled kernels (¼ of the threshold keeps at
+/// least 4 chunks at the cutover length).
+const PAR_MIN_CHUNK: usize = PAR_MIN_LEN / 4;
+
+/// [`axpy`], fanned out over the worker pool for large `y`.
+pub fn axpy_par(a: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    if y.len() < PAR_MIN_LEN {
+        return axpy(a, x, y);
+    }
+    crate::linalg::par::parallel_fill(y, PAR_MIN_CHUNK, |start, end, chunk| {
+        axpy(a, &x[start..end], chunk);
+    });
+}
+
+/// [`axpby`], fanned out over the worker pool for large `y`.
+pub fn axpby_par(a: f64, x: &[f64], b: f64, y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    if y.len() < PAR_MIN_LEN {
+        return axpby(a, x, b, y);
+    }
+    crate::linalg::par::parallel_fill(y, PAR_MIN_CHUNK, |start, end, chunk| {
+        axpby(a, &x[start..end], b, chunk);
+    });
+}
+
+/// [`fused_direction`], fanned out over the worker pool for large `z`.
+pub fn fused_direction_par(
+    z: &mut [f64],
+    x: &[f64],
+    a: f64,
+    u: &[f64],
+    b: f64,
+    w: &[f64],
+    s: f64,
+) {
+    debug_assert_eq!(z.len(), x.len());
+    if z.len() < PAR_MIN_LEN {
+        return fused_direction(z, x, a, u, b, w, s);
+    }
+    crate::linalg::par::parallel_fill(z, PAR_MIN_CHUNK, |start, end, chunk| {
+        fused_direction(chunk, &x[start..end], a, &u[start..end], b, &w[start..end], s);
+    });
+}
+
+/// [`scale_into`], fanned out over the worker pool for large `dst`.
+pub fn scale_into_par(dst: &mut [f64], src: &[f64], a: f64) {
+    debug_assert_eq!(dst.len(), src.len());
+    if dst.len() < PAR_MIN_LEN {
+        return scale_into(dst, src, a);
+    }
+    crate::linalg::par::parallel_fill(dst, PAR_MIN_CHUNK, |start, end, chunk| {
+        scale_into(chunk, &src[start..end], a);
+    });
+}
+
+/// [`scale`], fanned out over the worker pool for large `x`.
+pub fn scale_par(x: &mut [f64], a: f64) {
+    if x.len() < PAR_MIN_LEN {
+        return scale(x, a);
+    }
+    crate::linalg::par::parallel_fill(x, PAR_MIN_CHUNK, |_start, _end, chunk| {
+        scale(chunk, a);
+    });
+}
+
 /// `dst = src * a` (scaled copy; the MINRES Lanczos-normalization shape).
 #[inline]
 pub fn scale_into(dst: &mut [f64], src: &[f64], a: f64) {
@@ -227,6 +312,45 @@ mod tests {
             for i in 0..n {
                 assert_eq!(z[i], x[i] * -3.0);
             }
+        }
+    }
+
+    /// The pooled elementwise kernels must be BIT-identical to the
+    /// serial ones above and below the fan-out threshold (elementwise ⇒
+    /// chunking cannot change any output bit).
+    #[test]
+    fn pooled_kernels_bit_match_serial() {
+        for n in [100usize, PAR_MIN_LEN + 123] {
+            let x: Vec<f64> = (0..n).map(|i| ((i * 37 % 101) as f64) * 0.31 - 7.0).collect();
+            let u: Vec<f64> = (0..n).map(|i| ((i * 53 % 97) as f64) * 0.11).collect();
+            let w: Vec<f64> = (0..n).map(|i| ((i * 29 % 89) as f64) * -0.21).collect();
+            let y0: Vec<f64> = (0..n).map(|i| ((i * 41 % 103) as f64) * 0.17 - 3.0).collect();
+            let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+
+            let (mut a1, mut a2) = (y0.clone(), y0.clone());
+            axpy(0.75, &x, &mut a1);
+            axpy_par(0.75, &x, &mut a2);
+            assert_eq!(bits(&a1), bits(&a2), "axpy n={n}");
+
+            let (mut b1, mut b2) = (y0.clone(), y0.clone());
+            axpby(-0.5, &x, 1.25, &mut b1);
+            axpby_par(-0.5, &x, 1.25, &mut b2);
+            assert_eq!(bits(&b1), bits(&b2), "axpby n={n}");
+
+            let (mut z1, mut z2) = (vec![0.0; n], vec![0.0; n]);
+            fused_direction(&mut z1, &x, 0.3, &u, -0.7, &w, 2.0);
+            fused_direction_par(&mut z2, &x, 0.3, &u, -0.7, &w, 2.0);
+            assert_eq!(bits(&z1), bits(&z2), "fused_direction n={n}");
+
+            let (mut s1, mut s2) = (vec![0.0; n], vec![0.0; n]);
+            scale_into(&mut s1, &x, -3.0);
+            scale_into_par(&mut s2, &x, -3.0);
+            assert_eq!(bits(&s1), bits(&s2), "scale_into n={n}");
+
+            let (mut c1, mut c2) = (y0.clone(), y0);
+            scale(&mut c1, 1.1);
+            scale_par(&mut c2, 1.1);
+            assert_eq!(bits(&c1), bits(&c2), "scale n={n}");
         }
     }
 

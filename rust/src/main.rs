@@ -71,13 +71,17 @@ fn print_help() {
          \x20 serve                         prediction server (--model; --listen ADDR | --stdio;\n\
          \x20                               --max-batch N --max-wait-us U --cache N)\n\
          \x20 experiment <fig3|fig4|fig5|fig6|fig8>   regenerate a paper figure\n\
+         \x20                               (fig4/5/6: --solver minres|cg|sgd|all puts\n\
+         \x20                               CG/SGD rows next to the MINRES baseline)\n\
          \x20 gvt-demo                      GVT vs explicit mat-vec timing\n\
          \x20 runtime-info                  list + smoke-run AOT artifacts\n\n\
          COMMON OPTIONS:\n\
          \x20 --seed <u64>      master seed (default 42)\n\
          \x20 --folds <n>       CV folds (default 9)\n\
          \x20 --workers <n>     experiment-grid worker threads (default 2)\n\
-         \x20 --quick           shrink to smoke-test size\n",
+         \x20 --quick           shrink to smoke-test size\n\n\
+         RUNTIME ENV: GVT_RLS_THREADS=<n> sizes the worker pool;\n\
+         \x20 GVT_RLS_POOL=0 falls back to scoped spawning (see README)\n",
         gvt_rls::VERSION
     );
 }

@@ -1,4 +1,13 @@
-//! PJRT runtime bridge — L3 ↔ L2.
+//! Execution runtime: the persistent worker pool and the PJRT bridge.
+//!
+//! * [`pool`] — the crate-wide parallel execution runtime: parked worker
+//!   threads with atomic chunk-claim scheduling, behind the
+//!   [`crate::linalg::par`] façade every hot path uses. See its module
+//!   docs for the determinism contract and the `GVT_RLS_THREADS` /
+//!   `GVT_RLS_POOL` knobs.
+//! * [`artifact`] / [`executor`] / [`xla`] — the PJRT bridge (below).
+//!
+//! # PJRT bridge — L3 ↔ L2
 //!
 //! `make artifacts` lowers the JAX/Pallas dense Kronecker mat-vec (L2/L1)
 //! to HLO **text** once at build time; this module loads those artifacts,
@@ -21,6 +30,7 @@
 pub mod artifact;
 pub mod executor;
 pub mod json;
+pub mod pool;
 pub mod xla;
 
 pub use artifact::{ArtifactMeta, Registry};

@@ -1,0 +1,584 @@
+//! Persistent worker-pool execution runtime.
+//!
+//! Every hot path of this crate — the GVT stage-1/stage-2 sweeps of
+//! [`crate::gvt::plan::GvtPlan`], the dense [`crate::linalg::Mat`]
+//! GEMM/GEMV kernels, every CG/MINRES iteration, every SGD batch step,
+//! and every micro-batch the serve dispatcher coalesces — executes its
+//! parallel loops through this module. The paper's whole point is that a
+//! pairwise-kernel product costs only `O(nm + nq)` (Theorem 1), which at
+//! real problem sizes makes **per-call overhead**, not FLOPs, the
+//! dominant term: spawning and joining a `std::thread::scope` costs on
+//! the order of 10 µs, and a converging MINRES training run performs
+//! thousands of parallel regions. The pool replaces spawn/join with
+//! **parked** worker threads (condvar wake ≈ 1–2 µs) that live for the
+//! process lifetime.
+//!
+//! ## Scheduling: atomic chunk claiming
+//!
+//! A parallel region is a *job*: `chunks` units of work executed by
+//! calling `f(chunk_index)` once per index. Jobs sit in a small shared
+//! queue; parked workers wake, pick the oldest job with unclaimed
+//! chunks, and **claim chunks via an atomic counter** until the job is
+//! drained — idle workers steal remaining chunks instead of being pinned
+//! to a static range, so a worker delayed by the OS does not stall the
+//! whole region. The submitting thread participates too (it claims
+//! chunks like any worker), so a region completes even with zero pool
+//! workers, and small regions finish without any cross-thread traffic.
+//!
+//! ## Determinism
+//!
+//! The unit of work handed to `f` is always a *whole output row range*
+//! (see [`crate::linalg::par`]): each chunk fully computes its own
+//! disjoint output rows and never reads another chunk's output. Results
+//! are therefore **bit-identical for any worker count and any
+//! chunk-claim order** — the scheduler decides *when* and *where* a row
+//! is computed, never *what* is computed. This is the contract that lets
+//! the serving layer run batch products on the shared pool without
+//! breaking the bit-stability guarantee pinned by
+//! `tests/serve_concurrency.rs`, and it is pinned directly by
+//! `tests/pool_determinism.rs`.
+//!
+//! ## Nested parallelism
+//!
+//! A chunk body must never re-enter the pool: all workers could be busy
+//! executing outer chunks, and a blocking nested submit could deadlock
+//! (and would destroy locality anyway). A thread-local region flag
+//! ([`in_parallel_region`]) makes any nested parallel call run inline on
+//! the calling worker.
+//!
+//! ## Knobs
+//!
+//! * `GVT_RLS_THREADS` — worker-thread budget for every parallel region
+//!   (default: available parallelism). Read once at startup;
+//!   [`set_num_threads`] is the in-process (test/ablation) override —
+//!   the historical one-shot `AtomicUsize` latch in `linalg::par` meant
+//!   tests could not vary the thread count within a process.
+//! * `GVT_RLS_POOL=0` — ablation hatch: fall back to the pre-pool
+//!   scoped-spawn path (same chunking, same results, fresh threads per
+//!   region). [`set_pool_enabled`] is the in-process override.
+//!
+//! Allocation behavior: submitting a job allocates nothing — the job
+//! header lives on the submitter's stack and the queue reuses its
+//! capacity — so solver iterations stay allocation-free after pool
+//! warmup (pinned by `tests/alloc_free.rs`). Workers are started lazily
+//! on first use; [`warm`] pre-spawns them so a serving process does not
+//! pay thread creation on its first request.
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock};
+
+// ---------------------------------------------------------------------
+// Configuration
+// ---------------------------------------------------------------------
+
+/// Process-start knobs, parsed once. In-process variation goes through
+/// the explicit overrides below, not the environment.
+struct EnvConfig {
+    threads: usize,
+    pool: bool,
+}
+
+fn env_config() -> &'static EnvConfig {
+    static CFG: OnceLock<EnvConfig> = OnceLock::new();
+    CFG.get_or_init(|| {
+        let threads = std::env::var("GVT_RLS_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            });
+        let pool = match std::env::var("GVT_RLS_POOL") {
+            Ok(v) => v != "0",
+            Err(_) => true,
+        };
+        EnvConfig { threads, pool }
+    })
+}
+
+/// `0` = no override (use the environment).
+static THREADS_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+/// `0` = no override, `1` = forced off, `2` = forced on.
+static POOL_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Worker-thread budget for parallel regions: the [`set_num_threads`]
+/// override if set, else `GVT_RLS_THREADS`, else available parallelism.
+/// Always ≥ 1 (1 means: run everything inline on the caller).
+pub fn num_threads() -> usize {
+    match THREADS_OVERRIDE.load(Ordering::Relaxed) {
+        0 => env_config().threads,
+        n => n,
+    }
+}
+
+/// In-process override of the thread budget (`None` reverts to the
+/// environment). For tests and ablations — production configuration is
+/// `GVT_RLS_THREADS`. Takes effect for *subsequent* parallel regions;
+/// regions already running are unaffected. Raising the budget above the
+/// number of started workers spawns the missing workers on the next
+/// pooled region.
+pub fn set_num_threads(n: Option<usize>) {
+    THREADS_OVERRIDE.store(n.map_or(0, |v| v.max(1)), Ordering::Relaxed);
+}
+
+/// Is the persistent pool active (vs the scoped-spawn fallback)?
+pub fn pool_enabled() -> bool {
+    match POOL_OVERRIDE.load(Ordering::Relaxed) {
+        1 => false,
+        2 => true,
+        _ => env_config().pool,
+    }
+}
+
+/// In-process override of `GVT_RLS_POOL` (`None` reverts to the
+/// environment). For tests and ablations (`tests/pool_determinism.rs`
+/// cross-checks both execution paths in one process).
+pub fn set_pool_enabled(on: Option<bool>) {
+    let v = match on {
+        None => 0,
+        Some(false) => 1,
+        Some(true) => 2,
+    };
+    POOL_OVERRIDE.store(v, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------
+// Nested-parallelism guard
+// ---------------------------------------------------------------------
+
+thread_local! {
+    /// True while this thread is executing a chunk of some parallel
+    /// region (as a pool worker, a scoped-fallback worker, or a helping
+    /// submitter).
+    static IN_PARALLEL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Is the current thread inside a parallel chunk? Parallel entry points
+/// check this and run inline instead of re-entering the pool.
+pub fn in_parallel_region() -> bool {
+    IN_PARALLEL.with(|c| c.get())
+}
+
+/// RAII region marker (restores the previous state, so explicitly inline
+/// helpers can nest).
+struct RegionGuard {
+    prev: bool,
+}
+
+impl RegionGuard {
+    fn enter() -> RegionGuard {
+        RegionGuard { prev: IN_PARALLEL.with(|c| c.replace(true)) }
+    }
+}
+
+impl Drop for RegionGuard {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        IN_PARALLEL.with(|c| c.set(prev));
+    }
+}
+
+// ---------------------------------------------------------------------
+// The job header
+// ---------------------------------------------------------------------
+
+/// One parallel region. Lives on the **submitter's stack**: submission
+/// allocates nothing, which is what keeps pooled solver iterations
+/// allocation-free. Liveness protocol: the submitter keeps the header
+/// alive until (a) the queue entry is retired, (b) `refs == 0` (no
+/// worker is attached), and (c) `completed == chunks`.
+struct JobCore {
+    /// Type-erased `&F` of the submitting call.
+    data: *const (),
+    /// Monomorphized trampoline invoking `(*data)(chunk_index)`.
+    call: unsafe fn(*const (), usize),
+    chunks: usize,
+    /// Chunk-claim counter; `fetch_add` hands out indices. Values ≥
+    /// `chunks` mean "drained" and must not invoke `call`.
+    next: AtomicUsize,
+    /// Chunks whose `call` has returned.
+    completed: AtomicUsize,
+    /// Workers currently attached to this job.
+    refs: AtomicUsize,
+    panicked: AtomicBool,
+    /// First panic payload, re-thrown on the submitter.
+    payload: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+/// Queue entry. SAFETY: the pointee outlives its presence in the queue
+/// (see [`JobCore`] liveness protocol), and `JobCore`'s fields are all
+/// thread-safe to access through a shared reference.
+struct JobPtr(*const JobCore);
+unsafe impl Send for JobPtr {}
+
+// ---------------------------------------------------------------------
+// The shared pool
+// ---------------------------------------------------------------------
+
+struct PoolShared {
+    /// Pending/running jobs, oldest first. Entries are retired by their
+    /// submitter (always) and opportunistically by workers that find
+    /// them drained.
+    queue: Mutex<VecDeque<JobPtr>>,
+    /// Wakes parked workers when work arrives.
+    work_cv: Condvar,
+    /// Submitter wait channel: workers take this lock (empty critical
+    /// section) and notify after finishing chunks, so a submitter
+    /// checking its job's counters under the lock cannot miss a wakeup.
+    done_lock: Mutex<()>,
+    done_cv: Condvar,
+    /// Workers started so far.
+    spawned: AtomicUsize,
+    /// Serializes worker spawning.
+    spawn_lock: Mutex<()>,
+}
+
+fn shared() -> &'static PoolShared {
+    static SHARED: OnceLock<PoolShared> = OnceLock::new();
+    SHARED.get_or_init(|| PoolShared {
+        queue: Mutex::new(VecDeque::with_capacity(64)),
+        work_cv: Condvar::new(),
+        done_lock: Mutex::new(()),
+        done_cv: Condvar::new(),
+        spawned: AtomicUsize::new(0),
+        spawn_lock: Mutex::new(()),
+    })
+}
+
+impl PoolShared {
+    /// Lazily start workers until `target` are running. The pool sizes
+    /// itself to `num_threads() - 1` (the submitter is the missing
+    /// thread). Workers park forever when idle; they are never joined —
+    /// the process exits through them.
+    fn ensure_workers(&'static self, target: usize) {
+        if self.spawned.load(Ordering::Acquire) >= target {
+            return;
+        }
+        let _g = self.spawn_lock.lock().unwrap();
+        let mut cur = self.spawned.load(Ordering::Acquire);
+        while cur < target {
+            std::thread::Builder::new()
+                .name(format!("gvt-pool-{cur}"))
+                .spawn(move || worker_loop(self))
+                .expect("runtime pool: spawning worker thread");
+            cur += 1;
+        }
+        self.spawned.store(cur, Ordering::Release);
+    }
+}
+
+/// Pre-spawn the configured workers. Long-lived processes with latency
+/// targets (the serve path) call this at startup so the first request
+/// does not pay thread creation; everywhere else the pool starts on
+/// first use.
+pub fn warm() {
+    if pool_enabled() && !in_parallel_region() {
+        shared().ensure_workers(num_threads().saturating_sub(1));
+    }
+}
+
+fn worker_loop(shared: &'static PoolShared) {
+    loop {
+        // Find the oldest job with unclaimed chunks, attaching to it
+        // under the queue lock (an entry in the queue guarantees the
+        // header is alive; attaching pins it past retirement).
+        let job: *const JobCore = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                // Opportunistically retire drained entries.
+                q.retain(|p| {
+                    let j = unsafe { &*p.0 };
+                    j.next.load(Ordering::Relaxed) < j.chunks
+                });
+                if let Some(p) = q.front() {
+                    let j = unsafe { &*p.0 };
+                    j.refs.fetch_add(1, Ordering::Acquire);
+                    break p.0;
+                }
+                q = shared.work_cv.wait(q).unwrap();
+            }
+        };
+        run_job_chunks(unsafe { &*job });
+        // Detach. After this store the submitter may observe refs == 0
+        // and free the header — `job` must not be touched again.
+        unsafe { &*job }.refs.fetch_sub(1, Ordering::Release);
+        // Lock-then-notify handshake with waiting submitters.
+        drop(shared.done_lock.lock().unwrap());
+        shared.done_cv.notify_all();
+    }
+}
+
+/// Claim and execute chunks of `job` until its counter is drained.
+/// Shared by pool workers and helping submitters.
+fn run_job_chunks(job: &JobCore) {
+    loop {
+        let ci = job.next.fetch_add(1, Ordering::Relaxed);
+        if ci >= job.chunks {
+            return;
+        }
+        let _region = RegionGuard::enter();
+        // Contain chunk panics: an unwinding pool worker would strand
+        // the submitter. The first payload is re-thrown on the
+        // submitter, so test assertions inside parallel closures keep
+        // their messages.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
+            (job.call)(job.data, ci)
+        }));
+        if let Err(payload) = result {
+            let mut slot = job.payload.lock().unwrap_or_else(|e| e.into_inner());
+            if slot.is_none() {
+                *slot = Some(payload);
+            }
+            drop(slot);
+            job.panicked.store(true, Ordering::Release);
+        }
+        job.completed.fetch_add(1, Ordering::Release);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Entry point
+// ---------------------------------------------------------------------
+
+/// Execute `f(chunk_index)` for every index in `0..chunks` as one
+/// parallel region on the shared runtime, blocking until all chunks have
+/// completed. The calling thread participates. Chunk indices must map to
+/// **disjoint** outputs (the caller's responsibility — see
+/// [`crate::linalg::par`] for the safe row-aligned wrappers); claim
+/// order is unspecified, so per-chunk work must not depend on other
+/// chunks having run.
+///
+/// Runs inline (plain loop, no threads) when `chunks <= 1`, when the
+/// thread budget is 1, or when called from inside another parallel
+/// region (the nested-parallelism guard). Honors the `GVT_RLS_POOL=0` /
+/// [`set_pool_enabled`] ablation by falling back to scoped spawning with
+/// identical chunking.
+pub fn run_chunks<F>(chunks: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    if chunks == 0 {
+        return;
+    }
+    if chunks == 1 || num_threads() == 1 || in_parallel_region() {
+        for ci in 0..chunks {
+            f(ci);
+        }
+        return;
+    }
+    if pool_enabled() {
+        run_pooled(chunks, &f);
+    } else {
+        run_scoped(chunks, &f);
+    }
+}
+
+fn run_pooled<F>(chunks: usize, f: &F)
+where
+    F: Fn(usize) + Sync,
+{
+    unsafe fn call<F: Fn(usize) + Sync>(data: *const (), ci: usize) {
+        (*(data as *const F))(ci)
+    }
+    let shared = shared();
+    shared.ensure_workers(num_threads().saturating_sub(1));
+
+    let job = JobCore {
+        data: f as *const F as *const (),
+        call: call::<F>,
+        chunks,
+        next: AtomicUsize::new(0),
+        completed: AtomicUsize::new(0),
+        refs: AtomicUsize::new(0),
+        panicked: AtomicBool::new(false),
+        payload: Mutex::new(None),
+    };
+    {
+        let mut q = shared.queue.lock().unwrap();
+        q.push_back(JobPtr(&job as *const JobCore));
+    }
+    // Wake at most as many workers as there are chunks for others.
+    if chunks >= num_threads() {
+        shared.work_cv.notify_all();
+    } else {
+        for _ in 1..chunks {
+            shared.work_cv.notify_one();
+        }
+    }
+
+    // Help: the submitter claims chunks like any worker.
+    run_job_chunks(&job);
+
+    // Retire the queue entry so no *new* worker attaches...
+    {
+        let me = &job as *const JobCore;
+        let mut q = shared.queue.lock().unwrap();
+        q.retain(|p| p.0 != me);
+    }
+    // ...then wait for attached workers to drain and detach. Only after
+    // this loop may `job` (on our stack) be dropped.
+    {
+        let mut g = shared.done_lock.lock().unwrap();
+        while job.completed.load(Ordering::Acquire) < chunks
+            || job.refs.load(Ordering::Acquire) != 0
+        {
+            g = shared.done_cv.wait(g).unwrap();
+        }
+    }
+
+    if job.panicked.load(Ordering::Acquire) {
+        let payload = job
+            .payload
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .take()
+            .unwrap_or_else(|| Box::new("runtime pool: a parallel chunk panicked"));
+        std::panic::resume_unwind(payload);
+    }
+}
+
+/// `GVT_RLS_POOL=0` fallback: the pre-pool scoped-spawn execution, kept
+/// as the ablation baseline (`benches/bench_pool.rs` measures the
+/// difference). Same chunk-claim scheduling over fresh scoped threads,
+/// so outputs are bit-identical to the pooled path — and the same
+/// panic-payload relay, so a chunk panic surfaces on the submitter with
+/// its original payload instead of `thread::scope`'s generic one.
+fn run_scoped<F>(chunks: usize, f: &F)
+where
+    F: Fn(usize) + Sync,
+{
+    let helpers = num_threads().min(chunks).saturating_sub(1);
+    let next = AtomicUsize::new(0);
+    let payload: Mutex<Option<Box<dyn std::any::Any + Send>>> = Mutex::new(None);
+    let work = || {
+        let _region = RegionGuard::enter();
+        loop {
+            let ci = next.fetch_add(1, Ordering::Relaxed);
+            if ci >= chunks {
+                break;
+            }
+            if let Err(p) =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(ci)))
+            {
+                let mut slot = payload.lock().unwrap_or_else(|e| e.into_inner());
+                if slot.is_none() {
+                    *slot = Some(p);
+                }
+            }
+        }
+    };
+    std::thread::scope(|s| {
+        for _ in 0..helpers {
+            s.spawn(&work);
+        }
+        work();
+    });
+    if let Some(p) = payload.lock().unwrap_or_else(|e| e.into_inner()).take() {
+        std::panic::resume_unwind(p);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn every_chunk_runs_exactly_once() {
+        for &chunks in &[1usize, 2, 3, 7, 64, 257] {
+            let counts: Vec<AtomicU64> = (0..chunks).map(|_| AtomicU64::new(0)).collect();
+            run_chunks(chunks, |ci| {
+                counts[ci].fetch_add(1, Ordering::Relaxed);
+            });
+            for (ci, c) in counts.iter().enumerate() {
+                assert_eq!(c.load(Ordering::Relaxed), 1, "chunk {ci} of {chunks}");
+            }
+        }
+    }
+
+    #[test]
+    fn concurrent_submitters_complete() {
+        let total = AtomicU64::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..50 {
+                        run_chunks(8, |_| {
+                            total.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 50 * 8);
+    }
+
+    /// One test for everything that mutates the process-global overrides
+    /// (sibling tests run concurrently under libtest — the mutations
+    /// must stay serialized in a single test body). Covers: the
+    /// round-trip of both overrides, pooled-vs-scoped equivalence, and
+    /// the nested-parallelism guard (which needs a guaranteed
+    /// multi-thread budget to observe a non-inline region).
+    #[test]
+    fn overrides_modes_and_nesting() {
+        // Override round trips.
+        set_num_threads(Some(3));
+        assert_eq!(num_threads(), 3);
+        set_num_threads(Some(4));
+
+        // Nested regions run inline on the claiming thread.
+        let outer = AtomicU64::new(0);
+        let inner = AtomicU64::new(0);
+        run_chunks(4, |_| {
+            assert!(in_parallel_region());
+            run_chunks(4, |_| {
+                inner.fetch_add(1, Ordering::Relaxed);
+            });
+            outer.fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(!in_parallel_region());
+        assert_eq!(outer.load(Ordering::Relaxed), 4);
+        assert_eq!(inner.load(Ordering::Relaxed), 16);
+
+        // Pooled and scoped execution fill identically.
+        let fill = |out: &mut [u64]| {
+            let base = out.as_mut_ptr() as usize;
+            run_chunks(out.len(), move |ci| {
+                // SAFETY: one disjoint element per chunk.
+                unsafe { *(base as *mut u64).add(ci) = (ci * ci) as u64 };
+            });
+        };
+        let mut a = vec![0u64; 100];
+        let mut b = vec![0u64; 100];
+        set_pool_enabled(Some(true));
+        fill(&mut a);
+        set_pool_enabled(Some(false));
+        fill(&mut b);
+        assert_eq!(a, b);
+
+        // Revert to the environment configuration.
+        set_pool_enabled(None);
+        set_num_threads(None);
+        assert_eq!(num_threads(), env_config().threads);
+    }
+
+    #[test]
+    fn chunk_panic_propagates_to_submitter() {
+        let caught = std::panic::catch_unwind(|| {
+            run_chunks(8, |ci| {
+                if ci == 5 {
+                    panic!("chunk 5 says hello");
+                }
+            });
+        });
+        let payload = caught.expect_err("panic must propagate");
+        let msg = payload
+            .downcast_ref::<&str>()
+            .copied()
+            .or_else(|| payload.downcast_ref::<String>().map(|s| s.as_str()))
+            .unwrap_or("");
+        assert!(msg.contains("chunk 5"), "payload: {msg}");
+    }
+}

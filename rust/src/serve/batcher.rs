@@ -82,8 +82,15 @@ pub struct Batcher {
 }
 
 impl Batcher {
-    /// Spawn the dispatcher thread over `predictor`.
+    /// Spawn the dispatcher thread over `predictor`. Also pre-spawns the
+    /// shared runtime pool's workers ([`crate::runtime::pool::warm`]):
+    /// the dispatcher executes every batch product on the pool, and a
+    /// lazily-started pool would tax the first request with thread
+    /// creation. (Bit-stability is unaffected — the pool's unit of work
+    /// is whole output rows, so results do not depend on worker count or
+    /// chunk-claim order.)
     pub fn start(predictor: Arc<Predictor>, cfg: BatchConfig) -> Batcher {
+        crate::runtime::pool::warm();
         let (tx, rx) = mpsc::channel::<Job>();
         let worker = std::thread::Builder::new()
             .name("gvt-serve-batcher".into())

@@ -3,7 +3,7 @@
 //! "Falkon solves the resulting linear system using a preconditioned
 //! conjugate gradient optimizer") and as a cross-check on MINRES.
 
-use crate::linalg::vecops::{axpy, axpby, axpy_norm2, dot, norm2};
+use crate::linalg::vecops::{axpby_par, axpy_norm2, axpy_par, dot, norm2};
 use crate::solvers::linear_op::LinOp;
 use std::ops::ControlFlow;
 
@@ -71,8 +71,10 @@ where
             break;
         }
         let alpha = rz / pap;
-        axpy(alpha, &p, &mut x);
-        // Residual update and its norm in one pass over memory.
+        axpy_par(alpha, &p, &mut x);
+        // Residual update and its norm in one pass over memory. Stays
+        // serial: the fused norm is a reduction, and a parallel combine
+        // order would break bit-determinism across worker counts.
         let rnorm = axpy_norm2(-alpha, &ap, &mut r);
         iterations = k;
         rel = rnorm / bnorm;
@@ -91,7 +93,7 @@ where
         let beta = rz_next / rz;
         rz = rz_next;
         // p = z + beta p.
-        axpby(1.0, &z, beta, &mut p);
+        axpby_par(1.0, &z, beta, &mut p);
     }
 
     CgOutcome { x, iterations, rel_residual: rel, converged }

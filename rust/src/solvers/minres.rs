@@ -7,7 +7,7 @@
 //! per iteration it performs exactly one operator application plus `O(n)`
 //! vector work and zero allocations after setup.
 
-use crate::linalg::vecops::{axpy, dot, fused_direction, norm2, scale_into};
+use crate::linalg::vecops::{axpy_par, dot, fused_direction_par, norm2, scale_into_par};
 use crate::solvers::linear_op::LinOp;
 use std::ops::ControlFlow;
 
@@ -107,9 +107,11 @@ where
         // Lanczos step: α, β_{k+1}, next v.
         a.apply_into(&v, &mut av);
         let alpha = dot(&v, &av);
-        // av ← av − α v − β v_prev (three-term recurrence).
-        axpy(-alpha, &v, &mut av);
-        axpy(-beta, &v_prev, &mut av);
+        // av ← av − α v − β v_prev (three-term recurrence). The axpys
+        // fan out over the worker pool at large n; dot/norm2 stay serial
+        // (reduction order is part of the bit-determinism contract).
+        axpy_par(-alpha, &v, &mut av);
+        axpy_par(-beta, &v_prev, &mut av);
         let beta_next = norm2(&av);
 
         // Apply previous rotations to the new tridiagonal column.
@@ -132,9 +134,9 @@ where
         s = beta_next / rho1;
 
         // w_new = (v − ρ3 w_oold − ρ2 w_old) / ρ1, one fused pass.
-        fused_direction(&mut w_new, &v, rho3, &w_oold, rho2, &w_old, 1.0 / rho1);
+        fused_direction_par(&mut w_new, &v, rho3, &w_oold, rho2, &w_old, 1.0 / rho1);
         // x += c · η · w_new.
-        axpy(c * eta, &w_new, &mut x);
+        axpy_par(c * eta, &w_new, &mut x);
         eta = -s * eta;
 
         // Shift registers.
@@ -142,7 +144,7 @@ where
         std::mem::swap(&mut w_old, &mut w_new);
         std::mem::swap(&mut v_prev, &mut v);
         if beta_next > 0.0 {
-            scale_into(&mut v, &av, 1.0 / beta_next);
+            scale_into_par(&mut v, &av, 1.0 / beta_next);
         }
         beta = beta_next;
 

@@ -221,6 +221,9 @@ impl PairwiseRidge {
                 data.name
             );
         }
+        // Spawn the runtime pool's workers up front: every solver
+        // iteration over this operator runs its sweeps on the pool.
+        crate::runtime::pool::warm();
         PairwiseLinOp::new(
             kernel,
             data.d.clone(),

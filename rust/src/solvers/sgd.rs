@@ -51,7 +51,7 @@ use crate::error::{bail, Context, Result};
 use crate::gvt::pairwise::{PairwiseKernel, PairwiseLinOp};
 use crate::gvt::plan::GvtWorkspace;
 use crate::gvt::vec_trick::GvtPolicy;
-use crate::linalg::vecops::{axpy, dot, norm2, scale};
+use crate::linalg::vecops::{axpy_par, dot, norm2, scale, scale_par};
 use crate::rng::dist::EpochShuffler;
 use crate::rng::{dist, Xoshiro256};
 use crate::solvers::ridge::RidgeModel;
@@ -192,6 +192,9 @@ impl SgdTrainer {
         if data.is_empty() {
             bail!("sgd: empty training set");
         }
+        // Spawn the runtime pool's workers before the first batch product
+        // so step-time measurements never include thread creation.
+        crate::runtime::pool::warm();
         let train = data.pairs.clone();
         // Build the grouping caches on the canonical sample before the
         // first operator build so every per-batch operator inherits the
@@ -313,17 +316,18 @@ impl SgdTrainer {
                         }
                     }
                     Some(v) => {
-                        // Heavy ball: v ← μv + ĝ; α ← α − η_t v.
-                        scale(v, self.cfg.momentum);
+                        // Heavy ball: v ← μv + ĝ; α ← α − η_t v. The
+                        // O(n) vector work rides the pool at large n.
+                        scale_par(v, self.cfg.momentum);
                         for (j, &i) in chunk.iter().enumerate() {
                             v[i] += kb[j] + lambda * alpha[i] - self.y[i];
                         }
-                        axpy(-step, v, &mut alpha);
+                        axpy_par(-step, v, &mut alpha);
                     }
                 }
                 if let Some((sum, count)) = avg.as_mut() {
                     if epoch >= avg_from_epoch {
-                        axpy(1.0, &alpha, sum);
+                        axpy_par(1.0, &alpha, sum);
                         *count += 1;
                     }
                 }

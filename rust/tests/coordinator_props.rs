@@ -161,6 +161,7 @@ fn runner_returns_results_for_every_spec() {
             setting: 1 + (i % 4) as u8,
             folds: 2,
             ridge: RidgeConfig { max_iters: 10, patience: 2, ..Default::default() },
+            solver: gvt_rls::solvers::Solver::Minres,
             seed: i as u64,
         })
         .collect();
@@ -212,6 +213,7 @@ fn experiment_results_are_deterministic_across_runs() {
         setting: 2,
         folds: 3,
         ridge: RidgeConfig { max_iters: 15, patience: 3, ..Default::default() },
+        solver: gvt_rls::solvers::Solver::Minres,
         seed: 1234,
     };
     let a = run_cv_experiment(&spec).unwrap();

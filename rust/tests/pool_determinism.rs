@@ -1,0 +1,90 @@
+//! The runtime-pool determinism contract: `GvtPlan` execution produces
+//! **bit-identical** output for every worker count and for both
+//! execution paths (persistent pool vs the `GVT_RLS_POOL=0` scoped
+//! fallback). This is the property that makes the pool safe to share
+//! across solvers and the serving dispatcher: the scheduler may change
+//! *when and where* an output row is computed, never *what* is computed.
+//!
+//! Covers all 8 pairwise kernels (MLPK exercises the concurrent
+//! multi-unit stage-1 sweep, Ranking the pooled terms, Cartesian the
+//! misc path), the single-RHS `apply_into` path and the multi-RHS
+//! `matmat` path, across thread budgets {1, 2, 8} × pool {off, on} —
+//! every configuration must reproduce the (threads=1, pool=off)
+//! baseline bit-for-bit.
+//!
+//! One `#[test]` only: the runtime overrides are process-global, and
+//! libtest runs sibling tests concurrently.
+
+use gvt_rls::gvt::pairwise::{PairwiseKernel, PairwiseLinOp};
+use gvt_rls::gvt::vec_trick::GvtPolicy;
+use gvt_rls::linalg::Mat;
+use gvt_rls::rng::{dist, Xoshiro256};
+use gvt_rls::runtime::pool;
+use gvt_rls::solvers::linear_op::LinOp;
+use gvt_rls::testing::gen;
+use std::sync::Arc;
+
+fn bits(xs: &[f64]) -> Vec<u64> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn plan_execution_is_bit_identical_across_runtime_configs() {
+    let mut rng = Xoshiro256::seed_from(77);
+    let m = 24;
+    let n = 300;
+    let nbar = 180;
+    let d = Arc::new(gen::psd_kernel(&mut rng, m));
+    let cols = gen::homogeneous_sample(&mut rng, n, m);
+    let rows = gen::homogeneous_sample(&mut rng, nbar, m);
+    let a = dist::normal_vec(&mut rng, n);
+    let rhs: Vec<Vec<f64>> = (0..3).map(|_| dist::normal_vec(&mut rng, n)).collect();
+    let refs: Vec<&[f64]> = rhs.iter().map(|v| v.as_slice()).collect();
+    let ab = Mat::from_columns(&refs);
+
+    let run = |kernel: PairwiseKernel| -> (Vec<u64>, Vec<u64>) {
+        let op = PairwiseLinOp::new(
+            kernel,
+            d.clone(),
+            d.clone(),
+            rows.clone(),
+            cols.clone(),
+            GvtPolicy::Auto,
+        )
+        .unwrap();
+        let mut out = vec![0.0; nbar];
+        // Apply twice: warm-workspace re-execution must not change bits.
+        op.apply_into(&a, &mut out);
+        op.apply_into(&a, &mut out);
+        let mm = op.matmat(&ab);
+        (bits(&out), bits(mm.as_slice()))
+    };
+
+    // Reference bits: single-threaded, scoped fallback (the pre-pool
+    // execution semantics).
+    pool::set_num_threads(Some(1));
+    pool::set_pool_enabled(Some(false));
+    let baseline: Vec<(PairwiseKernel, (Vec<u64>, Vec<u64>))> =
+        PairwiseKernel::ALL.iter().map(|&k| (k, run(k))).collect();
+
+    for threads in [1usize, 2, 8] {
+        for pool_on in [false, true] {
+            pool::set_num_threads(Some(threads));
+            pool::set_pool_enabled(Some(pool_on));
+            for (kernel, (base_mv, base_mm)) in &baseline {
+                let (mv, mm) = run(*kernel);
+                assert_eq!(
+                    &mv, base_mv,
+                    "{kernel:?} threads={threads} pool={pool_on}: matvec bits differ"
+                );
+                assert_eq!(
+                    &mm, base_mm,
+                    "{kernel:?} threads={threads} pool={pool_on}: matmat bits differ"
+                );
+            }
+        }
+    }
+
+    pool::set_num_threads(None);
+    pool::set_pool_enabled(None);
+}

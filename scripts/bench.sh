@@ -5,8 +5,11 @@
 # scoring, batch sizes {1, 8, 64, 256}, p50/p99 latency) into
 # BENCH_serve.json, and the stochastic-solver bench (exact CG vs
 # mini-batched SGD time-to-ε, n ∈ {16k, 64k}, all 8 kernels) into
-# BENCH_sgd.json, all at the repo root so future PRs can prove
-# speedups against recorded numbers.
+# BENCH_sgd.json, and the execution-runtime ablation (persistent pool
+# vs scoped spawn: region dispatch, mat-vec latency at n ∈ {4k, 16k,
+# 64k}, per-iteration MINRES overhead) into BENCH_pool.json — all at
+# the repo root so future PRs can prove speedups against recorded
+# numbers.
 #
 # Usage: scripts/bench.sh            # full sizes (~minutes)
 #        GVT_RLS_BENCH_QUICK=1 scripts/bench.sh   # small sizes, fast
@@ -21,10 +24,12 @@ if [[ -n "${GVT_RLS_BENCH_QUICK:-}" || -n "${GVT_BENCH_SMOKE:-}" ]]; then
   gvt_json="$PWD/BENCH_gvt_quick.json"
   serve_json="$PWD/BENCH_serve_quick.json"
   sgd_json="$PWD/BENCH_sgd_quick.json"
+  pool_json="$PWD/BENCH_pool_quick.json"
 else
   gvt_json="$PWD/BENCH_gvt.json"
   serve_json="$PWD/BENCH_serve.json"
   sgd_json="$PWD/BENCH_sgd.json"
+  pool_json="$PWD/BENCH_pool.json"
 fi
 
 echo "== bench_pairwise_kernels → ${gvt_json} =="
@@ -39,4 +44,8 @@ echo "== bench_sgd → ${sgd_json} =="
 GVT_RLS_BENCH_JSON="$sgd_json" \
   cargo bench --offline --bench bench_sgd
 
-echo "bench.sh: wrote ${GVT_RLS_BENCH_JSON:-$gvt_json}, ${serve_json} and ${sgd_json}"
+echo "== bench_pool → ${pool_json} =="
+GVT_RLS_BENCH_JSON="$pool_json" \
+  cargo bench --offline --bench bench_pool
+
+echo "bench.sh: wrote ${GVT_RLS_BENCH_JSON:-$gvt_json}, ${serve_json}, ${sgd_json} and ${pool_json}"

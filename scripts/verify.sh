@@ -13,6 +13,16 @@ cargo build --release --offline
 echo "== tier-1: cargo test -q =="
 cargo test -q --offline
 
+echo "== runtime ablations: scoped-spawn fallback + single-thread =="
+# Cross-check the execution runtime's two ablation axes over the whole
+# tier-1 suite: GVT_RLS_POOL=0 retires the persistent pool (pre-pool
+# scoped spawning) and GVT_RLS_THREADS=1 forces every parallel region
+# inline. The determinism contract (rows as the unit of work) makes all
+# three configurations bit-identical — tests/pool_determinism.rs pins
+# that directly; these sweeps prove nothing else depends on the runtime.
+GVT_RLS_POOL=0 cargo test -q --offline
+GVT_RLS_THREADS=1 cargo test -q --offline
+
 echo "== benches + examples compile (kept in the workspace) =="
 cargo build --offline --benches --examples
 
