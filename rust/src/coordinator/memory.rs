@@ -19,7 +19,13 @@ static PEAK: AtomicUsize = AtomicUsize::new(0);
 /// Counting wrapper around the system allocator.
 pub struct TrackingAlloc;
 
+// SAFETY: every operation defers to `System` with the caller's
+// pointer/layout unchanged, so `GlobalAlloc`'s contract is inherited
+// verbatim; the bookkeeping is plain atomics and cannot itself allocate
+// (which would recurse into this allocator).
 unsafe impl GlobalAlloc for TrackingAlloc {
+    // SAFETY: forwards to `System.alloc` with the caller's layout; the
+    // counter update only runs on a non-null result.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         let p = System.alloc(layout);
         if !p.is_null() {
@@ -29,11 +35,15 @@ unsafe impl GlobalAlloc for TrackingAlloc {
         p
     }
 
+    // SAFETY: forwards to `System.dealloc` with the caller's pointer and
+    // layout untouched.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
         System.dealloc(ptr, layout);
         LIVE.fetch_sub(layout.size(), Ordering::Relaxed);
     }
 
+    // SAFETY: forwards to `System.realloc`; pointer, layout, and
+    // new_size pass through untouched.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         let p = System.realloc(ptr, layout, new_size);
         if !p.is_null() {

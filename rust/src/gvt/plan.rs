@@ -461,6 +461,9 @@ impl GvtPlan {
     /// `out = Σ_terms coeff · GVT(term) · a`, fused. `out` is fully
     /// overwritten; `ws` provides all intermediates (allocation-free
     /// after the first call at these shapes).
+    // lint: alloc_free — the solver per-iteration path; every buffer
+    // comes from `ws` (grow-once via ensure_mat/zeroed, not denied
+    // idioms). tests/alloc_free.rs measures the guarantee dynamically.
     pub fn execute(
         &self,
         ctx: &TermContext<'_>,
@@ -533,6 +536,7 @@ impl GvtPlan {
         }
     }
 
+    // lint: alloc_free — scatter/gather over ws.pool only.
     fn exec_pooled(
         &self,
         unit: &PooledUnit,
@@ -559,6 +563,8 @@ impl GvtPlan {
         }
     }
 
+    // lint: alloc_free — writes into the caller-owned S/W workspace
+    // matrices through the row-aligned par wrappers.
     fn exec_stage1(
         &self,
         unit: &Stage1Unit,
@@ -630,6 +636,8 @@ impl GvtPlan {
     ///
     /// Chunk tables live in the workspace; after warmup this performs no
     /// heap allocation (pinned by `tests/alloc_free.rs`).
+    // lint: alloc_free — chunk tables reuse ws.s1_chunks/s1_bases
+    // capacity; S buffers grow once via ensure_mat.
     fn exec_stage1_concurrent(
         &self,
         ctx: &TermContext<'_>,
@@ -673,6 +681,9 @@ impl GvtPlan {
         let bases = &ws.s1_bases;
         let units = &self.stage1;
         let mode = self.mode;
+        // lint: allow(determinism, whole-S-rows chunks with per-row op
+        // order identical to the serial path — bit-identical for any
+        // worker count; pinned by tests/pool_determinism.rs)
         par::run_chunks(table.len(), |ci| {
             let (uk, r0, r1) = table[ci];
             let (uk, r0, r1) = (uk as usize, r0 as usize, r1 as usize);
@@ -716,6 +727,8 @@ impl GvtPlan {
     /// every RHS) and `out` is `n̄ × B`. The index arrays are streamed once
     /// per stage for the whole block; `B` plays the register-reuse role
     /// the 4-row blocking plays in the single-RHS kernels.
+    // lint: alloc_free — the multi-RHS hot path (stochastic trainer,
+    // batched serve); block workspaces grow once, then are reused.
     pub fn execute_multi(
         &self,
         ctx: &TermContext<'_>,
@@ -746,6 +759,8 @@ impl GvtPlan {
         }
 
         while ws.sm.len() < self.stage1.len() {
+            // lint: allow(alloc, warmup-only: runs until the workspace
+            // holds one S block per stage-1 unit, then never again)
             ws.sm.push(Vec::new());
         }
         for (k, unit) in self.stage1.iter().enumerate() {
@@ -755,6 +770,8 @@ impl GvtPlan {
         }
 
         while ws.sm_acc.len() < self.stage2.len() {
+            // lint: allow(alloc, warmup-only: one accumulator slot per
+            // stage-2 unit, created on the first call at this shape)
             ws.sm_acc.push(Vec::new());
         }
         for (idx, unit) in self.stage2.iter().enumerate() {
@@ -785,6 +802,7 @@ impl GvtPlan {
     }
 
     /// Column-loop fallback over the whole plan (Dense-mode blocks).
+    // lint: alloc_free — reuses ws.col_in/col_out across columns.
     fn execute_multi_by_columns(
         &self,
         ctx: &TermContext<'_>,
@@ -812,6 +830,7 @@ impl GvtPlan {
 
     /// Misc terms under multi-RHS: per-column with reused scratch (these
     /// paths are `O(n + n̄)`-ish; blocking would not pay for itself).
+    // lint: alloc_free — reuses ws.col_in/col_out and ws.scratch.
     fn exec_misc_multi_by_columns(
         &self,
         ctx: &TermContext<'_>,
@@ -847,6 +866,7 @@ impl GvtPlan {
         ws.col_out = col_out;
     }
 
+    // lint: alloc_free — PW/PV blocks grow once per shape in ws.
     fn exec_pooled_multi(
         &self,
         pi: usize,
@@ -878,6 +898,7 @@ impl GvtPlan {
         }
     }
 
+    // lint: alloc_free — fills the caller's S block in place.
     fn exec_stage1_multi(
         &self,
         unit: &Stage1Unit,
@@ -953,6 +974,7 @@ impl GvtPlan {
 /// a[order[k]]` in registers and store once. Processes four rows per pass
 /// over the index streams (same bandwidth argument as `stage1_scatter`'s
 /// blocking; `GVT_RLS_STAGE1_1ROW=1` disables it for A/B runs).
+// lint: alloc_free — register-blocked inner kernel; splits slices only.
 #[allow(clippy::too_many_arguments)]
 fn stage1_grouped(
     mat: &Mat,
@@ -1013,6 +1035,7 @@ fn stage1_grouped(
 
 /// Multi-RHS stage-2 sweep: `out[i, b] += c · Σ_d lhs[li[i], d] ·
 /// s[ri[i], d, b]` with `s` in `[r][d][b]` layout.
+// lint: alloc_free — row-dot sweep over borrowed S/out blocks.
 #[allow(clippy::too_many_arguments)]
 fn stage2_rowdot_multi(
     lhs: &Mat,

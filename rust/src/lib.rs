@@ -33,6 +33,10 @@
 //!   ([`runtime::pool`]) every parallel loop in the crate runs on, plus
 //!   the PJRT bridge loading AOT-compiled JAX/Pallas artifacts (HLO
 //!   text) for the dense complete-data Kronecker mat-vec.
+//! * [`lint`] — `gvt-lint`: the source-level static-analysis pass
+//!   (`gvt-rls lint`) that turns the determinism / alloc-free /
+//!   unsafe-audit / env-registry / panic-surface contracts into build
+//!   failures (gates `scripts/verify.sh` and `tests/lint_clean.rs`).
 //! * [`linalg`], [`sparse`], [`rng`], [`eval`], [`bench`], [`testing`],
 //!   [`error`] — from-scratch substrates (the sandbox has no rand/rayon/
 //!   criterion/proptest or error-handling crates; the crate builds with
@@ -64,6 +68,7 @@ pub mod eval;
 pub mod gvt;
 pub mod kernels;
 pub mod linalg;
+pub mod lint;
 pub mod rng;
 pub mod runtime;
 pub mod serve;

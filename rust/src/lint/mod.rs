@@ -1,0 +1,204 @@
+//! `gvt-lint` — a source-level static-analysis pass enforcing the repo's
+//! runtime contracts (`gvt-rls lint [--json] [paths…]`).
+//!
+//! The crate's correctness story rests on three invariants that plain
+//! `cargo test` samples but cannot exhaustively check: results are
+//! bit-identical for any worker count (tests/pool_determinism.rs),
+//! solver iterations never allocate (tests/alloc_free.rs), and the serve
+//! loop survives arbitrary malformed input (tests/serve_concurrency.rs).
+//! This pass makes the *source patterns* that break those invariants
+//! build failures, so a regression in an untested configuration cannot
+//! compile clean and ship. Five rules:
+//!
+//! * `determinism` — hash-map iteration, ad-hoc threads, wall-clock
+//!   reads, and raw pool submission in result-affecting modules
+//!   (`gvt/`, `linalg/`, `solvers/`, `serve/predictor.rs`);
+//!   `runtime/pool.rs` and `linalg/par.rs` are the only sanctioned
+//!   concurrency sites.
+//! * `hot_alloc` — heap-allocating calls inside blocks annotated with
+//!   the alloc-free marker comment (solver iteration bodies, the plan
+//!   executors, the pool submission path).
+//! * `unsafe_audit` — every `unsafe` site needs an immediately-preceding
+//!   `SAFETY:` comment stating the invariant that makes it sound.
+//! * `env_registry` — every `GVT_RLS`-prefixed knob read in source must
+//!   appear in the README env-var table, and vice versa.
+//! * `panic_surface` — unwrap/expect/panic/indexing in the serve request
+//!   path must carry a justification.
+//!
+//! Escapes are per-line comments — `lint: allow(<rule-key>, reason)` —
+//! so every suppression is visible in review. The pass gates
+//! `scripts/verify.sh` and `tests/lint_clean.rs`, and is zero-dependency
+//! like the rest of the crate (see [`scan`] for the line scanner).
+
+pub mod scan;
+
+mod rules;
+
+pub use rules::{check_all, Finding};
+
+use crate::error::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Directories walked when no explicit paths are given (repo-relative).
+pub const DEFAULT_ROOTS: &[&str] = &["rust/src", "rust/tests", "rust/benches", "examples"];
+
+/// A finished lint pass.
+pub struct LintReport {
+    /// All findings, sorted by file, line, rule.
+    pub findings: Vec<Finding>,
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+}
+
+impl LintReport {
+    /// `file:line: rule: message` lines, one per finding.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!("{}:{}: {}: {}\n", f.file, f.line, f.rule, f.message));
+        }
+        out
+    }
+
+    /// Machine-readable dump for the verify artifacts.
+    pub fn render_json(&self) -> String {
+        let mut out = String::from("{\n  \"findings\": [");
+        for (i, f) in self.findings.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\n    {{\"file\": \"{}\", \"line\": {}, \"rule\": \"{}\", \"message\": \"{}\"}}",
+                esc(&f.file),
+                f.line,
+                f.rule,
+                esc(&f.message)
+            ));
+        }
+        if !self.findings.is_empty() {
+            out.push_str("\n  ");
+        }
+        out.push_str("],\n");
+        out.push_str(&format!("  \"files_scanned\": {}\n}}", self.files_scanned));
+        out
+    }
+}
+
+/// Locate the repo root (the directory holding `rust/src` and
+/// `README.md`) by walking up from the current directory.
+pub fn find_repo_root() -> Option<PathBuf> {
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        if dir.join("rust").join("src").is_dir() && dir.join("README.md").is_file() {
+            return Some(dir);
+        }
+        dir = dir.parent()?.to_path_buf();
+    }
+}
+
+/// Lint `paths` (files or directories; the [`DEFAULT_ROOTS`] under
+/// `root` when empty) against the README at `root`.
+pub fn lint_repo(root: &Path, paths: &[PathBuf]) -> Result<LintReport> {
+    let mut on_disk: Vec<PathBuf> = Vec::new();
+    if paths.is_empty() {
+        for rel in DEFAULT_ROOTS {
+            let dir = root.join(rel);
+            if dir.is_dir() {
+                collect_rs(&dir, &mut on_disk)?;
+            }
+        }
+    } else {
+        for p in paths {
+            if p.is_dir() {
+                collect_rs(p, &mut on_disk)?;
+            } else {
+                on_disk.push(p.clone());
+            }
+        }
+    }
+    on_disk.sort();
+    on_disk.dedup();
+
+    let canon_root = root.canonicalize().unwrap_or_else(|_| root.to_path_buf());
+    let mut sources = Vec::with_capacity(on_disk.len());
+    for path in &on_disk {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("lint: reading {}", path.display()))?;
+        sources.push(scan::SourceFile::scan(&rel_label(&canon_root, path), &text));
+    }
+
+    let readme = std::fs::read_to_string(root.join("README.md")).ok();
+    let findings = check_all(&sources, readme.as_deref());
+    Ok(LintReport { findings, files_scanned: sources.len() })
+}
+
+/// Repo-relative, forward-slash label for rule scoping and reports.
+fn rel_label(canon_root: &Path, path: &Path) -> String {
+    let canon = path.canonicalize().unwrap_or_else(|_| path.to_path_buf());
+    let rel = canon.strip_prefix(canon_root).unwrap_or(&canon);
+    rel.to_string_lossy().replace('\\', "/")
+}
+
+/// Recursively collect `.rs` files, sorted so reports are deterministic.
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("lint: reading directory {}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().map_or(false, |x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_rendering_escapes_and_shapes() {
+        let report = LintReport {
+            findings: vec![Finding {
+                file: "a\\b.rs".to_string(),
+                line: 3,
+                rule: "unsafe_audit",
+                message: "needs \"SAFETY\"".to_string(),
+            }],
+            files_scanned: 7,
+        };
+        let j = report.render_json();
+        let parsed = crate::runtime::json::Json::parse(&j).expect("render_json emits valid JSON");
+        assert_eq!(parsed.get("files_scanned").and_then(|v| v.as_usize()), Some(7));
+        let arr = parsed.get("findings").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("line").and_then(|v| v.as_usize()), Some(3));
+        assert_eq!(arr[0].get("file").and_then(|v| v.as_str()), Some("a\\b.rs"));
+    }
+
+    #[test]
+    fn empty_report_renders_cleanly() {
+        let report = LintReport { findings: Vec::new(), files_scanned: 0 };
+        assert_eq!(report.render_text(), "");
+        assert!(crate::runtime::json::Json::parse(&report.render_json()).is_ok());
+    }
+}

@@ -1,0 +1,363 @@
+//! Line-level Rust source scanner for the lint pass.
+//!
+//! Deliberately *not* a full lexer: rules in this crate only need to know,
+//! per line, (a) what is code vs. comment vs. string-literal content, and
+//! (b) whether the line sits inside one of two brace-delimited regions —
+//! a `#[cfg(test)]` item or a block annotated with the alloc-free marker
+//! comment. The scanner therefore classifies each line into three
+//! channels and tracks literal/comment state *across* lines, so token
+//! matching on the `code` channel never fires on text inside a string,
+//! a char literal, or a comment.
+//!
+//! Handled literal forms: `"…"` (including multi-line and `\`-escaped),
+//! `r"…"` / `r#"…"#` raw strings, `b"…"` byte strings, `'x'` / `'\n'` /
+//! `'\u{8}'` char literals (disambiguated from lifetimes and loop labels
+//! without lookbehind), and nested `/* … */` block comments.
+
+/// One scanned source line, split into channels.
+pub struct Line {
+    /// Source text with comments removed and string/char-literal contents
+    /// blanked (the delimiting quotes remain, so shape is preserved).
+    pub code: String,
+    /// Comment text on this line: everything after `//`, and the contents
+    /// of `/* … */` segments (including continuation lines).
+    pub comment: String,
+    /// Contents of string and char literals on this line, separated by
+    /// `\n` so adjacent literals never concatenate into a false match.
+    pub strings: String,
+    /// Line is inside a `#[cfg(test)]` item (or a nested block of one).
+    pub in_test: bool,
+    /// Line is inside a block annotated with the alloc-free marker.
+    pub in_alloc_free: bool,
+}
+
+/// A scanned file: repo-relative path (forward slashes) plus its lines.
+pub struct SourceFile {
+    pub rel_path: String,
+    pub lines: Vec<Line>,
+}
+
+/// Scanner state that carries across lines.
+enum Mode {
+    Code,
+    /// Inside `/* … */`; the payload is the nesting depth.
+    BlockComment(u32),
+    /// Inside a normal `"…"` string (they may span lines).
+    Str,
+    /// Inside a raw string; the payload is the `#` count of its opener.
+    RawStr(u32),
+}
+
+impl SourceFile {
+    /// Scan `text` into per-line channels and mark regions.
+    pub fn scan(rel_path: &str, text: &str) -> SourceFile {
+        let mut lines = Vec::new();
+        let mut mode = Mode::Code;
+        for raw in text.lines() {
+            let chars: Vec<char> = raw.chars().collect();
+            let mut code = String::new();
+            let mut comment = String::new();
+            let mut strings = String::new();
+            let mut i = 0usize;
+            while i < chars.len() {
+                match mode {
+                    Mode::BlockComment(depth) => {
+                        if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                            i += 2;
+                            mode = if depth == 1 {
+                                Mode::Code
+                            } else {
+                                Mode::BlockComment(depth - 1)
+                            };
+                        } else if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                            mode = Mode::BlockComment(depth + 1);
+                            i += 2;
+                        } else {
+                            comment.push(chars[i]);
+                            i += 1;
+                        }
+                    }
+                    Mode::Str => {
+                        if chars[i] == '\\' {
+                            if let Some(&c) = chars.get(i + 1) {
+                                strings.push(c);
+                            }
+                            i += 2;
+                        } else if chars[i] == '"' {
+                            code.push('"');
+                            strings.push('\n');
+                            mode = Mode::Code;
+                            i += 1;
+                        } else {
+                            strings.push(chars[i]);
+                            i += 1;
+                        }
+                    }
+                    Mode::RawStr(hashes) => {
+                        if chars[i] == '"' && closes_raw(&chars, i, hashes) {
+                            code.push('"');
+                            strings.push('\n');
+                            i += 1 + hashes as usize;
+                            mode = Mode::Code;
+                        } else {
+                            strings.push(chars[i]);
+                            i += 1;
+                        }
+                    }
+                    Mode::Code => {
+                        let c = chars[i];
+                        let next = chars.get(i + 1).copied();
+                        if c == '/' && next == Some('/') {
+                            comment.extend(chars[i + 2..].iter());
+                            i = chars.len();
+                        } else if c == '/' && next == Some('*') {
+                            mode = Mode::BlockComment(1);
+                            i += 2;
+                        } else if c == '"' {
+                            code.push('"');
+                            mode = Mode::Str;
+                            i += 1;
+                        } else if c == 'r' && !prev_is_ident(&chars, i) {
+                            if let Some(h) = raw_string_hashes(&chars, i) {
+                                code.push('r');
+                                code.push('"');
+                                i += 2 + h as usize;
+                                mode = Mode::RawStr(h);
+                            } else {
+                                code.push(c);
+                                i += 1;
+                            }
+                        } else if c == '\'' {
+                            if let Some(end) = char_literal_end(&chars, i) {
+                                code.push('\'');
+                                strings.extend(chars[i + 1..end].iter());
+                                strings.push('\n');
+                                code.push('\'');
+                                i = end + 1;
+                            } else {
+                                // Lifetime or loop label.
+                                code.push('\'');
+                                i += 1;
+                            }
+                        } else {
+                            code.push(c);
+                            i += 1;
+                        }
+                    }
+                }
+            }
+            lines.push(Line {
+                code,
+                comment,
+                strings,
+                in_test: false,
+                in_alloc_free: false,
+            });
+        }
+        mark_regions(&mut lines);
+        SourceFile { rel_path: rel_path.to_string(), lines }
+    }
+}
+
+fn prev_is_ident(chars: &[char], i: usize) -> bool {
+    i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_')
+}
+
+/// `chars[i] == 'r'`: if this opens a raw string, the `#` count of its
+/// opener; `None` for a plain identifier starting with `r`.
+fn raw_string_hashes(chars: &[char], i: usize) -> Option<u32> {
+    let mut h = 0u32;
+    let mut j = i + 1;
+    while chars.get(j) == Some(&'#') {
+        h += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some(h)
+    } else {
+        None
+    }
+}
+
+/// `chars[i] == '"'` while inside a raw string: does this quote, followed
+/// by the opener's `#` count, close it?
+fn closes_raw(chars: &[char], i: usize, hashes: u32) -> bool {
+    (0..hashes as usize).all(|k| chars.get(i + 1 + k) == Some(&'#'))
+}
+
+/// `chars[i] == '\''`: the index of the closing quote if this is a char
+/// literal, `None` for lifetimes/labels. `'x'` closes two ahead; escaped
+/// forms (`'\n'`, `'\''`, `'\u{8}'`) scan forward past the escape body.
+fn char_literal_end(chars: &[char], i: usize) -> Option<usize> {
+    match chars.get(i + 1)? {
+        '\\' => {
+            let mut j = i + 3;
+            while j < chars.len() && j < i + 12 {
+                if chars[j] == '\'' {
+                    return Some(j);
+                }
+                j += 1;
+            }
+            None
+        }
+        _ => {
+            if chars.get(i + 2) == Some(&'\'') {
+                Some(i + 2)
+            } else {
+                None
+            }
+        }
+    }
+}
+
+/// Second pass: mark `#[cfg(test)]` and alloc-free regions by brace
+/// depth. An annotation binds to the **next** `{`-opened block (a fn
+/// body, a loop, a bare block) and covers it until its matching `}`.
+fn mark_regions(lines: &mut [Line]) {
+    let mut depth: i64 = 0;
+    let mut pending_test = false;
+    let mut pending_alloc = false;
+    let mut test_stack: Vec<i64> = Vec::new();
+    let mut alloc_stack: Vec<i64> = Vec::new();
+    for line in lines.iter_mut() {
+        let mut in_test = !test_stack.is_empty();
+        let mut in_alloc = !alloc_stack.is_empty();
+        if line.code.contains("#[cfg(test)]") {
+            pending_test = true;
+        }
+        if line.comment.trim_start().starts_with("lint: alloc_free") {
+            pending_alloc = true;
+        }
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    if pending_test {
+                        test_stack.push(depth);
+                        pending_test = false;
+                        in_test = true;
+                    }
+                    if pending_alloc {
+                        alloc_stack.push(depth);
+                        pending_alloc = false;
+                        in_alloc = true;
+                    }
+                }
+                '}' => {
+                    if test_stack.last() == Some(&depth) {
+                        test_stack.pop();
+                    }
+                    if alloc_stack.last() == Some(&depth) {
+                        alloc_stack.pop();
+                    }
+                    depth -= 1;
+                }
+                _ => {}
+            }
+        }
+        line.in_test = in_test || !test_stack.is_empty();
+        line.in_alloc_free = in_alloc || !alloc_stack.is_empty();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_are_blanked_out_of_code() {
+        let f = SourceFile::scan("x.rs", "let s = \"vec! here\"; // trailing vec!\n");
+        assert!(!f.lines[0].code.contains("vec!"), "code: {}", f.lines[0].code);
+        assert!(f.lines[0].strings.contains("vec!"));
+        assert!(f.lines[0].comment.contains("vec!"));
+    }
+
+    #[test]
+    fn char_literal_quote_does_not_open_a_string() {
+        // A naive scanner would treat the '"' char literal as a string
+        // opener and swallow the rest of the line.
+        let f = SourceFile::scan("x.rs", "let c = '\"'; let v = vec![1];\n");
+        assert!(f.lines[0].code.contains("vec!"), "code: {}", f.lines[0].code);
+    }
+
+    #[test]
+    fn lifetimes_and_labels_are_not_char_literals() {
+        let f = SourceFile::scan(
+            "x.rs",
+            "impl<'a> Foo<'a> { fn b(&'a self) { 'outer: loop { break 'outer; } } }\n",
+        );
+        assert!(f.lines[0].code.contains("'outer: loop"));
+    }
+
+    #[test]
+    fn escaped_char_literals_close_correctly() {
+        let f = SourceFile::scan("x.rs", "let a = '\\''; let b = '\\u{8}'; vec![a, b];\n");
+        assert!(f.lines[0].code.contains("vec!"), "code: {}", f.lines[0].code);
+        // The braces of '\u{8}' must not reach the region brace counter.
+        assert!(!f.lines[0].code.contains('{'), "code: {}", f.lines[0].code);
+    }
+
+    #[test]
+    fn raw_strings_are_blanked() {
+        let src = "let s = r#\"quote \" and vec! inside\"#; Box::new(1);\n";
+        let f = SourceFile::scan("x.rs", src);
+        assert!(!f.lines[0].code.contains("vec!"));
+        assert!(f.lines[0].code.contains("Box::new"));
+    }
+
+    #[test]
+    fn multi_line_strings_stay_blanked() {
+        let src = "let s = \"first\nvec! still in string\nend\"; vec![2];\n";
+        let f = SourceFile::scan("x.rs", src);
+        assert!(!f.lines[1].code.contains("vec!"));
+        assert!(f.lines[2].code.contains("vec!"));
+    }
+
+    #[test]
+    fn block_comments_nest_and_span_lines() {
+        let src = "/* outer /* inner */ still comment */ let x = 1;\n/* open\nvec!\n*/ let y = 2;\n";
+        let f = SourceFile::scan("x.rs", src);
+        assert!(f.lines[0].code.contains("let x"));
+        assert!(!f.lines[0].code.contains("inner"));
+        assert!(!f.lines[2].code.contains("vec!"));
+        assert!(f.lines[3].code.contains("let y"));
+    }
+
+    #[test]
+    fn cfg_test_region_tracks_braces() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() {}\n}\nfn c() {}\n";
+        let f = SourceFile::scan("x.rs", src);
+        assert!(!f.lines[0].in_test);
+        assert!(f.lines[3].in_test);
+        assert!(!f.lines[5].in_test);
+    }
+
+    #[test]
+    fn alloc_region_covers_the_next_block_only() {
+        let src = "\
+fn setup() {
+    let a = 1;
+    // lint: alloc_free
+    for _k in 0..3 {
+        if true {
+            body();
+        }
+    }
+    let after = 2;
+}
+";
+        let f = SourceFile::scan("x.rs", src);
+        assert!(!f.lines[1].in_alloc_free, "before the annotated loop");
+        assert!(f.lines[5].in_alloc_free, "inside a nested block");
+        assert!(!f.lines[8].in_alloc_free, "after the loop closes");
+    }
+
+    #[test]
+    fn prose_mentioning_the_marker_does_not_open_a_region() {
+        // Doc comments start with `/` or `!` after the `//`, so the
+        // starts_with check must not bind them to the next block.
+        let src = "/// annotated `// lint: alloc_free` bodies\nfn f() {\n    let v = vec![1];\n}\n";
+        let f = SourceFile::scan("x.rs", src);
+        assert!(!f.lines[2].in_alloc_free);
+    }
+}

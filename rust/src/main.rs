@@ -14,6 +14,10 @@
 //! * `experiment <fig3|fig4|fig5|fig6|fig8>` — regenerate a paper figure.
 //! * `gvt-demo` — timing demo: GVT vs explicit mat-vec on one problem.
 //! * `runtime-info` — list AOT artifacts and smoke-run one.
+//! * `lint` — `gvt-lint`: static analysis enforcing the repo's
+//!   determinism / alloc-free / unsafe-audit / env-registry /
+//!   panic-surface contracts (see `rust/src/lint/`); exits non-zero on
+//!   any finding.
 //!
 //! `--quick` shrinks every experiment to smoke-test size.
 
@@ -41,6 +45,7 @@ fn main() {
         "experiment" => cmd_experiment(&cli),
         "gvt-demo" => cmd_gvt_demo(&cli),
         "runtime-info" => cmd_runtime_info(&cli),
+        "lint" => cmd_lint(&cli),
         "" | "help" | "--help" => {
             print_help();
             Ok(())
@@ -74,7 +79,10 @@ fn print_help() {
          \x20                               (fig4/5/6: --solver minres|cg|sgd|all puts\n\
          \x20                               CG/SGD rows next to the MINRES baseline)\n\
          \x20 gvt-demo                      GVT vs explicit mat-vec timing\n\
-         \x20 runtime-info                  list + smoke-run AOT artifacts\n\n\
+         \x20 runtime-info                  list + smoke-run AOT artifacts\n\
+         \x20 lint [paths…]                 static analysis: determinism / alloc-free /\n\
+         \x20                               unsafe-audit / env-registry / panic-surface\n\
+         \x20                               contract rules (--json for tooling)\n\n\
          COMMON OPTIONS:\n\
          \x20 --seed <u64>      master seed (default 42)\n\
          \x20 --folds <n>       CV folds (default 9)\n\
@@ -374,4 +382,29 @@ fn cmd_runtime_info(cli: &Cli) -> Result<()> {
         println!("XLA vs rust-native GVT: max|Δ| = {err:.3e} (f32 artifact)");
     }
     Ok(())
+}
+
+fn cmd_lint(cli: &Cli) -> Result<()> {
+    use gvt_rls::lint;
+    let root = lint::find_repo_root().ok_or_else(|| {
+        gvt_err!("lint: no repo root (a directory holding rust/src and README.md) above the current directory")
+    })?;
+    let paths: Vec<std::path::PathBuf> =
+        cli.positionals.iter().map(std::path::PathBuf::from).collect();
+    let report = lint::lint_repo(&root, &paths)?;
+    if cli.has_switch("json") {
+        println!("{}", report.render_json());
+    } else {
+        print!("{}", report.render_text());
+    }
+    if report.findings.is_empty() {
+        if !cli.has_switch("json") {
+            println!("gvt-lint: clean ({} files)", report.files_scanned);
+        }
+        Ok(())
+    } else {
+        // Non-zero exit through the standard error path; the findings
+        // themselves went to stdout above.
+        Err(gvt_err!("gvt-lint: {} finding(s)", report.findings.len()))
+    }
 }

@@ -17,9 +17,15 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
+/// Maximum container nesting. Recursive descent uses one stack frame per
+/// level, so an attacker-supplied `[[[[…` would otherwise overflow the
+/// thread stack (an abort, not a catchable error) — fatal for the serve
+/// path, which parses untrusted request lines with this parser.
+const MAX_DEPTH: usize = 128;
+
 impl Json {
     pub fn parse(text: &str) -> Result<Json> {
-        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -70,6 +76,8 @@ impl Json {
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    /// Current container nesting level (bounded by [`MAX_DEPTH`]).
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -100,8 +108,8 @@ impl<'a> Parser<'a> {
     fn value(&mut self) -> Result<Json> {
         self.skip_ws();
         match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
+            Some(b'{') => self.nested(true),
+            Some(b'[') => self.nested(false),
             Some(b'"') => Ok(Json::Str(self.string()?)),
             Some(b't') => self.literal("true", Json::Bool(true)),
             Some(b'f') => self.literal("false", Json::Bool(false)),
@@ -109,6 +117,18 @@ impl<'a> Parser<'a> {
             Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
             other => bail!("unexpected {:?} at byte {}", other.map(|b| b as char), self.pos),
         }
+    }
+
+    /// Parse a container (object if `obj`, else array) one nesting level
+    /// down, keeping recursion bounded (see [`MAX_DEPTH`]).
+    fn nested(&mut self, obj: bool) -> Result<Json> {
+        if self.depth >= MAX_DEPTH {
+            bail!("JSON nesting deeper than {MAX_DEPTH} levels at byte {}", self.pos);
+        }
+        self.depth += 1;
+        let v = if obj { self.object() } else { self.array() };
+        self.depth -= 1;
+        v
     }
 
     fn literal(&mut self, lit: &str, v: Json) -> Result<Json> {
@@ -280,5 +300,20 @@ mod tests {
         assert!(Json::parse("{").is_err());
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("{} extra").is_err());
+    }
+
+    #[test]
+    fn nesting_depth_is_bounded() {
+        // Within the limit: parses fine.
+        let ok = format!("{}1{}", "[".repeat(100), "]".repeat(100));
+        assert!(Json::parse(&ok).is_ok());
+        // A hostile `[[[[…` bomb errors instead of overflowing the stack
+        // (an overflow aborts the process — no test could observe it).
+        let bomb = "[".repeat(200_000);
+        let err = Json::parse(&bomb).unwrap_err();
+        assert!(format!("{err:#}").contains("nesting"), "{err:#}");
+        // Mixed object/array nesting hits the same bound.
+        let mixed = "{\"a\":".repeat(5_000);
+        assert!(Json::parse(&mixed).is_err());
     }
 }

@@ -193,6 +193,9 @@ struct JobCore {
     /// Type-erased `&F` of the submitting call.
     data: *const (),
     /// Monomorphized trampoline invoking `(*data)(chunk_index)`.
+    /// SAFETY: may be invoked only while `data` still points to the live
+    /// closure this header was built from (the liveness protocol above),
+    /// and only with a chunk index below `chunks`.
     call: unsafe fn(*const (), usize),
     chunks: usize,
     /// Chunk-claim counter; `fetch_add` hands out indices. Values ≥
@@ -211,6 +214,10 @@ struct JobCore {
 /// (see [`JobCore`] liveness protocol), and `JobCore`'s fields are all
 /// thread-safe to access through a shared reference.
 struct JobPtr(*const JobCore);
+// SAFETY: sending the raw pointer across threads is sound under the
+// liveness protocol above — the pointee outlives its queue entry — and
+// every `JobCore` field is accessed through atomics or a Mutex, so
+// shared access from any thread is safe.
 unsafe impl Send for JobPtr {}
 
 // ---------------------------------------------------------------------
@@ -289,10 +296,16 @@ fn worker_loop(shared: &'static PoolShared) {
             loop {
                 // Opportunistically retire drained entries.
                 q.retain(|p| {
+                    // SAFETY: an entry in the queue guarantees its header
+                    // is alive — submitters retire their entry (under
+                    // this lock) before their stack frame can die.
                     let j = unsafe { &*p.0 };
                     j.next.load(Ordering::Relaxed) < j.chunks
                 });
                 if let Some(p) = q.front() {
+                    // SAFETY: same liveness argument as the retain above;
+                    // the fetch_add attaches us, which additionally pins
+                    // the header past retirement until we detach below.
                     let j = unsafe { &*p.0 };
                     j.refs.fetch_add(1, Ordering::Acquire);
                     break p.0;
@@ -300,9 +313,13 @@ fn worker_loop(shared: &'static PoolShared) {
                 q = shared.work_cv.wait(q).unwrap();
             }
         };
+        // SAFETY: we are attached (refs > 0), so the submitter cannot
+        // return and invalidate the header until we detach.
         run_job_chunks(unsafe { &*job });
-        // Detach. After this store the submitter may observe refs == 0
-        // and free the header — `job` must not be touched again.
+        // SAFETY: still attached, so the header is alive for this final
+        // access. Detach: after this store the submitter may observe
+        // refs == 0 and free the header — `job` must not be touched
+        // again.
         unsafe { &*job }.refs.fetch_sub(1, Ordering::Release);
         // Lock-then-notify handshake with waiting submitters.
         drop(shared.done_lock.lock().unwrap());
@@ -312,6 +329,8 @@ fn worker_loop(shared: &'static PoolShared) {
 
 /// Claim and execute chunks of `job` until its counter is drained.
 /// Shared by pool workers and helping submitters.
+// lint: alloc_free — the chunk-claim/execute loop runs inside solver
+// iterations on every worker (tests/alloc_free.rs counts all threads).
 fn run_job_chunks(job: &JobCore) {
     loop {
         let ci = job.next.fetch_add(1, Ordering::Relaxed);
@@ -322,7 +341,10 @@ fn run_job_chunks(job: &JobCore) {
         // Contain chunk panics: an unwinding pool worker would strand
         // the submitter. The first payload is re-thrown on the
         // submitter, so test assertions inside parallel closures keep
-        // their messages.
+        // their messages. SAFETY: `ci < chunks` was checked above and
+        // the claim counter hands each index out exactly once, and the
+        // header (hence `data`) is alive for the duration of the call —
+        // the trampoline's contract holds.
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
             (job.call)(job.data, ci)
         }));
@@ -355,6 +377,8 @@ fn run_job_chunks(job: &JobCore) {
 /// region (the nested-parallelism guard). Honors the `GVT_RLS_POOL=0` /
 /// [`set_pool_enabled`] ablation by falling back to scoped spawning with
 /// identical chunking.
+// lint: alloc_free — submission runs inside solver iterations; the job
+// header lives on this stack frame and the queue reuses its capacity.
 pub fn run_chunks<F>(chunks: usize, f: F)
 where
     F: Fn(usize) + Sync,
@@ -375,10 +399,15 @@ where
     }
 }
 
+// lint: alloc_free — the pooled submission path (verified dynamically by
+// the pooled section of tests/alloc_free.rs).
 fn run_pooled<F>(chunks: usize, f: &F)
 where
     F: Fn(usize) + Sync,
 {
+    // SAFETY: callers must pass the `data` pointer of the `&F` this job
+    // was built from, still alive; the cast reconstructs exactly that
+    // `&F`, so the dereference is sound for the call's duration.
     unsafe fn call<F: Fn(usize) + Sync>(data: *const (), ci: usize) {
         (*(data as *const F))(ci)
     }
@@ -434,6 +463,7 @@ where
             .lock()
             .unwrap_or_else(|e| e.into_inner())
             .take()
+            // lint: allow(alloc, cold path — runs only after a chunk panicked)
             .unwrap_or_else(|| Box::new("runtime pool: a parallel chunk panicked"));
         std::panic::resume_unwind(payload);
     }

@@ -95,6 +95,8 @@ impl Batcher {
         let worker = std::thread::Builder::new()
             .name("gvt-serve-batcher".into())
             .spawn(move || dispatch_loop(rx, predictor, cfg))
+            // lint: allow(panic, startup-time OS spawn failure, before
+            // any request is accepted — nothing in-band to answer yet)
             .expect("spawning batcher thread");
         Batcher { handle: BatcherHandle { tx }, worker: Some(worker) }
     }
@@ -180,12 +182,17 @@ fn dispatch_loop(rx: mpsc::Receiver<Job>, predictor: Arc<Predictor>, cfg: BatchC
             Ok(scores) => {
                 let mut offset = 0;
                 for (reply, n) in &replies {
+                    // lint: allow(panic, per-job counts sum to the batch
+                    // length by construction, and score() returned one
+                    // score per pair)
                     let slice = scores[offset..offset + n].to_vec();
                     offset += n;
                     let _ = reply.send(Ok(slice));
                 }
             }
             Err(e) if replies.len() == 1 => {
+                // lint: allow(panic, guarded by the match arm — exactly
+                // one reply entry exists here)
                 let _ = replies[0].0.send(Err(format!("{e:#}")));
             }
             Err(_) => {
@@ -198,6 +205,8 @@ fn dispatch_loop(rx: mpsc::Receiver<Job>, predictor: Arc<Predictor>, cfg: BatchC
                 predictor.serve_stats().unrecord_score(batch.len() as u64);
                 let mut offset = 0;
                 for (reply, n) in &replies {
+                    // lint: allow(panic, per-job counts sum to the batch
+                    // length by construction — same slicing as the Ok arm)
                     let res = match predictor.score(&batch[offset..offset + n]) {
                         Ok(scores) => Ok(scores),
                         Err(e) => Err(format!("{e:#}")),

@@ -557,9 +557,12 @@ struct SideBuilder {
     width: usize,
     flat: Vec<f64>,
     count: u32,
+    // lint: allow(determinism, lookup-only dedup map — row order is
+    // fixed by request arrival, never by map iteration)
     known: HashMap<u32, u32>,
     /// id → (row index, features): a repeated id only dedups when its
     /// features match (ids are client-supplied and may collide).
+    // lint: allow(determinism, lookup-only dedup map, never iterated)
     by_id: HashMap<String, (u32, Vec<f64>)>,
 }
 
@@ -569,7 +572,9 @@ impl SideBuilder {
             width,
             flat: Vec::new(),
             count: 0,
+            // lint: allow(determinism, lookup-only dedup maps)
             known: HashMap::new(),
+            // lint: allow(determinism, lookup-only dedup maps)
             by_id: HashMap::new(),
         }
     }

@@ -70,12 +70,14 @@ pub fn parse_request(line: &str) -> Result<Request> {
 
 fn parse_pair(j: &Json) -> Result<QueryPair> {
     if let Some(arr) = j.as_arr() {
-        if arr.len() != 2 {
+        // Slice pattern instead of arr[0]/arr[1]: length check and
+        // element access in one panic-free step.
+        let [d, t] = arr else {
             bail!("pair array must be [drug, target]");
-        }
+        };
         return Ok(QueryPair {
-            drug: parse_ref(&arr[0], "drug")?,
-            target: parse_ref(&arr[1], "target")?,
+            drug: parse_ref(d, "drug")?,
+            target: parse_ref(t, "target")?,
         });
     }
     if j.as_obj().is_some() {

@@ -402,4 +402,72 @@ mod tests {
         server.join().unwrap();
         drop(conn2);
     }
+
+    /// Hostile input on ONE persistent connection: raw non-UTF-8 bytes,
+    /// a deeply-nested JSON bomb (would overflow the handler stack
+    /// without the parser's depth bound — an abort, not an error), and
+    /// an unknown command each answer an in-band error; the same
+    /// connection then scores a valid request, proving no handler
+    /// thread died along the way, and shutdown still joins cleanly.
+    #[test]
+    fn hostile_lines_answer_in_band_and_server_survives() {
+        let predictor = toy_predictor(121);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let pred = predictor.clone();
+        let server = std::thread::spawn(move || {
+            serve_on(
+                listener,
+                pred,
+                BatchConfig { max_batch: 16, max_wait: Duration::from_micros(200) },
+            )
+            .unwrap();
+        });
+
+        fn next_line(reader: &mut BufReader<TcpStream>) -> String {
+            let mut resp = String::new();
+            reader.read_line(&mut resp).unwrap();
+            resp.trim_end().to_string()
+        }
+
+        let mut conn = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+
+        // Bytes that are not valid UTF-8 in any decoding.
+        conn.write_all(&[0xff, 0xfe, 0x80, b'\n']).unwrap();
+        conn.flush().unwrap();
+        let resp = next_line(&mut reader);
+        assert!(resp.contains("\"error\""), "{resp}");
+        assert!(resp.contains("UTF-8"), "{resp}");
+
+        // A nesting bomb well under the 8 MiB line cap: recursive
+        // descent must refuse it, not recurse 60k frames deep.
+        let mut bomb = String::from("{\"pairs\": ");
+        bomb.push_str(&"[".repeat(60_000));
+        bomb.push('\n');
+        conn.write_all(bomb.as_bytes()).unwrap();
+        conn.flush().unwrap();
+        let resp = next_line(&mut reader);
+        assert!(resp.contains("\"error\""), "{resp}");
+        assert!(resp.contains("nesting"), "{resp}");
+
+        // Unknown command.
+        conn.write_all(b"{\"cmd\": \"frobnicate\"}\n").unwrap();
+        conn.flush().unwrap();
+        let resp = next_line(&mut reader);
+        assert!(resp.contains("\"error\""), "{resp}");
+
+        // The same connection still scores.
+        conn.write_all(b"{\"id\": 3, \"pairs\": [[1, 2]]}\n").unwrap();
+        conn.flush().unwrap();
+        let resp = next_line(&mut reader);
+        assert!(resp.contains("\"scores\""), "{resp}");
+
+        conn.write_all(b"{\"cmd\": \"shutdown\"}\n").unwrap();
+        conn.flush().unwrap();
+        let resp = next_line(&mut reader);
+        assert_eq!(resp, "{\"ok\": true}");
+        drop(conn);
+        server.join().unwrap();
+    }
 }

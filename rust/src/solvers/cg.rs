@@ -63,6 +63,8 @@ where
     let mut rel = 1.0;
     let mut converged = false;
 
+    // lint: alloc_free — every per-iteration buffer is sized above; the
+    // loop body must stay heap-silent (tests/alloc_free.rs measures it).
     for k in 1..=opts.max_iters {
         a.apply_into(&p, &mut ap);
         let pap = dot(&p, &ap);

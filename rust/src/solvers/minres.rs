@@ -103,6 +103,9 @@ where
     let mut iterations = 0;
     let mut rel_res = 1.0;
 
+    // lint: alloc_free — the Lanczos/Givens state is fully allocated
+    // above; the loop body must stay heap-silent (tests/alloc_free.rs
+    // measures it).
     for k in 1..=opts.max_iters {
         // Lanczos step: α, β_{k+1}, next v.
         a.apply_into(&v, &mut av);

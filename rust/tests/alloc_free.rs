@@ -30,17 +30,25 @@ struct CountingAlloc;
 
 static ALLOCS: AtomicU64 = AtomicU64::new(0);
 
+// SAFETY: defers every operation to `System` with the caller's
+// pointer/layout unchanged, inheriting `GlobalAlloc`'s contract; the
+// count is a plain atomic and cannot itself allocate.
 unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: forwards to `System.alloc` with the caller's layout.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
         System.alloc(layout)
     }
 
+    // SAFETY: forwards to `System.realloc`; arguments pass through
+    // untouched.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
         System.realloc(ptr, layout, new_size)
     }
 
+    // SAFETY: forwards to `System.dealloc` with the caller's pointer and
+    // layout untouched.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
         System.dealloc(ptr, layout)
     }

@@ -1,0 +1,33 @@
+//! The shipped tree passes its own static-analysis pass.
+//!
+//! `gvt-rls lint` walks rust/src, rust/tests, rust/benches, and
+//! examples/ and enforces the five source-level contracts (determinism,
+//! hot-path allocation, unsafe audit, env-var registry, panic surface —
+//! see rust/DESIGN.md §Static analysis). This test runs the same pass
+//! in-process so `cargo test` fails the moment a violation lands,
+//! without waiting for scripts/verify.sh.
+//!
+//! The per-rule behavior (that seeded violations ARE caught) is pinned
+//! by the unit fixtures in src/lint/rules.rs; this test pins the other
+//! direction — the real tree is clean.
+
+use std::path::Path;
+
+#[test]
+fn shipped_tree_has_no_lint_findings() {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let root = manifest.parent().expect("rust/ has a parent directory");
+    let report = gvt_rls::lint::lint_repo(root, &[]).expect("lint walks the tree");
+    assert!(
+        report.findings.is_empty(),
+        "gvt-lint findings on the shipped tree:\n{}",
+        report.render_text()
+    );
+    // Guard against the walk silently going blind (wrong root, glob
+    // regression): the crate is far bigger than this.
+    assert!(
+        report.files_scanned > 80,
+        "suspiciously few files scanned: {}",
+        report.files_scanned
+    );
+}

@@ -10,6 +10,13 @@ cd "$(dirname "$0")/.."
 echo "== tier-1: cargo build --release --offline =="
 cargo build --release --offline
 
+echo "== tier-1: gvt-lint (source-level contracts: determinism / alloc-free / unsafe audit / env registry / panic surface) =="
+# Fails on any finding; tests/lint_clean.rs runs the same pass under
+# cargo test, this invocation gates the CLI surface and leaves a
+# machine-readable dump next to the build artifacts.
+target/release/gvt-rls lint
+target/release/gvt-rls lint --json > target/lint.json
+
 echo "== tier-1: cargo test -q =="
 cargo test -q --offline
 
