@@ -91,7 +91,8 @@ fn main() -> gvt_rls::error::Result<()> {
                 &split.train.pairs,
             );
             let (_alpha, _iters) =
-                PairwiseRidge::fit_with_op(&op, &split.train.y, &ridge, model.iterations);
+                PairwiseRidge::fit_with_op(&op, &split.train.y, &ridge, model.iterations)
+                    .unwrap();
             let base_secs = t1.elapsed().as_secs_f64();
             (
                 format!("{base_secs:>9.2}s"),

@@ -62,7 +62,11 @@ fn main() -> gvt_rls::error::Result<()> {
     //    200 µs window into one multi-row GVT pass.
     let batcher = Batcher::start(
         predictor.clone(),
-        BatchConfig { max_batch: 128, max_wait: Duration::from_micros(200) },
+        BatchConfig {
+            max_batch: 128,
+            max_wait: Duration::from_micros(200),
+            ..Default::default()
+        },
     );
     let mut clients = Vec::new();
     for c in 0..6u32 {

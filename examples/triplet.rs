@@ -98,7 +98,8 @@ fn main() -> gvt_rls::error::Result<()> {
         &y_train,
         &MinresOptions { max_iters: if quick { 40 } else { 100 }, rel_tol: 1e-8 },
         |_, _, _| ControlFlow::Continue(()),
-    );
+    )
+    .unwrap();
     let train_secs = t0.elapsed().as_secs_f64();
 
     // Predict: one third-order GVT product.

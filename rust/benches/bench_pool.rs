@@ -110,7 +110,8 @@ fn main() {
                         black_box(&y),
                         &MinresOptions { max_iters: iters, rel_tol: 0.0 },
                         |_, _, _| ControlFlow::Continue(()),
-                    );
+                    )
+                    .unwrap();
                     black_box(out.x);
                 },
             );

@@ -125,6 +125,7 @@ fn main() {
             ServeBatch {
                 max_batch: 64,
                 max_wait: Duration::from_micros(window_us),
+                ..ServeBatch::default()
             },
         );
         let mut threads = Vec::new();

@@ -69,7 +69,8 @@ fn main() {
                         None,
                         &CgOptions { max_iters: 10_000, rel_tol: epsilon },
                         |_, _, _| ControlFlow::Continue(()),
-                    );
+                    )
+                    .unwrap();
                     cg_iters = out.iterations;
                     black_box(out.x);
                 },

@@ -35,12 +35,15 @@ fn main() {
     .unwrap();
     suite.run(&format!("minres {iters} iters, GVT operator"), &cfg, || {
         let shifted = ShiftedOp::new(&gvt_op, 1e-5);
-        black_box(minres(
-            &shifted,
-            black_box(&data.y),
-            &MinresOptions { max_iters: iters, rel_tol: 0.0 },
-            |_, _, _| ControlFlow::Continue(()),
-        ));
+        black_box(
+            minres(
+                &shifted,
+                black_box(&data.y),
+                &MinresOptions { max_iters: iters, rel_tol: 0.0 },
+                |_, _, _| ControlFlow::Continue(()),
+            )
+            .unwrap(),
+        );
     });
 
     if n <= 8_000 {
@@ -53,12 +56,15 @@ fn main() {
         );
         suite.run(&format!("minres {iters} iters, explicit operator"), &cfg, || {
             let shifted = ShiftedOp::new(&exp_op, 1e-5);
-            black_box(minres(
-                &shifted,
-                black_box(&data.y),
-                &MinresOptions { max_iters: iters, rel_tol: 0.0 },
-                |_, _, _| ControlFlow::Continue(()),
-            ));
+            black_box(
+                minres(
+                    &shifted,
+                    black_box(&data.y),
+                    &MinresOptions { max_iters: iters, rel_tol: 0.0 },
+                    |_, _, _| ControlFlow::Continue(()),
+                )
+                .unwrap(),
+            );
         });
     }
 

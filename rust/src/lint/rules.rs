@@ -59,11 +59,17 @@ fn deterministic_scope(rel: &str) -> bool {
 }
 
 /// The serve request path: a panic here kills a connection or the
-/// dispatcher instead of producing an in-band JSON error.
+/// dispatcher instead of producing an in-band JSON error. The fault
+/// registry and the hot-reload slot are on that path too — an injected
+/// fault or a failed reload must surface in-band, never abort.
 fn panic_scope(rel: &str) -> bool {
     matches!(
         rel,
-        "rust/src/serve/protocol.rs" | "rust/src/serve/server.rs" | "rust/src/serve/batcher.rs"
+        "rust/src/serve/protocol.rs"
+            | "rust/src/serve/server.rs"
+            | "rust/src/serve/batcher.rs"
+            | "rust/src/serve/reload.rs"
+            | "rust/src/runtime/fault.rs"
     )
 }
 

@@ -30,6 +30,13 @@ static ALLOC: gvt_rls::coordinator::memory::TrackingAlloc =
     gvt_rls::coordinator::memory::TrackingAlloc;
 
 fn main() {
+    // Arm deterministic fault injection (GVT_RLS_FAULT) before any
+    // command runs, so verify.sh can exercise serve/persist failure
+    // paths; a malformed spec is a startup error, not an ignored knob.
+    if let Err(e) = gvt_rls::runtime::fault::init_from_env() {
+        eprintln!("error: {e:#}");
+        std::process::exit(2);
+    }
     let cli = match Cli::parse(std::env::args().skip(1)) {
         Ok(c) => c,
         Err(e) => {
@@ -74,7 +81,10 @@ fn print_help() {
          \x20                               --tol X --check-every N --patience N --average)\n\
          \x20 predict                       score a pair list offline (--model --pairs [--out])\n\
          \x20 serve                         prediction server (--model; --listen ADDR | --stdio;\n\
-         \x20                               --max-batch N --max-wait-us U --cache N)\n\
+         \x20                               --max-batch N --max-wait-us U --cache N;\n\
+         \x20                               robustness: --max-inflight N --deadline-us U\n\
+         \x20                               --max-conns N --idle-timeout-ms MS --drain-ms MS\n\
+         \x20                               --reload-stdin)\n\
          \x20 experiment <fig3|fig4|fig5|fig6|fig8>   regenerate a paper figure\n\
          \x20                               (fig4/5/6: --solver minres|cg|sgd|all puts\n\
          \x20                               CG/SGD rows next to the MINRES baseline)\n\
@@ -268,17 +278,35 @@ fn cmd_predict(cli: &Cli) -> Result<()> {
 }
 
 fn cmd_serve(cli: &Cli) -> Result<()> {
-    use gvt_rls::serve::{serve_stdio, serve_tcp, BatchConfig, Predictor, ServeOptions};
+    use gvt_rls::serve::{
+        serve_stdio, serve_tcp, BatchConfig, Predictor, ServeConfig, ServeOptions,
+    };
     use std::sync::Arc;
+    use std::time::Duration;
 
     let model_path = cli.require_opt("model")?;
-    let predictor = Arc::new(Predictor::from_file(
-        std::path::Path::new(model_path),
-        ServeOptions { cache_capacity: cli.opt_usize("cache", 1024)? },
-    )?);
-    let batch = BatchConfig {
-        max_batch: cli.opt_usize("max-batch", 256)?,
-        max_wait: std::time::Duration::from_micros(cli.opt_u64("max-wait-us", 500)?),
+    let serve_opts = ServeOptions { cache_capacity: cli.opt_usize("cache", 1024)? };
+    let predictor =
+        Arc::new(Predictor::from_file(std::path::Path::new(model_path), serve_opts)?);
+    // The admission budget falls back to GVT_RLS_MAX_INFLIGHT so
+    // operators can bound a fleet without touching launch scripts.
+    let max_inflight_default = std::env::var("GVT_RLS_MAX_INFLIGHT")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .unwrap_or(0);
+    let cfg = ServeConfig {
+        batch: BatchConfig {
+            max_batch: cli.opt_usize("max-batch", 256)?,
+            max_wait: Duration::from_micros(cli.opt_u64("max-wait-us", 500)?),
+            max_inflight: cli.opt_usize("max-inflight", max_inflight_default)?,
+            deadline: Duration::from_micros(cli.opt_u64("deadline-us", 0)?),
+        },
+        max_connections: cli.opt_usize("max-conns", 0)?,
+        idle_timeout: Duration::from_millis(cli.opt_u64("idle-timeout-ms", 0)?),
+        drain_timeout: Duration::from_millis(cli.opt_u64("drain-ms", 2000)?),
+        model_path: Some(std::path::PathBuf::from(model_path)),
+        serve_opts,
+        reload_stdin: cli.has_switch("reload-stdin"),
     };
     eprintln!(
         "serving {} (policy {}, {} training pairs; plan: {})",
@@ -288,10 +316,10 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         predictor.plan_summary()
     );
     if cli.has_switch("stdio") {
-        serve_stdio(predictor, batch)
+        serve_stdio(predictor, cfg)
     } else {
         let listen = cli.opt_or("listen", "127.0.0.1:0");
-        serve_tcp(predictor, &listen, batch)
+        serve_tcp(predictor, &listen, cfg)
     }
 }
 

@@ -1,0 +1,267 @@
+//! Deterministic fault injection around the serve and persist seams.
+//!
+//! Production hardening is only trustworthy if every failure path is
+//! *executed*, not inspected: `tests/serve_faults.rs` drives the server
+//! through dispatcher panics, truncated artifacts, stalled reads, and
+//! overload bursts by arming this registry instead of hoping for real
+//! faults. Design constraints:
+//!
+//! * **Zero cost when off.** The hot-path check ([`trip`]) is a single
+//!   relaxed atomic load returning `None`; parsing, locking, and
+//!   book-keeping live behind it in a `#[cold]` slow path.
+//! * **Deterministic.** A fault is `point:kind[:nth]` — it fires on the
+//!   `nth` hit (1-based, default 1) of that injection point and then
+//!   disarms. No randomness, no seeds to replay: the same arming always
+//!   fires at the same place.
+//! * **Two arming channels.** The `GVT_RLS_FAULT` environment variable
+//!   (read once by [`init_from_env`], which `main` calls before
+//!   dispatch) arms faults for CLI runs — `scripts/verify.sh` uses this
+//!   to exercise the serve binary under injected failure. In-process
+//!   tests arm with [`set`] / [`clear`] instead, since the registry is
+//!   process-global state.
+//!
+//! Injection points compiled into the tree (the `point` names [`trip`]
+//! is called with):
+//!
+//! | point | seam |
+//! |---|---|
+//! | `batcher_dispatch` | the micro-batch dispatcher, just before scoring |
+//! | `artifact_read` | `ModelFile::read`, just after the file is read |
+//! | `conn_read` | the per-connection TCP read loop |
+//!
+//! Kinds: `panic` panics at the site (the dispatcher's `catch_unwind`
+//! recovery is the thing under test), `error` asks the caller to fail
+//! with an injected error, `stall` sleeps [`STALL`] then proceeds
+//! normally (saturates queues / holds batches), and `truncate` asks the
+//! caller to truncate the data it just read (artifact corruption).
+
+use crate::error::{bail, Context, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// What an armed fault does when its point trips.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum FaultKind {
+    /// Panic at the injection site.
+    Panic,
+    /// Tell the caller to surface an injected error in-band.
+    Error,
+    /// Hold the tripping thread for [`STALL`], then proceed normally.
+    Stall,
+    /// Tell the caller to truncate the data it just read.
+    Truncate,
+}
+
+/// A fired fault the *caller* must act on. `panic` and `stall` kinds
+/// are handled inside [`trip`] and never reach the caller.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Fired {
+    /// Fail the current operation with an injected error.
+    Error,
+    /// Truncate the just-read data before parsing it.
+    Truncate,
+}
+
+/// How long a `stall` fault holds its thread. Long enough that a test
+/// can deterministically order events around it, short enough that the
+/// fault suite stays fast.
+pub const STALL: Duration = Duration::from_millis(400);
+
+#[derive(Clone, Debug)]
+struct Spec {
+    point: String,
+    kind: FaultKind,
+    /// Fires on the `nth` hit of `point` (1-based), then disarms.
+    nth: u32,
+    hits: u32,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static ARMED: Mutex<Vec<Spec>> = Mutex::new(Vec::new());
+
+fn armed() -> std::sync::MutexGuard<'static, Vec<Spec>> {
+    // A poisoned registry only means another thread panicked while
+    // holding it (e.g. an injected panic racing a re-arm); the spec
+    // list itself is always structurally valid.
+    ARMED.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Arm the registry from a spec string: comma-separated
+/// `point:kind[:nth]` entries, e.g. `batcher_dispatch:panic` or
+/// `artifact_read:truncate:1,conn_read:stall:2`. Replaces any previous
+/// arming. An empty spec disarms everything (same as [`clear`]).
+pub fn set(spec: &str) -> Result<()> {
+    let specs = parse(spec)?;
+    let mut guard = armed();
+    ENABLED.store(!specs.is_empty(), Ordering::Release);
+    *guard = specs;
+    Ok(())
+}
+
+/// Disarm every fault and restore the zero-cost fast path.
+pub fn clear() {
+    let mut guard = armed();
+    guard.clear();
+    ENABLED.store(false, Ordering::Release);
+}
+
+/// Read `GVT_RLS_FAULT` once and arm the registry from it. Called by
+/// `main` before command dispatch; a malformed spec is a startup error,
+/// not a silently ignored knob.
+pub fn init_from_env() -> Result<()> {
+    match std::env::var("GVT_RLS_FAULT") {
+        Ok(spec) if !spec.trim().is_empty() => {
+            set(&spec).context("parsing GVT_RLS_FAULT")
+        }
+        _ => Ok(()),
+    }
+}
+
+fn parse(spec: &str) -> Result<Vec<Spec>> {
+    let mut out = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let mut fields = part.split(':');
+        let point = fields.next().unwrap_or("");
+        let kind = match fields.next() {
+            Some("panic") => FaultKind::Panic,
+            Some("error") => FaultKind::Error,
+            Some("stall") => FaultKind::Stall,
+            Some("truncate") => FaultKind::Truncate,
+            other => bail!(
+                "fault spec {part:?}: unknown kind {other:?} (expected panic|error|stall|truncate)"
+            ),
+        };
+        if point.is_empty() {
+            bail!("fault spec {part:?}: empty injection point");
+        }
+        let nth = match fields.next() {
+            None => 1,
+            Some(n) => n
+                .parse::<u32>()
+                .with_context(|| format!("fault spec {part:?}: nth must be a positive integer"))?,
+        };
+        if nth == 0 {
+            bail!("fault spec {part:?}: nth is 1-based (first hit = 1)");
+        }
+        if fields.next().is_some() {
+            bail!("fault spec {part:?}: too many fields (point:kind[:nth])");
+        }
+        out.push(Spec { point: point.to_string(), kind, nth, hits: 0 });
+    }
+    Ok(out)
+}
+
+/// Trip the named injection point. With nothing armed this is one
+/// relaxed atomic load and `None` — safe to compile into hot seams.
+/// When an armed fault fires here: `panic` panics, `stall` sleeps
+/// [`STALL`] and returns `None`, `error`/`truncate` return [`Fired`]
+/// for the caller to act on. Each armed fault fires exactly once.
+#[inline]
+pub fn trip(point: &str) -> Option<Fired> {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return None;
+    }
+    trip_slow(point)
+}
+
+#[cold]
+fn trip_slow(point: &str) -> Option<Fired> {
+    let fired = {
+        let mut guard = armed();
+        let mut fired = None;
+        for spec in guard.iter_mut() {
+            if spec.point == point && spec.hits < spec.nth {
+                spec.hits += 1;
+                if spec.hits == spec.nth {
+                    fired = Some(spec.kind);
+                    break;
+                }
+            }
+        }
+        fired
+    };
+    match fired? {
+        FaultKind::Panic => {
+            // lint: allow(panic, fault injection: this deliberate panic is the
+            // payload of an armed `panic` fault; the seams that compile in a
+            // trip point catch it and answer in-band)
+            panic!("injected fault: panic at {point}")
+        }
+        FaultKind::Stall => {
+            std::thread::sleep(STALL);
+            None
+        }
+        FaultKind::Error => Some(Fired::Error),
+        FaultKind::Truncate => Some(Fired::Truncate),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // These tests share the process-global registry with every other
+    // test in the lib binary, so they arm only fixture point names no
+    // real seam ever trips, disarm before returning, and serialize
+    // against each other ([`set`] replaces the whole registry).
+    static SERIAL: Mutex<()> = Mutex::new(());
+
+    fn serial() -> std::sync::MutexGuard<'static, ()> {
+        SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        assert!(parse("p:panic").is_ok());
+        assert!(parse("p:panic:3, q:stall").is_ok());
+        assert!(parse("").unwrap().is_empty());
+        assert!(parse("p").is_err(), "missing kind");
+        assert!(parse("p:reboot").is_err(), "unknown kind");
+        assert!(parse(":panic").is_err(), "empty point");
+        assert!(parse("p:panic:0").is_err(), "nth is 1-based");
+        assert!(parse("p:panic:x").is_err(), "non-numeric nth");
+        assert!(parse("p:panic:1:2").is_err(), "trailing fields");
+    }
+
+    #[test]
+    fn disabled_registry_never_fires() {
+        let _g = serial();
+        clear();
+        assert!(trip("fault_fixture_a").is_none());
+    }
+
+    #[test]
+    fn error_fault_fires_on_nth_hit_then_disarms() {
+        let _g = serial();
+        set("fault_fixture_b:error:3").unwrap();
+        assert!(trip("fault_fixture_b").is_none());
+        assert!(trip("fault_fixture_other").is_none(), "different point never fires");
+        assert!(trip("fault_fixture_b").is_none());
+        assert_eq!(trip("fault_fixture_b"), Some(Fired::Error));
+        assert!(trip("fault_fixture_b").is_none(), "one-shot: disarmed after firing");
+        clear();
+    }
+
+    #[test]
+    fn panic_fault_panics_at_the_site() {
+        let _g = serial();
+        set("fault_fixture_c:panic").unwrap();
+        let caught = std::panic::catch_unwind(|| trip("fault_fixture_c"));
+        clear();
+        assert!(caught.is_err(), "panic kind must unwind from trip()");
+        assert!(trip("fault_fixture_c").is_none());
+    }
+
+    #[test]
+    fn truncate_fault_reaches_the_caller() {
+        let _g = serial();
+        set("fault_fixture_d:truncate").unwrap();
+        assert_eq!(trip("fault_fixture_d"), Some(Fired::Truncate));
+        clear();
+    }
+}

@@ -5,6 +5,10 @@
 //!   [`crate::linalg::par`] façade every hot path uses. See its module
 //!   docs for the determinism contract and the `GVT_RLS_THREADS` /
 //!   `GVT_RLS_POOL` knobs.
+//! * [`fault`] — deterministic fault injection (`GVT_RLS_FAULT`):
+//!   zero-cost-when-off trip points compiled around the serve and
+//!   persist seams, so `tests/serve_faults.rs` can exercise panic /
+//!   stall / truncation / overload failure paths on demand.
 //! * [`artifact`] / [`executor`] / [`xla`] — the PJRT bridge (below).
 //!
 //! # PJRT bridge — L3 ↔ L2
@@ -29,6 +33,7 @@
 
 pub mod artifact;
 pub mod executor;
+pub mod fault;
 pub mod json;
 pub mod pool;
 pub mod xla;

@@ -16,9 +16,40 @@
 //! row-independent operation sequence, so a request's scores are
 //! bit-identical whether it was scored alone or coalesced with others
 //! (pinned by `tests/serve_concurrency.rs`).
+//!
+//! # Production hardening
+//!
+//! The dispatcher is the server's single point of failure, so its
+//! failure modes are bounded explicitly (`tests/serve_faults.rs` pins
+//! each one by injecting the fault):
+//!
+//! * **Admission control** ([`BatchConfig::max_inflight`]): the queue
+//!   holds at most that many *pairs* across unanswered requests. A
+//!   request that would exceed the budget is rejected immediately with
+//!   [`ScoreFailure::Overloaded`] and a `retry_after_us` hint — clients
+//!   get in-band backpressure instead of unbounded queueing. A single
+//!   request larger than the whole budget is admitted when the queue is
+//!   empty (it could otherwise never run).
+//! * **Deadlines** ([`BatchConfig::deadline`], or per-request via
+//!   [`BatcherHandle::submit`]): each job carries its expiry; when the
+//!   dispatcher assembles a batch it answers expired jobs with an error
+//!   instead of scoring them, so a stalled queue fails fast in-band
+//!   rather than holding every rider hostage.
+//! * **Panic recovery**: the scoring pass runs under `catch_unwind`; a
+//!   panic answers every job of that batch with an in-band internal
+//!   error and the dispatcher keeps serving the next batch.
+//! * **Model hot-swap**: the dispatcher resolves
+//!   [`PredictorSlot::current`] once per batch, so an in-flight batch
+//!   finishes on the model it started with and the next batch picks up
+//!   a reload atomically.
+//! * **Drain accounting**: after [`PredictorSlot::begin_drain`], every
+//!   job the dispatcher still answers counts into
+//!   `RobustStats::drained_jobs` — the graceful-shutdown ledger.
 
 use crate::error::{gvt_err, Result};
-use crate::serve::predictor::{Predictor, QueryPair};
+use crate::serve::predictor::{Predictor, QueryPair, ServeOptions};
+use crate::serve::reload::{PredictorSlot, RobustStats};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -34,43 +65,154 @@ pub struct BatchConfig {
     /// How long the dispatcher waits for more requests after the first
     /// one of a batch arrives.
     pub max_wait: Duration,
+    /// Admission budget: maximum pairs queued-or-scoring at once across
+    /// all clients (`0` = unbounded). Requests beyond it are rejected
+    /// with [`ScoreFailure::Overloaded`] instead of queued.
+    pub max_inflight: usize,
+    /// Default per-request deadline, measured from enqueue
+    /// (`Duration::ZERO` = none). A request-supplied deadline tightens
+    /// but never loosens this.
+    pub deadline: Duration,
 }
 
 impl Default for BatchConfig {
     fn default() -> Self {
-        Self { max_batch: 256, max_wait: Duration::from_micros(500) }
+        Self {
+            max_batch: 256,
+            max_wait: Duration::from_micros(500),
+            max_inflight: 0,
+            deadline: Duration::ZERO,
+        }
     }
 }
 
-/// One queued request: the query pairs plus the caller's reply channel.
+/// Why a submitted request produced no scores.
+#[derive(Debug)]
+pub enum ScoreFailure {
+    /// Turned away by admission control before queueing; retry after the
+    /// hinted number of microseconds (the protocol layer renders this as
+    /// the in-band `{"error": "overloaded", "retry_after_us": …}` reply).
+    Overloaded {
+        /// Backoff hint: roughly two batching windows.
+        retry_after_us: u64,
+    },
+    /// The request failed after admission (scoring error, expired
+    /// deadline, dispatcher panic, shutdown); the message is
+    /// client-renderable.
+    Failed(String),
+}
+
+impl ScoreFailure {
+    /// The client-facing message for the error-reply path.
+    pub fn message(&self) -> String {
+        match self {
+            ScoreFailure::Overloaded { retry_after_us } => {
+                format!("overloaded; retry in {retry_after_us}us")
+            }
+            ScoreFailure::Failed(msg) => msg.clone(),
+        }
+    }
+}
+
+/// One queued request: the query pairs, the caller's reply channel, and
+/// the instant after which it should be answered with a deadline error
+/// instead of scored.
 struct Job {
     pairs: Vec<QueryPair>,
-    reply: mpsc::Sender<std::result::Result<Vec<f64>, String>>,
+    reply: ReplyTx,
+    deadline: Option<Instant>,
 }
+
+type ReplyTx = mpsc::Sender<std::result::Result<Vec<f64>, String>>;
 
 /// Cloneable client handle onto the dispatcher queue.
 #[derive(Clone)]
 pub struct BatcherHandle {
     tx: mpsc::Sender<Job>,
+    slot: Arc<PredictorSlot>,
+    inflight: Arc<AtomicUsize>,
+    cfg: BatchConfig,
 }
 
 impl BatcherHandle {
     /// Score `pairs`, blocking until the dispatcher's batch containing
     /// them completes. Thread-safe; call from any number of client
-    /// threads.
+    /// threads. Admission rejections and failures are flattened into
+    /// [`enum@crate::error::GvtError`] — the serve path uses
+    /// [`BatcherHandle::submit`] instead to render them distinctly.
     pub fn score(&self, pairs: Vec<QueryPair>) -> Result<Vec<f64>> {
+        self.submit(pairs, None).map_err(|f| gvt_err!("{}", f.message()))
+    }
+
+    /// Score `pairs` with an optional request-supplied deadline (µs from
+    /// now; the configured [`BatchConfig::deadline`] still applies as an
+    /// upper bound). Distinguishes admission rejection from failure so
+    /// the protocol layer can answer `overloaded` with a retry hint.
+    pub fn submit(
+        &self,
+        pairs: Vec<QueryPair>,
+        deadline_us: Option<u64>,
+    ) -> std::result::Result<Vec<f64>, ScoreFailure> {
         if pairs.is_empty() {
             return Ok(Vec::new());
         }
+        let n = pairs.len();
+        if !self.admit(n) {
+            RobustStats::bump(&self.slot.robust.overload_rejected);
+            return Err(ScoreFailure::Overloaded { retry_after_us: self.retry_after_us() });
+        }
+        let deadline = self.effective_deadline(deadline_us);
         let (reply_tx, reply_rx) = mpsc::channel();
-        self.tx
-            .send(Job { pairs, reply: reply_tx })
-            .map_err(|_| gvt_err!("batcher is shut down"))?;
+        if self.tx.send(Job { pairs, reply: reply_tx, deadline }).is_err() {
+            // Never reached the queue: back the admission out ourselves.
+            self.inflight.fetch_sub(n, Ordering::AcqRel);
+            return Err(ScoreFailure::Failed("batcher is shut down".to_string()));
+        }
         match reply_rx.recv() {
             Ok(Ok(scores)) => Ok(scores),
-            Ok(Err(msg)) => Err(gvt_err!("{msg}")),
-            Err(_) => Err(gvt_err!("batcher dropped the request")),
+            Ok(Err(msg)) => Err(ScoreFailure::Failed(msg)),
+            Err(_) => Err(ScoreFailure::Failed("batcher dropped the request".to_string())),
         }
+    }
+
+    /// Reserve `n` pairs of the in-flight budget. With the budget
+    /// saturated this fails without queueing; an over-budget request is
+    /// still admitted when nothing is in flight (it could never run
+    /// otherwise).
+    fn admit(&self, n: usize) -> bool {
+        let cap = self.cfg.max_inflight;
+        if cap == 0 {
+            self.inflight.fetch_add(n, Ordering::AcqRel);
+            return true;
+        }
+        self.inflight
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |cur| {
+                if cur == 0 || cur.saturating_add(n) <= cap {
+                    Some(cur + n)
+                } else {
+                    None
+                }
+            })
+            .is_ok()
+    }
+
+    /// Backoff hint for rejected requests: two batching windows, at
+    /// least 100 µs.
+    fn retry_after_us(&self) -> u64 {
+        (self.cfg.max_wait.as_micros() as u64).saturating_mul(2).max(100)
+    }
+
+    /// Combine the configured default deadline with a request-supplied
+    /// one (the tighter wins; `None`/zero-config means unbounded).
+    fn effective_deadline(&self, deadline_us: Option<u64>) -> Option<Instant> {
+        let cfg_us = self.cfg.deadline.as_micros() as u64;
+        let limit = match (cfg_us, deadline_us) {
+            (0, None) => None,
+            (0, Some(us)) => Some(us),
+            (c, None) => Some(c),
+            (c, Some(us)) => Some(us.min(c)),
+        };
+        limit.map(|us| Instant::now() + Duration::from_micros(us))
     }
 }
 
@@ -82,23 +224,36 @@ pub struct Batcher {
 }
 
 impl Batcher {
-    /// Spawn the dispatcher thread over `predictor`. Also pre-spawns the
+    /// Spawn the dispatcher over a bare predictor (wraps it in a private
+    /// [`PredictorSlot`] — tests, benches, and examples use this; the
+    /// server passes its own slot via [`Batcher::start_with_slot`] so
+    /// reloads and robustness counters are shared).
+    pub fn start(predictor: Arc<Predictor>, cfg: BatchConfig) -> Batcher {
+        Batcher::start_with_slot(PredictorSlot::new(predictor, ServeOptions::default()), cfg)
+    }
+
+    /// Spawn the dispatcher thread over `slot`. Also pre-spawns the
     /// shared runtime pool's workers ([`crate::runtime::pool::warm`]):
     /// the dispatcher executes every batch product on the pool, and a
     /// lazily-started pool would tax the first request with thread
     /// creation. (Bit-stability is unaffected — the pool's unit of work
     /// is whole output rows, so results do not depend on worker count or
     /// chunk-claim order.)
-    pub fn start(predictor: Arc<Predictor>, cfg: BatchConfig) -> Batcher {
+    pub fn start_with_slot(slot: Arc<PredictorSlot>, cfg: BatchConfig) -> Batcher {
         crate::runtime::pool::warm();
         let (tx, rx) = mpsc::channel::<Job>();
-        let worker = std::thread::Builder::new()
-            .name("gvt-serve-batcher".into())
-            .spawn(move || dispatch_loop(rx, predictor, cfg))
-            // lint: allow(panic, startup-time OS spawn failure, before
-            // any request is accepted — nothing in-band to answer yet)
-            .expect("spawning batcher thread");
-        Batcher { handle: BatcherHandle { tx }, worker: Some(worker) }
+        let inflight = Arc::new(AtomicUsize::new(0));
+        let worker = {
+            let slot = slot.clone();
+            let inflight = inflight.clone();
+            std::thread::Builder::new()
+                .name("gvt-serve-batcher".into())
+                .spawn(move || dispatch_loop(rx, slot, inflight, cfg))
+                // lint: allow(panic, startup-time OS spawn failure, before
+                // any request is accepted — nothing in-band to answer yet)
+                .expect("spawning batcher thread")
+        };
+        Batcher { handle: BatcherHandle { tx, slot, inflight, cfg }, worker: Some(worker) }
     }
 
     /// A new client handle.
@@ -113,12 +268,55 @@ impl Batcher {
     pub fn shutdown(self) {
         // Drop does the work: replaces the live sender, joins the worker.
     }
+
+    /// Close the queue, then wait up to `timeout` for the dispatcher to
+    /// flush what is queued and exit. Returns `true` on a clean join;
+    /// on `false` the worker is abandoned (detached) so shutdown cannot
+    /// hang on a stuck batch — the hard-stop half of graceful drain.
+    pub fn shutdown_within(mut self, timeout: Duration) -> bool {
+        self.close_queue();
+        let clean = match &self.worker {
+            None => true,
+            Some(w) => {
+                let deadline = Instant::now() + timeout;
+                loop {
+                    if w.is_finished() {
+                        break true;
+                    }
+                    if Instant::now() >= deadline {
+                        break false;
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            }
+        };
+        if clean {
+            if let Some(w) = self.worker.take() {
+                let _ = w.join();
+            }
+        } else {
+            // Hard stop: detach the worker instead of blocking forever.
+            drop(self.worker.take());
+        }
+        clean
+    }
+
+    /// Swap this batcher's live sender for one whose receiver is gone,
+    /// so the dispatcher can observe disconnect once queued jobs and
+    /// client handles are done.
+    fn close_queue(&mut self) {
+        self.handle = BatcherHandle {
+            tx: dead_sender(),
+            slot: self.handle.slot.clone(),
+            inflight: self.handle.inflight.clone(),
+            cfg: self.handle.cfg,
+        };
+    }
 }
 
 impl Drop for Batcher {
     fn drop(&mut self) {
-        // Replace the live sender so the worker can observe disconnect.
-        self.handle = BatcherHandle { tx: dead_sender() };
+        self.close_queue();
         if let Some(w) = self.worker.take() {
             let _ = w.join();
         }
@@ -131,7 +329,12 @@ fn dead_sender() -> mpsc::Sender<Job> {
     tx
 }
 
-fn dispatch_loop(rx: mpsc::Receiver<Job>, predictor: Arc<Predictor>, cfg: BatchConfig) {
+fn dispatch_loop(
+    rx: mpsc::Receiver<Job>,
+    slot: Arc<PredictorSlot>,
+    inflight: Arc<AtomicUsize>,
+    cfg: BatchConfig,
+) {
     // A job that would push the current batch past max_batch is not
     // merged; it opens the next batch instead.
     let mut carry: Option<Job> = None;
@@ -141,45 +344,85 @@ fn dispatch_loop(rx: mpsc::Receiver<Job>, predictor: Arc<Predictor>, cfg: BatchC
             Some(job) => job,
             None => match rx.recv() {
                 Ok(job) => job,
-                Err(_) => return, // all handles dropped
+                Err(_) => return, // all handles dropped, queue flushed
             },
         };
-        // Pairs are MOVED into one contiguous batch as jobs arrive (no
-        // per-request clones — featured queries carry feature vectors);
-        // `replies` remembers each job's reply channel and pair count.
-        let mut batch: Vec<QueryPair> = first.pairs;
-        let mut replies: Vec<(mpsc::Sender<std::result::Result<Vec<f64>, String>>, usize)> =
-            vec![(first.reply, batch.len())];
+        let mut jobs = vec![first];
+        let mut total: usize = jobs.iter().map(|j| j.pairs.len()).sum();
         let deadline = Instant::now() + cfg.max_wait;
-        while batch.len() < cfg.max_batch {
+        while total < cfg.max_batch {
             let now = Instant::now();
             if now >= deadline {
                 break;
             }
             match rx.recv_timeout(deadline - now) {
-                Ok(mut job) => {
-                    if batch.len() + job.pairs.len() > cfg.max_batch {
+                Ok(job) => {
+                    if total + job.pairs.len() > cfg.max_batch {
                         // Over the cap: this job starts the next batch
                         // (a single over-sized request still runs alone,
                         // as its own large batch).
                         carry = Some(job);
                         break;
                     }
-                    let n = job.pairs.len();
-                    batch.append(&mut job.pairs);
-                    replies.push((job.reply, n));
+                    total += job.pairs.len();
+                    jobs.push(job);
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => break,
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
         }
+        run_batch(&slot, &inflight, jobs);
+    }
+}
 
-        // One fused pass for the whole batch.
-        predictor
-            .serve_stats()
-            .record_batch(replies.len() as u64, batch.len() as u64);
-        match predictor.score(&batch) {
-            Ok(scores) => {
+/// Answer one assembled batch: triage expired jobs, score the rest in a
+/// single fused pass (panic-safe), split the results back, and release
+/// each job's admission reservation as it is answered.
+fn run_batch(slot: &PredictorSlot, inflight: &AtomicUsize, jobs: Vec<Job>) {
+    let draining = slot.is_draining();
+    let mut answered: u64 = 0;
+
+    // Deadline triage happens at assembly time — after the queue wait,
+    // before the expensive pass — so an expired job neither rides along
+    // nor delays the batch further.
+    let now = Instant::now();
+    let mut batch: Vec<QueryPair> = Vec::new();
+    let mut replies: Vec<(ReplyTx, usize)> = Vec::new();
+    for mut job in jobs {
+        let n = job.pairs.len();
+        if job.deadline.map_or(false, |d| now >= d) {
+            RobustStats::bump(&slot.robust.deadline_expired);
+            let _ = job.reply.send(Err(
+                "deadline expired before scoring (queue wait exceeded the request deadline)"
+                    .to_string(),
+            ));
+            inflight.fetch_sub(n, Ordering::AcqRel);
+            answered += 1;
+            continue;
+        }
+        // Pairs are MOVED into one contiguous batch (no per-request
+        // clones — featured queries carry feature vectors); `replies`
+        // remembers each job's reply channel and pair count.
+        batch.append(&mut job.pairs);
+        replies.push((job.reply, n));
+    }
+
+    if !replies.is_empty() {
+        // Resolved once per batch: a hot-reload swapping the slot
+        // mid-batch cannot mix models within one pass.
+        let predictor = slot.current();
+        predictor.serve_stats().record_batch(replies.len() as u64, batch.len() as u64);
+        // One fused pass for the whole batch, panic-safe: an unwinding
+        // scoring pass (or an injected `batcher_dispatch:panic` fault)
+        // must kill the batch in-band, never the dispatcher.
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            if crate::runtime::fault::trip("batcher_dispatch").is_some() {
+                return Err(gvt_err!("injected fault: batcher_dispatch"));
+            }
+            predictor.score(&batch)
+        }));
+        match outcome {
+            Ok(Ok(scores)) => {
                 let mut offset = 0;
                 for (reply, n) in &replies {
                     // lint: allow(panic, per-job counts sum to the batch
@@ -188,14 +431,16 @@ fn dispatch_loop(rx: mpsc::Receiver<Job>, predictor: Arc<Predictor>, cfg: BatchC
                     let slice = scores[offset..offset + n].to_vec();
                     offset += n;
                     let _ = reply.send(Ok(slice));
+                    inflight.fetch_sub(*n, Ordering::AcqRel);
                 }
             }
-            Err(e) if replies.len() == 1 => {
-                // lint: allow(panic, guarded by the match arm — exactly
-                // one reply entry exists here)
-                let _ = replies[0].0.send(Err(format!("{e:#}")));
+            Ok(Err(e)) if replies.len() == 1 => {
+                for (reply, n) in &replies {
+                    let _ = reply.send(Err(format!("{e:#}")));
+                    inflight.fetch_sub(*n, Ordering::AcqRel);
+                }
             }
-            Err(_) => {
+            Ok(Err(_)) => {
                 // One bad request (e.g. an out-of-domain index) must not
                 // fail its riders: retry each job alone so only the
                 // offender errors. Per-job scoring is bit-identical to
@@ -207,15 +452,43 @@ fn dispatch_loop(rx: mpsc::Receiver<Job>, predictor: Arc<Predictor>, cfg: BatchC
                 for (reply, n) in &replies {
                     // lint: allow(panic, per-job counts sum to the batch
                     // length by construction — same slicing as the Ok arm)
-                    let res = match predictor.score(&batch[offset..offset + n]) {
-                        Ok(scores) => Ok(scores),
-                        Err(e) => Err(format!("{e:#}")),
+                    let sub = &batch[offset..offset + n];
+                    let res = match std::panic::catch_unwind(
+                        std::panic::AssertUnwindSafe(|| predictor.score(sub)),
+                    ) {
+                        Ok(Ok(scores)) => Ok(scores),
+                        Ok(Err(e)) => Err(format!("{e:#}")),
+                        Err(_) => {
+                            RobustStats::bump(&slot.robust.dispatcher_panics);
+                            Err("internal error: scoring panicked; request abandoned"
+                                .to_string())
+                        }
                     };
                     offset += n;
                     let _ = reply.send(res);
+                    inflight.fetch_sub(*n, Ordering::AcqRel);
+                }
+            }
+            Err(_panic) => {
+                // The pass unwound: answer every rider in-band and keep
+                // dispatching. (Counters are left as recorded — whether
+                // the pass got far enough to count itself is unknowable
+                // from here, and overcounting one pass beats underflow.)
+                RobustStats::bump(&slot.robust.dispatcher_panics);
+                for (reply, n) in &replies {
+                    let _ = reply.send(Err(
+                        "internal error: scoring panicked; batch abandoned (server still up)"
+                            .to_string(),
+                    ));
+                    inflight.fetch_sub(*n, Ordering::AcqRel);
                 }
             }
         }
+        answered += replies.len() as u64;
+    }
+
+    if draining && answered > 0 {
+        slot.robust.drained_jobs.fetch_add(answered, Ordering::Relaxed);
     }
 }
 
@@ -226,7 +499,6 @@ mod tests {
     use crate::gvt::pairwise::PairwiseKernel;
     use crate::rng::{dist, Xoshiro256};
     use crate::solvers::ridge::{PairwiseRidge, RidgeConfig};
-    use crate::serve::predictor::ServeOptions;
     use crate::testing::gen;
     use std::sync::Arc;
 
@@ -283,7 +555,11 @@ mod tests {
     #[test]
     fn max_batch_is_a_hard_cap() {
         let (pred, _) = toy_predictor(115);
-        let cfg = BatchConfig { max_batch: 4, max_wait: Duration::from_millis(150) };
+        let cfg = BatchConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(150),
+            ..BatchConfig::default()
+        };
         let batcher = Batcher::start(pred.clone(), cfg);
         let barrier = Arc::new(std::sync::Barrier::new(2));
         let small = {
@@ -317,7 +593,11 @@ mod tests {
     #[test]
     fn bad_rider_does_not_poison_the_batch() {
         let (pred, _) = toy_predictor(114);
-        let cfg = BatchConfig { max_batch: 64, max_wait: Duration::from_millis(150) };
+        let cfg = BatchConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(150),
+            ..BatchConfig::default()
+        };
         let batcher = Batcher::start(pred, cfg);
         let barrier = Arc::new(std::sync::Barrier::new(2));
         let good = {
@@ -352,7 +632,11 @@ mod tests {
     #[test]
     fn concurrent_requests_coalesce() {
         let (pred, _) = toy_predictor(113);
-        let cfg = BatchConfig { max_batch: 64, max_wait: Duration::from_millis(150) };
+        let cfg = BatchConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(150),
+            ..BatchConfig::default()
+        };
         let batcher = Batcher::start(pred.clone(), cfg);
         let barrier = Arc::new(std::sync::Barrier::new(8));
         let mut threads = Vec::new();
@@ -378,5 +662,53 @@ mod tests {
         );
         assert!(stats.batches < 8, "every request ran alone: {stats:?}");
         batcher.shutdown();
+    }
+
+    #[test]
+    fn zero_deadline_expires_in_band() {
+        let (pred, _) = toy_predictor(116);
+        let batcher = Batcher::start(pred, BatchConfig::default());
+        let handle = batcher.handle();
+        // A 0 µs request deadline is already expired when the dispatcher
+        // assembles its batch: the reply must be the deadline error, and
+        // the dispatcher must keep serving.
+        let err = handle
+            .submit(vec![QueryPair::known(0, 0)], Some(0))
+            .unwrap_err();
+        match err {
+            ScoreFailure::Failed(msg) => assert!(msg.contains("deadline expired"), "{msg}"),
+            other => panic!("expected Failed, got {other:?}"),
+        }
+        assert!(handle.submit(vec![QueryPair::known(0, 0)], None).is_ok());
+        let slot_stats = batcher.handle().slot.robust.snapshot();
+        assert_eq!(slot_stats.deadline_expired, 1);
+        drop(handle);
+        batcher.shutdown();
+    }
+
+    #[test]
+    fn inflight_budget_admits_oversized_request_on_empty_queue() {
+        let (pred, _) = toy_predictor(117);
+        let cfg = BatchConfig { max_inflight: 2, ..BatchConfig::default() };
+        let batcher = Batcher::start(pred, cfg);
+        let handle = batcher.handle();
+        // 5 pairs > budget 2, but the queue is empty: must be admitted
+        // and scored (otherwise it could never run at all).
+        let pairs: Vec<QueryPair> = (0..5u32).map(|k| QueryPair::known(k % 6, k % 7)).collect();
+        assert_eq!(handle.submit(pairs, None).unwrap().len(), 5);
+        // Budget fully released afterwards: a normal request passes.
+        assert!(handle.submit(vec![QueryPair::known(1, 1)], None).is_ok());
+        drop(handle);
+        batcher.shutdown();
+    }
+
+    #[test]
+    fn timed_shutdown_joins_cleanly_when_idle() {
+        let (pred, _) = toy_predictor(118);
+        let batcher = Batcher::start(pred, BatchConfig::default());
+        let handle = batcher.handle();
+        assert!(handle.score(vec![QueryPair::known(0, 0)]).is_ok());
+        drop(handle);
+        assert!(batcher.shutdown_within(Duration::from_secs(5)), "idle drain must join");
     }
 }

@@ -23,6 +23,10 @@
 //! * [`cache`] — [`cache::LruCache`]: bounded LRU over per-object
 //!   cross-kernel rows, so hot drugs/targets pay feature-space row
 //!   assembly once.
+//! * [`reload`] — [`PredictorSlot`]: the hot-swappable `Arc<Predictor>`
+//!   seam (model reload without dropping connections) plus the
+//!   [`RobustStats`] overload/deadline/drain counters that survive a
+//!   swap.
 //! * [`protocol`] / [`server`] — line-delimited JSON over stdin/stdout
 //!   or TCP, exposed as the `gvt-rls serve` and `gvt-rls predict` CLI
 //!   subcommands.
@@ -39,8 +43,10 @@ pub mod batcher;
 pub mod cache;
 pub mod predictor;
 pub mod protocol;
+pub mod reload;
 pub mod server;
 
-pub use batcher::{BatchConfig, Batcher, BatcherHandle};
+pub use batcher::{BatchConfig, Batcher, BatcherHandle, ScoreFailure};
 pub use predictor::{ObjectRef, Predictor, QueryPair, ServeOptions, StatsSnapshot};
-pub use server::{serve_on, serve_stdio, serve_tcp};
+pub use reload::{PredictorSlot, RobustSnapshot, RobustStats};
+pub use server::{serve_on, serve_stdio, serve_tcp, ServeConfig};

@@ -538,6 +538,33 @@ impl Predictor {
             s.target_cache_len,
         )
     }
+
+    /// [`Predictor::stats_json`] extended with the server's robustness
+    /// counters under a `"robust"` key. The counters live on the
+    /// [`crate::serve::reload::PredictorSlot`], not the predictor — they
+    /// must survive hot-reloads — so the server passes a snapshot in.
+    pub fn stats_json_with(&self, robust: &crate::serve::reload::RobustSnapshot) -> String {
+        let mut out = self.stats_json();
+        // stats_json always renders one JSON object; splice the robust
+        // block in before its closing brace.
+        out.pop();
+        out.push_str(&format!(
+            ", \"robust\": {{\"overload_rejected\": {}, \"deadline_expired\": {}, \
+             \"reloads_ok\": {}, \"reloads_failed\": {}, \"drained_jobs\": {}, \
+             \"connections_rejected\": {}, \"idle_reaped\": {}, \
+             \"dispatcher_panics\": {}, \"active_connections\": {}}}}}",
+            robust.overload_rejected,
+            robust.deadline_expired,
+            robust.reloads_ok,
+            robust.reloads_failed,
+            robust.drained_jobs,
+            robust.connections_rejected,
+            robust.idle_reaped,
+            robust.dispatcher_panics,
+            robust.active_connections,
+        ));
+        out
+    }
 }
 
 /// A cached cross-kernel row, stored with the features that produced it:

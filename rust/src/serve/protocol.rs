@@ -13,6 +13,9 @@
 //! → {"cmd": "stats"}
 //! ← {"stats": {...}}
 //!
+//! → {"cmd": "reload", "path": "model_v2.txt"}
+//! ← {"ok": true}
+//!
 //! → {"cmd": "shutdown"}
 //! ← {"ok": true}
 //! ```
@@ -22,6 +25,16 @@
 //! in-domain index or `{"features": [...], "id": "..."}` (`id` optional
 //! — it keys the server-side cross-kernel row cache). Malformed requests
 //! produce `{"id": ..., "error": "..."}` and leave the connection open.
+//!
+//! Robustness surface (docs/PROTOCOL.md): a score request may carry
+//! `"deadline_us": N` — if the dispatcher cannot score it within N µs of
+//! enqueue it answers a deadline error instead. A server over its
+//! admission budget answers
+//! `{"id": ..., "error": "overloaded", "retry_after_us": N}`
+//! ([`overloaded_response`]) — same in-band shape, plus a backoff hint.
+//! `reload` swaps in a fresh model from a v2 artifact (`path` optional
+//! when the server was started from a file); on failure the old model
+//! keeps serving and the response is an in-band error.
 //!
 //! Scores are rendered with 17 significant digits (`{:.17e}`), the exact
 //! `f64` round-trip format the offline `gvt-rls predict` output uses —
@@ -33,8 +46,9 @@ use crate::serve::predictor::{ObjectRef, QueryPair};
 
 /// A parsed request line.
 pub enum Request {
-    Score { id: Option<f64>, pairs: Vec<QueryPair> },
+    Score { id: Option<f64>, pairs: Vec<QueryPair>, deadline_us: Option<u64> },
     Stats { id: Option<f64> },
+    Reload { id: Option<f64>, path: Option<String> },
     Shutdown { id: Option<f64> },
 }
 
@@ -52,6 +66,17 @@ pub fn parse_request(line: &str) -> Result<Request> {
     if let Some(cmd) = json.get("cmd") {
         return match cmd.as_str() {
             Some("stats") => Ok(Request::Stats { id }),
+            Some("reload") => {
+                let path = match json.get("path") {
+                    None => None,
+                    Some(p) => Some(
+                        p.as_str()
+                            .ok_or_else(|| gvt_err!("'path' must be a string"))?
+                            .to_string(),
+                    ),
+                };
+                Ok(Request::Reload { id, path })
+            }
             Some("shutdown") => Ok(Request::Shutdown { id }),
             Some(other) => bail!("unknown cmd {other:?}"),
             None => bail!("cmd must be a string"),
@@ -65,7 +90,19 @@ pub fn parse_request(line: &str) -> Result<Request> {
     for (i, p) in pairs_json.iter().enumerate() {
         pairs.push(parse_pair(p).with_context(|| format!("pair {i}"))?);
     }
-    Ok(Request::Score { id, pairs })
+    let deadline_us = match json.get("deadline_us") {
+        None => None,
+        Some(j) => {
+            let v = j
+                .as_f64()
+                .ok_or_else(|| gvt_err!("'deadline_us' must be a number"))?;
+            if !(v >= 0.0) || v.fract() != 0.0 || v > 9.0e15 {
+                bail!("'deadline_us' must be a non-negative integer, got {v}");
+            }
+            Some(v as u64)
+        }
+    };
+    Ok(Request::Score { id, pairs, deadline_us })
 }
 
 fn parse_pair(j: &Json) -> Result<QueryPair> {
@@ -157,6 +194,16 @@ pub fn error_response(id: &Option<f64>, msg: &str) -> String {
     format!("{{{}\"error\": \"{}\"}}", fmt_id(id), json_escape(msg))
 }
 
+/// Admission-control rejection: the standard error shape (`"error"` is
+/// the literal string `overloaded`, so clients can match on it) plus a
+/// machine-readable backoff hint in microseconds.
+pub fn overloaded_response(id: &Option<f64>, retry_after_us: u64) -> String {
+    format!(
+        "{{{}\"error\": \"overloaded\", \"retry_after_us\": {retry_after_us}}}",
+        fmt_id(id)
+    )
+}
+
 /// Stats response wrapping a pre-rendered JSON object.
 pub fn stats_response(id: &Option<f64>, stats_obj: &str) -> String {
     format!("{{{}\"stats\": {stats_obj}}}", fmt_id(id))
@@ -190,8 +237,11 @@ mod tests {
     #[test]
     fn parses_index_pairs() {
         let r = parse_request(r#"{"id": 3, "pairs": [[0, 2], [5, 1]]}"#).unwrap();
-        let Request::Score { id, pairs } = r else { panic!("not a score request") };
+        let Request::Score { id, pairs, deadline_us } = r else {
+            panic!("not a score request")
+        };
         assert_eq!(id, Some(3.0));
+        assert!(deadline_us.is_none());
         assert_eq!(pairs.len(), 2);
         assert!(matches!(pairs[0].drug, ObjectRef::Known(0)));
         assert!(matches!(pairs[1].target, ObjectRef::Known(1)));
@@ -203,7 +253,7 @@ mod tests {
             r#"{"pairs": [{"drug": {"id": "x", "features": [0.5, -1.0]}, "target": 7}]}"#,
         )
         .unwrap();
-        let Request::Score { id, pairs } = r else { panic!("not a score request") };
+        let Request::Score { id, pairs, .. } = r else { panic!("not a score request") };
         assert!(id.is_none());
         match &pairs[0].drug {
             ObjectRef::Featured { id, x } => {
@@ -225,6 +275,25 @@ mod tests {
             parse_request(r#"{"cmd": "shutdown", "id": 9}"#).unwrap(),
             Request::Shutdown { id: Some(_) }
         ));
+        let r = parse_request(r#"{"cmd": "reload", "path": "m.txt"}"#).unwrap();
+        let Request::Reload { path, .. } = r else { panic!("not a reload") };
+        assert_eq!(path.as_deref(), Some("m.txt"));
+        assert!(matches!(
+            parse_request(r#"{"cmd": "reload"}"#).unwrap(),
+            Request::Reload { path: None, .. }
+        ));
+    }
+
+    #[test]
+    fn parses_request_deadlines() {
+        let r = parse_request(r#"{"id": 1, "pairs": [[0, 0]], "deadline_us": 2500}"#)
+            .unwrap();
+        let Request::Score { deadline_us, .. } = r else { panic!("not a score request") };
+        assert_eq!(deadline_us, Some(2500));
+        // Malformed deadlines are rejected, not silently dropped.
+        assert!(parse_request(r#"{"pairs": [[0, 0]], "deadline_us": -5}"#).is_err());
+        assert!(parse_request(r#"{"pairs": [[0, 0]], "deadline_us": 0.5}"#).is_err());
+        assert!(parse_request(r#"{"pairs": [[0, 0]], "deadline_us": "soon"}"#).is_err());
     }
 
     #[test]
@@ -235,6 +304,7 @@ mod tests {
         assert!(parse_request(r#"{"pairs": [[0.5, 0]]}"#).is_err());
         assert!(parse_request(r#"{"cmd": "reboot"}"#).is_err());
         assert!(parse_request(r#"{"hello": 1}"#).is_err());
+        assert!(parse_request(r#"{"cmd": "reload", "path": 7}"#).is_err());
         // String ids are rejected, not silently dropped.
         assert!(parse_request(r#"{"id": "req-7", "pairs": [[0, 1]]}"#).is_err());
     }
@@ -260,8 +330,13 @@ mod tests {
             error_response(&Some(1.0), "bad \"thing\"\n"),
             ok_response(&None),
             stats_response(&None, "{\"x\": 1}"),
+            overloaded_response(&Some(4.0), 1000),
         ] {
             assert!(Json::parse(&line).is_ok(), "{line}");
         }
+        let line = overloaded_response(&Some(4.0), 1000);
+        let parsed = Json::parse(&line).unwrap();
+        assert_eq!(parsed.get("error").unwrap().as_str().unwrap(), "overloaded");
+        assert_eq!(parsed.get("retry_after_us").unwrap().as_f64().unwrap(), 1000.0);
     }
 }

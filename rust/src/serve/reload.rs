@@ -1,0 +1,227 @@
+//! Hot-reload and robustness accounting for the serve subsystem.
+//!
+//! [`PredictorSlot`] is the single seam through which the server and the
+//! micro-batch dispatcher reach the [`Predictor`]: an `Arc<Predictor>`
+//! behind an `RwLock`. [`PredictorSlot::reload_from_path`] builds a
+//! fresh predictor from a v2 artifact with the *same* serving options
+//! the slot was created with, and atomically swaps the `Arc` on success
+//! — batches already holding the old `Arc` finish on the old model, the
+//! next batch picks up the new one, and no connection is dropped. A
+//! failed load (missing file, truncated artifact, validation failure)
+//! leaves the old predictor serving untouched and reports the error
+//! in-band.
+//!
+//! Bit-identity across a reload of the *same* artifact is inherited, not
+//! re-proven: the predictor pins its GVT factorization from the artifact
+//! alone ([`Predictor::from_file`]), so two predictors built from one
+//! file score identically — `tests/serve_faults.rs` pins this under
+//! concurrent load.
+//!
+//! [`RobustStats`] lives on the slot rather than the predictor exactly
+//! because reloads replace the predictor: overload/deadline/drain
+//! counters must survive a swap to stay meaningful across the server's
+//! lifetime.
+
+use crate::error::{Context, Result};
+use crate::serve::predictor::{Predictor, ServeOptions};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// Robustness counters, shared by the accept loop, the connection
+/// handlers, and the dispatcher. All relaxed: they are monotonic tallies
+/// (plus one gauge), never synchronization.
+#[derive(Debug, Default)]
+pub struct RobustStats {
+    /// Score requests turned away by the in-flight pair budget.
+    pub overload_rejected: AtomicU64,
+    /// Jobs answered with a deadline error instead of being scored.
+    pub deadline_expired: AtomicU64,
+    /// Successful hot-reloads (the swap happened).
+    pub reloads_ok: AtomicU64,
+    /// Rejected hot-reloads (old model kept serving).
+    pub reloads_failed: AtomicU64,
+    /// Jobs answered during the shutdown drain phase.
+    pub drained_jobs: AtomicU64,
+    /// Connections turned away by the connection cap.
+    pub connections_rejected: AtomicU64,
+    /// Connections closed by the idle timeout.
+    pub idle_reaped: AtomicU64,
+    /// Scoring panics caught and answered in-band by the dispatcher.
+    pub dispatcher_panics: AtomicU64,
+    /// Gauge: connection handlers currently running.
+    pub active_connections: AtomicU64,
+}
+
+/// Plain-number copy of [`RobustStats`] for rendering.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RobustSnapshot {
+    pub overload_rejected: u64,
+    pub deadline_expired: u64,
+    pub reloads_ok: u64,
+    pub reloads_failed: u64,
+    pub drained_jobs: u64,
+    pub connections_rejected: u64,
+    pub idle_reaped: u64,
+    pub dispatcher_panics: u64,
+    pub active_connections: u64,
+}
+
+impl RobustStats {
+    /// Relaxed snapshot of every counter.
+    pub fn snapshot(&self) -> RobustSnapshot {
+        RobustSnapshot {
+            overload_rejected: self.overload_rejected.load(Ordering::Relaxed),
+            deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
+            reloads_ok: self.reloads_ok.load(Ordering::Relaxed),
+            reloads_failed: self.reloads_failed.load(Ordering::Relaxed),
+            drained_jobs: self.drained_jobs.load(Ordering::Relaxed),
+            connections_rejected: self.connections_rejected.load(Ordering::Relaxed),
+            idle_reaped: self.idle_reaped.load(Ordering::Relaxed),
+            dispatcher_panics: self.dispatcher_panics.load(Ordering::Relaxed),
+            active_connections: self.active_connections.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Bump a counter by one (all tallies are relaxed).
+    pub fn bump(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// The hot-swappable predictor seam (see module docs).
+pub struct PredictorSlot {
+    current: RwLock<Arc<Predictor>>,
+    opts: ServeOptions,
+    draining: AtomicBool,
+    /// Robustness counters; survive reloads (see module docs).
+    pub robust: RobustStats,
+}
+
+impl PredictorSlot {
+    /// Wrap `predictor` in a slot. `opts` is the serving configuration
+    /// every future reload is validated/built against.
+    pub fn new(predictor: Arc<Predictor>, opts: ServeOptions) -> Arc<PredictorSlot> {
+        Arc::new(PredictorSlot {
+            current: RwLock::new(predictor),
+            opts,
+            draining: AtomicBool::new(false),
+            robust: RobustStats::default(),
+        })
+    }
+
+    /// The predictor new batches should score on, as of this call.
+    /// Callers hold the returned `Arc` for the duration of one batch, so
+    /// an in-flight batch finishes on the model it started with even if
+    /// a reload swaps the slot mid-batch.
+    pub fn current(&self) -> Arc<Predictor> {
+        // A poisoned lock only means a thread panicked while holding it;
+        // the Arc inside is always a fully-built predictor.
+        self.current.read().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    /// Build a fresh predictor from the v2 artifact at `path` (with this
+    /// slot's serving options) and swap it in. On failure the previous
+    /// predictor keeps serving and the error describes why the reload
+    /// was rejected. Counted either way in [`RobustStats`].
+    pub fn reload_from_path(&self, path: &Path) -> Result<()> {
+        match Predictor::from_file(path, self.opts) {
+            Ok(fresh) => {
+                let fresh = Arc::new(fresh);
+                *self.current.write().unwrap_or_else(|e| e.into_inner()) = fresh;
+                RobustStats::bump(&self.robust.reloads_ok);
+                Ok(())
+            }
+            Err(e) => {
+                RobustStats::bump(&self.robust.reloads_failed);
+                Err(e).with_context(|| {
+                    format!("reload rejected ({}); previous model still serving", path.display())
+                })
+            }
+        }
+    }
+
+    /// Enter the shutdown drain phase: jobs the dispatcher answers from
+    /// here on count as drained stragglers.
+    pub fn begin_drain(&self) {
+        self.draining.store(true, Ordering::Release);
+    }
+
+    /// Whether the server is draining toward shutdown.
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::Acquire)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::PairDataset;
+    use crate::gvt::pairwise::PairwiseKernel;
+    use crate::rng::{dist, Xoshiro256};
+    use crate::solvers::persist::{save_model_v2, EmbedV2};
+    use crate::solvers::ridge::{PairwiseRidge, RidgeConfig};
+    use crate::testing::gen;
+    use std::sync::Arc;
+
+    fn toy_slot(seed: u64, tag: &str) -> (Arc<PredictorSlot>, std::path::PathBuf) {
+        let mut rng = Xoshiro256::seed_from(seed);
+        let d = Arc::new(gen::psd_kernel(&mut rng, 6));
+        let t = Arc::new(gen::psd_kernel(&mut rng, 7));
+        let pairs = gen::pair_sample(&mut rng, 30, 6, 7);
+        let y = dist::normal_vec(&mut rng, 30);
+        let data = PairDataset { name: "reload".into(), d, t, pairs, y, homogeneous: false };
+        let cfg = RidgeConfig { max_iters: 15, ..Default::default() };
+        let model = PairwiseRidge::fit_fixed_iters(&data, PairwiseKernel::Kronecker, &cfg, 15)
+            .unwrap();
+        let path = std::env::temp_dir()
+            .join(format!("gvt_reload_{tag}_{}.txt", std::process::id()));
+        save_model_v2(&model, &path, &EmbedV2 { matrices: true, ..Default::default() }).unwrap();
+        let pred =
+            Arc::new(Predictor::from_file(&path, ServeOptions::default()).unwrap());
+        (PredictorSlot::new(pred, ServeOptions::default()), path)
+    }
+
+    #[test]
+    fn reload_same_artifact_swaps_and_scores_identically() {
+        let (slot, path) = toy_slot(41, "swap");
+        let q = [crate::serve::QueryPair::known(2, 3), crate::serve::QueryPair::known(5, 1)];
+        let before_arc = slot.current();
+        let before = before_arc.score(&q).unwrap();
+        slot.reload_from_path(&path).unwrap();
+        let after_arc = slot.current();
+        assert!(!Arc::ptr_eq(&before_arc, &after_arc), "reload must swap the Arc");
+        let after = after_arc.score(&q).unwrap();
+        for (a, b) in before.iter().zip(&after) {
+            assert_eq!(a.to_bits(), b.to_bits(), "same artifact must score bit-identically");
+        }
+        assert_eq!(slot.robust.snapshot().reloads_ok, 1);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn failed_reload_keeps_old_model_serving() {
+        let (slot, path) = toy_slot(42, "fail");
+        let q = [crate::serve::QueryPair::known(1, 1)];
+        let before = slot.current().score(&q).unwrap();
+        let missing = std::env::temp_dir().join("gvt_reload_no_such_artifact.txt");
+        let err = slot.reload_from_path(&missing).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("reload rejected"), "{msg}");
+        let after = slot.current().score(&q).unwrap();
+        assert_eq!(before.first().map(|v| v.to_bits()), after.first().map(|v| v.to_bits()));
+        let snap = slot.robust.snapshot();
+        assert_eq!(snap.reloads_failed, 1);
+        assert_eq!(snap.reloads_ok, 0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn drain_flag_is_sticky() {
+        let (slot, path) = toy_slot(43, "drain");
+        assert!(!slot.is_draining());
+        slot.begin_drain();
+        assert!(slot.is_draining());
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -8,24 +8,94 @@
 //! thread, so requests from different clients land on the dispatcher
 //! queue together and ride one GVT pass.
 //!
-//! Shutdown: any client may send `{"cmd": "shutdown"}`. The handler
-//! acknowledges, raises the stop flag, and pokes the listener with a
-//! throwaway connection so the accept loop observes the flag; the server
-//! then joins its handler threads and drains the batcher.
+//! # Robustness contract
+//!
+//! Every failure the server can survive is answered **in-band** — one
+//! JSON error line on the connection that caused it — and never takes
+//! the process or a healthy connection down (`tests/serve_faults.rs`
+//! exercises each path by injecting the fault):
+//!
+//! * **Connection cap** ([`ServeConfig::max_connections`]): excess
+//!   connections get one `overloaded` error line and are closed; the
+//!   accept loop keeps serving everyone else.
+//! * **Idle reaping** ([`ServeConfig::idle_timeout`]): a connection that
+//!   completes no request line within the window is answered and closed
+//!   on a poll tick. Partial lines do *not* reset the clock, so a
+//!   slow-loris drip of bytes cannot hold a handler forever; healthy
+//!   connections completing requests are never touched.
+//! * **Hot reload** (`{"cmd": "reload"}` or, with
+//!   [`ServeConfig::reload_stdin`], a `reload [path]` line on the
+//!   server's stdin): builds a fresh predictor from a v2 artifact and
+//!   swaps it behind the [`PredictorSlot`] seam without dropping any
+//!   connection — in-flight batches finish on the old model. A failed
+//!   load answers an error and leaves the old model serving.
+//! * **Graceful drain**: `{"cmd": "shutdown"}` stops admission, then the
+//!   server answers stragglers, flushes the dispatcher queue, and joins
+//!   — all bounded by [`ServeConfig::drain_timeout`], past which
+//!   handlers and dispatcher are abandoned rather than hanging shutdown.
 
 use crate::error::{gvt_err, Context, GvtError, Result};
-use crate::serve::batcher::{BatchConfig, Batcher, BatcherHandle};
+use crate::runtime::fault;
+use crate::serve::batcher::{Batcher, BatcherHandle, ScoreFailure};
 use crate::serve::predictor::Predictor;
 use crate::serve::protocol::{self, Request};
+use crate::serve::reload::PredictorSlot;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// Hard cap on one request line's byte length (features arrays are the
 /// only large payload; 8 MiB ≈ 400k f64 literals, far beyond any real
 /// feature dimension). Longer lines answer an in-band error and close.
 const MAX_REQUEST_LINE: usize = 8 * 1024 * 1024;
+
+/// Serving configuration: batching plus the robustness knobs.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Dispatcher tuning (including the in-flight admission budget and
+    /// the default request deadline).
+    pub batch: crate::serve::batcher::BatchConfig,
+    /// Maximum simultaneously-open connections (`0` = unbounded). Excess
+    /// connections are answered with one in-band `overloaded` error line
+    /// and closed.
+    pub max_connections: usize,
+    /// Close a connection that completes no request within this window
+    /// (`Duration::ZERO` = never). Partial lines do not count as
+    /// activity.
+    pub idle_timeout: Duration,
+    /// Hard stop for the shutdown drain phase: how long to wait for
+    /// handlers to answer stragglers and the dispatcher to flush before
+    /// abandoning them.
+    pub drain_timeout: Duration,
+    /// Default artifact for `{"cmd": "reload"}` requests that carry no
+    /// `path` (the artifact the server was started from).
+    pub model_path: Option<PathBuf>,
+    /// Serving options reload builds fresh predictors with (match what
+    /// the initial predictor was built with).
+    pub serve_opts: crate::serve::predictor::ServeOptions,
+    /// Also accept `reload [path]` lines on the server's *stdin* (the
+    /// CLI-trigger channel for TCP serving, where stdin is otherwise
+    /// unused). Off by default: a backgrounded process reading its
+    /// terminal would be stopped by the shell.
+    pub reload_stdin: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            batch: crate::serve::batcher::BatchConfig::default(),
+            max_connections: 0,
+            idle_timeout: Duration::ZERO,
+            drain_timeout: Duration::from_millis(2000),
+            model_path: None,
+            serve_opts: crate::serve::predictor::ServeOptions::default(),
+            reload_stdin: false,
+        }
+    }
+}
 
 /// What one bounded line read produced.
 enum LineRead {
@@ -68,17 +138,44 @@ enum LineOutcome {
 fn handle_line(
     line: &str,
     handle: &BatcherHandle,
-    predictor: &Predictor,
+    slot: &PredictorSlot,
+    model_path: Option<&Path>,
 ) -> LineOutcome {
     match protocol::parse_request(line) {
-        Ok(Request::Score { id, pairs }) => match handle.score(pairs) {
-            Ok(scores) => LineOutcome::Respond(protocol::scores_response(&id, &scores)),
-            Err(e) => {
-                LineOutcome::Respond(protocol::error_response(&id, &format!("{e:#}")))
+        Ok(Request::Score { id, pairs, deadline_us }) => {
+            match handle.submit(pairs, deadline_us) {
+                Ok(scores) => {
+                    LineOutcome::Respond(protocol::scores_response(&id, &scores))
+                }
+                Err(ScoreFailure::Overloaded { retry_after_us }) => {
+                    LineOutcome::Respond(protocol::overloaded_response(&id, retry_after_us))
+                }
+                Err(ScoreFailure::Failed(msg)) => {
+                    LineOutcome::Respond(protocol::error_response(&id, &msg))
+                }
             }
-        },
+        }
         Ok(Request::Stats { id }) => {
-            LineOutcome::Respond(protocol::stats_response(&id, &predictor.stats_json()))
+            let json = slot.current().stats_json_with(&slot.robust.snapshot());
+            LineOutcome::Respond(protocol::stats_response(&id, &json))
+        }
+        Ok(Request::Reload { id, path }) => {
+            let target = path.map(PathBuf::from).or_else(|| model_path.map(Path::to_path_buf));
+            match target {
+                None => LineOutcome::Respond(protocol::error_response(
+                    &id,
+                    "reload needs a 'path' (the server was not started from an artifact)",
+                )),
+                // The fresh predictor is built here, on this connection's
+                // handler thread — the dispatcher and every other
+                // connection keep serving the old model until the swap.
+                Some(p) => match slot.reload_from_path(&p) {
+                    Ok(()) => LineOutcome::Respond(protocol::ok_response(&id)),
+                    Err(e) => {
+                        LineOutcome::Respond(protocol::error_response(&id, &format!("{e:#}")))
+                    }
+                },
+            }
         }
         Ok(Request::Shutdown { id }) => {
             LineOutcome::ShutdownAfter(protocol::ok_response(&id))
@@ -92,8 +189,9 @@ fn handle_line(
 /// Serve the protocol over stdin/stdout until EOF or `shutdown`.
 /// Single-client by construction; the batcher still mediates so the
 /// code path matches TCP serving exactly.
-pub fn serve_stdio(predictor: Arc<Predictor>, cfg: BatchConfig) -> Result<()> {
-    let batcher = Batcher::start(predictor.clone(), cfg);
+pub fn serve_stdio(predictor: Arc<Predictor>, cfg: ServeConfig) -> Result<()> {
+    let slot = PredictorSlot::new(predictor, cfg.serve_opts);
+    let batcher = Batcher::start_with_slot(slot.clone(), cfg.batch);
     let handle = batcher.handle();
     let stdin = std::io::stdin();
     let stdout = std::io::stdout();
@@ -112,7 +210,9 @@ pub fn serve_stdio(predictor: Arc<Predictor>, cfg: BatchConfig) -> Result<()> {
         if !buf.is_empty() {
             let outcome = match std::str::from_utf8(&buf) {
                 Ok(text) if text.trim().is_empty() => None,
-                Ok(text) => Some(handle_line(text.trim(), &handle, &predictor)),
+                Ok(text) => {
+                    Some(handle_line(text.trim(), &handle, &slot, cfg.model_path.as_deref()))
+                }
                 Err(_) => Some(LineOutcome::Respond(protocol::error_response(
                     &None,
                     "request line is not valid UTF-8",
@@ -136,15 +236,16 @@ pub fn serve_stdio(predictor: Arc<Predictor>, cfg: BatchConfig) -> Result<()> {
             break;
         }
     }
+    slot.begin_drain();
     drop(handle);
-    batcher.shutdown();
+    batcher.shutdown_within(cfg.drain_timeout);
     Ok(())
 }
 
 /// Bind `listen` (use port 0 for an ephemeral port), announce
 /// `gvt-rls-serve listening on <addr>` on stdout (scripts parse this
 /// line), and run the accept loop until a client sends `shutdown`.
-pub fn serve_tcp(predictor: Arc<Predictor>, listen: &str, cfg: BatchConfig) -> Result<()> {
+pub fn serve_tcp(predictor: Arc<Predictor>, listen: &str, cfg: ServeConfig) -> Result<()> {
     let listener =
         TcpListener::bind(listen).with_context(|| format!("binding {listen}"))?;
     let addr = listener.local_addr().context("reading bound address")?;
@@ -153,13 +254,34 @@ pub fn serve_tcp(predictor: Arc<Predictor>, listen: &str, cfg: BatchConfig) -> R
     serve_on(listener, predictor, cfg)
 }
 
+/// RAII increment of the active-connections gauge: constructed by the
+/// accept loop (so the connection cap sees admitted-but-not-yet-running
+/// handlers), decremented when the handler — or a failed spawn — drops
+/// it.
+struct ConnGauge(Arc<PredictorSlot>);
+
+impl ConnGauge {
+    fn new(slot: Arc<PredictorSlot>) -> ConnGauge {
+        slot.robust.active_connections.fetch_add(1, Ordering::Relaxed);
+        ConnGauge(slot)
+    }
+}
+
+impl Drop for ConnGauge {
+    fn drop(&mut self) {
+        self.0.robust.active_connections.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
 /// The accept loop over an already-bound listener (tests bind their own
-/// so they know the port). Blocks until shutdown; joins every
-/// connection handler and drains the batcher before returning.
+/// so they know the port). Blocks until shutdown, then drains: stops
+/// admitting, lets handlers answer stragglers, flushes the dispatcher
+/// queue — all within [`ServeConfig::drain_timeout`], after which
+/// whatever is still stuck is abandoned so shutdown cannot hang.
 pub fn serve_on(
     listener: TcpListener,
     predictor: Arc<Predictor>,
-    cfg: BatchConfig,
+    cfg: ServeConfig,
 ) -> Result<()> {
     let addr = listener.local_addr().context("reading bound address")?;
     // The shutdown self-poke must target a *connectable* address: for a
@@ -180,7 +302,11 @@ pub fn serve_on(
         }
         a
     };
-    let batcher = Batcher::start(predictor.clone(), cfg);
+    let slot = PredictorSlot::new(predictor, cfg.serve_opts);
+    let batcher = Batcher::start_with_slot(slot.clone(), cfg.batch);
+    if cfg.reload_stdin {
+        spawn_stdin_reload_watcher(slot.clone(), cfg.model_path.clone());
+    }
     let stop = Arc::new(AtomicBool::new(false));
     let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
     let mut spawn_err: Option<GvtError> = None;
@@ -188,18 +314,38 @@ pub fn serve_on(
         if stop.load(Ordering::SeqCst) {
             break;
         }
-        let stream = match stream {
+        let mut stream = match stream {
             Ok(s) => s,
             Err(_) => continue,
         };
         // Reap finished connection handlers so a long-lived server's
         // handle list doesn't grow with every connection ever accepted.
         handlers.retain(|h| !h.is_finished());
+        // Connection cap: answer in-band and close instead of queueing
+        // an unbounded number of handler threads.
+        if cfg.max_connections > 0
+            && slot.robust.active_connections.load(Ordering::Relaxed) as usize
+                >= cfg.max_connections
+        {
+            crate::serve::reload::RobustStats::bump(&slot.robust.connections_rejected);
+            let resp = protocol::error_response(
+                &None,
+                "overloaded: connection limit reached; retry later",
+            );
+            let _ = writeln!(stream, "{resp}").and_then(|_| stream.flush());
+            continue;
+        }
+        let gauge = ConnGauge::new(slot.clone());
         let handle = batcher.handle();
-        let pred = predictor.clone();
+        let conn_slot = slot.clone();
         let stop_flag = stop.clone();
+        let conn_cfg = ConnConfig {
+            idle_timeout: cfg.idle_timeout,
+            model_path: cfg.model_path.clone(),
+        };
         match std::thread::Builder::new().name("gvt-serve-conn".into()).spawn(move || {
-            handle_connection(stream, handle, pred, stop_flag, poke_addr)
+            let _gauge = gauge;
+            handle_connection(stream, handle, conn_slot, conn_cfg, stop_flag, poke_addr)
         }) {
             Ok(h) => handlers.push(h),
             Err(e) => {
@@ -214,28 +360,95 @@ pub fn serve_on(
         }
     }
     stop.store(true, Ordering::SeqCst);
+    // Drain phase: no new admissions (the loop above has exited), jobs
+    // answered from here on are counted as drained stragglers, and
+    // everything is bounded by the drain timeout.
+    slot.begin_drain();
+    let drain_deadline = Instant::now() + cfg.drain_timeout;
     for h in handlers {
-        let _ = h.join();
+        let joined = loop {
+            if h.is_finished() {
+                break true;
+            }
+            if Instant::now() >= drain_deadline {
+                break false;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        };
+        if joined {
+            let _ = h.join();
+        } else {
+            // Past the hard stop: abandon the handler (its gauge entry
+            // dies with the process) rather than hanging shutdown.
+            drop(h);
+        }
     }
-    batcher.shutdown();
+    let left = drain_deadline
+        .saturating_duration_since(Instant::now())
+        .max(Duration::from_millis(50));
+    batcher.shutdown_within(left);
     match spawn_err {
         None => Ok(()),
         Some(e) => Err(e),
     }
 }
 
+/// The per-connection slice of [`ServeConfig`].
+struct ConnConfig {
+    idle_timeout: Duration,
+    model_path: Option<PathBuf>,
+}
+
+/// Watch the server's own stdin for `reload [path]` lines — the CLI
+/// trigger for operators driving a TCP server from a terminal or a
+/// pipe (`--reload-stdin`). Acknowledgements go to stdout, matching the
+/// `listening on` announcement scripts already parse. The thread is
+/// detached: it parks on stdin for the process lifetime.
+fn spawn_stdin_reload_watcher(slot: Arc<PredictorSlot>, default_path: Option<PathBuf>) {
+    let _ = std::thread::Builder::new().name("gvt-serve-reload".into()).spawn(move || {
+        let stdin = std::io::stdin();
+        let mut line = String::new();
+        loop {
+            line.clear();
+            match stdin.lock().read_line(&mut line) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => {}
+            }
+            let cmd = line.trim();
+            let Some(rest) = cmd.strip_prefix("reload") else {
+                continue;
+            };
+            let arg = rest.trim();
+            let target = if arg.is_empty() {
+                default_path.clone()
+            } else {
+                Some(PathBuf::from(arg))
+            };
+            match target {
+                None => println!("gvt-rls-serve reload error: no artifact path"),
+                Some(p) => match slot.reload_from_path(&p) {
+                    Ok(()) => println!("gvt-rls-serve reload ok: {}", p.display()),
+                    Err(e) => println!("gvt-rls-serve reload error: {e:#}"),
+                },
+            }
+            std::io::stdout().flush().ok();
+        }
+    });
+}
+
 fn handle_connection(
     stream: TcpStream,
     handle: BatcherHandle,
-    predictor: Arc<Predictor>,
+    slot: Arc<PredictorSlot>,
+    cfg: ConnConfig,
     stop: Arc<AtomicBool>,
     addr: SocketAddr,
 ) {
     // Poll with a read timeout instead of blocking forever: serve_on
     // joins every handler at shutdown, and an idle connection parked in
     // a blocking read would hang the whole server. On each timeout tick
-    // the handler re-checks the stop flag and exits if another client
-    // shut the server down.
+    // the handler re-checks the stop flag (and the idle clock) and exits
+    // if another client shut the server down.
     //
     // Lines are accumulated as BYTES (`read_until`), not via
     // `read_line`: on an error `read_line` truncates any partial
@@ -243,14 +456,26 @@ fn handle_connection(
     // inside a multi-byte character would silently drop the bytes read
     // so far. `read_until` keeps them; UTF-8 is validated only once a
     // full line has arrived.
-    let _ = stream.set_read_timeout(Some(std::time::Duration::from_millis(200)));
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
     };
     let mut reader = BufReader::new(stream);
     let mut buf: Vec<u8> = Vec::new();
+    // The idle clock resets only when a request line COMPLETES — a
+    // slow-loris connection dripping partial bytes still counts as idle
+    // and is reaped.
+    let mut last_done = Instant::now();
     loop {
+        // Injection point for connection-level faults: a `stall` holds
+        // this read loop (exercising idle/health isolation between
+        // connections); `error`/`truncate` force-close in-band.
+        if fault::trip("conn_read").is_some() {
+            let resp = protocol::error_response(&None, "injected fault: conn_read");
+            let _ = writeln!(writer, "{resp}").and_then(|_| writer.flush());
+            break;
+        }
         let status = match read_bounded_line(&mut reader, &mut buf) {
             Ok(s) => s,
             Err(e)
@@ -263,6 +488,17 @@ fn handle_connection(
             {
                 // Timeout tick; partial bytes stay in `buf`.
                 if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                if cfg.idle_timeout > Duration::ZERO
+                    && last_done.elapsed() >= cfg.idle_timeout
+                {
+                    crate::serve::reload::RobustStats::bump(&slot.robust.idle_reaped);
+                    let resp = protocol::error_response(
+                        &None,
+                        "idle timeout: no complete request within the window",
+                    );
+                    let _ = writeln!(writer, "{resp}").and_then(|_| writer.flush());
                     break;
                 }
                 continue;
@@ -280,13 +516,19 @@ fn handle_connection(
         if !buf.is_empty() {
             let outcome = match std::str::from_utf8(&buf) {
                 Ok(text) if text.trim().is_empty() => None,
-                Ok(text) => Some(handle_line(text.trim(), &handle, &predictor)),
+                Ok(text) => Some(handle_line(
+                    text.trim(),
+                    &handle,
+                    &slot,
+                    cfg.model_path.as_deref(),
+                )),
                 Err(_) => Some(LineOutcome::Respond(protocol::error_response(
                     &None,
                     "request line is not valid UTF-8",
                 ))),
             };
             buf.clear();
+            last_done = Instant::now();
             match outcome {
                 None => {}
                 Some(LineOutcome::Respond(resp)) => {
@@ -316,6 +558,7 @@ mod tests {
     use crate::gvt::pairwise::PairwiseKernel;
     use crate::rng::{dist, Xoshiro256};
     use crate::runtime::json::Json;
+    use crate::serve::batcher::BatchConfig;
     use crate::serve::predictor::{QueryPair, ServeOptions};
     use crate::serve::protocol::fmt_score;
     use crate::solvers::ridge::{PairwiseRidge, RidgeConfig};
@@ -340,6 +583,17 @@ mod tests {
         Arc::new(Predictor::new(model, None, None, ServeOptions::default()).unwrap())
     }
 
+    fn quick_cfg() -> ServeConfig {
+        ServeConfig {
+            batch: BatchConfig {
+                max_batch: 16,
+                max_wait: Duration::from_micros(200),
+                ..BatchConfig::default()
+            },
+            ..ServeConfig::default()
+        }
+    }
+
     fn request_line(stream: &mut TcpStream, line: &str) -> String {
         writeln!(stream, "{line}").unwrap();
         stream.flush().unwrap();
@@ -361,12 +615,7 @@ mod tests {
         let addr = listener.local_addr().unwrap();
         let pred = predictor.clone();
         let server = std::thread::spawn(move || {
-            serve_on(
-                listener,
-                pred,
-                BatchConfig { max_batch: 16, max_wait: Duration::from_micros(200) },
-            )
-            .unwrap();
+            serve_on(listener, pred, quick_cfg()).unwrap();
         });
 
         let mut conn = TcpStream::connect(addr).unwrap();
@@ -380,7 +629,8 @@ mod tests {
         assert!(resp.contains("\"error\""), "{resp}");
         let resp = request_line(&mut conn, r#"{"id": 2, "pairs": [[1, 2]]}"#);
         assert!(resp.contains("\"scores\""), "{resp}");
-        // Stats come back as JSON with our counters.
+        // Stats come back as JSON with our counters, including the
+        // robustness block.
         let resp = request_line(&mut conn, r#"{"cmd": "stats"}"#);
         let parsed = Json::parse(&resp).unwrap();
         let stats = parsed.get("stats").unwrap();
@@ -388,6 +638,27 @@ mod tests {
         assert_eq!(
             stats.get("policy").unwrap().as_str().unwrap(),
             predictor.policy().name()
+        );
+        let robust = stats.get("robust").unwrap();
+        for key in [
+            "overload_rejected",
+            "deadline_expired",
+            "reloads_ok",
+            "reloads_failed",
+            "drained_jobs",
+            "connections_rejected",
+            "idle_reaped",
+            "dispatcher_panics",
+        ] {
+            assert_eq!(
+                robust.get(key).unwrap().as_f64().unwrap(),
+                0.0,
+                "untripped counter {key} must render as 0"
+            );
+        }
+        assert!(
+            robust.get("active_connections").unwrap().as_f64().unwrap() >= 1.0,
+            "this very connection must be on the gauge"
         );
         // A second concurrent connection works.
         let mut conn2 = TcpStream::connect(addr).unwrap();
@@ -416,12 +687,7 @@ mod tests {
         let addr = listener.local_addr().unwrap();
         let pred = predictor.clone();
         let server = std::thread::spawn(move || {
-            serve_on(
-                listener,
-                pred,
-                BatchConfig { max_batch: 16, max_wait: Duration::from_micros(200) },
-            )
-            .unwrap();
+            serve_on(listener, pred, quick_cfg()).unwrap();
         });
 
         fn next_line(reader: &mut BufReader<TcpStream>) -> String {

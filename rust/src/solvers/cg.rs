@@ -3,6 +3,7 @@
 //! "Falkon solves the resulting linear system using a preconditioned
 //! conjugate gradient optimizer") and as a cross-check on MINRES.
 
+use crate::error::{bail, Result};
 use crate::linalg::vecops::{axpby_par, axpy_norm2, axpy_par, dot, norm2};
 use crate::solvers::linear_op::LinOp;
 use std::ops::ControlFlow;
@@ -31,13 +32,18 @@ pub struct CgOutcome {
 
 /// Solve `A x = b` (SPD `A`). `precond`, if given, applies `M⁻¹` (also
 /// SPD). `callback(iter, x, relres)` can stop early.
+///
+/// Fails loudly — mirroring the SGD trainer's divergence contract — if
+/// the recurrence produces a non-finite step or residual mid-iteration
+/// (an operator or preconditioner emitting NaN/Inf): the error names the
+/// iteration instead of letting garbage propagate into α.
 pub fn cg<F>(
     a: &dyn LinOp,
     b: &[f64],
     precond: Option<&dyn LinOp>,
     opts: &CgOptions,
     mut callback: F,
-) -> CgOutcome
+) -> Result<CgOutcome>
 where
     F: FnMut(usize, &[f64], f64) -> ControlFlow<()>,
 {
@@ -45,8 +51,16 @@ where
     assert_eq!(a.dim_in(), n);
     assert_eq!(a.dim_out(), n);
     let bnorm = norm2(b);
+    if !bnorm.is_finite() {
+        bail!("cg: right-hand side has non-finite entries (|b| = {bnorm:e})");
+    }
     if bnorm == 0.0 {
-        return CgOutcome { x: vec![0.0; n], iterations: 0, rel_residual: 0.0, converged: true };
+        return Ok(CgOutcome {
+            x: vec![0.0; n],
+            iterations: 0,
+            rel_residual: 0.0,
+            converged: true,
+        });
     }
 
     let mut x = vec![0.0; n];
@@ -73,11 +87,23 @@ where
             break;
         }
         let alpha = rz / pap;
+        if !alpha.is_finite() {
+            bail!(
+                "cg diverged: non-finite step α = {alpha:e} at iteration {k} \
+                 (the operator or preconditioner produced non-finite values)"
+            );
+        }
         axpy_par(alpha, &p, &mut x);
         // Residual update and its norm in one pass over memory. Stays
         // serial: the fused norm is a reduction, and a parallel combine
         // order would break bit-determinism across worker counts.
         let rnorm = axpy_norm2(-alpha, &ap, &mut r);
+        if !rnorm.is_finite() {
+            bail!(
+                "cg diverged: non-finite residual |r| = {rnorm:e} at iteration {k} \
+                 (the operator or preconditioner produced non-finite values)"
+            );
+        }
         iterations = k;
         rel = rnorm / bnorm;
         if let ControlFlow::Break(()) = callback(k, &x, rel) {
@@ -98,7 +124,7 @@ where
         axpby_par(1.0, &z, beta, &mut p);
     }
 
-    CgOutcome { x, iterations, rel_residual: rel, converged }
+    Ok(CgOutcome { x, iterations, rel_residual: rel, converged })
 }
 
 #[cfg(test)]
@@ -128,7 +154,8 @@ mod tests {
             None,
             &CgOptions { max_iters: 400, rel_tol: 1e-12 },
             no_cb,
-        );
+        )
+        .unwrap();
         assert!(out.converged);
         for (x, o) in out.x.iter().zip(&oracle) {
             assert!((x - o).abs() < 1e-6);
@@ -158,14 +185,16 @@ mod tests {
             None,
             &CgOptions { max_iters: 1000, rel_tol: 1e-10 },
             no_cb,
-        );
+        )
+        .unwrap();
         let pre = cg(
             &DenseOp::new(a),
             &b,
             Some(&binv),
             &CgOptions { max_iters: 1000, rel_tol: 1e-10 },
             no_cb,
-        );
+        )
+        .unwrap();
         assert!(pre.converged);
         assert!(
             pre.iterations < plain.iterations,
@@ -173,5 +202,20 @@ mod tests {
             pre.iterations,
             plain.iterations
         );
+    }
+
+    #[test]
+    fn non_finite_operator_fails_loudly() {
+        // An operator emitting NaN must produce a structured error that
+        // names the iteration — never a silent garbage solution
+        // (mirrors the SGD trainer's divergent_lr_fails_loudly contract).
+        let mut a = crate::linalg::Mat::eye(6);
+        a[(2, 2)] = f64::NAN;
+        let b = vec![1.0; 6];
+        let err = cg(&DenseOp::new(a), &b, None, &CgOptions::default(), no_cb)
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("diverged"), "{msg}");
+        assert!(msg.contains("iteration 1"), "{msg}");
     }
 }

@@ -7,6 +7,7 @@
 //! per iteration it performs exactly one operator application plus `O(n)`
 //! vector work and zero allocations after setup.
 
+use crate::error::{bail, Result};
 use crate::linalg::vecops::{axpy_par, dot, fused_direction_par, norm2, scale_into_par};
 use crate::solvers::linear_op::LinOp;
 use std::ops::ControlFlow;
@@ -58,12 +59,17 @@ pub struct MinresOutcome {
 /// after each iteration; the callback may stop the run early (the paper's
 /// early-stopping regularizer). `x` passed to the callback is the current
 /// iterate — cheap to use for validation predictions.
+///
+/// Fails loudly — mirroring the SGD trainer's divergence contract — if
+/// the Lanczos recurrence produces non-finite coefficients mid-iteration
+/// (an operator emitting NaN/Inf): the error names the iteration instead
+/// of letting garbage propagate through the Givens rotations.
 pub fn minres<F>(
     a: &dyn LinOp,
     b: &[f64],
     opts: &MinresOptions,
     mut callback: F,
-) -> MinresOutcome
+) -> Result<MinresOutcome>
 where
     F: FnMut(usize, &[f64], f64) -> ControlFlow<()>,
 {
@@ -72,13 +78,16 @@ where
     assert_eq!(a.dim_out(), n, "minres: operator must be square");
 
     let beta1 = norm2(b);
+    if !beta1.is_finite() {
+        bail!("minres: right-hand side has non-finite entries (|b| = {beta1:e})");
+    }
     if beta1 == 0.0 {
-        return MinresOutcome {
+        return Ok(MinresOutcome {
             x: vec![0.0; n],
             iterations: 0,
             rel_residual: 0.0,
             stop: MinresStop::ZeroRhs,
-        };
+        });
     }
 
     // Lanczos vectors.
@@ -116,6 +125,13 @@ where
         axpy_par(-alpha, &v, &mut av);
         axpy_par(-beta, &v_prev, &mut av);
         let beta_next = norm2(&av);
+        if !alpha.is_finite() || !beta_next.is_finite() {
+            bail!(
+                "minres diverged: non-finite Lanczos coefficients \
+                 (α = {alpha:e}, β = {beta_next:e}) at iteration {k} \
+                 (the operator produced non-finite values)"
+            );
+        }
 
         // Apply previous rotations to the new tridiagonal column.
         let delta = c * alpha - c_old * s * beta;
@@ -169,7 +185,7 @@ where
         }
     }
 
-    MinresOutcome { x, iterations, rel_residual: rel_res, stop }
+    Ok(MinresOutcome { x, iterations, rel_residual: rel_res, stop })
 }
 
 #[cfg(test)]
@@ -200,7 +216,8 @@ mod tests {
             &b,
             &MinresOptions { max_iters: 500, rel_tol: 1e-12 },
             no_cb,
-        );
+        )
+        .unwrap();
         assert!(matches!(out.stop, MinresStop::Converged | MinresStop::Breakdown));
         for (x, o) in out.x.iter().zip(&oracle) {
             assert!((x - o).abs() < 1e-6, "{x} vs {o}");
@@ -223,7 +240,8 @@ mod tests {
             &b,
             &MinresOptions { max_iters: 100, rel_tol: 1e-12 },
             no_cb,
-        );
+        )
+        .unwrap();
         let r = a.matvec(&out.x);
         for (ri, bi) in r.iter().zip(&b) {
             assert!((ri - bi).abs() < 1e-8);
@@ -237,7 +255,8 @@ mod tests {
             &[0.0; 5],
             &MinresOptions::default(),
             no_cb,
-        );
+        )
+        .unwrap();
         assert_eq!(out.stop, MinresStop::ZeroRhs);
         assert_eq!(out.x, vec![0.0; 5]);
     }
@@ -258,7 +277,8 @@ mod tests {
                     ControlFlow::Continue(())
                 }
             },
-        );
+        )
+        .unwrap();
         assert_eq!(out.iterations, 3);
         assert_eq!(out.stop, MinresStop::Callback);
     }
@@ -289,6 +309,22 @@ mod tests {
                 );
                 ControlFlow::Continue(())
             },
-        );
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn non_finite_operator_fails_loudly() {
+        // An operator emitting NaN must produce a structured error that
+        // names the iteration — never a silent garbage solution
+        // (mirrors the SGD trainer's divergent_lr_fails_loudly contract).
+        let mut a = Mat::eye(6);
+        a[(3, 3)] = f64::INFINITY;
+        let b = vec![1.0; 6];
+        let err =
+            minres(&DenseOp::new(a), &b, &MinresOptions::default(), no_cb).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("diverged"), "{msg}");
+        assert!(msg.contains("iteration 1"), "{msg}");
     }
 }

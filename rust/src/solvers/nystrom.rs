@@ -236,7 +236,7 @@ impl NystromModel {
                 }
                 ControlFlow::Continue(())
             },
-        );
+        )?;
 
         Ok(NystromModel {
             kernel,

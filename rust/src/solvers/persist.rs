@@ -136,63 +136,147 @@ pub struct ModelFile {
     pub t_features: Option<FeatureSpace>,
 }
 
+/// Line reader that tracks its position so every parse failure can name
+/// the offending line and the section the parser expected there — a
+/// truncated or half-written artifact produces "line 412: unexpected end
+/// of file (expected a matrix row)" instead of a bare parse error, which
+/// is what a failed hot reload surfaces to the operator.
+struct Reader<'a> {
+    lines: std::str::Lines<'a>,
+    line_no: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn next(&mut self, expected: &str) -> Result<&'a str> {
+        self.line_no += 1;
+        self.lines.next().with_context(|| {
+            format!("line {}: unexpected end of file (expected {expected})", self.line_no)
+        })
+    }
+}
+
 impl ModelFile {
-    /// Parse a v1 or v2 model file.
+    /// Parse a v1 or v2 model file. Every failure is a contextual error
+    /// naming the line offset and the section being read.
     pub fn read(path: &Path) -> Result<ModelFile> {
-        let text = std::fs::read_to_string(path)
+        let mut text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;
-        let mut lines = text.lines();
-        let header = lines.next().context("empty model file")?;
+        // Fault point for the serving robustness suite: corrupt or fail
+        // the artifact *after* the filesystem read so reload error paths
+        // are exercised deterministically (see [`crate::runtime::fault`]).
+        match crate::runtime::fault::trip("artifact_read") {
+            Some(crate::runtime::fault::Fired::Truncate) => {
+                let mut keep = text.len() / 2;
+                while keep > 0 && !text.is_char_boundary(keep) {
+                    keep -= 1;
+                }
+                text.truncate(keep);
+            }
+            Some(crate::runtime::fault::Fired::Error) => {
+                bail!("injected fault: artifact_read ({})", path.display());
+            }
+            None => {}
+        }
+        Self::parse(&text)
+            .with_context(|| format!("parsing model file {}", path.display()))
+    }
+
+    fn parse(text: &str) -> Result<ModelFile> {
+        let mut r = Reader { lines: text.lines(), line_no: 0 };
+        let header = r.next("the 'gvt-rls-model' header")?;
         let version = match header {
             "gvt-rls-model v1" => 1u8,
             "gvt-rls-model v2" => 2u8,
-            other => bail!("unsupported model header {other:?}"),
+            other => bail!("line 1: unsupported model header {other:?}"),
         };
-        let kernel_line = lines.next().context("missing kernel line")?;
-        let kernel_name =
-            kernel_line.strip_prefix("kernel ").context("malformed kernel line")?;
+        let kernel_line = r.next("the kernel line")?;
+        let kernel_name = kernel_line.strip_prefix("kernel ").with_context(|| {
+            format!("line {}: malformed kernel line {kernel_line:?}", r.line_no)
+        })?;
         let kernel = PairwiseKernel::parse(kernel_name)
-            .with_context(|| format!("unknown kernel {kernel_name:?}"))?;
+            .with_context(|| format!("line {}: unknown kernel {kernel_name:?}", r.line_no))?;
         let (policy, lambda) = if version >= 2 {
-            let pl = lines.next().context("missing policy line")?;
-            let pname = pl.strip_prefix("policy ").context("malformed policy line")?;
-            let policy = GvtPolicy::parse(pname)
-                .with_context(|| format!("unknown policy {pname:?}"))?;
-            let ll = lines.next().context("missing lambda line")?;
-            let lstr = ll.strip_prefix("lambda ").context("malformed lambda line")?;
-            let lambda =
-                if lstr == "unknown" { f64::NAN } else { lstr.parse::<f64>()? };
+            let pl = r.next("the policy line")?;
+            let pname = pl.strip_prefix("policy ").with_context(|| {
+                format!("line {}: malformed policy line {pl:?}", r.line_no)
+            })?;
+            let policy = GvtPolicy::parse(pname).with_context(|| {
+                format!("line {}: unknown policy {pname:?}", r.line_no)
+            })?;
+            let ll = r.next("the lambda line")?;
+            let lstr = ll.strip_prefix("lambda ").with_context(|| {
+                format!("line {}: malformed lambda line {ll:?}", r.line_no)
+            })?;
+            let lambda = if lstr == "unknown" {
+                f64::NAN
+            } else {
+                lstr.parse::<f64>().with_context(|| {
+                    format!("line {}: malformed lambda value {lstr:?}", r.line_no)
+                })?
+            };
             (policy, lambda)
         } else {
             (GvtPolicy::Auto, f64::NAN)
         };
-        let domains = lines.next().context("missing domains line")?;
-        let mut it =
-            domains.strip_prefix("domains ").context("malformed domains")?.split(' ');
-        let m: usize = it.next().context("missing m")?.parse()?;
-        let q: usize = it.next().context("missing q")?.parse()?;
-        let npairs_line = lines.next().context("missing pairs line")?;
-        let n: usize =
-            npairs_line.strip_prefix("pairs ").context("malformed pairs line")?.parse()?;
+        let domains = r.next("the domains line")?;
+        let mut it = domains
+            .strip_prefix("domains ")
+            .with_context(|| format!("line {}: malformed domains line {domains:?}", r.line_no))?
+            .split(' ');
+        let m: usize = it
+            .next()
+            .with_context(|| format!("line {}: domains line missing m", r.line_no))?
+            .parse()
+            .with_context(|| format!("line {}: malformed domain size m", r.line_no))?;
+        let q: usize = it
+            .next()
+            .with_context(|| format!("line {}: domains line missing q", r.line_no))?
+            .parse()
+            .with_context(|| format!("line {}: malformed domain size q", r.line_no))?;
+        let npairs_line = r.next("the pairs count")?;
+        let n: usize = npairs_line
+            .strip_prefix("pairs ")
+            .with_context(|| {
+                format!("line {}: malformed pairs line {npairs_line:?}", r.line_no)
+            })?
+            .parse()
+            .with_context(|| format!("line {}: malformed pair count", r.line_no))?;
         let mut drugs = Vec::with_capacity(n);
         let mut targets = Vec::with_capacity(n);
-        for _ in 0..n {
-            let line = lines.next().context("truncated pair list")?;
-            let (dstr, tstr) = line.split_once(' ').context("malformed pair")?;
-            let d = dstr.parse::<u32>()?;
-            let t = tstr.parse::<u32>()?;
+        for i in 0..n {
+            let line = r
+                .next("a pair row")
+                .with_context(|| format!("pair list truncated at pair {i} of {n}"))?;
+            let (dstr, tstr) = line
+                .split_once(' ')
+                .with_context(|| format!("line {}: malformed pair {line:?}", r.line_no))?;
+            let d = dstr.parse::<u32>().with_context(|| {
+                format!("line {}: malformed drug index {dstr:?}", r.line_no)
+            })?;
+            let t = tstr.parse::<u32>().with_context(|| {
+                format!("line {}: malformed target index {tstr:?}", r.line_no)
+            })?;
             if d as usize >= m || t as usize >= q {
-                bail!("pair ({d}, {t}) outside domains ({m}, {q})");
+                bail!("line {}: pair ({d}, {t}) outside domains ({m}, {q})", r.line_no);
             }
             drugs.push(d);
             targets.push(t);
         }
-        if lines.next() != Some("alpha") {
-            bail!("missing alpha section");
+        let alpha_header = r.next("the 'alpha' section header")?;
+        if alpha_header != "alpha" {
+            bail!(
+                "line {}: expected the 'alpha' section header, found {alpha_header:?}",
+                r.line_no
+            );
         }
         let mut alpha = Vec::with_capacity(n);
-        for _ in 0..n {
-            alpha.push(lines.next().context("truncated alpha")?.parse::<f64>()?);
+        for i in 0..n {
+            let line = r
+                .next("an alpha coefficient")
+                .with_context(|| format!("alpha section truncated at entry {i} of {n}"))?;
+            alpha.push(line.parse::<f64>().with_context(|| {
+                format!("line {}: malformed alpha value {line:?}", r.line_no)
+            })?);
         }
 
         let mut file = ModelFile {
@@ -212,18 +296,37 @@ impl ModelFile {
         };
         if version >= 2 {
             loop {
-                let line = lines.next().context("v2 file missing 'end' terminator")?;
+                let line = r.next("a v2 section header or the 'end' terminator")?;
                 if line == "end" {
                     break;
                 }
                 let mut fields = line.split(' ');
-                let section = fields.next().context("empty section header")?;
+                let section = fields
+                    .next()
+                    .with_context(|| format!("line {}: empty section header", r.line_no))?;
                 match section {
                     "dmatrix" | "tmatrix" => {
-                        let rows: usize = fields.next().context("matrix rows")?.parse()?;
-                        let cols: usize = fields.next().context("matrix cols")?.parse()?;
-                        let mat = read_matrix(&mut lines, rows, cols)
-                            .with_context(|| format!("reading {section}"))?;
+                        let header_line = r.line_no;
+                        let rows: usize = fields
+                            .next()
+                            .with_context(|| {
+                                format!("line {header_line}: {section} header missing rows")
+                            })?
+                            .parse()
+                            .with_context(|| {
+                                format!("line {header_line}: malformed {section} rows")
+                            })?;
+                        let cols: usize = fields
+                            .next()
+                            .with_context(|| {
+                                format!("line {header_line}: {section} header missing cols")
+                            })?
+                            .parse()
+                            .with_context(|| {
+                                format!("line {header_line}: malformed {section} cols")
+                            })?;
+                        let mat = read_matrix(&mut r, rows, cols)
+                            .with_context(|| format!("reading the {section} section"))?;
                         if section == "dmatrix" {
                             file.d = Some(mat);
                         } else {
@@ -231,16 +334,33 @@ impl ModelFile {
                         }
                     }
                     "dfeatures" | "tfeatures" => {
-                        let rows: usize = fields.next().context("feature rows")?.parse()?;
-                        let cols: usize = fields.next().context("feature cols")?.parse()?;
-                        let kname = fields.next().context("feature base kernel")?;
-                        let base = BaseKernel::parse(kname)
-                            .with_context(|| format!("unknown base kernel {kname:?}"))?;
-                        let gamma: f64 = fields.next().context("gamma")?.parse()?;
-                        let degree: u32 = fields.next().context("degree")?.parse()?;
-                        let coef0: f64 = fields.next().context("coef0")?.parse()?;
-                        let x = read_matrix(&mut lines, rows, cols)
-                            .with_context(|| format!("reading {section}"))?;
+                        let header_line = r.line_no;
+                        let mut field = |name: &str| {
+                            fields.next().with_context(|| {
+                                format!("line {header_line}: {section} header missing {name}")
+                            })
+                        };
+                        let rows: usize = field("rows")?.parse().with_context(|| {
+                            format!("line {header_line}: malformed {section} rows")
+                        })?;
+                        let cols: usize = field("cols")?.parse().with_context(|| {
+                            format!("line {header_line}: malformed {section} cols")
+                        })?;
+                        let kname = field("the base kernel name")?;
+                        let base = BaseKernel::parse(kname).with_context(|| {
+                            format!("line {header_line}: unknown base kernel {kname:?}")
+                        })?;
+                        let gamma: f64 = field("gamma")?.parse().with_context(|| {
+                            format!("line {header_line}: malformed {section} gamma")
+                        })?;
+                        let degree: u32 = field("degree")?.parse().with_context(|| {
+                            format!("line {header_line}: malformed {section} degree")
+                        })?;
+                        let coef0: f64 = field("coef0")?.parse().with_context(|| {
+                            format!("line {header_line}: malformed {section} coef0")
+                        })?;
+                        let x = read_matrix(&mut r, rows, cols)
+                            .with_context(|| format!("reading the {section} section"))?;
                         let fs = FeatureSpace {
                             x,
                             kernel: base,
@@ -252,7 +372,7 @@ impl ModelFile {
                             file.t_features = Some(fs);
                         }
                     }
-                    other => bail!("unknown v2 section {other:?}"),
+                    other => bail!("line {}: unknown v2 section {other:?}", r.line_no),
                 }
             }
         }
@@ -324,20 +444,24 @@ fn resolve_matrix(
     )
 }
 
-fn read_matrix<'a>(
-    lines: &mut impl Iterator<Item = &'a str>,
-    rows: usize,
-    cols: usize,
-) -> Result<Mat> {
+fn read_matrix(r: &mut Reader<'_>, rows: usize, cols: usize) -> Result<Mat> {
     let mut data = Vec::with_capacity(rows * cols);
-    for r in 0..rows {
-        let line = lines.next().with_context(|| format!("truncated matrix at row {r}"))?;
+    for row in 0..rows {
+        let line = r
+            .next("a matrix row")
+            .with_context(|| format!("matrix truncated at row {row} of {rows}"))?;
         let before = data.len();
         for tok in line.split(' ') {
-            data.push(tok.parse::<f64>()?);
+            data.push(tok.parse::<f64>().with_context(|| {
+                format!("line {}: malformed matrix entry {tok:?}", r.line_no)
+            })?);
         }
         if data.len() - before != cols {
-            bail!("matrix row {r} has {} entries, expected {cols}", data.len() - before);
+            bail!(
+                "line {}: matrix row {row} has {} entries, expected {cols}",
+                r.line_no,
+                data.len() - before
+            );
         }
     }
     Ok(Mat::from_vec(rows, cols, data))
@@ -646,6 +770,45 @@ mod tests {
         };
         let err = save_model_v2(&model, &path, &embed);
         assert!(err.is_err(), "normalized kernel must not pass the consistency check");
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Corruption robustness: truncating a v2 artifact at any interior
+    /// byte offset must yield a structured error that names the line it
+    /// failed on — never a panic, never a silently short model. This is
+    /// the contract the hot-reload path leans on when it rejects a
+    /// half-written artifact and keeps the old model serving.
+    #[test]
+    fn truncated_artifacts_fail_with_located_errors() {
+        let data = MetzConfig::small().generate(79);
+        let cfg = RidgeConfig { max_iters: 10, ..Default::default() };
+        let model = PairwiseRidge::fit(&data, PairwiseKernel::Kronecker, &cfg).unwrap();
+        let path = tmp("v2corrupt");
+        save_model_v2(&model, &path, &EmbedV2 { matrices: true, ..Default::default() })
+            .unwrap();
+        let full = std::fs::read_to_string(&path).unwrap();
+        let len = full.len();
+        // len-4 cuts exactly the trailing "end\n"; the rest land inside
+        // the header, the pair list, alpha, and the embedded matrices.
+        for cut in [10, len / 4, len / 2, 3 * len / 4, len - 4] {
+            let bad = tmp(&format!("v2cut{cut}"));
+            std::fs::write(&bad, &full[..cut]).unwrap();
+            let err = ModelFile::read(&bad).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains("line "),
+                "cut at {cut}/{len}: error must name a line offset: {msg}"
+            );
+            std::fs::remove_file(&bad).ok();
+        }
+        // A corrupted section header is named too, not just truncation.
+        let swapped = full.replace("\nalpha\n", "\nalhpa\n");
+        assert_ne!(swapped, full, "fixture must contain the alpha header");
+        let bad = tmp("v2swap");
+        std::fs::write(&bad, &swapped).unwrap();
+        let msg = format!("{:#}", ModelFile::read(&bad).unwrap_err());
+        assert!(msg.contains("'alpha' section header"), "{msg}");
+        std::fs::remove_file(&bad).ok();
         std::fs::remove_file(&path).ok();
     }
 

@@ -273,7 +273,7 @@ impl PairwiseRidge {
             Solver::Minres => {
                 let out = minres(&shifted, &data.y, &opts, |_, _, _| {
                     ControlFlow::Continue(())
-                });
+                })?;
                 (out.x, out.iterations)
             }
             Solver::Cg => {
@@ -283,7 +283,7 @@ impl PairwiseRidge {
                     None,
                     &cg::CgOptions { max_iters: iters, rel_tol: cfg.rel_tol },
                     |_, _, _| ControlFlow::Continue(()),
-                );
+                )?;
                 (out.x, out.iterations)
             }
             Solver::Sgd => bail!(
@@ -331,7 +331,7 @@ impl PairwiseRidge {
         let mut best_iter = 1usize;
         let mut since_best = 0usize;
 
-        let _ = minres(
+        minres(
             &shifted,
             &inner.y,
             &MinresOptions { max_iters: cfg.max_iters, rel_tol: cfg.rel_tol },
@@ -360,7 +360,7 @@ impl PairwiseRidge {
                     }
                 }
             },
-        );
+        )?;
         Ok((best_iter, history))
     }
 
@@ -395,15 +395,15 @@ impl PairwiseRidge {
         y: &[f64],
         cfg: &RidgeConfig,
         iters: usize,
-    ) -> (Vec<f64>, usize) {
+    ) -> Result<(Vec<f64>, usize)> {
         let shifted = ShiftedOp::new(op, cfg.lambda);
         let out = minres(
             &shifted,
             y,
             &MinresOptions { max_iters: iters, rel_tol: cfg.rel_tol },
             |_, _, _| ControlFlow::Continue(()),
-        );
-        (out.x, out.iterations)
+        )?;
+        Ok((out.x, out.iterations))
     }
 
     /// Fit one model per λ over a **shared** training operator: the fused
@@ -428,7 +428,7 @@ impl PairwiseRidge {
                     &data.y,
                     &MinresOptions { max_iters: cfg.max_iters, rel_tol: cfg.rel_tol },
                     |_, _, _| ControlFlow::Continue(()),
-                );
+                )?;
                 Ok(RidgeModel {
                     kernel,
                     d: data.d.clone(),

@@ -74,7 +74,7 @@ fn gvt_and_explicit_training_produce_same_alpha() {
         &small.pairs,
         &small.pairs,
     );
-    let (alpha, _) = PairwiseRidge::fit_with_op(&op, &small.y, &cfg, 300);
+    let (alpha, _) = PairwiseRidge::fit_with_op(&op, &small.y, &cfg, 300).unwrap();
     let err = gvt_rls::linalg::vecops::max_abs_diff(&gvt_model.alpha, &alpha);
     assert!(err < 1e-6, "alpha mismatch: {err}");
 }

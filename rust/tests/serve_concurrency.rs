@@ -72,7 +72,11 @@ fn hammer_and_check(
 ) {
     let batcher = Batcher::start(
         pred,
-        BatchConfig { max_batch: 32, max_wait: Duration::from_micros(300) },
+        BatchConfig {
+            max_batch: 32,
+            max_wait: Duration::from_micros(300),
+            ..Default::default()
+        },
     );
     let mut workers = Vec::new();
     for w in 0..threads {

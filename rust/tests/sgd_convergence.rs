@@ -60,7 +60,8 @@ fn cg_alpha(train: &PairDataset, kernel: PairwiseKernel, lambda: f64) -> Vec<f64
         None,
         &CgOptions { max_iters: 20_000, rel_tol: 1e-12 },
         |_, _, _| ControlFlow::Continue(()),
-    );
+    )
+    .unwrap();
     assert!(out.converged, "CG oracle failed to converge");
     out.x
 }

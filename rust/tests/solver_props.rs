@@ -33,7 +33,8 @@ fn minres_matches_cholesky_on_random_spd() {
             &b,
             &MinresOptions { max_iters: 50 * n, rel_tol: 1e-12 },
             cont,
-        );
+        )
+        .unwrap();
         Prop::all_close(&out.x, &oracle, 1e-5, "minres")
     });
 }
@@ -52,14 +53,16 @@ fn cg_and_minres_agree_on_spd() {
             &b,
             &MinresOptions { max_iters: 50 * n, rel_tol: 1e-12 },
             cont,
-        );
+        )
+        .unwrap();
         let c_out = cg(
             &DenseOp::new(a),
             &b,
             None,
             &CgOptions { max_iters: 50 * n, rel_tol: 1e-12 },
             cont,
-        );
+        )
+        .unwrap();
         Prop::all_close(&m_out.x, &c_out.x, 1e-5, "cg vs minres")
     });
 }
@@ -86,7 +89,8 @@ fn minres_residual_is_monotone_nonincreasing() {
                 last = res;
                 ControlFlow::Continue(())
             },
-        );
+        )
+        .unwrap();
         Prop::check(ok, || "residual increased".into())
     });
 }

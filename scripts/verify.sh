@@ -95,19 +95,69 @@ for (( j = 0; j < i; j++ )); do
   echo "$id $score" >> "$workdir/server_scores.txt"
 done
 sort -n "$workdir/server_scores.txt" | cut -d' ' -f2- > "$workdir/server_sorted.txt"
-exec 4>&-
 
 # Server responses must match the offline predictions TEXTUALLY — both
 # paths render with the exact-round-trip {:.17e} format and the batcher
 # is bit-identical to one-shot scoring.
 diff "$workdir/offline.txt" "$workdir/server_sorted.txt"
 
+# Mid-stream hot-reload: swap the model in from the same artifact while
+# both connections stay open, then replay the whole burst — the replies
+# must STILL be textually identical to the offline predictions (the
+# predictor pins its factorization from the artifact alone).
+printf '{"cmd": "reload"}\n' >&3
+read -r ack <&3
+grep -q '"ok": true' <<< "$ack" || { echo "reload not acknowledged: $ack"; exit 1; }
+i=0
+while read -r d t; do
+  fd=$(( 3 + i % 2 ))
+  printf '{"id": %d, "pairs": [[%d, %d]]}\n' "$i" "$d" "$t" >&"$fd"
+  i=$(( i + 1 ))
+done < "$workdir/pairs.txt"
+: > "$workdir/server_scores2.txt"
+for (( j = 0; j < i; j++ )); do
+  fd=$(( 3 + j % 2 ))
+  read -r resp <&"$fd"
+  id="$(sed -n 's/.*"id": \([0-9][0-9]*\),.*/\1/p' <<< "$resp")"
+  score="$(sed -n 's/.*"scores": \[\(.*\)\].*/\1/p' <<< "$resp")"
+  [[ -n "$id" && -n "$score" ]] || { echo "bad post-reload response: $resp"; exit 1; }
+  echo "$id $score" >> "$workdir/server_scores2.txt"
+done
+sort -n "$workdir/server_scores2.txt" | cut -d' ' -f2- > "$workdir/server_sorted2.txt"
+diff "$workdir/offline.txt" "$workdir/server_sorted2.txt"
+exec 4>&-
+
 printf '{"cmd": "shutdown"}\n' >&3
 read -r ack <&3 || true
 exec 3>&-
 wait "$server_pid"
 server_pid=""
-echo "serve round trip: OK ($i requests, 2 connections)"
+echo "serve round trip: OK ($i requests, 2 connections, mid-stream reload)"
+
+echo "== serve: injected faults answered in-band (GVT_RLS_FAULT) =="
+# Dispatcher panic on the first scoring pass: request 1 gets an in-band
+# internal error, request 2 is scored normally — the process must keep
+# serving and exit cleanly, never abort.
+GVT_RLS_FAULT=batcher_dispatch:panic:1 "$bin" serve --model "$workdir/model.txt" \
+  --stdio > "$workdir/fault_panic.out" 2>/dev/null <<'EOF'
+{"id": 1, "pairs": [[0, 0]]}
+{"id": 2, "pairs": [[0, 0]]}
+{"cmd": "shutdown"}
+EOF
+grep -q '"id": 1, "error": "internal error: scoring panicked' "$workdir/fault_panic.out"
+grep -q '"id": 2, "scores": ' "$workdir/fault_panic.out"
+
+# Truncated artifact read: the load must fail with a contextual error
+# naming the artifact (no panic, no backtrace on the happy stderr path).
+if GVT_RLS_FAULT=artifact_read:truncate:1 "$bin" predict --model "$workdir/model.txt" \
+     --pairs "$workdir/pairs.txt" --out /dev/null 2> "$workdir/fault_trunc.err"; then
+  echo "truncated artifact load unexpectedly succeeded"; exit 1
+fi
+grep -q 'model.txt' "$workdir/fault_trunc.err"
+if grep -q 'panicked' "$workdir/fault_trunc.err"; then
+  echo "truncated artifact load panicked instead of erroring"; exit 1
+fi
+echo "fault injection: OK (panic in-band, truncation contextual)"
 
 echo "== benches execute (smoke mode: 1 warmup + 1 iter, tiny sizes) =="
 # GVT_BENCH_SMOKE=1 makes every harness = false bench run a minimal
