@@ -21,7 +21,7 @@ use gvt_rls::eval::auc;
 use gvt_rls::gvt::explicit::ExplicitLinOp;
 use gvt_rls::gvt::pairwise::PairwiseKernel;
 use gvt_rls::solvers::ridge::{PairwiseRidge, RidgeConfig};
-use std::time::Instant;
+use gvt_rls::obs::clock;
 
 #[global_allocator]
 static ALLOC: TrackingAlloc = TrackingAlloc;
@@ -61,7 +61,7 @@ fn main() -> gvt_rls::error::Result<()> {
 
         // GVT method.
         reset_peak();
-        let t0 = Instant::now();
+        let t0 = clock::now();
         let model = PairwiseRidge::fit_early_stopping(
             &split.train,
             1,
@@ -82,7 +82,7 @@ fn main() -> gvt_rls::error::Result<()> {
             ("OOM".to_string(), format_bytes(baseline_bytes), "∞".to_string())
         } else {
             reset_peak();
-            let t1 = Instant::now();
+            let t1 = clock::now();
             let op = ExplicitLinOp::new(
                 PairwiseKernel::Kronecker,
                 &split.train.d,
@@ -166,11 +166,11 @@ fn main() -> gvt_rls::error::Result<()> {
                     let exec = gvt_rls::runtime::KronExec::load(&reg, meta)?;
                     let a: Vec<f64> =
                         (0..small.len()).map(|i| ((i % 11) as f64) - 5.0).collect();
-                    let t0 = Instant::now();
+                    let t0 = clock::now();
                     let p_xla =
                         exec.matvec(&small.d, &small.t, &small.pairs, &small.pairs, &a)?;
                     let xla_secs = t0.elapsed().as_secs_f64();
-                    let t1 = Instant::now();
+                    let t1 = clock::now();
                     let p_rust = gvt_rls::gvt::vec_trick::gvt_matvec(
                         &small.d,
                         &small.t,

@@ -20,7 +20,7 @@ use gvt_rls::solvers::linear_op::ShiftedOp;
 use gvt_rls::solvers::minres::{minres, MinresOptions};
 use std::ops::ControlFlow;
 use std::sync::Arc;
-use std::time::Instant;
+use gvt_rls::obs::clock;
 
 fn latent_kernel(rng: &mut Xoshiro256, n: usize, r: usize) -> (Mat, Mat) {
     let u = Mat::from_vec(n, r, dist::normal_vec(rng, n * r));
@@ -92,7 +92,7 @@ fn main() -> gvt_rls::error::Result<()> {
     let cmat = Arc::new(cmat);
     let op = TensorKronOp::new(d.clone(), t.clone(), cmat.clone(), train.clone(), train.clone());
     let shifted = ShiftedOp::new(&op, 1e-3);
-    let t0 = Instant::now();
+    let t0 = clock::now();
     let out = minres(
         &shifted,
         &y_train,
@@ -112,12 +112,12 @@ fn main() -> gvt_rls::error::Result<()> {
 
     // Timing: gvt3 vs naive O(n²) on one mat-vec.
     let probe: Vec<f64> = (0..train.len()).map(|i| ((i % 7) as f64) - 3.0).collect();
-    let t1 = Instant::now();
+    let t1 = clock::now();
     let fast = gvt3_matvec(&d, &t, &cmat, &train, &train, &probe);
     let fast_s = t1.elapsed().as_secs_f64();
     let naive_n = train.len().min(if quick { 1_000 } else { 3_000 });
     let sub = train.subset(&(0..naive_n).collect::<Vec<_>>());
-    let t2 = Instant::now();
+    let t2 = clock::now();
     let slow = naive3_matvec(&d, &t, &cmat, &sub, &sub, &probe[..naive_n]);
     let slow_s = t2.elapsed().as_secs_f64();
     // Scale the naive time quadratically to the full size for the report.

@@ -101,16 +101,19 @@ fn tag_name(name: &str, solver: Solver) -> String {
 
 fn grid(specs: Vec<ExperimentSpec>, cli: &Cli) -> Result<Vec<crate::coordinator::ExperimentResult>> {
     let workers = cli.opt_usize("workers", 2)?;
+    // Progress goes through the leveled obs log: quiet by default,
+    // GVT_RLS_LOG=info restores the per-cell lines, failures always
+    // surface at warn.
     let results = run_grid_with_progress(specs, workers, |done, total, r| {
         match r {
-            Ok(res) => eprintln!(
+            Ok(res) => crate::obs::log::info(format_args!(
                 "[{done}/{total}] {} {} setting {}: AUC {}",
                 res.name,
                 res.kernel.name(),
                 res.setting,
                 res.auc.format()
-            ),
-            Err(e) => eprintln!("[{done}/{total}] FAILED: {e:#}"),
+            )),
+            Err(e) => crate::obs::log::warn(format_args!("[{done}/{total}] FAILED: {e:#}")),
         }
     });
     results.into_iter().collect()

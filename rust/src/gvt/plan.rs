@@ -482,6 +482,7 @@ impl GvtPlan {
         while ws.s.len() < self.stage1.len() {
             ws.s.push(Mat::zeros(0, 0));
         }
+        let span = crate::obs::trace::begin();
         if self.mode != GvtPolicy::Dense
             && self.stage1.len() > 1
             && par::num_threads() > 1
@@ -498,10 +499,12 @@ impl GvtPlan {
                 self.exec_stage1(unit, ctx, a, &mut ws.s[k], w);
             }
         }
+        crate::obs::trace::end("gvt.stage1", "gvt", span);
 
         while ws.s_acc.len() < self.stage2.len() {
             ws.s_acc.push(Mat::zeros(0, 0));
         }
+        let span = crate::obs::trace::begin();
         for (idx, unit) in self.stage2.iter().enumerate() {
             let lhs = dense_mat(ctx, unit.lhs);
             let (li, ri) = match self.mode {
@@ -522,6 +525,7 @@ impl GvtPlan {
                 accumulate_rowdot(lhs, acc.as_slice(), unit.s_cols, li, ri, 1.0, out);
             }
         }
+        crate::obs::trace::end("gvt.stage2", "gvt", span);
 
         for mt in &self.misc {
             mt.term.matvec_transformed_with(

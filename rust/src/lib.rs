@@ -35,8 +35,15 @@
 //!   text) for the dense complete-data Kronecker mat-vec.
 //! * [`lint`] — `gvt-lint`: the source-level static-analysis pass
 //!   (`gvt-rls lint`) that turns the determinism / alloc-free /
-//!   unsafe-audit / env-registry / panic-surface contracts into build
-//!   failures (gates `scripts/verify.sh` and `tests/lint_clean.rs`).
+//!   unsafe-audit / env-registry / panic-surface / clock-monopoly
+//!   contracts into build failures (gates `scripts/verify.sh` and
+//!   `tests/lint_clean.rs`).
+//! * [`obs`] — unified telemetry: the metrics registry with log2
+//!   latency histograms behind serve `stats`/`metrics`, the Chrome
+//!   trace-event span recorder (`GVT_RLS_TRACE`), solver iteration
+//!   sinks (`gvt-rls train --trace-solver`), leveled logging
+//!   (`GVT_RLS_LOG`), and the process clock monopoly
+//!   ([`obs::clock`]). Zero-cost when disarmed.
 //! * [`linalg`], [`sparse`], [`rng`], [`eval`], [`bench`], [`testing`],
 //!   [`error`] — from-scratch substrates (the sandbox has no rand/rayon/
 //!   criterion/proptest or error-handling crates; the crate builds with
@@ -69,6 +76,7 @@ pub mod gvt;
 pub mod kernels;
 pub mod linalg;
 pub mod lint;
+pub mod obs;
 pub mod rng;
 pub mod runtime;
 pub mod serve;

@@ -8,7 +8,7 @@
 //! loop survives arbitrary malformed input (tests/serve_concurrency.rs).
 //! This pass makes the *source patterns* that break those invariants
 //! build failures, so a regression in an untested configuration cannot
-//! compile clean and ship. Five rules:
+//! compile clean and ship. Six rules:
 //!
 //! * `determinism` — hash-map iteration, ad-hoc threads, wall-clock
 //!   reads, and raw pool submission in result-affecting modules
@@ -24,6 +24,10 @@
 //!   appear in the README env-var table, and vice versa.
 //! * `panic_surface` — unwrap/expect/panic/indexing in the serve request
 //!   path must carry a justification.
+//! * `clock_monopoly` — `Instant::now` / `SystemTime::now` anywhere
+//!   outside `obs/clock.rs` and the measurement layers (`bench/`,
+//!   `benches/`, `coordinator/`) must go through `crate::obs::clock`,
+//!   so every latency number shares one shim and one anchor.
 //!
 //! Escapes are per-line comments — `lint: allow(<rule-key>, reason)` —
 //! so every suppression is visible in review. The pass gates

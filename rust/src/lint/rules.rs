@@ -1,10 +1,11 @@
-//! The five repo-contract rules, evaluated over scanned sources.
+//! The six repo-contract rules, evaluated over scanned sources.
 //!
 //! Every rule reports `Finding`s; escapes are per-line justification
 //! comments (see [`justified`]) so each suppression is visible in review.
-//! Rule keys used in justifications: `determinism`, `alloc`, `panic`.
-//! The unsafe-audit rule's escape is the `SAFETY:` comment itself, and
-//! the env-registry rule's is the README table — neither needs `allow`.
+//! Rule keys used in justifications: `determinism`, `alloc`, `panic`,
+//! `clock`. The unsafe-audit rule's escape is the `SAFETY:` comment
+//! itself, and the env-registry rule's is the README table — neither
+//! needs `allow`.
 
 use crate::lint::scan::{Line, SourceFile};
 use std::collections::{BTreeMap, BTreeSet};
@@ -31,6 +32,7 @@ pub fn check_all(files: &[SourceFile], readme: Option<&str>) -> Vec<Finding> {
         rule_alloc(f, &mut out);
         rule_unsafe(f, &mut out);
         rule_panic(f, &mut out);
+        rule_clock(f, &mut out);
     }
     rule_env(files, readme, &mut out);
     out.sort_by(|a, b| (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule)));
@@ -185,11 +187,11 @@ const DETERMINISM_TOKENS: &[(&str, &str)] = &[
     ),
     (
         "Instant::now",
-        "wall-clock reads in a result-affecting module; keep timing in the bench/coordinator layers",
+        "wall-clock reads in a result-affecting module; route timing through obs::clock in a caller layer",
     ),
     (
         "SystemTime::now",
-        "wall-clock reads in a result-affecting module; keep timing in the bench/coordinator layers",
+        "wall-clock reads in a result-affecting module; route timing through obs::clock in a caller layer",
     ),
     (
         "run_chunks",
@@ -426,6 +428,52 @@ fn rule_panic(file: &SourceFile, out: &mut Vec<Finding>) {
     }
 }
 
+// ---------------------------------------------------------------------
+// Rule 6: clock monopoly
+// ---------------------------------------------------------------------
+
+/// The layers allowed to read the wall clock directly: the obs clock
+/// shim itself (everything else goes through it) and the offline
+/// measurement layers, whose whole job is timing.
+fn clock_sanctioned(rel: &str) -> bool {
+    rel == "rust/src/obs/clock.rs"
+        || rel.starts_with("rust/src/bench/")
+        || rel.starts_with("rust/benches/")
+        || rel.starts_with("rust/src/coordinator/")
+}
+
+const CLOCK_TOKENS: &[&str] = &["Instant::now", "SystemTime::now"];
+
+/// Every wall-clock read outside the sanctioned timing layers must go
+/// through `obs::clock` — one shim, one anchor, one place to audit when
+/// a latency number looks wrong.
+fn rule_clock(file: &SourceFile, out: &mut Vec<Finding>) {
+    if clock_sanctioned(&file.rel_path) {
+        return;
+    }
+    for (idx, line) in file.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let head = line.code.trim_start();
+        if head.starts_with("use ") || head.starts_with("pub use ") {
+            continue;
+        }
+        for token in CLOCK_TOKENS {
+            if contains_token(&line.code, token) && !justified(&file.lines, idx, "clock") {
+                out.push(Finding {
+                    file: file.rel_path.clone(),
+                    line: idx + 1,
+                    rule: "clock_monopoly",
+                    message: format!(
+                        "`{token}` outside the sanctioned timing layers; call crate::obs::clock::now / monotonic_us instead"
+                    ),
+                });
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -561,19 +609,52 @@ fn hot(buf: &mut [f64]) {
     }
 
     #[test]
-    fn seeded_violations_trip_all_five_rules() {
+    fn clock_rule_enforces_the_obs_monopoly() {
+        let src = "fn f() {\n    let _t = std::time::Instant::now();\n}\n";
+        // Outside the sanctioned timing layers: flagged.
+        let f = lint_str("rust/src/serve/batcher.rs", src);
+        assert_eq!(f.len(), 1, "{:?}", f.iter().map(|x| &x.message).collect::<Vec<_>>());
+        assert_eq!(f[0].rule, "clock_monopoly");
+        assert_eq!(f[0].line, 2);
+        // The shim itself and the measurement layers: exempt.
+        assert!(lint_str("rust/src/obs/clock.rs", src).is_empty());
+        assert!(lint_str("rust/src/bench/fixture.rs", src).is_empty());
+        assert!(lint_str("rust/benches/bench_fixture.rs", src).is_empty());
+        assert!(lint_str("rust/src/coordinator/fixture.rs", src).is_empty());
+        // Importing the Instant *type* is fine; only `::now` reads are
+        // the monopoly's business — and justifications still work.
+        assert!(lint_str("rust/src/serve/batcher.rs", "use std::time::Instant;\n").is_empty());
+        let justified = "fn f() {\n    // lint: allow(clock, timing a cold error path)\n    let _t = std::time::Instant::now();\n}\n";
+        assert!(lint_str("rust/src/serve/batcher.rs", justified).is_empty());
+        // SystemTime is covered too.
+        let sys = "fn f() {\n    let _t = std::time::SystemTime::now();\n}\n";
+        assert_eq!(lint_str("rust/src/runtime/pool.rs", sys).len(), 1);
+    }
+
+    #[test]
+    fn seeded_violations_trip_all_six_rules() {
         let used = format!("{}_{}", ENV_PREFIX, "SEEDED_KNOB");
         let src = format!(
             "fn f(p: *const u32, v: &[f64]) {{\n    let m = std::collections::HashMap::<u32, u32>::new();\n    let _ = std::env::var(\"{used}\");\n    let _ = unsafe {{ *p }};\n    let _ = v[0];\n    // lint: alloc_free\n    {{\n        let hot = vec![0.0; 4];\n    }}\n}}\n"
         );
         let files = [SourceFile::scan("rust/src/serve/predictor.rs", &src)];
         // predictor.rs is in the determinism scope; route the panic-rule
-        // tokens through a serve-path fixture as well.
-        let serve = SourceFile::scan("rust/src/serve/server.rs", "fn g(v: &[f64]) -> f64 {\n    v[0]\n}\n");
+        // and clock-rule tokens through a serve-path fixture as well.
+        let serve = SourceFile::scan(
+            "rust/src/serve/server.rs",
+            "fn g(v: &[f64]) -> f64 {\n    let _t = std::time::Instant::now();\n    v[0]\n}\n",
+        );
         let all = [files.into_iter().next().unwrap(), serve];
         let f = check_all(&all, Some(""));
         let rules: BTreeSet<&str> = f.iter().map(|x| x.rule).collect();
-        for expected in ["determinism", "hot_alloc", "unsafe_audit", "env_registry", "panic_surface"] {
+        for expected in [
+            "determinism",
+            "hot_alloc",
+            "unsafe_audit",
+            "env_registry",
+            "panic_surface",
+            "clock_monopoly",
+        ] {
             assert!(rules.contains(expected), "missing {expected}: got {rules:?}");
         }
     }

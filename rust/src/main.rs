@@ -37,6 +37,13 @@ fn main() {
         eprintln!("error: {e:#}");
         std::process::exit(2);
     }
+    // Arm telemetry the same way: GVT_RLS_LOG sets stderr verbosity,
+    // GVT_RLS_TRACE arms the Chrome-trace span recorder. Malformed
+    // values are startup errors too.
+    if let Err(e) = gvt_rls::obs::init_from_env() {
+        eprintln!("error: {e:#}");
+        std::process::exit(2);
+    }
     let cli = match Cli::parse(std::env::args().skip(1)) {
         Ok(c) => c,
         Err(e) => {
@@ -63,7 +70,14 @@ fn main() {
             std::process::exit(2);
         }
     };
+    // Drain the span ring to GVT_RLS_TRACE (if armed) whether the
+    // command succeeded or not — a failed run's trace is the useful one.
+    let flushed = gvt_rls::obs::flush();
     if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+    if let Err(e) = flushed {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
@@ -78,7 +92,8 @@ fn print_help() {
          \x20 train                         train one model (--kernel --setting; --save-model FILE;\n\
          \x20                               --solver minres|cg|sgd; sgd: --batch-size N --epochs N\n\
          \x20                               --lr X --schedule constant|invt|cosine --momentum X\n\
-         \x20                               --tol X --check-every N --patience N --average)\n\
+         \x20                               --tol X --check-every N --patience N --average;\n\
+         \x20                               --trace-solver FILE writes per-iteration traces)\n\
          \x20 predict                       score a pair list offline (--model --pairs [--out])\n\
          \x20 serve                         prediction server (--model; --listen ADDR | --stdio;\n\
          \x20                               --max-batch N --max-wait-us U --cache N;\n\
@@ -91,15 +106,17 @@ fn print_help() {
          \x20 gvt-demo                      GVT vs explicit mat-vec timing\n\
          \x20 runtime-info                  list + smoke-run AOT artifacts\n\
          \x20 lint [paths…]                 static analysis: determinism / alloc-free /\n\
-         \x20                               unsafe-audit / env-registry / panic-surface\n\
-         \x20                               contract rules (--json for tooling)\n\n\
+         \x20                               unsafe-audit / env-registry / panic-surface /\n\
+         \x20                               clock-monopoly contract rules (--json for tooling)\n\n\
          COMMON OPTIONS:\n\
          \x20 --seed <u64>      master seed (default 42)\n\
          \x20 --folds <n>       CV folds (default 9)\n\
          \x20 --workers <n>     experiment-grid worker threads (default 2)\n\
          \x20 --quick           shrink to smoke-test size\n\n\
          RUNTIME ENV: GVT_RLS_THREADS=<n> sizes the worker pool;\n\
-         \x20 GVT_RLS_POOL=0 falls back to scoped spawning (see README)\n",
+         \x20 GVT_RLS_POOL=0 falls back to scoped spawning;\n\
+         \x20 GVT_RLS_TRACE=<file> writes a Chrome trace; GVT_RLS_LOG=<level>\n\
+         \x20 sets stderr verbosity (see README)\n",
         gvt_rls::VERSION
     );
 }
@@ -162,7 +179,18 @@ fn cmd_train(cli: &Cli) -> Result<()> {
         split.train.len(),
         split.test.len()
     );
-    let t0 = std::time::Instant::now();
+    // --trace-solver: install a timestamping iteration sink for the
+    // duration of the fit. The solvers report values only; the sink
+    // stamps wall time up here (the determinism contract keeps clocks
+    // out of solvers/).
+    let trace_points = cli.opt("trace-solver").map(|_| {
+        let points = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+        gvt_rls::obs::iter::install(Box::new(gvt_rls::obs::iter::TimedTrace::new(
+            points.clone(),
+        )));
+        points
+    });
+    let t0 = gvt_rls::obs::clock::now();
     let model = match solver {
         // MINRES keeps the paper's full early-stopping protocol.
         Solver::Minres => {
@@ -197,6 +225,29 @@ fn cmd_train(cli: &Cli) -> Result<()> {
         }
     };
     let secs = t0.elapsed().as_secs_f64();
+    if let Some(points) = trace_points {
+        let path = cli.opt("trace-solver").expect("guarded by trace_points");
+        gvt_rls::obs::iter::take();
+        let points = points.lock().unwrap_or_else(|e| e.into_inner());
+        let mut out = format!("{{\"solver\": \"{}\", \"points\": [", solver.name());
+        for (i, p) in points.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            let value = if p.value.is_finite() {
+                format!("{:e}", p.value)
+            } else {
+                "null".to_string()
+            };
+            out.push_str(&format!(
+                "{{\"iter\": {}, \"value\": {value}, \"t_us\": {}}}",
+                p.iter, p.t_us
+            ));
+        }
+        out.push_str("]}\n");
+        std::fs::write(path, out).map_err(|e| gvt_err!("writing {path}: {e}"))?;
+        println!("wrote {} solver iteration points to {path}", points.len());
+    }
     let preds = model.predict(&split.test.pairs)?;
     let a = auc(&preds, &split.test.binary_labels());
     println!(
@@ -267,7 +318,10 @@ fn cmd_predict(cli: &Cli) -> Result<()> {
         Some(path) => {
             std::fs::write(path, rendered)
                 .map_err(|e| gvt_err!("writing {path}: {e}"))?;
-            eprintln!("wrote {} scores to {path}", scores.len());
+            gvt_rls::obs::log::info(format_args!(
+                "wrote {} scores to {path}",
+                scores.len()
+            ));
         }
         None => {
             print!("{rendered}");
@@ -308,13 +362,17 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         serve_opts,
         reload_stdin: cli.has_switch("reload-stdin"),
     };
-    eprintln!(
+    // Serving is the long-lived mode: arm the metrics registry so the
+    // stats/metrics wire commands report real latency histograms.
+    // Library embedders opt in themselves via obs::metrics::set_enabled.
+    gvt_rls::obs::metrics::set_enabled(true);
+    gvt_rls::obs::log::info(format_args!(
         "serving {} (policy {}, {} training pairs; plan: {})",
         model_path,
         predictor.policy().name(),
         predictor.model().train_size(),
         predictor.plan_summary()
-    );
+    ));
     if cli.has_switch("stdio") {
         serve_stdio(predictor, cfg)
     } else {
@@ -354,14 +412,14 @@ fn cmd_gvt_demo(cli: &Cli) -> Result<()> {
             data.pairs.clone(),
             GvtPolicy::Auto,
         )?;
-        let t0 = std::time::Instant::now();
+        let t0 = gvt_rls::obs::clock::now();
         let p_gvt = op.matvec(&a);
         let gvt_s = t0.elapsed().as_secs_f64();
 
-        let t1 = std::time::Instant::now();
+        let t1 = gvt_rls::obs::clock::now();
         let exp = ExplicitLinOp::new(kernel, &data.d, &data.t, &data.pairs, &data.pairs);
         let build_s = t1.elapsed().as_secs_f64();
-        let t2 = std::time::Instant::now();
+        let t2 = gvt_rls::obs::clock::now();
         let p_exp = exp.apply(&a);
         let mv_s = t2.elapsed().as_secs_f64();
         let err = gvt_rls::linalg::vecops::max_abs_diff(&p_gvt, &p_exp);

@@ -1,0 +1,56 @@
+//! The crate's clock monopoly: the **only** module outside the
+//! sanctioned timing layers (`bench/`, `benches/`, `coordinator/`) that
+//! may call `Instant::now` / `SystemTime::now`. Everything else — the
+//! serve stack, `main.rs`, the telemetry recorders in this subsystem —
+//! reads time through [`now`] or [`monotonic_us`], so every wall-clock
+//! read in the production binary is auditable from one file. The
+//! `clock_monopoly` rule of `gvt-rls lint` enforces this statically
+//! (`lint/rules.rs`); the determinism rule independently keeps clocks
+//! out of `gvt/`, `linalg/`, and `solvers/` entirely.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Process-start anchor for [`monotonic_us`]. Initialized on first use;
+/// all µs timestamps in one process share it, so span starts and ends
+/// from different threads are directly comparable.
+fn anchor() -> Instant {
+    static ANCHOR: OnceLock<Instant> = OnceLock::new();
+    *ANCHOR.get_or_init(Instant::now)
+}
+
+/// A monotonic instant, for callers that need `Instant` arithmetic
+/// (deadlines, drain budgets). Thin veneer over `Instant::now` — the
+/// point is the import site, not the behavior.
+#[inline]
+pub fn now() -> Instant {
+    Instant::now()
+}
+
+/// Microseconds since the process-wide anchor (first clock use).
+/// Monotonic, thread-agnostic, and cheap enough for span timestamps;
+/// wraps after ~584 000 years, which we accept.
+#[inline]
+pub fn monotonic_us() -> u64 {
+    anchor().elapsed().as_micros() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotonic_us_is_monotone() {
+        let a = monotonic_us();
+        let b = monotonic_us();
+        assert!(b >= a, "monotonic_us went backwards: {a} -> {b}");
+    }
+
+    #[test]
+    fn now_and_anchor_agree_on_direction() {
+        let t = now();
+        let a = monotonic_us();
+        let b = monotonic_us();
+        assert!(t.elapsed().as_micros() as u64 >= b.saturating_sub(a));
+    }
+}

@@ -1,0 +1,123 @@
+//! Solver iteration telemetry: CG, MINRES, and the SGD trainer feed
+//! their per-iteration convergence scalar (relative residual or
+//! relative gradient) through [`record`] into whatever [`IterSink`] the
+//! caller layer installed.
+//!
+//! The solvers report **values only** — no clocks, preserving the
+//! gvt-lint determinism contract for `solvers/`. Wall-time is stamped
+//! by the sink, which lives up here in `obs` ([`TimedTrace`] stamps
+//! `clock::monotonic_us` per point); `gvt-rls train --trace-solver`
+//! installs one around a fit and writes the collected points as JSON.
+//!
+//! With no sink installed (the default, and the state during every
+//! test that measures allocation or determinism) [`record`] is a
+//! single relaxed atomic load — nothing is locked, nothing allocates.
+
+use crate::obs::clock;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// A consumer of solver iteration values. Implementations run inside
+/// the solver's iteration loop (under the global sink lock), so they
+/// should do bounded work per call.
+pub trait IterSink: Send {
+    fn record(&mut self, iter: usize, value: f64);
+}
+
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+
+fn slot() -> &'static Mutex<Option<Box<dyn IterSink>>> {
+    static SLOT: OnceLock<Mutex<Option<Box<dyn IterSink>>>> = OnceLock::new();
+    SLOT.get_or_init(|| Mutex::new(None))
+}
+
+/// Feed one iteration value to the installed sink, if any. The
+/// no-sink fast path is one relaxed load.
+#[inline]
+pub fn record(iter: usize, value: f64) {
+    if !ACTIVE.load(Ordering::Relaxed) {
+        return;
+    }
+    record_slow(iter, value);
+}
+
+#[cold]
+fn record_slow(iter: usize, value: f64) {
+    if let Some(sink) = slot().lock().unwrap_or_else(|e| e.into_inner()).as_mut() {
+        sink.record(iter, value);
+    }
+}
+
+/// Install `sink` as the process-global iteration consumer (replacing
+/// any previous one). Callers pair this with [`take`] around one fit;
+/// concurrent fits would interleave into the same sink, which is why
+/// the train CLI — one fit per process — is the intended installer.
+pub fn install(sink: Box<dyn IterSink>) {
+    *slot().lock().unwrap_or_else(|e| e.into_inner()) = Some(sink);
+    ACTIVE.store(true, Ordering::Relaxed);
+}
+
+/// Remove and return the installed sink, disarming [`record`].
+pub fn take() -> Option<Box<dyn IterSink>> {
+    ACTIVE.store(false, Ordering::Relaxed);
+    slot().lock().unwrap_or_else(|e| e.into_inner()).take()
+}
+
+/// One collected iteration point: the solver's `(iter, value)` plus the
+/// wall-clock stamp added by the sink.
+#[derive(Clone, Copy, Debug)]
+pub struct TracePoint {
+    pub iter: usize,
+    pub value: f64,
+    pub t_us: u64,
+}
+
+/// An [`IterSink`] that appends every point, stamped with
+/// [`clock::monotonic_us`], into shared storage. The installer keeps a
+/// clone of the `Arc` and reads the points back after [`take`] — no
+/// downcasting through the trait object needed.
+pub struct TimedTrace {
+    points: Arc<Mutex<Vec<TracePoint>>>,
+}
+
+impl TimedTrace {
+    pub fn new(points: Arc<Mutex<Vec<TracePoint>>>) -> TimedTrace {
+        TimedTrace { points }
+    }
+}
+
+impl IterSink for TimedTrace {
+    fn record(&mut self, iter: usize, value: f64) {
+        let t_us = clock::monotonic_us();
+        self.points
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push(TracePoint { iter, value, t_us });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn install_record_take_round_trip() {
+        // The sink slot is process-global; serialize with other obs
+        // tests (and leave it empty on exit for the solver suites).
+        let _serial = crate::obs::test_serial();
+        let points = Arc::new(Mutex::new(Vec::new()));
+        install(Box::new(TimedTrace::new(points.clone())));
+        record(7001, 0.5);
+        record(7002, 0.25);
+        assert!(take().is_some());
+        record(7003, 0.125); // disarmed: must not land
+        // Concurrent solver tests may have recorded into the installed
+        // sink too, so assert on our marker points, not exact length.
+        let got = points.lock().unwrap();
+        let ours: Vec<_> = got.iter().filter(|p| p.iter >= 7000).collect();
+        assert_eq!(ours.len(), 2, "got {ours:?}");
+        assert_eq!(ours[0].iter, 7001);
+        assert_eq!(ours[1].value, 0.25);
+        assert!(ours[1].t_us >= ours[0].t_us, "stamps must be monotone");
+    }
+}

@@ -1,0 +1,115 @@
+//! Leveled stderr diagnostics, gated by `GVT_RLS_LOG`.
+//!
+//! The default level is [`Level::Warn`]: routine progress chatter
+//! (coordinator grid progress, the serve startup banner, "wrote N
+//! scores" notices) is **quiet by default**, so tests and `--json`
+//! consumers get a clean stderr, while failures stay visible.
+//! `GVT_RLS_LOG=info` (or `debug`) restores the narration;
+//! `GVT_RLS_LOG=error` silences warnings too.
+//!
+//! Call sites pass `format_args!` so arguments are formatted only when
+//! the level is enabled:
+//!
+//! ```ignore
+//! obs::log::info(format_args!("[{done}/{total}] {name}: AUC {auc:.4}"));
+//! ```
+
+use crate::error::{bail, Result};
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Severity, most severe first. The numeric ordering is the gate:
+/// a message prints when `its level ≤ the configured level`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Warn as u8);
+
+/// The configured level.
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        _ => Level::Debug,
+    }
+}
+
+/// In-process override (tests; production configures via the env).
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// Would a message at `l` print right now? One relaxed load.
+#[inline]
+pub fn enabled(l: Level) -> bool {
+    (l as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Configure the level from `GVT_RLS_LOG` (`error` | `warn` | `info` |
+/// `debug`, case-insensitive). Unset keeps the quiet default; a value
+/// outside the alphabet is a startup error, not a silent fallback.
+pub fn init_from_env() -> Result<()> {
+    let Ok(v) = std::env::var("GVT_RLS_LOG") else {
+        return Ok(());
+    };
+    match v.to_ascii_lowercase().as_str() {
+        "error" => set_level(Level::Error),
+        "warn" => set_level(Level::Warn),
+        "info" => set_level(Level::Info),
+        "debug" => set_level(Level::Debug),
+        other => bail!("GVT_RLS_LOG: unknown level {other:?} (expected error|warn|info|debug)"),
+    }
+    Ok(())
+}
+
+/// Print `args` to stderr if `l` is enabled. Lines print bare — the
+/// existing diagnostics kept their exact shapes when they moved here,
+/// only their default visibility changed.
+pub fn log(l: Level, args: std::fmt::Arguments<'_>) {
+    if !enabled(l) {
+        return;
+    }
+    eprintln!("{args}");
+}
+
+pub fn error(args: std::fmt::Arguments<'_>) {
+    log(Level::Error, args);
+}
+
+pub fn warn(args: std::fmt::Arguments<'_>) {
+    log(Level::Warn, args);
+}
+
+pub fn info(args: std::fmt::Arguments<'_>) {
+    log(Level::Info, args);
+}
+
+pub fn debug(args: std::fmt::Arguments<'_>) {
+    log(Level::Debug, args);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating_and_round_trip() {
+        let _serial = crate::obs::test_serial();
+        let before = level();
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        set_level(Level::Debug);
+        assert!(enabled(Level::Info));
+        assert_eq!(level(), Level::Debug);
+        set_level(before);
+    }
+}

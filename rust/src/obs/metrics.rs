@@ -1,0 +1,405 @@
+//! Metrics core: named atomic counters and fixed-bucket log2 latency
+//! histograms, in the style of `runtime/fault.rs` — process-global
+//! statics, a relaxed-atomic disarmed fast path, and zero cost when off.
+//!
+//! ## Cost model
+//!
+//! The whole registry is `static`: recording allocates nothing, ever.
+//! With telemetry **disabled** (the library default) every record path
+//! is a single relaxed atomic load — [`begin_us`] reads the enable flag
+//! once and hands back the [`OFF`] sentinel, and
+//! [`Histogram::record_since`] / [`Counter::add`] early-return on it
+//! without touching another cache line. `gvt-rls serve` flips the flag
+//! on at startup ([`set_enabled`]); telemetry never touches request
+//! data, so responses are bit-identical either way
+//! (`serve/server.rs` tests pin this).
+//!
+//! ## Histogram semantics
+//!
+//! Buckets are powers of two over **microseconds**: bucket `0` holds
+//! exactly `0 µs`, bucket `i` (for `1 ≤ i < 31`) holds durations in
+//! `[2^(i-1), 2^i - 1] µs`, and the last bucket absorbs everything
+//! from `2^30 µs` (~18 min) up — saturation, never overflow.
+//! Percentiles are derived by rank-walking the bucket counts and
+//! reporting the matched bucket's **upper bound**, clamped to the
+//! exact observed maximum (tracked separately via `fetch_max`), so a
+//! reported p99 is a true upper bound on the 99th-percentile sample
+//! and never exceeds the worst sample seen.
+
+use crate::obs::clock;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+/// Number of log2 buckets. 32 covers 0 µs to ~18 minutes per span.
+pub const BUCKETS: usize = 32;
+
+/// Sentinel returned by [`begin_us`] when telemetry is off: the record
+/// side early-returns on it without any atomic traffic.
+pub const OFF: u64 = u64::MAX;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Is metric recording armed? One relaxed load — this is the entire
+/// disabled-path cost of every counter bump and span record.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Arm or disarm metric recording process-wide. The serve entry points
+/// arm it at startup; tests toggle it in-process. Counters and
+/// histograms keep whatever they have accumulated — disarming stops
+/// recording, it does not reset.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Start a span measurement: the current monotonic µs timestamp, or
+/// [`OFF`] when telemetry is disarmed.
+#[inline]
+pub fn begin_us() -> u64 {
+    if !enabled() {
+        return OFF;
+    }
+    clock::monotonic_us()
+}
+
+/// A named monotonic counter. `const`-constructible so the registry is
+/// a set of statics with no init order to get wrong.
+pub struct Counter {
+    name: &'static str,
+    value: AtomicU64,
+}
+
+impl Counter {
+    pub const fn new(name: &'static str) -> Counter {
+        Counter { name, value: AtomicU64::new(0) }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Bump by `n` when telemetry is armed; one relaxed load otherwise.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if !enabled() {
+            return;
+        }
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Map a µs duration to its log2 bucket (see module docs).
+#[inline]
+pub(crate) fn bucket_index(us: u64) -> usize {
+    let bits = (64 - us.leading_zeros()) as usize;
+    if bits >= BUCKETS {
+        BUCKETS - 1
+    } else {
+        bits
+    }
+}
+
+/// Upper bound (inclusive, µs) of bucket `i`; the last bucket is
+/// unbounded and reports the observed maximum instead.
+fn bucket_upper_us(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else {
+        (1u64 << i) - 1
+    }
+}
+
+/// A fixed-bucket log2 latency histogram (µs). All fields are atomics:
+/// recording from any thread is lock-free and allocation-free.
+pub struct Histogram {
+    name: &'static str,
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+/// Plain-number copy of a [`Histogram`] for rendering and assertions.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub sum_us: u64,
+    pub max_us: u64,
+    pub p50_us: u64,
+    pub p90_us: u64,
+    pub p99_us: u64,
+}
+
+impl Histogram {
+    pub const fn new(name: &'static str) -> Histogram {
+        // An explicit `const` item makes the array-repeat legal for a
+        // non-Copy element type.
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        Histogram {
+            name,
+            buckets: [ZERO; BUCKETS],
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Record a duration measured from a [`begin_us`] timestamp. With
+    /// telemetry disarmed `begin` is [`OFF`] and this is a branch on an
+    /// already-loaded register — no atomic access at all.
+    #[inline]
+    pub fn record_since(&self, begin: u64) {
+        if begin == OFF {
+            return;
+        }
+        self.record_us(clock::monotonic_us().saturating_sub(begin));
+    }
+
+    /// Record an explicit µs duration (armed callers and tests).
+    pub fn record_us(&self, us: u64) {
+        self.buckets[bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    /// The `q`-quantile (0 < q ≤ 1) as a µs upper bound: rank-walk the
+    /// buckets, report the matched bucket's upper bound clamped to the
+    /// observed maximum. Returns 0 for an empty histogram.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let count = self.count.load(Ordering::Relaxed);
+        if count == 0 {
+            return 0;
+        }
+        let max = self.max_us.load(Ordering::Relaxed);
+        let target = ((q * count as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum >= target {
+                if i == BUCKETS - 1 {
+                    return max;
+                }
+                return bucket_upper_us(i).min(max);
+            }
+        }
+        max
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            count: self.count.load(Ordering::Relaxed),
+            sum_us: self.sum_us.load(Ordering::Relaxed),
+            max_us: self.max_us.load(Ordering::Relaxed),
+            p50_us: self.quantile_us(0.50),
+            p90_us: self.quantile_us(0.90),
+            p99_us: self.quantile_us(0.99),
+        }
+    }
+
+    /// Summary JSON object: counts and derived percentiles only.
+    fn summary_json(&self) -> String {
+        let s = self.snapshot();
+        format!(
+            "{{\"count\": {}, \"sum_us\": {}, \"max_us\": {}, \
+             \"p50_us\": {}, \"p90_us\": {}, \"p99_us\": {}}}",
+            s.count, s.sum_us, s.max_us, s.p50_us, s.p90_us, s.p99_us
+        )
+    }
+
+    /// Full JSON object: the summary plus the non-empty buckets as
+    /// `[upper_bound_us, count]` pairs (the last, saturated bucket
+    /// renders its upper bound as the observed maximum).
+    fn full_json(&self) -> String {
+        let mut out = self.summary_json();
+        out.pop();
+        out.push_str(", \"buckets\": [");
+        let mut first = true;
+        for (i, b) in self.buckets.iter().enumerate() {
+            let n = b.load(Ordering::Relaxed);
+            if n == 0 {
+                continue;
+            }
+            if !first {
+                out.push_str(", ");
+            }
+            first = false;
+            let upper = if i == BUCKETS - 1 {
+                self.max_us.load(Ordering::Relaxed)
+            } else {
+                bucket_upper_us(i)
+            };
+            out.push_str(&format!("[{upper}, {n}]"));
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// The registry: request-lifecycle stages of the serve path, plus the
+// dispatcher tallies. All static — nothing to initialize or look up.
+// ---------------------------------------------------------------------
+
+/// Time spent in the admission-control check before a job is enqueued.
+pub static ADMISSION_WAIT: Histogram = Histogram::new("admission_wait_us");
+/// Enqueue-to-triage wait in the dispatcher queue, per job.
+pub static QUEUE_WAIT: Histogram = Histogram::new("queue_wait_us");
+/// First-job-arrival to dispatch, per batch (the coalescing window).
+pub static BATCH_ASSEMBLY: Histogram = Histogram::new("batch_assembly_us");
+/// The GVT scoring pass, per batch.
+pub static GVT_PASS: Histogram = Histogram::new("gvt_pass_us");
+/// Response rendering (score formatting), per batch.
+pub static RENDER: Histogram = Histogram::new("render_us");
+/// Socket/stdout write of one response line.
+pub static WRITE: Histogram = Histogram::new("write_us");
+
+/// Every per-stage histogram, in pipeline order.
+pub static SERVE_STAGES: [&Histogram; 6] =
+    [&ADMISSION_WAIT, &QUEUE_WAIT, &BATCH_ASSEMBLY, &GVT_PASS, &RENDER, &WRITE];
+
+/// Batches handed to a GVT pass by the dispatcher.
+pub static BATCHES_DISPATCHED: Counter = Counter::new("batches_dispatched");
+/// Jobs answered with scores (deadline-expired and panicked jobs are
+/// tallied by the slot's robust counters instead).
+pub static JOBS_SCORED: Counter = Counter::new("jobs_scored");
+
+/// Every registered counter.
+pub static COUNTERS: [&Counter; 2] = [&BATCHES_DISPATCHED, &JOBS_SCORED];
+
+/// The `"latency"` block spliced into serve `stats`: per-stage summary
+/// histograms (no buckets — the `metrics` command carries those).
+pub fn latency_json() -> String {
+    let mut out = format!("{{\"enabled\": {}", enabled());
+    for h in SERVE_STAGES {
+        out.push_str(&format!(", \"{}\": {}", h.name(), h.summary_json()));
+    }
+    out.push('}');
+    out
+}
+
+/// The `{"cmd": "metrics"}` payload: counters plus full per-stage
+/// histograms including bucket contents.
+pub fn metrics_json() -> String {
+    let mut out = format!("{{\"enabled\": {}, \"counters\": {{", enabled());
+    let mut first = true;
+    for c in COUNTERS {
+        if !first {
+            out.push_str(", ");
+        }
+        first = false;
+        out.push_str(&format!("\"{}\": {}", c.name(), c.get()));
+    }
+    out.push_str("}, \"latency\": {");
+    let mut first = true;
+    for h in SERVE_STAGES {
+        if !first {
+            out.push_str(", ");
+        }
+        first = false;
+        out.push_str(&format!("\"{}\": {}", h.name(), h.full_json()));
+    }
+    out.push_str("}}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_are_powers_of_two() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(7), 3);
+        assert_eq!(bucket_index(8), 4);
+        // Exact power-of-two edges: 2^k lands in bucket k+1 (its range
+        // is [2^k, 2^(k+1) - 1]).
+        for k in 1..30 {
+            assert_eq!(bucket_index(1u64 << k), k + 1, "2^{k}");
+            assert_eq!(bucket_index((1u64 << k) - 1), k, "2^{k} - 1");
+        }
+    }
+
+    #[test]
+    fn saturation_at_max_bucket() {
+        assert_eq!(bucket_index(1u64 << 30), BUCKETS - 1);
+        assert_eq!(bucket_index(u64::MAX / 2), BUCKETS - 1);
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+        let h = Histogram::new("sat");
+        h.record_us(u64::MAX / 2);
+        let s = h.snapshot();
+        assert_eq!(s.count, 1);
+        assert_eq!(s.max_us, u64::MAX / 2);
+        // The saturated bucket reports the exact observed maximum, not
+        // a fictitious 2^31 upper bound.
+        assert_eq!(s.p50_us, u64::MAX / 2);
+        assert!(h.full_json().contains(&format!("[{}, 1]", u64::MAX / 2)));
+    }
+
+    #[test]
+    fn percentiles_derive_from_bucket_ranks() {
+        let h = Histogram::new("pct");
+        for us in 1..=8u64 {
+            h.record_us(us);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 8);
+        assert_eq!(s.sum_us, 36);
+        assert_eq!(s.max_us, 8);
+        // Ranks: bucket1{1}, bucket2{2,3}, bucket3{4..7}, bucket4{8}.
+        // p50 -> rank 4 -> bucket 3, upper bound 7.
+        assert_eq!(s.p50_us, 7);
+        // p90 -> rank 8 -> bucket 4, upper bound 15 clamped to max 8.
+        assert_eq!(s.p90_us, 8);
+        assert_eq!(s.p99_us, 8);
+        // Empty histogram reports zeros.
+        let empty = Histogram::new("empty");
+        assert_eq!(empty.snapshot().p50_us, 0);
+    }
+
+    #[test]
+    fn renders_are_valid_shapes() {
+        let h = Histogram::new("shape");
+        h.record_us(0);
+        h.record_us(5);
+        let full = h.full_json();
+        assert!(full.starts_with('{') && full.ends_with('}'), "{full}");
+        assert!(full.contains("\"buckets\": [[0, 1], [7, 1]]"), "{full}");
+        let lat = latency_json();
+        assert!(lat.contains("\"queue_wait_us\""), "{lat}");
+        let m = metrics_json();
+        assert!(m.contains("\"counters\""), "{m}");
+        assert!(m.contains("\"batches_dispatched\""), "{m}");
+    }
+
+    #[test]
+    fn disarmed_begin_returns_off_sentinel() {
+        // ENABLED is process-global: serialize with every other test
+        // that toggles it (the serve telemetry test does too).
+        let _serial = crate::obs::test_serial();
+        set_enabled(false);
+        assert_eq!(begin_us(), OFF);
+        let h = Histogram::new("off");
+        h.record_since(OFF);
+        assert_eq!(h.snapshot().count, 0, "OFF sentinel must not record");
+        set_enabled(true);
+        let t = begin_us();
+        assert_ne!(t, OFF);
+        h.record_since(t);
+        assert_eq!(h.snapshot().count, 1);
+        set_enabled(false);
+    }
+}

@@ -1,0 +1,63 @@
+//! Unified telemetry: metrics, spans, solver iteration traces, logging.
+//!
+//! A zero-dependency observability layer in the style of
+//! [`crate::runtime::fault`] — process-global registries, a
+//! relaxed-atomic disarmed fast path on every record site, and zero
+//! cost when off. Four recorders, one shared clock:
+//!
+//! * [`clock`] — the crate's **clock monopoly**: the only module
+//!   outside the sanctioned timing layers allowed to call
+//!   `Instant::now` (the `clock_monopoly` lint rule enforces it).
+//! * [`metrics`] — named atomic counters and log2 latency histograms
+//!   for the serve request lifecycle (admission wait, queue wait,
+//!   batch assembly, GVT pass, render, write); rendered into serve
+//!   `stats` as a `"latency"` block and by the `{"cmd": "metrics"}`
+//!   wire command. Armed by `gvt-rls serve` at startup.
+//! * [`trace`] — a bounded ring-buffer span recorder drained to Chrome
+//!   trace-event JSON; armed by `GVT_RLS_TRACE=path.json`, flushed at
+//!   process exit. Covers pool jobs/chunk claims, GVT stage-1/stage-2
+//!   passes, batch dispatches, and hot-reloads.
+//! * [`iter`] — an [`iter::IterSink`] the solvers feed per-iteration
+//!   convergence values into (values only; wall-time is stamped here,
+//!   never inside `solvers/`); `gvt-rls train --trace-solver` writes
+//!   the collected curve as JSON.
+//! * [`log`] — leveled stderr diagnostics gated by `GVT_RLS_LOG`
+//!   (quiet by default: warnings and errors only).
+//!
+//! See `docs/OBSERVABILITY.md` for metric names, histogram semantics,
+//! and the trace-event schema.
+
+pub mod clock;
+pub mod iter;
+pub mod log;
+pub mod metrics;
+pub mod trace;
+
+use crate::error::Result;
+
+/// Arm the recorders that take environment configuration
+/// (`GVT_RLS_LOG`, `GVT_RLS_TRACE`). Called by `main` before command
+/// dispatch, next to the fault-injection init; a malformed value is a
+/// startup error.
+pub fn init_from_env() -> Result<()> {
+    log::init_from_env()?;
+    trace::init_from_env()?;
+    Ok(())
+}
+
+/// Flush exit-time artifacts (the Chrome trace, when armed). Called by
+/// `main` after command dispatch returns — on success *and* failure —
+/// so a serve shutdown or an aborted train still leaves a usable
+/// trace file.
+pub fn flush() -> Result<()> {
+    trace::flush_if_armed()
+}
+
+/// Serializes every test that mutates the process-global obs state
+/// (metric enable flag, trace arming, the iteration sink, log level) —
+/// sibling tests run concurrently under libtest.
+#[cfg(test)]
+pub(crate) fn test_serial() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}

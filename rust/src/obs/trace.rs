@@ -1,0 +1,222 @@
+//! Bounded ring-buffer span recorder, drained to Chrome trace-event
+//! JSON (load the file at `chrome://tracing` or <https://ui.perfetto.dev>).
+//!
+//! Armed by `GVT_RLS_TRACE=path.json` ([`init_from_env`], called by
+//! `main` before command dispatch) and flushed by `main` after dispatch
+//! returns ([`flush_if_armed`]), so one trace file covers the whole
+//! process: pool jobs and chunk claims, GVT stage-1/stage-2 passes,
+//! batch dispatches, hot-reloads.
+//!
+//! ## Cost model
+//!
+//! Disarmed (the default), [`begin`] is a single relaxed atomic load
+//! returning the [`OFF`] sentinel and [`end`] is a branch on it — the
+//! instrumented hot paths (`runtime/pool.rs` chunk claims, `gvt/plan.rs`
+//! stage passes) pay nothing else. Armed, [`end`] takes a mutex on a
+//! **preallocated** fixed-capacity ring: when the ring wraps, the oldest
+//! spans are overwritten and tallied in `dropped` (reported in the
+//! drained JSON) — tracing is bounded-memory by construction and never
+//! reallocates after arming.
+//!
+//! Span names and categories are `&'static str` chosen from this crate,
+//! so events store two pointers and no event ever allocates.
+
+use crate::error::{bail, Context, Result};
+use crate::obs::clock;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Sentinel returned by [`begin`] when tracing is disarmed.
+pub const OFF: u64 = u64::MAX;
+
+/// Ring capacity in events (~3 MiB armed; nothing allocated disarmed).
+const CAPACITY: usize = 65_536;
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+#[derive(Clone, Copy)]
+struct Event {
+    name: &'static str,
+    cat: &'static str,
+    start_us: u64,
+    dur_us: u64,
+    tid: u64,
+}
+
+struct Ring {
+    events: Vec<Event>,
+    /// Overwrite cursor once `events` is full.
+    next: usize,
+    /// Events overwritten after the ring wrapped.
+    dropped: u64,
+}
+
+fn ring() -> &'static Mutex<Ring> {
+    static RING: OnceLock<Mutex<Ring>> = OnceLock::new();
+    RING.get_or_init(|| {
+        Mutex::new(Ring { events: Vec::with_capacity(CAPACITY), next: 0, dropped: 0 })
+    })
+}
+
+fn path_slot() -> &'static Mutex<Option<PathBuf>> {
+    static PATH: OnceLock<Mutex<Option<PathBuf>>> = OnceLock::new();
+    PATH.get_or_init(|| Mutex::new(None))
+}
+
+/// Small dense thread ids for the `tid` field: `ThreadId` has no stable
+/// numeric accessor, so each thread takes the next ticket on its first
+/// recorded span.
+fn tid() -> u64 {
+    use std::cell::Cell;
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    thread_local! {
+        static TID: Cell<u64> = const { Cell::new(0) };
+    }
+    TID.with(|c| {
+        let v = c.get();
+        if v != 0 {
+            return v;
+        }
+        let v = NEXT.fetch_add(1, Ordering::Relaxed);
+        c.set(v);
+        v
+    })
+}
+
+/// Is the recorder armed?
+#[inline]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// In-process arm/disarm (tests; production arms via [`init_from_env`]).
+pub fn set_armed(on: bool) {
+    ARMED.store(on, Ordering::Relaxed);
+}
+
+/// Open a span: the current µs timestamp, or [`OFF`] when disarmed.
+#[inline]
+pub fn begin() -> u64 {
+    if !armed() {
+        return OFF;
+    }
+    clock::monotonic_us()
+}
+
+/// Close a span opened by [`begin`]. A no-op branch on the [`OFF`]
+/// sentinel; otherwise records one complete (`ph: "X"`) event.
+#[inline]
+pub fn end(name: &'static str, cat: &'static str, begin: u64) {
+    if begin == OFF {
+        return;
+    }
+    end_slow(name, cat, begin);
+}
+
+#[cold]
+fn end_slow(name: &'static str, cat: &'static str, begin: u64) {
+    let now = clock::monotonic_us();
+    let ev = Event { name, cat, start_us: begin, dur_us: now.saturating_sub(begin), tid: tid() };
+    let mut r = ring().lock().unwrap_or_else(|e| e.into_inner());
+    if r.events.len() < CAPACITY {
+        r.events.push(ev);
+    } else {
+        let i = r.next % CAPACITY;
+        r.events[i] = ev;
+        r.next = i + 1;
+        r.dropped += 1;
+    }
+}
+
+/// Events currently held (tests).
+pub fn len() -> usize {
+    ring().lock().unwrap_or_else(|e| e.into_inner()).events.len()
+}
+
+/// Arm the recorder from `GVT_RLS_TRACE` (a file path the trace is
+/// written to at process exit). Unset: stays disarmed. Set but empty:
+/// an error — a misconfigured operator should hear about it at startup,
+/// not find a missing trace afterwards.
+pub fn init_from_env() -> Result<()> {
+    match std::env::var("GVT_RLS_TRACE") {
+        Err(_) => Ok(()),
+        Ok(p) if p.is_empty() => {
+            bail!("GVT_RLS_TRACE is set but empty; expected a trace output path")
+        }
+        Ok(p) => {
+            *path_slot().lock().unwrap_or_else(|e| e.into_inner()) = Some(PathBuf::from(p));
+            set_armed(true);
+            Ok(())
+        }
+    }
+}
+
+/// Render everything recorded so far as a Chrome trace-event JSON
+/// document (`traceEvents` of complete `"X"` events; timestamps and
+/// durations in µs; `otherData.dropped` counts ring overwrites).
+pub fn render_json() -> String {
+    let r = ring().lock().unwrap_or_else(|e| e.into_inner());
+    let mut out = String::with_capacity(64 + r.events.len() * 96);
+    out.push_str("{\"displayTimeUnit\": \"ms\", \"traceEvents\": [");
+    for (i, ev) in r.events.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        out.push_str(&format!(
+            "{{\"name\": \"{}\", \"cat\": \"{}\", \"ph\": \"X\", \
+             \"ts\": {}, \"dur\": {}, \"pid\": 1, \"tid\": {}}}",
+            ev.name, ev.cat, ev.start_us, ev.dur_us, ev.tid
+        ));
+    }
+    out.push_str(&format!("], \"otherData\": {{\"dropped\": {}}}}}", r.dropped));
+    out
+}
+
+/// Write the trace to the `GVT_RLS_TRACE` path if the recorder was
+/// armed from the environment; a no-op otherwise. `main` calls this
+/// once, after command dispatch returns (success or failure), so serve
+/// shutdowns and solver runs alike leave a complete file.
+pub fn flush_if_armed() -> Result<()> {
+    let path = path_slot().lock().unwrap_or_else(|e| e.into_inner()).clone();
+    let Some(path) = path else {
+        return Ok(());
+    };
+    std::fs::write(&path, render_json())
+        .with_context(|| format!("writing Chrome trace to {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The ring and ARMED flag are process-global; every test that arms
+    // the recorder serializes on the obs test lock and disarms before
+    // releasing it, so concurrent suites never observe it armed.
+
+    #[test]
+    fn disarmed_spans_record_nothing() {
+        let _serial = crate::obs::test_serial();
+        set_armed(false);
+        let before = len();
+        let t = begin();
+        assert_eq!(t, OFF);
+        end("noop", "test", t);
+        assert_eq!(len(), before);
+    }
+
+    #[test]
+    fn armed_spans_render_as_chrome_events() {
+        let _serial = crate::obs::test_serial();
+        set_armed(true);
+        let t = begin();
+        assert_ne!(t, OFF);
+        end("unit.span", "test", t);
+        set_armed(false);
+        let json = render_json();
+        assert!(json.contains("\"traceEvents\""), "{json}");
+        assert!(json.contains("\"name\": \"unit.span\""), "{json}");
+        assert!(json.contains("\"ph\": \"X\""), "{json}");
+        assert!(json.ends_with('}'), "{json}");
+    }
+}

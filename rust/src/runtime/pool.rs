@@ -338,6 +338,7 @@ fn run_job_chunks(job: &JobCore) {
             return;
         }
         let _region = RegionGuard::enter();
+        let span = crate::obs::trace::begin();
         // Contain chunk panics: an unwinding pool worker would strand
         // the submitter. The first payload is re-thrown on the
         // submitter, so test assertions inside parallel closures keep
@@ -348,6 +349,7 @@ fn run_job_chunks(job: &JobCore) {
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
             (job.call)(job.data, ci)
         }));
+        crate::obs::trace::end("pool.chunk", "pool", span);
         if let Err(payload) = result {
             let mut slot = job.payload.lock().unwrap_or_else(|e| e.into_inner());
             if slot.is_none() {
@@ -413,6 +415,7 @@ where
     }
     let shared = shared();
     shared.ensure_workers(num_threads().saturating_sub(1));
+    let span = crate::obs::trace::begin();
 
     let job = JobCore {
         data: f as *const F as *const (),
@@ -456,6 +459,7 @@ where
             g = shared.done_cv.wait(g).unwrap();
         }
     }
+    crate::obs::trace::end("pool.job", "pool", span);
 
     if job.panicked.load(Ordering::Acquire) {
         let payload = job

@@ -47,6 +47,7 @@
 //!   `RobustStats::drained_jobs` — the graceful-shutdown ledger.
 
 use crate::error::{gvt_err, Result};
+use crate::obs::{clock, metrics, trace};
 use crate::serve::predictor::{Predictor, QueryPair, ServeOptions};
 use crate::serve::reload::{PredictorSlot, RobustStats};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -121,6 +122,9 @@ struct Job {
     pairs: Vec<QueryPair>,
     reply: ReplyTx,
     deadline: Option<Instant>,
+    /// Enqueue stamp for the queue-wait histogram ([`metrics::OFF`]
+    /// when telemetry is disarmed — recording it is then a no-op).
+    enqueued_at_us: u64,
 }
 
 type ReplyTx = mpsc::Sender<std::result::Result<Vec<f64>, String>>;
@@ -157,13 +161,17 @@ impl BatcherHandle {
             return Ok(Vec::new());
         }
         let n = pairs.len();
-        if !self.admit(n) {
+        let t_admission = metrics::begin_us();
+        let admitted = self.admit(n);
+        metrics::ADMISSION_WAIT.record_since(t_admission);
+        if !admitted {
             RobustStats::bump(&self.slot.robust.overload_rejected);
             return Err(ScoreFailure::Overloaded { retry_after_us: self.retry_after_us() });
         }
         let deadline = self.effective_deadline(deadline_us);
         let (reply_tx, reply_rx) = mpsc::channel();
-        if self.tx.send(Job { pairs, reply: reply_tx, deadline }).is_err() {
+        let enqueued_at_us = metrics::begin_us();
+        if self.tx.send(Job { pairs, reply: reply_tx, deadline, enqueued_at_us }).is_err() {
             // Never reached the queue: back the admission out ourselves.
             self.inflight.fetch_sub(n, Ordering::AcqRel);
             return Err(ScoreFailure::Failed("batcher is shut down".to_string()));
@@ -212,7 +220,7 @@ impl BatcherHandle {
             (c, None) => Some(c),
             (c, Some(us)) => Some(us.min(c)),
         };
-        limit.map(|us| Instant::now() + Duration::from_micros(us))
+        limit.map(|us| clock::now() + Duration::from_micros(us))
     }
 }
 
@@ -278,12 +286,12 @@ impl Batcher {
         let clean = match &self.worker {
             None => true,
             Some(w) => {
-                let deadline = Instant::now() + timeout;
+                let deadline = clock::now() + timeout;
                 loop {
                     if w.is_finished() {
                         break true;
                     }
-                    if Instant::now() >= deadline {
+                    if clock::now() >= deadline {
                         break false;
                     }
                     std::thread::sleep(Duration::from_millis(2));
@@ -347,11 +355,12 @@ fn dispatch_loop(
                 Err(_) => return, // all handles dropped, queue flushed
             },
         };
+        let t_assembly = metrics::begin_us();
         let mut jobs = vec![first];
         let mut total: usize = jobs.iter().map(|j| j.pairs.len()).sum();
-        let deadline = Instant::now() + cfg.max_wait;
+        let deadline = clock::now() + cfg.max_wait;
         while total < cfg.max_batch {
-            let now = Instant::now();
+            let now = clock::now();
             if now >= deadline {
                 break;
             }
@@ -371,7 +380,10 @@ fn dispatch_loop(
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
         }
+        metrics::BATCH_ASSEMBLY.record_since(t_assembly);
+        let span = trace::begin();
         run_batch(&slot, &inflight, jobs);
+        trace::end("serve.batch", "serve", span);
     }
 }
 
@@ -385,11 +397,12 @@ fn run_batch(slot: &PredictorSlot, inflight: &AtomicUsize, jobs: Vec<Job>) {
     // Deadline triage happens at assembly time — after the queue wait,
     // before the expensive pass — so an expired job neither rides along
     // nor delays the batch further.
-    let now = Instant::now();
+    let now = clock::now();
     let mut batch: Vec<QueryPair> = Vec::new();
     let mut replies: Vec<(ReplyTx, usize)> = Vec::new();
     for mut job in jobs {
         let n = job.pairs.len();
+        metrics::QUEUE_WAIT.record_since(job.enqueued_at_us);
         if job.deadline.map_or(false, |d| now >= d) {
             RobustStats::bump(&slot.robust.deadline_expired);
             let _ = job.reply.send(Err(
@@ -415,14 +428,20 @@ fn run_batch(slot: &PredictorSlot, inflight: &AtomicUsize, jobs: Vec<Job>) {
         // One fused pass for the whole batch, panic-safe: an unwinding
         // scoring pass (or an injected `batcher_dispatch:panic` fault)
         // must kill the batch in-band, never the dispatcher.
+        metrics::BATCHES_DISPATCHED.add(1);
+        let t_gvt = metrics::begin_us();
+        let span = trace::begin();
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             if crate::runtime::fault::trip("batcher_dispatch").is_some() {
                 return Err(gvt_err!("injected fault: batcher_dispatch"));
             }
             predictor.score(&batch)
         }));
+        trace::end("serve.gvt_pass", "serve", span);
+        metrics::GVT_PASS.record_since(t_gvt);
         match outcome {
             Ok(Ok(scores)) => {
+                metrics::JOBS_SCORED.add(replies.len() as u64);
                 let mut offset = 0;
                 for (reply, n) in &replies {
                     // lint: allow(panic, per-job counts sum to the batch

@@ -132,9 +132,11 @@ pub struct StatsSnapshot {
     pub batch_pairs_max: u64,
     pub drug_cache_hits: u64,
     pub drug_cache_misses: u64,
+    pub drug_cache_evictions: u64,
     pub drug_cache_len: usize,
     pub target_cache_hits: u64,
     pub target_cache_misses: u64,
+    pub target_cache_evictions: u64,
     pub target_cache_len: usize,
 }
 
@@ -502,9 +504,11 @@ impl Predictor {
             batch_pairs_max: self.stats.batch_pairs_max.load(Ordering::Relaxed),
             drug_cache_hits: dc.hits(),
             drug_cache_misses: dc.misses(),
+            drug_cache_evictions: dc.evictions(),
             drug_cache_len: dc.len(),
             target_cache_hits: tc.hits(),
             target_cache_misses: tc.misses(),
+            target_cache_evictions: tc.evictions(),
             target_cache_len: tc.len(),
         }
     }
@@ -518,8 +522,9 @@ impl Predictor {
              \"plan\": \"{}\", \"score_calls\": {}, \"pairs\": {}, \
              \"batches\": {}, \"requests\": {}, \"batch_jobs_max\": {}, \
              \"batch_pairs_max\": {}, \"drug_cache\": {{\"hits\": {}, \
-             \"misses\": {}, \"len\": {}}}, \"target_cache\": {{\"hits\": {}, \
-             \"misses\": {}, \"len\": {}}}}}",
+             \"misses\": {}, \"evictions\": {}, \"len\": {}}}, \
+             \"target_cache\": {{\"hits\": {}, \"misses\": {}, \
+             \"evictions\": {}, \"len\": {}}}}}",
             self.model.kernel().name(),
             self.policy.name(),
             self.model.train_size(),
@@ -532,9 +537,11 @@ impl Predictor {
             s.batch_pairs_max,
             s.drug_cache_hits,
             s.drug_cache_misses,
+            s.drug_cache_evictions,
             s.drug_cache_len,
             s.target_cache_hits,
             s.target_cache_misses,
+            s.target_cache_evictions,
             s.target_cache_len,
         )
     }

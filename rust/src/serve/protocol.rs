@@ -13,6 +13,9 @@
 //! → {"cmd": "stats"}
 //! ← {"stats": {...}}
 //!
+//! → {"cmd": "metrics"}
+//! ← {"metrics": {...}}
+//!
 //! → {"cmd": "reload", "path": "model_v2.txt"}
 //! ← {"ok": true}
 //!
@@ -48,6 +51,7 @@ use crate::serve::predictor::{ObjectRef, QueryPair};
 pub enum Request {
     Score { id: Option<f64>, pairs: Vec<QueryPair>, deadline_us: Option<u64> },
     Stats { id: Option<f64> },
+    Metrics { id: Option<f64> },
     Reload { id: Option<f64>, path: Option<String> },
     Shutdown { id: Option<f64> },
 }
@@ -66,6 +70,7 @@ pub fn parse_request(line: &str) -> Result<Request> {
     if let Some(cmd) = json.get("cmd") {
         return match cmd.as_str() {
             Some("stats") => Ok(Request::Stats { id }),
+            Some("metrics") => Ok(Request::Metrics { id }),
             Some("reload") => {
                 let path = match json.get("path") {
                     None => None,
@@ -209,6 +214,12 @@ pub fn stats_response(id: &Option<f64>, stats_obj: &str) -> String {
     format!("{{{}\"stats\": {stats_obj}}}", fmt_id(id))
 }
 
+/// Metrics response wrapping a pre-rendered JSON object (counters plus
+/// per-stage latency histograms — see docs/OBSERVABILITY.md).
+pub fn metrics_response(id: &Option<f64>, metrics_obj: &str) -> String {
+    format!("{{{}\"metrics\": {metrics_obj}}}", fmt_id(id))
+}
+
 /// Acknowledgement (shutdown).
 pub fn ok_response(id: &Option<f64>) -> String {
     format!("{{{}\"ok\": true}}", fmt_id(id))
@@ -272,6 +283,10 @@ mod tests {
             Request::Stats { .. }
         ));
         assert!(matches!(
+            parse_request(r#"{"cmd": "metrics", "id": 4}"#).unwrap(),
+            Request::Metrics { id: Some(_) }
+        ));
+        assert!(matches!(
             parse_request(r#"{"cmd": "shutdown", "id": 9}"#).unwrap(),
             Request::Shutdown { id: Some(_) }
         ));
@@ -330,6 +345,7 @@ mod tests {
             error_response(&Some(1.0), "bad \"thing\"\n"),
             ok_response(&None),
             stats_response(&None, "{\"x\": 1}"),
+            metrics_response(&Some(2.0), "{\"enabled\": true, \"counters\": {}}"),
             overloaded_response(&Some(4.0), 1000),
         ] {
             assert!(Json::parse(&line).is_ok(), "{line}");

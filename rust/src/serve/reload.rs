@@ -125,7 +125,8 @@ impl PredictorSlot {
     /// predictor keeps serving and the error describes why the reload
     /// was rejected. Counted either way in [`RobustStats`].
     pub fn reload_from_path(&self, path: &Path) -> Result<()> {
-        match Predictor::from_file(path, self.opts) {
+        let span = crate::obs::trace::begin();
+        let out = match Predictor::from_file(path, self.opts) {
             Ok(fresh) => {
                 let fresh = Arc::new(fresh);
                 *self.current.write().unwrap_or_else(|e| e.into_inner()) = fresh;
@@ -138,7 +139,9 @@ impl PredictorSlot {
                     format!("reload rejected ({}); previous model still serving", path.display())
                 })
             }
-        }
+        };
+        crate::obs::trace::end("serve.reload", "serve", span);
+        out
     }
 
     /// Enter the shutdown drain phase: jobs the dispatcher answers from

@@ -35,6 +35,7 @@
 //!   handlers and dispatcher are abandoned rather than hanging shutdown.
 
 use crate::error::{gvt_err, Context, GvtError, Result};
+use crate::obs::{clock, metrics};
 use crate::runtime::fault;
 use crate::serve::batcher::{Batcher, BatcherHandle, ScoreFailure};
 use crate::serve::predictor::Predictor;
@@ -45,7 +46,7 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Hard cap on one request line's byte length (features arrays are the
 /// only large payload; 8 MiB ≈ 400k f64 literals, far beyond any real
@@ -145,7 +146,10 @@ fn handle_line(
         Ok(Request::Score { id, pairs, deadline_us }) => {
             match handle.submit(pairs, deadline_us) {
                 Ok(scores) => {
-                    LineOutcome::Respond(protocol::scores_response(&id, &scores))
+                    let t_render = metrics::begin_us();
+                    let resp = protocol::scores_response(&id, &scores);
+                    metrics::RENDER.record_since(t_render);
+                    LineOutcome::Respond(resp)
                 }
                 Err(ScoreFailure::Overloaded { retry_after_us }) => {
                     LineOutcome::Respond(protocol::overloaded_response(&id, retry_after_us))
@@ -156,8 +160,19 @@ fn handle_line(
             }
         }
         Ok(Request::Stats { id }) => {
-            let json = slot.current().stats_json_with(&slot.robust.snapshot());
+            // The predictor renders its own counters (it is clock-free
+            // by the determinism contract); the per-stage latency block
+            // is spliced in here, at the transport layer that owns the
+            // telemetry.
+            let mut json = slot.current().stats_json_with(&slot.robust.snapshot());
+            json.pop();
+            json.push_str(", \"latency\": ");
+            json.push_str(&metrics::latency_json());
+            json.push('}');
             LineOutcome::Respond(protocol::stats_response(&id, &json))
+        }
+        Ok(Request::Metrics { id }) => {
+            LineOutcome::Respond(protocol::metrics_response(&id, &metrics::metrics_json()))
         }
         Ok(Request::Reload { id, path }) => {
             let target = path.map(PathBuf::from).or_else(|| model_path.map(Path::to_path_buf));
@@ -222,8 +237,10 @@ pub fn serve_stdio(predictor: Arc<Predictor>, cfg: ServeConfig) -> Result<()> {
             match outcome {
                 None => {}
                 Some(LineOutcome::Respond(resp)) => {
+                    let t_write = metrics::begin_us();
                     writeln!(out, "{resp}")?;
                     out.flush()?;
+                    metrics::WRITE.record_since(t_write);
                 }
                 Some(LineOutcome::ShutdownAfter(resp)) => {
                     writeln!(out, "{resp}")?;
@@ -364,13 +381,13 @@ pub fn serve_on(
     // answered from here on are counted as drained stragglers, and
     // everything is bounded by the drain timeout.
     slot.begin_drain();
-    let drain_deadline = Instant::now() + cfg.drain_timeout;
+    let drain_deadline = clock::now() + cfg.drain_timeout;
     for h in handlers {
         let joined = loop {
             if h.is_finished() {
                 break true;
             }
-            if Instant::now() >= drain_deadline {
+            if clock::now() >= drain_deadline {
                 break false;
             }
             std::thread::sleep(Duration::from_millis(5));
@@ -384,7 +401,7 @@ pub fn serve_on(
         }
     }
     let left = drain_deadline
-        .saturating_duration_since(Instant::now())
+        .saturating_duration_since(clock::now())
         .max(Duration::from_millis(50));
     batcher.shutdown_within(left);
     match spawn_err {
@@ -466,7 +483,7 @@ fn handle_connection(
     // The idle clock resets only when a request line COMPLETES — a
     // slow-loris connection dripping partial bytes still counts as idle
     // and is reaped.
-    let mut last_done = Instant::now();
+    let mut last_done = clock::now();
     loop {
         // Injection point for connection-level faults: a `stall` holds
         // this read loop (exercising idle/health isolation between
@@ -528,11 +545,14 @@ fn handle_connection(
                 ))),
             };
             buf.clear();
-            last_done = Instant::now();
+            last_done = clock::now();
             match outcome {
                 None => {}
                 Some(LineOutcome::Respond(resp)) => {
-                    if writeln!(writer, "{resp}").and_then(|_| writer.flush()).is_err() {
+                    let t_write = metrics::begin_us();
+                    let wrote = writeln!(writer, "{resp}").and_then(|_| writer.flush());
+                    metrics::WRITE.record_since(t_write);
+                    if wrote.is_err() {
                         break;
                     }
                 }
@@ -735,5 +755,88 @@ mod tests {
         assert_eq!(resp, "{\"ok\": true}");
         drop(conn);
         server.join().unwrap();
+    }
+
+    /// Telemetry pins: arming metrics mid-stream leaves score responses
+    /// byte-identical (telemetry observes, never perturbs), the
+    /// per-stage latency histograms grow monotonically across a burst,
+    /// `stats` gains a `"latency"` block, and `{"cmd": "metrics"}`
+    /// answers with counters plus full bucketed histograms.
+    #[test]
+    fn telemetry_is_invisible_to_scores_and_counts_stages() {
+        use crate::obs::metrics;
+        // ENABLED is process-global; serialize with the obs unit tests
+        // and leave it disarmed on exit.
+        let _serial = crate::obs::test_serial();
+        metrics::set_enabled(false);
+
+        let predictor = toy_predictor(122);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let pred = predictor.clone();
+        let server = std::thread::spawn(move || {
+            serve_on(listener, pred, quick_cfg()).unwrap();
+        });
+
+        let mut conn = TcpStream::connect(addr).unwrap();
+        let burst: Vec<String> = (0..8)
+            .map(|i| format!("{{\"id\": {i}, \"pairs\": [[1, 2], [3, 4]]}}"))
+            .collect();
+
+        // Disarmed burst: the baseline responses.
+        let off: Vec<String> =
+            burst.iter().map(|l| request_line(&mut conn, l)).collect();
+
+        // Armed burst of the SAME requests: responses must match byte
+        // for byte, and every serve stage must tally the traffic.
+        metrics::set_enabled(true);
+        let queue0 = metrics::QUEUE_WAIT.snapshot().count;
+        let gvt0 = metrics::GVT_PASS.snapshot().count;
+        let write0 = metrics::WRITE.snapshot().count;
+        let scored0 = metrics::JOBS_SCORED.get();
+        let on: Vec<String> =
+            burst.iter().map(|l| request_line(&mut conn, l)).collect();
+        assert_eq!(off, on, "telemetry must not change responses");
+
+        // Monotone growth, `>=` because the registry is process-global
+        // and other tests' serve traffic may land concurrently.
+        assert!(metrics::QUEUE_WAIT.snapshot().count >= queue0 + 8);
+        assert!(metrics::GVT_PASS.snapshot().count >= gvt0 + 1);
+        assert!(metrics::WRITE.snapshot().count >= write0 + 8);
+        assert!(metrics::JOBS_SCORED.get() >= scored0 + 8);
+
+        // `stats` now carries the latency block with every stage.
+        let resp = request_line(&mut conn, r#"{"cmd": "stats"}"#);
+        let parsed = Json::parse(&resp).unwrap();
+        let stats = parsed.get("stats").unwrap();
+        let latency = stats.get("latency").unwrap();
+        for h in metrics::SERVE_STAGES {
+            assert!(latency.get(h.name()).is_some(), "missing stage {}", h.name());
+        }
+        assert!(
+            latency.get("queue_wait_us").unwrap().get("count").unwrap().as_f64().unwrap()
+                >= 8.0
+        );
+        // The evictions satellite: cache blocks render the counter.
+        assert!(
+            stats.get("drug_cache").unwrap().get("evictions").is_some(),
+            "{resp}"
+        );
+
+        // The dedicated metrics command: counters + bucketed histograms.
+        let resp = request_line(&mut conn, r#"{"cmd": "metrics", "id": 5}"#);
+        let parsed = Json::parse(&resp).unwrap();
+        assert_eq!(parsed.get("id").unwrap().as_f64().unwrap(), 5.0);
+        let m = parsed.get("metrics").unwrap();
+        assert!(matches!(m.get("enabled"), Some(Json::Bool(true))), "{resp}");
+        assert!(m.get("counters").unwrap().get("jobs_scored").is_some());
+        let gvt = m.get("latency").unwrap().get("gvt_pass_us").unwrap();
+        assert!(gvt.get("buckets").unwrap().as_arr().unwrap().len() >= 1, "{resp}");
+
+        let resp = request_line(&mut conn, r#"{"cmd": "shutdown"}"#);
+        assert_eq!(resp, "{\"ok\": true}");
+        drop(conn);
+        server.join().unwrap();
+        metrics::set_enabled(false);
     }
 }

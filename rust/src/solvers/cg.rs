@@ -106,6 +106,8 @@ where
         }
         iterations = k;
         rel = rnorm / bnorm;
+        // Values only — wall-time is stamped by the obs layer, never here.
+        crate::obs::iter::record(k, rel);
         if let ControlFlow::Break(()) = callback(k, &x, rel) {
             break;
         }

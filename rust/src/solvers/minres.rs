@@ -169,6 +169,8 @@ where
 
         iterations = k;
         rel_res = eta.abs() / beta1;
+        // Values only — wall-time is stamped by the obs layer, never here.
+        crate::obs::iter::record(k, rel_res);
 
         if let ControlFlow::Break(()) = callback(k, &x, rel_res) {
             stop = MinresStop::Callback;

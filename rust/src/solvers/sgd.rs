@@ -365,6 +365,8 @@ impl SgdTrainer {
             objective = 0.5 * (dot(cand, &grad) - dot(cand, &self.y));
             rel_grad = norm2(&grad) / ynorm;
             history.push(SgdCheckpoint { epoch: epochs, objective, rel_grad });
+            // Values only — wall-time is stamped by the obs layer, never here.
+            crate::obs::iter::record(epochs, rel_grad);
             if !objective.is_finite() || !rel_grad.is_finite() {
                 // Divergence (lr past the stability bound): fail loudly
                 // instead of burning the epoch budget and returning NaNs.

@@ -10,7 +10,7 @@ cd "$(dirname "$0")/.."
 echo "== tier-1: cargo build --release --offline =="
 cargo build --release --offline
 
-echo "== tier-1: gvt-lint (source-level contracts: determinism / alloc-free / unsafe audit / env registry / panic surface) =="
+echo "== tier-1: gvt-lint (source-level contracts: determinism / alloc-free / unsafe audit / env registry / panic surface / clock monopoly) =="
 # Fails on any finding; tests/lint_clean.rs runs the same pass under
 # cargo test, this invocation gates the CLI surface and leaves a
 # machine-readable dump next to the build artifacts.
@@ -158,6 +158,27 @@ if grep -q 'panicked' "$workdir/fault_trunc.err"; then
   echo "truncated artifact load panicked instead of erroring"; exit 1
 fi
 echo "fault injection: OK (panic in-band, truncation contextual)"
+
+echo "== telemetry: metrics command + Chrome trace export (GVT_RLS_TRACE) =="
+# A stdio serve round trip with the trace recorder armed: the metrics
+# wire command must answer with the latency registry, and the process
+# must drain its span ring to valid Chrome trace-event JSON at exit.
+GVT_RLS_TRACE="$workdir/trace.json" "$bin" serve --model "$workdir/model.txt" \
+  --stdio > "$workdir/telemetry.out" 2>/dev/null <<'EOF'
+{"id": 1, "pairs": [[0, 0]]}
+{"cmd": "stats"}
+{"cmd": "metrics"}
+{"cmd": "shutdown"}
+EOF
+grep -q '"id": 1, "scores": ' "$workdir/telemetry.out"
+grep -q '"latency": {"enabled": true' "$workdir/telemetry.out"
+grep -q '"metrics": {"enabled": true' "$workdir/telemetry.out"
+grep -q '"gvt_pass_us"' "$workdir/telemetry.out"
+# The trace file must be well-formed JSON carrying trace events.
+python3 -m json.tool "$workdir/trace.json" >/dev/null
+grep -q '"traceEvents"' "$workdir/trace.json"
+grep -q '"serve.batch"' "$workdir/trace.json"
+echo "telemetry: OK (metrics in-band, trace valid JSON)"
 
 echo "== benches execute (smoke mode: 1 warmup + 1 iter, tiny sizes) =="
 # GVT_BENCH_SMOKE=1 makes every harness = false bench run a minimal
