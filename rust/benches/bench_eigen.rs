@@ -1,0 +1,133 @@
+//! Eigen shortcut vs CG: full λ-grid training wall time on complete
+//! grids.
+//!
+//! On a complete m×q grid with the Kronecker kernel the eigen solver
+//! pays one `O(m³ + q³)` decomposition and then `O(mq(m+q))` per λ —
+//! while CG pays `O(iters · (nm + nq))` per λ with `n = mq`. This bench
+//! times both lanes over the same λ grid (plus the eigen LOOCV pass,
+//! which replaces a whole cross-validation) so the crossover is a
+//! measured number, not folklore (rust/DESIGN.md §Eigen-Shortcut).
+//!
+//! Set `GVT_RLS_BENCH_JSON=<path>` to emit the suite as JSON —
+//! scripts/bench.sh points it at BENCH_eigen.json in the repo root
+//! (full sizes: m = q ∈ {64, 128}).
+
+use gvt_rls::bench::{reduced_size, smoke, BenchConfig, BenchSuite};
+use gvt_rls::data::kernel_filling::KernelFillingConfig;
+use gvt_rls::gvt::pairwise::{PairwiseKernel, PairwiseLinOp};
+use gvt_rls::gvt::vec_trick::GvtPolicy;
+use gvt_rls::solvers::cg::{cg, CgOptions};
+use gvt_rls::solvers::complete::EigenRidge;
+use gvt_rls::solvers::linear_op::ShiftedOp;
+use std::hint::black_box;
+use std::ops::ControlFlow;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let mut suite = BenchSuite::new();
+    let (grids, lambdas): (&[usize], Vec<f64>) = if smoke() {
+        (&[16], vec![1e-2, 1.0])
+    } else if reduced_size() {
+        (&[48], vec![1e-3, 1e-2, 1e-1, 1.0, 10.0])
+    } else {
+        (
+            &[64, 128],
+            vec![1e-4, 1e-3, 1e-2, 1e-1, 1.0, 10.0, 100.0, 1000.0],
+        )
+    };
+    let rel_tol = if smoke() { 1e-6 } else { 1e-8 };
+
+    println!(
+        "# bench_eigen — closed-form eigen λ-grid vs CG λ-grid on complete \
+         m×q grids ({} λ values, cg rel_tol {rel_tol:.0e})\n",
+        lambdas.len()
+    );
+
+    let mut rows: Vec<(usize, f64, f64, f64, usize)> = Vec::new();
+    for &k in grids {
+        // n = k² covers the k×k grid: the complete-data case.
+        let data = KernelFillingConfig::small().generate(k, k * k, 42);
+        assert_eq!(data.len(), k * k, "kernel-filling grid must be complete");
+
+        // --- eigen: one decomposition, every λ closed-form ----------
+        let r = suite.run(&format!("eigen λ-grid     m=q={k}"), &cfg, || {
+            let er = EigenRidge::new(&data, PairwiseKernel::Kronecker).unwrap();
+            black_box(er.alpha_grid(&lambdas).unwrap());
+        });
+        let eig_secs = r.mean.as_secs_f64();
+
+        // --- eigen LOOCV: exact model selection on top --------------
+        let er = EigenRidge::new(&data, PairwiseKernel::Kronecker).unwrap();
+        let r = suite.run(&format!("eigen LOOCV grid m=q={k}"), &cfg, || {
+            black_box(er.loocv(&lambdas).unwrap());
+        });
+        let loo_secs = r.mean.as_secs_f64();
+
+        // --- cg: one shared GVT operator, one Krylov solve per λ ----
+        let op = PairwiseLinOp::new(
+            PairwiseKernel::Kronecker,
+            data.d.clone(),
+            data.t.clone(),
+            data.pairs.clone(),
+            data.pairs.clone(),
+            GvtPolicy::Auto,
+        )
+        .unwrap();
+        let mut cg_iters_total = 0usize;
+        let r = suite.run(&format!("cg λ-grid        m=q={k}"), &cfg, || {
+            cg_iters_total = 0;
+            for &lambda in &lambdas {
+                let shifted = ShiftedOp::new(&op, lambda);
+                let out = cg(
+                    &shifted,
+                    black_box(&data.y),
+                    None,
+                    &CgOptions { max_iters: 10_000, rel_tol },
+                    |_, _, _| ControlFlow::Continue(()),
+                )
+                .unwrap();
+                cg_iters_total += out.iterations;
+                black_box(out.x);
+            }
+        });
+        let cg_secs = r.mean.as_secs_f64();
+
+        println!(
+            "    m=q={k}: eigen {:.1}ms (+loocv {:.1}ms) | cg {cg_iters_total} iters \
+             {:.1}ms | speedup {:.2}x",
+            eig_secs * 1e3,
+            loo_secs * 1e3,
+            cg_secs * 1e3,
+            cg_secs / eig_secs.max(1e-12)
+        );
+        rows.push((k, eig_secs, loo_secs, cg_secs, cg_iters_total));
+    }
+
+    println!("\n{}", suite.table());
+
+    if let Ok(path) = std::env::var("GVT_RLS_BENCH_JSON") {
+        let meta: Vec<(&str, String)> = vec![
+            ("bench", "bench_eigen".to_string()),
+            ("rel_tol", format!("{rel_tol:e}")),
+            (
+                "lambda_grid",
+                lambdas.iter().map(|l| format!("{l:e}")).collect::<Vec<_>>().join(","),
+            ),
+            (
+                "grids",
+                grids.iter().map(|g| g.to_string()).collect::<Vec<_>>().join(","),
+            ),
+            (
+                "lambda_grid_secs",
+                rows.iter()
+                    .map(|(k, e, l, c, it)| {
+                        format!("m{k}:eigen={e:.4}s,loocv={l:.4}s,cg={c:.4}s,cg_iters={it}")
+                    })
+                    .collect::<Vec<_>>()
+                    .join(";"),
+            ),
+        ];
+        suite.write_json(&path, &meta).expect("writing bench JSON");
+        println!("wrote {path}");
+    }
+}

@@ -110,6 +110,14 @@ pub fn run_cv_experiment(spec: &ExperimentSpec) -> Result<ExperimentResult> {
                 &sgd_config_for(&spec.ridge),
                 fold_seed,
             ),
+            // Direct complete-grid lane: errors in-band when a CV fold is
+            // not a complete grid (every Table-1 split drops cells, so
+            // this arm only succeeds on purpose-built complete folds).
+            Solver::Eigen => crate::solvers::complete::EigenRidge::new(
+                &split.train,
+                spec.kernel,
+            )
+            .and_then(|er| er.fit_model(spec.ridge.lambda)),
         }
         .with_context(|| format!("fold {f} of {}", spec.name))?;
         let secs = t0.elapsed().as_secs_f64();

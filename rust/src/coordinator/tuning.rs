@@ -7,6 +7,7 @@ use crate::data::{splits, PairDataset};
 use crate::error::Result;
 use crate::eval::auc;
 use crate::gvt::pairwise::PairwiseKernel;
+use crate::solvers::complete::EigenRidge;
 use crate::solvers::ridge::{PairwiseRidge, RidgeConfig, RidgeModel};
 use crate::solvers::sgd::{SgdConfig, SgdTrainer};
 use crate::solvers::Solver;
@@ -18,6 +19,10 @@ pub struct Candidate {
     pub kernel: PairwiseKernel,
     pub validation_auc: f64,
     pub iterations: usize,
+    /// Exact leave-one-out MSE — only the eigen sweep
+    /// ([`select_lambda_eigen`]) computes it; the split-based sweeps
+    /// leave it `None`.
+    pub loo_mse: Option<f64>,
 }
 
 /// Select λ on an inner validation split (setting-aware), training each
@@ -63,6 +68,7 @@ fn sweep_lambda_grid(
                 kernel,
                 validation_auc: auc(&col, &val_labels).unwrap_or(0.5),
                 iterations: model.iterations,
+                loo_mse: None,
             });
         }
     }
@@ -102,12 +108,54 @@ pub fn select_lambda_sgd(
     sweep_lambda_grid(&models, lambdas, kernel, validation)
 }
 
+/// λ selection on a **complete grid** via the eigen shortcut: one
+/// `O(m³ + q³)` eigendecomposition, then **exact** leave-one-out CV for
+/// every λ in closed form ([`crate::solvers::complete::EigenRidge`]) —
+/// no inner validation split, no solver iterations, no retrains. The
+/// best candidate minimizes LOO MSE (the exact criterion the leverages
+/// formula computes); each candidate also reports the AUC of its LOO
+/// predictions against the binarized labels so eigen sweeps remain
+/// comparable with the split-based sweeps, and `iterations` is 0 — the
+/// direct lane has no Krylov loop. Errors in-band when the dataset is
+/// not a complete grid or the kernel is not Kronecker.
+pub fn select_lambda_eigen(
+    train: &PairDataset,
+    kernel: PairwiseKernel,
+    lambdas: &[f64],
+) -> Result<(Candidate, Vec<Candidate>)> {
+    let er = EigenRidge::new(train, kernel)?;
+    let cells = er.loocv(lambdas)?;
+    let labels = train.binary_labels();
+    let sweep: Vec<Candidate> = cells
+        .iter()
+        .map(|cell| Candidate {
+            lambda: cell.lambda,
+            kernel,
+            validation_auc: auc(&cell.loo, &labels).unwrap_or(0.5),
+            iterations: 0,
+            loo_mse: Some(cell.mse),
+        })
+        .collect();
+    let best = sweep
+        .iter()
+        .cloned()
+        .min_by(|a, b| {
+            a.loo_mse
+                .expect("eigen candidates carry LOO MSE")
+                .partial_cmp(&b.loo_mse.expect("eigen candidates carry LOO MSE"))
+                .expect("LOO MSE is finite")
+        })
+        .expect("empty lambda grid");
+    Ok((best, sweep))
+}
+
 /// Solver-dispatching λ selection for `--solver`-style callers: routes
 /// the stochastic solver to [`select_lambda_sgd`] (one shared
-/// [`SgdTrainer`] for the grid) and both exact solvers to
+/// [`SgdTrainer`] for the grid), both exact Krylov solvers to
 /// [`select_lambda`] (one shared operator; the converged MINRES sweep
 /// solutions are the same Tikhonov optima CG reaches, so the exact path
-/// serves both). The figure grids train at fixed λ and dispatch solvers
+/// serves both), and the eigen solver to [`select_lambda_eigen`]
+/// (complete grids: exact LOOCV, λ selection effectively free). The figure grids train at fixed λ and dispatch solvers
 /// in [`crate::coordinator::experiment::run_cv_experiment`]; this is
 /// the matching entry point for λ *searches* (a future `tune`
 /// subcommand) so the two sweeps cannot drift.
@@ -135,6 +183,7 @@ pub fn select_lambda_for(
         Solver::Minres | Solver::Cg => {
             select_lambda(train, setting, kernel, lambdas, cfg, seed)
         }
+        Solver::Eigen => select_lambda_eigen(train, kernel, lambdas),
     }
 }
 
@@ -163,6 +212,7 @@ pub fn select_kernel(
             kernel,
             validation_auc: auc(&preds, &val_labels).unwrap_or(0.5),
             iterations: model.iterations,
+            loo_mse: None,
         });
     }
     let best = sweep
@@ -177,6 +227,7 @@ pub fn select_kernel(
 mod tests {
     use super::*;
     use crate::data::chessboard::{ChessboardConfig, Pattern};
+    use crate::data::kernel_filling::KernelFillingConfig;
     use crate::data::metz::MetzConfig;
 
     #[test]
@@ -277,6 +328,46 @@ mod tests {
             assert_eq!(a.validation_auc, b.validation_auc);
             assert_eq!(a.iterations, b.iterations);
         }
+    }
+
+    #[test]
+    fn eigen_lambda_selection_uses_exact_loocv() {
+        // Complete 10×10 grid: the eigen sweep reports exact LOO MSE per
+        // λ, zero iterations, and picks the LOO-MSE minimizer.
+        let k = 10;
+        let data = KernelFillingConfig::small().generate(k, k * k, 907);
+        let lambdas = [1e-2, 1e-1, 1.0, 10.0];
+        let (best, sweep) =
+            select_lambda_eigen(&data, PairwiseKernel::Kronecker, &lambdas).unwrap();
+        assert_eq!(sweep.len(), lambdas.len());
+        assert!(sweep.iter().all(|c| c.iterations == 0));
+        assert!(sweep.iter().all(|c| c.loo_mse.is_some()));
+        let best_mse = best.loo_mse.unwrap();
+        assert!(sweep.iter().all(|c| best_mse <= c.loo_mse.unwrap() + 1e-15));
+
+        // The dispatcher routes Solver::Eigen to the same sweep.
+        let cfg = RidgeConfig::default();
+        let scfg = SgdConfig::default();
+        let (b2, s2) = select_lambda_for(
+            Solver::Eigen,
+            &data,
+            1,
+            PairwiseKernel::Kronecker,
+            &lambdas,
+            &cfg,
+            &scfg,
+            4,
+        )
+        .unwrap();
+        assert_eq!(b2.lambda, best.lambda);
+        assert_eq!(s2.len(), sweep.len());
+
+        // Preconditions fail in-band: non-Kronecker kernel, incomplete grid.
+        assert!(select_lambda_eigen(&data, PairwiseKernel::Linear, &lambdas).is_err());
+        let incomplete = KernelFillingConfig::small().generate(10, 50, 907);
+        assert!(
+            select_lambda_eigen(&incomplete, PairwiseKernel::Kronecker, &lambdas).is_err()
+        );
     }
 
     #[test]

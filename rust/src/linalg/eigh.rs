@@ -152,4 +152,91 @@ mod tests {
         a[(0, 1)] = 1.0;
         assert!(eigh(&a).is_err());
     }
+
+    #[test]
+    fn agrees_with_cholesky_solve_on_spd() {
+        // Solving (A + λI) x = b in the eigenbasis must match the
+        // Cholesky oracle behind closed_form.rs.
+        use crate::linalg::chol::solve_regularized;
+        use crate::rng::dist;
+        let mut rng = Xoshiro256::seed_from(403);
+        for n in [4, 9, 16] {
+            let a = gen::psd_kernel(&mut rng, n);
+            let b = dist::normal_vec(&mut rng, n);
+            let lambda = 0.5;
+            let e = eigh(&a).unwrap();
+            let mut coeff = e.vectors.transpose().matvec(&b);
+            for (c, &v) in coeff.iter_mut().zip(&e.values) {
+                *c /= v + lambda;
+            }
+            let x = e.vectors.matvec(&coeff);
+            let oracle = solve_regularized(&a, lambda, &b).unwrap();
+            for (xi, oi) in x.iter().zip(&oracle) {
+                assert!((xi - oi).abs() < 1e-9, "n={n}: {xi} vs {oi}");
+            }
+        }
+    }
+
+    #[test]
+    fn one_by_one_is_trivial() {
+        let mut a = Mat::zeros(1, 1);
+        a[(0, 0)] = 4.25;
+        let e = eigh(&a).unwrap();
+        assert_eq!(e.values, vec![4.25]);
+        assert!((e.vectors[(0, 0)].abs() - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn repeated_eigenvalues_keep_invariants() {
+        // A = 2I + 5 u uᵀ has spectrum {2, 2, 7}: the eigenvectors of the
+        // repeated eigenvalue are not unique, so test only the invariants
+        // (spectrum, orthonormality, reconstruction).
+        let u = {
+            let raw = [1.0, 2.0, -2.0]; // ‖raw‖ = 3
+            raw.map(|x| x / 3.0)
+        };
+        let mut a = Mat::zeros(3, 3);
+        for i in 0..3 {
+            for j in 0..3 {
+                a[(i, j)] = 5.0 * u[i] * u[j] + if i == j { 2.0 } else { 0.0 };
+            }
+        }
+        let e = eigh(&a).unwrap();
+        for (got, want) in e.values.iter().zip(&[2.0, 2.0, 7.0]) {
+            assert!((got - want).abs() < 1e-10, "spectrum: {:?}", e.values);
+        }
+        let g = e.vectors.transpose().matmul(&e.vectors);
+        assert!(g.max_abs_diff(&Mat::eye(3)) < 1e-10);
+        let mut lam = Mat::zeros(3, 3);
+        for i in 0..3 {
+            lam[(i, i)] = e.values[i];
+        }
+        let rec = e.vectors.matmul(&lam).matmul(&e.vectors.transpose());
+        assert!(rec.max_abs_diff(&a) < 1e-10);
+    }
+
+    #[test]
+    fn near_singular_rank_deficient_is_stable() {
+        // K = X Xᵀ with X 8×2 has rank 2: six eigenvalues at (numerical)
+        // zero must come out as ~0, not garbage, and the factorization
+        // must still reconstruct and stay orthonormal.
+        use crate::rng::dist;
+        let mut rng = Xoshiro256::seed_from(404);
+        let n = 8;
+        let x = Mat::from_vec(n, 2, dist::normal_vec(&mut rng, n * 2));
+        let k = x.matmul(&x.transpose());
+        let e = eigh(&k).unwrap();
+        for &v in &e.values[..n - 2] {
+            assert!(v.abs() < 1e-8, "rank-deficient eigenvalue {v} not ~0");
+        }
+        assert!(e.values[n - 1] > 1e-2, "dominant eigenvalue collapsed");
+        let g = e.vectors.transpose().matmul(&e.vectors);
+        assert!(g.max_abs_diff(&Mat::eye(n)) < 1e-9);
+        let mut lam = Mat::zeros(n, n);
+        for i in 0..n {
+            lam[(i, i)] = e.values[i];
+        }
+        let rec = e.vectors.matmul(&lam).matmul(&e.vectors.transpose());
+        assert!(rec.max_abs_diff(&k) < 1e-8);
+    }
 }

@@ -90,9 +90,14 @@ fn print_help() {
          COMMANDS:\n\
          \x20 datasets                      print Table 5 dataset statistics\n\
          \x20 train                         train one model (--kernel --setting; --save-model FILE;\n\
-         \x20                               --solver minres|cg|sgd; sgd: --batch-size N --epochs N\n\
+         \x20                               --solver minres|cg|sgd|eigen;\n\
+         \x20                               --dataset metz|kernel-filling [--grid K];\n\
+         \x20                               sgd: --batch-size N --epochs N\n\
          \x20                               --lr X --schedule constant|invt|cosine --momentum X\n\
          \x20                               --tol X --check-every N --patience N --average;\n\
+         \x20                               eigen: complete grids only — --lambdas \"1e-3,1e-2,…\"\n\
+         \x20                               selects λ by exact LOOCV, zero solver iterations;\n\
+         \x20                               cg: --precond eigen for the eigenbasis preconditioner;\n\
          \x20                               --trace-solver FILE writes per-iteration traces)\n\
          \x20 predict                       score a pair list offline (--model --pairs [--out])\n\
          \x20 serve                         prediction server (--model; --listen ADDR | --stdio;\n\
@@ -170,8 +175,26 @@ fn cmd_train(cli: &Cli) -> Result<()> {
         ..Default::default()
     };
 
-    let data = if quick { MetzConfig::small() } else { MetzConfig::paper() }.generate(seed);
+    // --dataset: metz (the paper's incomplete-grid default) or
+    // kernel-filling, whose n = k² sample covers the k×k grid — the
+    // complete-data case the eigen solver needs.
+    let dataset = cli.opt_choice("dataset", "metz", &["metz", "kernel-filling"])?;
+    let data = match dataset.as_str() {
+        "kernel-filling" => {
+            use gvt_rls::data::kernel_filling::KernelFillingConfig;
+            let k = cli.opt_usize("grid", if quick { 16 } else { 64 })?;
+            KernelFillingConfig::small().generate(k, k * k, seed)
+        }
+        _ => if quick { MetzConfig::small() } else { MetzConfig::paper() }.generate(seed),
+    };
     println!("dataset: {} ({} pairs)", data.name, data.len());
+
+    // The eigen lane has no split, no iteration budget, and selects λ by
+    // exact LOOCV over a grid — its own flow entirely.
+    if solver == Solver::Eigen {
+        return cmd_train_eigen(cli, &data, kernel);
+    }
+
     let split = data.split_setting(setting, 0.25, seed);
     println!(
         "setting {}: train {} / test {}",
@@ -197,8 +220,14 @@ fn cmd_train(cli: &Cli) -> Result<()> {
             PairwiseRidge::fit_early_stopping(&split.train, setting, kernel, &cfg, seed)?
         }
         // CG: plain Tikhonov fit to tolerance (SPD system for λ > 0).
+        // --precond eigen swaps in the eigenbasis preconditioner
+        // (two-step ridge; Kronecker kernel only, DESIGN §Eigen-Shortcut).
         Solver::Cg => {
-            PairwiseRidge::fit_exact(&split.train, kernel, &cfg, cfg.max_iters, Solver::Cg)?
+            if cli.opt_choice("precond", "none", &["none", "eigen"])? == "eigen" {
+                PairwiseRidge::fit_eigen_precond_cg(&split.train, kernel, &cfg, cfg.max_iters)?
+            } else {
+                PairwiseRidge::fit_exact(&split.train, kernel, &cfg, cfg.max_iters, Solver::Cg)?
+            }
         }
         // Stochastic vec trick: mini-batched steps on batch-shaped
         // operators derived from one compiled template.
@@ -223,6 +252,7 @@ fn cmd_train(cli: &Cli) -> Result<()> {
             let trainer = SgdTrainer::new(&split.train, kernel, scfg)?;
             trainer.fit_model(cfg.lambda, seed)?
         }
+        Solver::Eigen => unreachable!("dispatched to cmd_train_eigen above"),
     };
     let secs = t0.elapsed().as_secs_f64();
     if let Some(points) = trace_points {
@@ -266,6 +296,83 @@ fn cmd_train(cli: &Cli) -> Result<()> {
         println!("saved v2 model artifact (kernel matrices embedded) to {path}");
     }
     Ok(())
+}
+
+/// The `--solver eigen` training flow: no train/test split and no
+/// iteration budget. One eigendecomposition gives the ridge solution for
+/// **every** λ in `--lambdas` plus exact leave-one-out CV per λ (the
+/// leverages formula — rust/DESIGN.md §Eigen-Shortcut), so λ selection
+/// is effectively free; the best-LOO model is refit in closed form and
+/// saved as the same v2 artifact the iterative lane writes (`predict`
+/// and `serve` are untouched).
+fn cmd_train_eigen(
+    cli: &Cli,
+    data: &gvt_rls::data::PairDataset,
+    kernel: gvt_rls::gvt::pairwise::PairwiseKernel,
+) -> Result<()> {
+    use gvt_rls::eval::auc;
+    use gvt_rls::solvers::complete::EigenRidge;
+
+    let lambdas = parse_lambda_list(&cli.opt_or(
+        "lambdas",
+        "1e-4,1e-3,1e-2,1e-1,1,10,100",
+    ))?;
+    let t0 = gvt_rls::obs::clock::now();
+    let er = EigenRidge::new(data, kernel)?;
+    let cells = er.loocv(&lambdas)?;
+    let labels = data.binary_labels();
+    println!(
+        "λ grid ({} values) from one eigendecomposition — exact LOOCV, 0 iterations:",
+        cells.len()
+    );
+    for c in &cells {
+        let a = auc(&c.loo, &labels);
+        println!(
+            "  λ {:>10.3e} | LOO RMSE {:.6} | LOO AUC {}",
+            c.lambda,
+            c.mse.sqrt(),
+            a.map(|v| format!("{v:.4}")).unwrap_or_else(|| "n/a".into())
+        );
+    }
+    let best = cells
+        .iter()
+        .min_by(|a, b| a.mse.partial_cmp(&b.mse).expect("finite LOO MSE"))
+        .ok_or_else(|| gvt_err!("--lambdas: empty λ grid"))?;
+    let model = er.fit_model(best.lambda)?;
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "kernel {} | solver eigen | λ* {:.3e} | LOO RMSE {:.6} | iterations 0 | train {:.2}s",
+        kernel.name(),
+        best.lambda,
+        best.mse.sqrt(),
+        secs
+    );
+    if let Some(path) = cli.opt("save-model") {
+        use gvt_rls::solvers::persist::{save_model_v2, EmbedV2};
+        let embed = EmbedV2 { matrices: true, ..Default::default() };
+        save_model_v2(&model, std::path::Path::new(path), &embed)?;
+        println!("saved v2 model artifact (kernel matrices embedded) to {path}");
+    }
+    Ok(())
+}
+
+/// Parse a comma-separated λ grid (`--lambdas "1e-3,1e-2,0.1"`).
+fn parse_lambda_list(s: &str) -> Result<Vec<f64>> {
+    let mut out = Vec::new();
+    for tok in s.split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        out.push(
+            tok.parse::<f64>()
+                .map_err(|_| gvt_err!("bad λ value {tok:?} in --lambdas"))?,
+        );
+    }
+    if out.is_empty() {
+        return Err(gvt_err!("--lambdas: no λ values given"));
+    }
+    Ok(out)
 }
 
 /// Read a `drug target` pair list (one pair per line, `#` comments and

@@ -1,8 +1,8 @@
-//! Closed-form Kronecker ridge for **complete data** — the fast special
-//! case the paper's introduction cites (Romera-Paredes & Torr 2015;
-//! Pahikkala et al. 2013/2014; Stock et al. 2018/2020) and against which
-//! GVT's contribution is defined: GVT removes the completeness
-//! requirement.
+//! Closed-form Kronecker ridge + exact LOOCV for **complete data** — the
+//! fast special case the paper's introduction cites (Romera-Paredes &
+//! Torr 2015; Pahikkala et al. 2013/2014; Stock et al. 2018/2020) and
+//! against which GVT's contribution is defined: GVT removes the
+//! completeness requirement.
 //!
 //! When every (drug, target) combination is labeled (`Y ∈ R^{m×q}`) and
 //! the kernel is the Kronecker product, eigendecompose once —
@@ -16,82 +16,458 @@
 //! `O(m³ + q³)` once, then `O(mq(m+q))` per λ — and re-solving for a new
 //! λ is nearly free, which is why this is the method of choice on
 //! complete data and why the paper's incomplete-data setting needed GVT.
+//!
+//! This module grows that observation into a full solver lane:
+//!
+//! * [`CompleteKronRidge::solve_grid`] — a whole λ grid from the one
+//!   decomposition (filtered-eigenvalue update per λ, no
+//!   re-factorization).
+//! * [`CompleteKronRidge::loo_grid`] — **exact** leave-one-out CV per λ
+//!   via the leverages matrix `L = (U∘U) E (V∘V)ᵀ` where
+//!   `E[i,j] = σᵢ sⱼ / (σᵢ sⱼ + λ)` holds the filtered eigenvalues of
+//!   the hat matrix `H = K (K + λI)⁻¹` (Stock et al., arXiv:1606.04275;
+//!   derivation pointer in rust/DESIGN.md §Eigen-Shortcut). `L` is the
+//!   diagonal of `H` reshaped to the grid, so the classic ridge LOO
+//!   identity `ŷ₋ᵢ = (ŷᵢ − hᵢᵢ yᵢ) / (1 − hᵢᵢ)` applies cell-wise —
+//!   n retrains collapse to three small GEMMs.
+//! * [`EigenRidge`] — the dataset-level solver behind
+//!   `gvt-rls train --solver eigen` and `tuning::select_lambda_for`,
+//!   producing the same [`RidgeModel`] (and therefore the same v2
+//!   artifact) as the iterative lane.
+//! * [`EigenPrecond`] — the eigenbasis recycled as a CG preconditioner
+//!   for **incomplete** grids (two-step-ridge style): applies
+//!   `R (D ⊗ T + λI)⁻¹ Rᵀ` where `R` selects the observed cells.
 
 use crate::data::PairDataset;
 use crate::error::{bail, Context, Result};
+use crate::gvt::pairwise::PairwiseKernel;
+use crate::gvt::vec_trick::GvtPolicy;
 use crate::linalg::eigh::{eigh, Eigh};
 use crate::linalg::Mat;
+use crate::solvers::linear_op::LinOp;
+use crate::solvers::ridge::RidgeModel;
+use crate::sparse::PairIndex;
+use std::sync::{Arc, Mutex};
+
+/// Check that a pair sample covers its `m × q` grid **exactly once**.
+///
+/// The structured error names the missing-cell and duplicate counts so
+/// callers (CLI, tuning) can surface an actionable in-band message
+/// instead of a silent wrong answer.
+pub fn check_complete(pairs: &PairIndex) -> Result<()> {
+    let (m, q) = (pairs.m(), pairs.q());
+    let total = m * q;
+    let mut seen = vec![false; total];
+    let mut duplicates = 0usize;
+    for i in 0..pairs.len() {
+        let cell = pairs.drug(i) * q + pairs.target(i);
+        if seen[cell] {
+            duplicates += 1;
+        } else {
+            seen[cell] = true;
+        }
+    }
+    let missing = total - (pairs.len() - duplicates);
+    if missing == 0 && duplicates == 0 {
+        return Ok(());
+    }
+    bail!(
+        "incomplete grid: {missing} of {total} (drug, target) cells missing \
+         and {duplicates} duplicated in a {m}×{q} sample of {} pairs — the \
+         complete-data eigen solver needs every cell labeled exactly once \
+         (use minres/cg/sgd on incomplete data)",
+        pairs.len()
+    )
+}
+
+/// Assemble the complete label matrix `Y[d, t]` from a (possibly
+/// shuffled) sample, after [`check_complete`] passes.
+fn assemble_y(data: &PairDataset) -> Result<Mat> {
+    check_complete(&data.pairs)?;
+    let (m, q) = (data.pairs.m(), data.pairs.q());
+    let mut y = Mat::zeros(m, q);
+    for i in 0..data.len() {
+        y[(data.pairs.drug(i), data.pairs.target(i))] = data.y[i];
+    }
+    Ok(y)
+}
 
 /// Eigendecomposed complete-data Kronecker ridge solver.
+///
+/// Caches `Uᵀ`, `Vᵀ`, `U∘U`, and `(V∘V)ᵀ` at construction so the per-λ
+/// solve and the LOOCV leverages are pure GEMM pipelines.
 pub struct CompleteKronRidge {
     ed: Eigh,
     et: Eigh,
+    /// `Uᵀ` (drug eigenvectors, transposed once).
+    ut: Mat,
+    /// `Vᵀ` (target eigenvectors, transposed once).
+    vt: Mat,
+    /// `U ∘ U` — the left factor of the leverages product.
+    u2: Mat,
+    /// `(V ∘ V)ᵀ` — the right factor of the leverages product.
+    v2t: Mat,
 }
 
 impl CompleteKronRidge {
     /// Decompose the drug and target kernels (`O(m³ + q³)`, done once).
     pub fn new(d: &Mat, t: &Mat) -> Result<Self> {
-        Ok(Self {
-            ed: eigh(d).context("eigendecomposition of the drug kernel")?,
-            et: eigh(t).context("eigendecomposition of the target kernel")?,
-        })
+        let ed = eigh(d).context("eigendecomposition of the drug kernel")?;
+        let et = eigh(t).context("eigendecomposition of the target kernel")?;
+        let ut = ed.vectors.transpose();
+        let vt = et.vectors.transpose();
+        let u2 = ed.vectors.hadamard_square();
+        let v2t = vt.hadamard_square();
+        Ok(Self { ed, et, ut, vt, u2, v2t })
+    }
+
+    fn dims(&self) -> (usize, usize) {
+        (self.ed.values.len(), self.et.values.len())
+    }
+
+    fn check_inputs(&self, y: &Mat, lambdas: &[f64]) -> Result<()> {
+        let (m, q) = self.dims();
+        if y.shape() != (m, q) {
+            bail!("label matrix is {:?}, kernels give ({m}, {q})", y.shape());
+        }
+        for &lambda in lambdas {
+            if lambda <= 0.0 {
+                bail!("lambda must be positive, got {lambda}");
+            }
+        }
+        Ok(())
+    }
+
+    /// `Ỹ = Uᵀ Y V` — the one rotation shared by every λ.
+    fn rotate(&self, y: &Mat) -> Mat {
+        self.ut.matmul(y).matmul(&self.et.vectors)
     }
 
     /// Solve `(D ⊗ T + λI) vec(A) = vec(Y)` for a complete label matrix
     /// `Y ∈ R^{m×q}` (row-major: `Y[d, t]`). `O(mq(m+q))`.
     pub fn solve(&self, y: &Mat, lambda: f64) -> Result<Mat> {
-        let m = self.ed.values.len();
-        let q = self.et.values.len();
-        if y.shape() != (m, q) {
-            bail!("label matrix is {:?}, kernels give ({m}, {q})", y.shape());
-        }
-        if lambda <= 0.0 {
-            bail!("lambda must be positive");
-        }
-        // Ỹ = Uᵀ Y V
-        let u = &self.ed.vectors;
-        let v = &self.et.vectors;
-        let mut ytilde = u.transpose().matmul(y).matmul(v);
-        // Elementwise shrink by the Kronecker spectrum.
-        for i in 0..m {
-            for j in 0..q {
-                ytilde[(i, j)] /= self.ed.values[i] * self.et.values[j] + lambda;
+        Ok(self.solve_grid(y, &[lambda])?.pop().expect("one λ in, one α out"))
+    }
+
+    /// Solve the same system for a **whole λ grid**, reusing the one
+    /// eigendecomposition and the one rotation `Ỹ = Uᵀ Y V`: per λ only
+    /// the elementwise spectral shrink and the back-rotation
+    /// `A = U Ỹ_λ Vᵀ` run — `O(mq(m+q))` each, no re-factorization.
+    pub fn solve_grid(&self, y: &Mat, lambdas: &[f64]) -> Result<Vec<Mat>> {
+        self.check_inputs(y, lambdas)?;
+        let (m, q) = self.dims();
+        let ytilde = self.rotate(y);
+        let mut out = Vec::with_capacity(lambdas.len());
+        for &lambda in lambdas {
+            let mut shrunk = Mat::zeros(m, q);
+            for i in 0..m {
+                for j in 0..q {
+                    shrunk[(i, j)] =
+                        ytilde[(i, j)] / (self.ed.values[i] * self.et.values[j] + lambda);
+                }
             }
+            out.push(self.ed.vectors.matmul(&shrunk).matmul(&self.vt));
         }
-        // A = U Ỹ Vᵀ
-        Ok(u.matmul(&ytilde).matmul(&v.transpose()))
+        Ok(out)
+    }
+
+    /// Exact leave-one-out predictions for every cell and every λ.
+    ///
+    /// Per λ (all three factors are cached, cost `O(mq(m+q))`):
+    ///
+    /// ```text
+    /// E[i,j] = σᵢ sⱼ / (σᵢ sⱼ + λ)      filtered Kronecker spectrum
+    /// Ŷ      = U (Ỹ ∘ E) Vᵀ             in-sample fit  H·vec(Y)
+    /// L      = (U∘U) E (V∘V)ᵀ           leverages      diag(H) on the grid
+    /// Ŷ₋     = (Ŷ − Y ∘ L) ⊘ (1 − L)    exact LOO predictions
+    /// ```
+    ///
+    /// Returns one `m × q` LOO-prediction matrix per λ. Errors if a
+    /// leverage reaches 1 (λ too small relative to the kernel spectrum:
+    /// the model interpolates and leave-one-out is undefined).
+    pub fn loo_grid(&self, y: &Mat, lambdas: &[f64]) -> Result<Vec<Mat>> {
+        self.check_inputs(y, lambdas)?;
+        let (m, q) = self.dims();
+        let ytilde = self.rotate(y);
+        let mut out = Vec::with_capacity(lambdas.len());
+        for &lambda in lambdas {
+            let mut e = Mat::zeros(m, q);
+            let mut fit = Mat::zeros(m, q);
+            for i in 0..m {
+                for j in 0..q {
+                    let sv = self.ed.values[i] * self.et.values[j];
+                    let den = sv + lambda;
+                    if den <= 0.0 {
+                        bail!(
+                            "non-positive shifted spectrum {den:e} at eigenpair \
+                             ({i}, {j}) for λ = {lambda:e} — kernels are not PSD \
+                             enough for this λ"
+                        );
+                    }
+                    e[(i, j)] = sv / den;
+                    fit[(i, j)] = ytilde[(i, j)] * e[(i, j)];
+                }
+            }
+            let yhat = self.ed.vectors.matmul(&fit).matmul(&self.vt);
+            let lev = self.u2.matmul(&e).matmul(&self.v2t);
+            let mut loo = Mat::zeros(m, q);
+            for d in 0..m {
+                for t in 0..q {
+                    let l = lev[(d, t)];
+                    let den = 1.0 - l;
+                    if den <= 1e-12 {
+                        bail!(
+                            "leverage {l} ≈ 1 at cell ({d}, {t}) for λ = {lambda:e} \
+                             — exact LOOCV is undefined when the model interpolates; \
+                             use a larger λ"
+                        );
+                    }
+                    loo[(d, t)] = (yhat[(d, t)] - y[(d, t)] * l) / den;
+                }
+            }
+            out.push(loo);
+        }
+        Ok(out)
     }
 
     /// Convenience: fit on a complete [`PairDataset`] (must cover the full
     /// `m × q` grid exactly once) and return the dual vector aligned with
     /// `data.pairs`.
     pub fn fit_dataset(data: &PairDataset, lambda: f64) -> Result<Vec<f64>> {
-        let m = data.pairs.m();
-        let q = data.pairs.q();
-        if data.len() != m * q {
-            bail!(
-                "complete-data solver needs all {} pairs, got {}",
-                m * q,
-                data.len()
-            );
-        }
-        // Assemble Y from the (possibly shuffled) sample.
-        let mut y = Mat::zeros(m, q);
-        let mut seen = vec![false; m * q];
-        for i in 0..data.len() {
-            let (dd, tt) = (data.pairs.drug(i), data.pairs.target(i));
-            if seen[dd * q + tt] {
-                bail!("duplicate pair ({dd}, {tt}) in complete dataset");
-            }
-            seen[dd * q + tt] = true;
-            y[(dd, tt)] = data.y[i];
-        }
+        let y = assemble_y(data)?;
         let solver = Self::new(&data.d, &data.t)?;
         let a = solver.solve(&y, lambda)?;
         // Back to the sample's pair order.
         Ok((0..data.len())
             .map(|i| a[(data.pairs.drug(i), data.pairs.target(i))])
             .collect())
+    }
+}
+
+/// Per-λ exact LOOCV result from [`EigenRidge::loocv`].
+#[derive(Clone, Debug)]
+pub struct EigenLooCell {
+    /// The regularizer this row was evaluated at.
+    pub lambda: f64,
+    /// Leave-one-out predictions, aligned with the dataset's pair order.
+    pub loo: Vec<f64>,
+    /// Mean squared leave-one-out error over all pairs.
+    pub mse: f64,
+}
+
+/// Dataset-level eigen solver: the `--solver eigen` training lane.
+///
+/// Construction validates the two preconditions (Kronecker kernel,
+/// complete grid) with in-band errors, assembles `Y`, and pays the one
+/// `O(m³ + q³)` eigendecomposition. Every λ after that is closed-form:
+/// [`Self::alpha_grid`] for duals, [`Self::loocv`] for exact model
+/// selection, [`Self::fit_model`] for a [`RidgeModel`] indistinguishable
+/// from the iterative solvers' output (same v2 artifact; `predict` and
+/// `serve` are untouched).
+pub struct EigenRidge {
+    solver: CompleteKronRidge,
+    kernel: PairwiseKernel,
+    d: Arc<Mat>,
+    t: Arc<Mat>,
+    pairs: PairIndex,
+    y: Mat,
+}
+
+impl EigenRidge {
+    /// Validate and decompose. Errors (in-band, structured) when the
+    /// kernel is not a single Kronecker product or the sample does not
+    /// cover the grid exactly once.
+    pub fn new(data: &PairDataset, kernel: PairwiseKernel) -> Result<Self> {
+        if kernel != PairwiseKernel::Kronecker {
+            bail!(
+                "the eigen solver factorizes K = D ⊗ T; kernel '{}' is a sum \
+                 of Kronecker products and is not simultaneously \
+                 diagonalizable — use minres, cg, or sgd",
+                kernel.name()
+            );
+        }
+        let y = assemble_y(data)
+            .with_context(|| format!("eigen solver on '{}'", data.name))?;
+        let solver = CompleteKronRidge::new(&data.d, &data.t)?;
+        Ok(Self {
+            solver,
+            kernel,
+            d: data.d.clone(),
+            t: data.t.clone(),
+            pairs: data.pairs.clone(),
+            y,
+        })
+    }
+
+    /// Number of training pairs (`m · q`).
+    pub fn len(&self) -> usize {
+        self.pairs.len()
+    }
+
+    /// Gather a grid-shaped quantity back into the sample's pair order.
+    fn gather(&self, grid: &Mat) -> Vec<f64> {
+        (0..self.pairs.len())
+            .map(|i| grid[(self.pairs.drug(i), self.pairs.target(i))])
+            .collect()
+    }
+
+    /// Dual coefficient vectors for a whole λ grid (pair order), from
+    /// the one decomposition.
+    pub fn alpha_grid(&self, lambdas: &[f64]) -> Result<Vec<Vec<f64>>> {
+        let grids = self.solver.solve_grid(&self.y, lambdas)?;
+        Ok(grids.iter().map(|a| self.gather(a)).collect())
+    }
+
+    /// Exact leave-one-out CV for every λ — model selection without a
+    /// single solver iteration or retrain.
+    pub fn loocv(&self, lambdas: &[f64]) -> Result<Vec<EigenLooCell>> {
+        let grids = self.solver.loo_grid(&self.y, lambdas)?;
+        let mut out = Vec::with_capacity(lambdas.len());
+        for (grid, &lambda) in grids.iter().zip(lambdas) {
+            let loo = self.gather(grid);
+            let n = loo.len() as f64;
+            let mse = loo
+                .iter()
+                .zip(self.gather(&self.y))
+                .map(|(p, y)| (p - y) * (p - y))
+                .sum::<f64>()
+                / n;
+            out.push(EigenLooCell { lambda, loo, mse });
+        }
+        Ok(out)
+    }
+
+    /// Fit at one λ and package the result as a standard [`RidgeModel`]
+    /// (`iterations = 0`: the direct lane has no Krylov loop).
+    pub fn fit_model(&self, lambda: f64) -> Result<RidgeModel> {
+        let a = self.solver.solve(&self.y, lambda)?;
+        RidgeModel::from_parts(
+            self.kernel,
+            self.d.clone(),
+            self.t.clone(),
+            self.pairs.clone(),
+            GvtPolicy::Auto,
+            self.gather(&a),
+            lambda,
+        )
+    }
+}
+
+/// Reusable workspace for [`EigenPrecond`] — three `m × q` scratch
+/// matrices allocated once so each CG iteration's preconditioner apply
+/// is allocation-free (the CG loop itself is under the alloc-free lint
+/// contract).
+struct PrecondWs {
+    grid: Mat,
+    a: Mat,
+    b: Mat,
+}
+
+/// Eigenbasis preconditioner for CG on **incomplete** grids (two-step
+/// ridge style — Stock et al., arXiv:1606.04275 / arXiv:1803.01575).
+///
+/// The system `(R (D ⊗ T) Rᵀ + λI) α = y` selects the `n` observed cells
+/// with `R`. This preconditioner applies the inverse of the *complete*
+/// operator restricted back to those cells:
+///
+/// ```text
+/// M⁻¹ v = R (D ⊗ T + λI)⁻¹ Rᵀ v
+///       = gather( U [ (Uᵀ scatter(v) V) ⊘ (λ_d λ_tᵀ + λ) ] Vᵀ )
+/// ```
+///
+/// `Rᵀ` scatter-**adds** into the grid (the exact adjoint of the gather,
+/// so `M⁻¹` stays symmetric positive definite even if the sample carries
+/// duplicate pairs) and unobserved cells stay zero. The denser the
+/// sample, the closer `M⁻¹ (K + λI)` is to the identity — on a complete
+/// grid CG would converge in one iteration.
+///
+/// Determinism: the apply is four dense GEMMs (pooled, rows as the unit
+/// of work — bit-identical for any thread count per DESIGN §Runtime)
+/// plus serial scatter/gather loops in fixed pair order.
+pub struct EigenPrecond {
+    kr: CompleteKronRidge,
+    /// `σᵢ sⱼ + λ`, precomputed.
+    denom: Mat,
+    rows: PairIndex,
+    ws: Mutex<PrecondWs>,
+}
+
+impl EigenPrecond {
+    /// Decompose the factor kernels and freeze the shifted spectrum.
+    pub fn new(d: &Mat, t: &Mat, rows: PairIndex, lambda: f64) -> Result<Self> {
+        if lambda <= 0.0 {
+            bail!("eigen preconditioner needs λ > 0, got {lambda}");
+        }
+        if rows.m() != d.rows() || rows.q() != t.rows() {
+            bail!(
+                "pair sample is over a {}×{} grid but the kernels are {}×{}",
+                rows.m(),
+                rows.q(),
+                d.rows(),
+                t.rows()
+            );
+        }
+        let kr = CompleteKronRidge::new(d, t)
+            .context("eigen preconditioner factorization")?;
+        let (m, q) = kr.dims();
+        let mut denom = Mat::zeros(m, q);
+        for i in 0..m {
+            for j in 0..q {
+                let den = kr.ed.values[i] * kr.et.values[j] + lambda;
+                if den <= 0.0 {
+                    bail!(
+                        "eigen preconditioner: non-positive shifted spectrum \
+                         {den:e} at eigenpair ({i}, {j}) — kernels are not PSD \
+                         enough for λ = {lambda:e}"
+                    );
+                }
+                denom[(i, j)] = den;
+            }
+        }
+        Ok(Self {
+            kr,
+            denom,
+            rows,
+            ws: Mutex::new(PrecondWs {
+                grid: Mat::zeros(m, q),
+                a: Mat::zeros(m, q),
+                b: Mat::zeros(m, q),
+            }),
+        })
+    }
+}
+
+impl LinOp for EigenPrecond {
+    fn dim_out(&self) -> usize {
+        self.rows.len()
+    }
+
+    fn dim_in(&self) -> usize {
+        self.rows.len()
+    }
+
+    fn apply_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.rows.len(), "precond input dim mismatch");
+        assert_eq!(y.len(), self.rows.len(), "precond output dim mismatch");
+        let mut ws = self.ws.lock().unwrap_or_else(|e| e.into_inner());
+        let PrecondWs { grid, a, b } = &mut *ws;
+        // Rᵀ: scatter-add the residual into the grid (adjoint of gather).
+        grid.as_mut_slice().fill(0.0);
+        for i in 0..self.rows.len() {
+            grid[(self.rows.drug(i), self.rows.target(i))] += x[i];
+        }
+        // (D ⊗ T + λI)⁻¹ in the eigenbasis: rotate, shrink, rotate back.
+        self.kr.ut.matmul_into(grid, a);
+        a.matmul_into(&self.kr.et.vectors, b);
+        for (bv, den) in b.as_mut_slice().iter_mut().zip(self.denom.as_slice()) {
+            *bv /= *den;
+        }
+        self.kr.ed.vectors.matmul_into(b, a);
+        a.matmul_into(&self.kr.vt, grid);
+        // R: gather the observed cells back out in pair order.
+        for i in 0..self.rows.len() {
+            y[i] = grid[(self.rows.drug(i), self.rows.target(i))];
+        }
     }
 }
 
@@ -153,8 +529,74 @@ mod tests {
     }
 
     #[test]
+    fn solve_grid_matches_per_lambda_solve() {
+        let k = 9;
+        let data = KernelFillingConfig::small().generate(k, k * k, 503);
+        let solver = CompleteKronRidge::new(&data.d, &data.t).unwrap();
+        let mut y = Mat::zeros(k, k);
+        for i in 0..data.len() {
+            y[(data.pairs.drug(i), data.pairs.target(i))] = data.y[i];
+        }
+        let lambdas = [1e-3, 1e-1, 1.0, 25.0];
+        let grid = solver.solve_grid(&y, &lambdas).unwrap();
+        assert_eq!(grid.len(), lambdas.len());
+        for (a, &lambda) in grid.iter().zip(&lambdas) {
+            let single = solver.solve(&y, lambda).unwrap();
+            assert!(a.max_abs_diff(&single) < 1e-12, "λ={lambda}");
+        }
+    }
+
+    #[test]
     fn rejects_incomplete_data() {
         let data = KernelFillingConfig::small().generate(10, 60, 502);
         assert!(CompleteKronRidge::fit_dataset(&data, 1.0).is_err());
+    }
+
+    #[test]
+    fn incomplete_rejection_names_missing_count() {
+        // 60 of 100 cells labeled → the structured error must name the
+        // 40 missing cells so the CLI surfaces an actionable message.
+        let data = KernelFillingConfig::small().generate(10, 60, 502);
+        let err = EigenRidge::new(&data, PairwiseKernel::Kronecker).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("incomplete grid"), "{msg}");
+        assert!(msg.contains("40 of 100"), "{msg}");
+    }
+
+    #[test]
+    fn rejects_duplicate_pairs() {
+        use crate::sparse::PairIndex;
+        // m·q entries but cell (0, 0) appears twice and (1, 1) never.
+        let pairs = PairIndex::new(vec![0, 0, 1, 1], vec![0, 0, 0, 1], 2, 2);
+        let err = check_complete(&pairs).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("1 duplicated") || msg.contains("duplicat"), "{msg}");
+    }
+
+    #[test]
+    fn rejects_non_kronecker_kernels() {
+        let k = 6;
+        let data = KernelFillingConfig::small().generate(k, k * k, 504);
+        for kernel in [PairwiseKernel::Linear, PairwiseKernel::Poly2D] {
+            let err = EigenRidge::new(&data, kernel).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains(kernel.name()), "{msg}");
+        }
+    }
+
+    #[test]
+    fn eigen_model_round_trips_through_predict() {
+        // The eigen lane must produce a RidgeModel whose predictions on
+        // the training grid match the closed-form in-sample fit.
+        let k = 10;
+        let data = KernelFillingConfig::small().generate(k, k * k, 505);
+        let er = EigenRidge::new(&data, PairwiseKernel::Kronecker).unwrap();
+        let model = er.fit_model(0.3).unwrap();
+        assert_eq!(model.iterations, 0);
+        let alpha_direct = CompleteKronRidge::fit_dataset(&data, 0.3).unwrap();
+        let err = crate::linalg::vecops::max_abs_diff(&model.alpha, &alpha_direct);
+        assert!(err < 1e-12, "eigen model vs direct fit: {err}");
+        let preds = model.predict(&data.pairs).unwrap();
+        assert_eq!(preds.len(), data.len());
     }
 }

@@ -13,6 +13,9 @@
 //! * [`ridge`] — kernel ridge regression over pairwise kernels with
 //!   validation-based early stopping (the paper's training protocol).
 //! * [`nystrom`] — Falkon-style Nyström approximation baseline (§6.5).
+//! * [`complete`] — closed-form eigen solver + exact LOOCV for complete
+//!   grids with the Kronecker kernel, and the eigenbasis CG
+//!   preconditioner for incomplete grids.
 //! * [`closed_form`] — `O(n³)` Cholesky oracle for tests/small problems.
 //! * [`persist`] — model artifacts (v1/v2) shared with `gvt-rls
 //!   predict`/`serve`.
@@ -31,6 +34,7 @@ pub mod ridge;
 pub mod schedule;
 pub mod sgd;
 
+pub use complete::{check_complete, CompleteKronRidge, EigenLooCell, EigenPrecond, EigenRidge};
 pub use linear_op::{LinOp, ShiftedOp};
 pub use minres::{minres, MinresOptions, MinresOutcome};
 pub use ridge::{PairwiseRidge, RidgeConfig, RidgeModel};
@@ -41,7 +45,8 @@ pub use sgd::{fit_sgd, SgdConfig, SgdRun, SgdTrainer};
 /// coordinator's tuning paths) select between. MINRES and CG are exact
 /// Krylov solvers — one full GVT product per iteration; SGD is the
 /// stochastic vec trick trainer — one batch-shaped product per step
-/// (see [`sgd`] for the cost model).
+/// (see [`sgd`] for the cost model); EIGEN is the direct complete-grid
+/// lane — no iterations at all (see [`complete`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Solver {
     /// MINRES (the paper's solver; handles symmetric indefinite shifts).
@@ -50,11 +55,15 @@ pub enum Solver {
     Cg,
     /// Mini-batched stochastic vec trick ([`SgdTrainer`]).
     Sgd,
+    /// Closed-form Kronecker eigen shortcut ([`EigenRidge`]) — complete
+    /// grids only, with exact LOOCV for free λ selection.
+    Eigen,
 }
 
 impl Solver {
     /// All solvers, exact first.
-    pub const ALL: [Solver; 3] = [Solver::Minres, Solver::Cg, Solver::Sgd];
+    pub const ALL: [Solver; 4] =
+        [Solver::Minres, Solver::Cg, Solver::Sgd, Solver::Eigen];
 
     /// Canonical name (CLI flags, bench labels, reports).
     pub fn name(&self) -> &'static str {
@@ -62,6 +71,7 @@ impl Solver {
             Solver::Minres => "minres",
             Solver::Cg => "cg",
             Solver::Sgd => "sgd",
+            Solver::Eigen => "eigen",
         }
     }
 
@@ -73,6 +83,7 @@ impl Solver {
             "minres" => Some(Solver::Minres),
             "cg" => Some(Solver::Cg),
             "sgd" => Some(Solver::Sgd),
+            "eigen" => Some(Solver::Eigen),
             _ => None,
         }
     }
@@ -82,6 +93,13 @@ impl Solver {
     /// training structure (batch row sampling), not just a [`LinOp`].
     pub fn is_stochastic(&self) -> bool {
         matches!(self, Solver::Sgd)
+    }
+
+    /// Is this a direct (non-iterative) solver? Direct solvers have no
+    /// iteration budget or convergence tolerance — and stricter input
+    /// requirements (complete grid, Kronecker kernel).
+    pub fn is_direct(&self) -> bool {
+        matches!(self, Solver::Eigen)
     }
 }
 
@@ -98,5 +116,8 @@ mod tests {
         assert!(Solver::Sgd.is_stochastic());
         assert!(!Solver::Minres.is_stochastic());
         assert!(!Solver::Cg.is_stochastic());
+        assert!(!Solver::Eigen.is_stochastic());
+        assert!(Solver::Eigen.is_direct());
+        assert!(!Solver::Minres.is_direct());
     }
 }

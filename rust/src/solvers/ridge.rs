@@ -289,6 +289,10 @@ impl PairwiseRidge {
             Solver::Sgd => bail!(
                 "fit_exact: sgd is a stochastic solver — use solvers::sgd::SgdTrainer"
             ),
+            Solver::Eigen => bail!(
+                "fit_exact: eigen is the direct complete-grid solver — use \
+                 solvers::complete::EigenRidge"
+            ),
         };
         Ok(RidgeModel {
             kernel,
@@ -299,6 +303,57 @@ impl PairwiseRidge {
             alpha,
             lambda: cfg.lambda,
             iterations,
+            history: Vec::new(),
+        })
+    }
+
+    /// CG with the **eigenbasis preconditioner** — the complete-grid
+    /// eigendecomposition recycled for incomplete grids (two-step-ridge
+    /// style, rust/DESIGN.md §Eigen-Shortcut). Each iteration applies
+    /// `M⁻¹ = R (D ⊗ T + λI)⁻¹ Rᵀ` in the eigenbasis
+    /// ([`crate::solvers::complete::EigenPrecond`]); the denser the
+    /// observed sample, the closer `M⁻¹(K + λI)` is to the identity and
+    /// the fewer Krylov iterations CG needs. Kronecker kernel only — the
+    /// other pairwise kernels are sums of Kronecker products and do not
+    /// share one eigenbasis.
+    pub fn fit_eigen_precond_cg(
+        data: &PairDataset,
+        kernel: PairwiseKernel,
+        cfg: &RidgeConfig,
+        iters: usize,
+    ) -> Result<RidgeModel> {
+        if kernel != PairwiseKernel::Kronecker {
+            bail!(
+                "--precond eigen factorizes the complete operator D ⊗ T; \
+                 kernel '{}' is not a single Kronecker product",
+                kernel.name()
+            );
+        }
+        let op = Self::train_op(data, kernel, cfg.policy)?;
+        let shifted = ShiftedOp::new(&op, cfg.lambda);
+        let precond = crate::solvers::complete::EigenPrecond::new(
+            &data.d,
+            &data.t,
+            data.pairs.clone(),
+            cfg.lambda,
+        )
+        .context("building the eigen preconditioner")?;
+        let out = cg::cg(
+            &shifted,
+            &data.y,
+            Some(&precond),
+            &cg::CgOptions { max_iters: iters, rel_tol: cfg.rel_tol },
+            |_, _, _| ControlFlow::Continue(()),
+        )?;
+        Ok(RidgeModel {
+            kernel,
+            d: data.d.clone(),
+            t: data.t.clone(),
+            train_pairs: data.pairs.clone(),
+            policy: cfg.policy,
+            alpha: out.x,
+            lambda: cfg.lambda,
+            iterations: out.iterations,
             history: Vec::new(),
         })
     }

@@ -1,0 +1,234 @@
+//! Brute-force oracle tests for the complete-grid eigen shortcut
+//! (`solvers/complete.rs`).
+//!
+//! The leverages LOOCV claims to be *exact*: for every training pair,
+//! the closed-form expression `(ŷ − h·y) / (1 − h)` must equal the
+//! prediction of a model genuinely retrained without that pair. These
+//! tests pay the O(n) retrains (via the `O(n³)` Cholesky oracle in
+//! `closed_form.rs`) on small complete grids and demand agreement to
+//! 1e-8 — plus α-identity between the eigen solve and converged CG per
+//! λ, and the strict iteration win of eigen-preconditioned CG over
+//! plain CG on a pinned incomplete-grid fixture.
+
+use gvt_rls::data::PairDataset;
+use gvt_rls::gvt::explicit::explicit_matrix;
+use gvt_rls::gvt::pairwise::PairwiseKernel;
+use gvt_rls::linalg::chol::solve_regularized;
+use gvt_rls::rng::{dist, Xoshiro256};
+use gvt_rls::solvers::closed_form::ClosedFormModel;
+use gvt_rls::solvers::complete::{check_complete, EigenRidge};
+use gvt_rls::solvers::ridge::{PairwiseRidge, RidgeConfig};
+use gvt_rls::solvers::Solver;
+use gvt_rls::sparse::PairIndex;
+use gvt_rls::testing::gen;
+use std::sync::Arc;
+
+/// ≥4 λ values spanning four decades (the acceptance grid).
+const LAMBDAS: [f64; 4] = [1e-1, 1.0, 10.0, 100.0];
+
+/// A fully-labeled m×q grid over freshly drawn PSD factor kernels.
+fn complete_grid(seed: u64, m: usize, q: usize) -> PairDataset {
+    let mut rng = Xoshiro256::seed_from(seed);
+    let d = Arc::new(gen::psd_kernel(&mut rng, m));
+    let t = Arc::new(gen::psd_kernel(&mut rng, q));
+    let pairs = PairIndex::complete(m, q);
+    let y = dist::normal_vec(&mut rng, m * q);
+    PairDataset {
+        name: format!("grid{m}x{q}"),
+        d,
+        t,
+        pairs,
+        y,
+        homogeneous: m == q,
+    }
+}
+
+#[test]
+fn eigen_loocv_matches_brute_force_oracle() {
+    // Three independent kernel draws (m, q ≤ 12), every pair left out
+    // once per λ: the leverages LOOCV must equal an actual retrain.
+    for (seed, m, q) in [(910u64, 5usize, 6usize), (911, 7, 5), (912, 6, 8)] {
+        let data = complete_grid(seed, m, q);
+        let er = EigenRidge::new(&data, PairwiseKernel::Kronecker).unwrap();
+        let cells = er.loocv(&LAMBDAS).unwrap();
+        assert_eq!(cells.len(), LAMBDAS.len());
+        let n = data.len();
+        for cell in &cells {
+            for i in 0..n {
+                let keep: Vec<usize> = (0..n).filter(|&j| j != i).collect();
+                let train = data.subset(&keep);
+                let model =
+                    ClosedFormModel::fit(&train, PairwiseKernel::Kronecker, cell.lambda)
+                        .unwrap();
+                let pred = model.predict(&data.pairs.subset(&[i]))[0];
+                let diff = (pred - cell.loo[i]).abs();
+                assert!(
+                    diff <= 1e-8,
+                    "seed {seed} λ={} pair {i} ({}, {}): retrained {pred} vs \
+                     leverages {} (diff {diff:e})",
+                    cell.lambda,
+                    data.pairs.drug(i),
+                    data.pairs.target(i),
+                    cell.loo[i]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn eigen_alpha_matches_cg_per_lambda() {
+    // The multi-λ eigen solve and a tightly-converged CG must land on
+    // the same Tikhonov optimum for every λ in the grid.
+    let data = complete_grid(913, 9, 7);
+    let er = EigenRidge::new(&data, PairwiseKernel::Kronecker).unwrap();
+    let alphas = er.alpha_grid(&LAMBDAS).unwrap();
+    assert_eq!(alphas.len(), LAMBDAS.len());
+    for (alpha, &lambda) in alphas.iter().zip(&LAMBDAS) {
+        let cfg = RidgeConfig {
+            lambda,
+            max_iters: 2000,
+            rel_tol: 1e-13,
+            ..Default::default()
+        };
+        let cg_model = PairwiseRidge::fit_exact(
+            &data,
+            PairwiseKernel::Kronecker,
+            &cfg,
+            cfg.max_iters,
+            Solver::Cg,
+        )
+        .unwrap();
+        for (i, (a, b)) in alpha.iter().zip(&cg_model.alpha).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-6 * (1.0 + b.abs()),
+                "λ={lambda} α[{i}]: eigen {a} vs cg {b}"
+            );
+        }
+    }
+}
+
+/// Pinned incomplete fixture: 12×12 grid, 116 of 144 cells observed.
+fn incomplete_fixture() -> PairDataset {
+    let mut rng = Xoshiro256::seed_from(914);
+    let d = Arc::new(gen::psd_kernel(&mut rng, 12));
+    let t = Arc::new(gen::psd_kernel(&mut rng, 12));
+    let chosen = dist::sample_without_replacement(&mut rng, 144, 116);
+    let drugs: Vec<u32> = chosen.iter().map(|&c| (c / 12) as u32).collect();
+    let targets: Vec<u32> = chosen.iter().map(|&c| (c % 12) as u32).collect();
+    let pairs = PairIndex::new(drugs, targets, 12, 12);
+    let y = dist::normal_vec(&mut rng, 116);
+    PairDataset {
+        name: "incomplete12".into(),
+        d,
+        t,
+        pairs,
+        y,
+        homogeneous: true,
+    }
+}
+
+#[test]
+fn eigen_precond_cg_beats_plain_cg_on_incomplete_grid() {
+    let data = incomplete_fixture();
+    assert!(
+        check_complete(&data.pairs).is_err(),
+        "fixture must be an incomplete grid"
+    );
+    let cfg = RidgeConfig {
+        lambda: 1e-2,
+        max_iters: 4000,
+        rel_tol: 1e-10,
+        ..Default::default()
+    };
+    let plain = PairwiseRidge::fit_exact(
+        &data,
+        PairwiseKernel::Kronecker,
+        &cfg,
+        cfg.max_iters,
+        Solver::Cg,
+    )
+    .unwrap();
+    let pre =
+        PairwiseRidge::fit_eigen_precond_cg(&data, PairwiseKernel::Kronecker, &cfg, cfg.max_iters)
+            .unwrap();
+    // The acceptance criterion: strictly fewer Krylov iterations.
+    assert!(
+        pre.iterations < plain.iterations,
+        "eigen-preconditioned CG must beat plain CG: {} vs {} iterations",
+        pre.iterations,
+        plain.iterations
+    );
+    // Both converge to the same system's solution…
+    for (i, (a, b)) in pre.alpha.iter().zip(&plain.alpha).enumerate() {
+        assert!(
+            (a - b).abs() < 1e-6 * (1.0 + b.abs()),
+            "α[{i}]: precond {a} vs plain {b}"
+        );
+    }
+    // …which is the explicit Cholesky optimum.
+    let k = explicit_matrix(
+        PairwiseKernel::Kronecker,
+        &data.d,
+        &data.t,
+        &data.pairs,
+        &data.pairs,
+    );
+    let oracle = solve_regularized(&k, cfg.lambda, &data.y).unwrap();
+    for (i, (a, o)) in pre.alpha.iter().zip(&oracle).enumerate() {
+        assert!(
+            (a - o).abs() < 1e-6 * (1.0 + o.abs()),
+            "α[{i}]: precond {a} vs Cholesky {o}"
+        );
+    }
+}
+
+#[test]
+fn eigen_rejects_incomplete_grid_with_missing_count() {
+    let data = incomplete_fixture();
+    let err = EigenRidge::new(&data, PairwiseKernel::Kronecker).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("incomplete grid"), "{msg}");
+    assert!(msg.contains("28 of 144"), "names the missing count: {msg}");
+}
+
+#[test]
+fn eigen_loocv_selects_a_sane_lambda_on_structured_labels() {
+    // Labels with real kernel structure (y = K α* + noise): exact LOOCV
+    // must prefer a finite λ over the max-shrinkage corner (which
+    // predicts ~0 everywhere), and the winning LOO MSE must beat
+    // predicting zero.
+    let mut data = complete_grid(915, 8, 8);
+    let k = explicit_matrix(
+        PairwiseKernel::Kronecker,
+        &data.d,
+        &data.t,
+        &data.pairs,
+        &data.pairs,
+    );
+    let mut rng = Xoshiro256::seed_from(916);
+    let alpha_star = dist::normal_vec(&mut rng, data.len());
+    let signal = k.matvec(&alpha_star);
+    let scale = (signal.iter().map(|s| s * s).sum::<f64>() / signal.len() as f64).sqrt();
+    let noise = dist::normal_vec(&mut rng, data.len());
+    data.y = signal
+        .iter()
+        .zip(&noise)
+        .map(|(s, e)| s / scale + 0.1 * e)
+        .collect();
+
+    let er = EigenRidge::new(&data, PairwiseKernel::Kronecker).unwrap();
+    let grid = [1e-2, 1e-1, 1.0, 10.0, 1e6];
+    let cells = er.loocv(&grid).unwrap();
+    let best = cells
+        .iter()
+        .min_by(|a, b| a.mse.partial_cmp(&b.mse).unwrap())
+        .unwrap();
+    assert!(best.lambda < 1e6, "LOOCV picked the degenerate max-λ corner");
+    let var = data.y.iter().map(|y| y * y).sum::<f64>() / data.len() as f64;
+    assert!(
+        best.mse < var,
+        "LOO MSE {} no better than predicting zero ({var})",
+        best.mse
+    );
+}

@@ -5,11 +5,13 @@
 # scoring, batch sizes {1, 8, 64, 256}, p50/p99 latency) into
 # BENCH_serve.json, and the stochastic-solver bench (exact CG vs
 # mini-batched SGD time-to-ε, n ∈ {16k, 64k}, all 8 kernels) into
-# BENCH_sgd.json, and the execution-runtime ablation (persistent pool
+# BENCH_sgd.json, the execution-runtime ablation (persistent pool
 # vs scoped spawn: region dispatch, mat-vec latency at n ∈ {4k, 16k,
-# 64k}, per-iteration MINRES overhead) into BENCH_pool.json — all at
-# the repo root so future PRs can prove speedups against recorded
-# numbers.
+# 64k}, per-iteration MINRES overhead) into BENCH_pool.json, and the
+# complete-grid eigen shortcut vs CG λ-grid comparison (m = q ∈ {64,
+# 128}, 8 λ values, plus the exact-LOOCV pass) into BENCH_eigen.json —
+# all at the repo root so future PRs can prove speedups against
+# recorded numbers.
 #
 # Usage: scripts/bench.sh            # full sizes (~minutes)
 #        GVT_RLS_BENCH_QUICK=1 scripts/bench.sh   # small sizes, fast
@@ -25,11 +27,13 @@ if [[ -n "${GVT_RLS_BENCH_QUICK:-}" || -n "${GVT_BENCH_SMOKE:-}" ]]; then
   serve_json="$PWD/BENCH_serve_quick.json"
   sgd_json="$PWD/BENCH_sgd_quick.json"
   pool_json="$PWD/BENCH_pool_quick.json"
+  eigen_json="$PWD/BENCH_eigen_quick.json"
 else
   gvt_json="$PWD/BENCH_gvt.json"
   serve_json="$PWD/BENCH_serve.json"
   sgd_json="$PWD/BENCH_sgd.json"
   pool_json="$PWD/BENCH_pool.json"
+  eigen_json="$PWD/BENCH_eigen.json"
 fi
 
 echo "== bench_pairwise_kernels → ${gvt_json} =="
@@ -48,4 +52,8 @@ echo "== bench_pool → ${pool_json} =="
 GVT_RLS_BENCH_JSON="$pool_json" \
   cargo bench --offline --bench bench_pool
 
-echo "bench.sh: wrote ${GVT_RLS_BENCH_JSON:-$gvt_json}, ${serve_json}, ${sgd_json} and ${pool_json}"
+echo "== bench_eigen → ${eigen_json} =="
+GVT_RLS_BENCH_JSON="$eigen_json" \
+  cargo bench --offline --bench bench_eigen
+
+echo "bench.sh: wrote ${GVT_RLS_BENCH_JSON:-$gvt_json}, ${serve_json}, ${sgd_json}, ${pool_json} and ${eigen_json}"

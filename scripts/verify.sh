@@ -30,6 +30,17 @@ echo "== runtime ablations: scoped-spawn fallback + single-thread =="
 GVT_RLS_POOL=0 cargo test -q --offline
 GVT_RLS_THREADS=1 cargo test -q --offline
 
+echo "== eigen lane: oracle/eigh/nystrom suites under both runtime ablations =="
+# The full-suite sweeps above already include these, but the eigen
+# shortcut's determinism story (serial Jacobi + pooled GEMMs + serial
+# scatter/gather) is exactly what the two ablations stress — run the
+# brute-force LOOCV oracle and the linalg/nystrom property suites
+# explicitly so a regression names itself.
+GVT_RLS_POOL=0 cargo test -q --offline --test eigen_oracle
+GVT_RLS_POOL=0 cargo test -q --offline --lib -- linalg::eigh solvers::nystrom solvers::complete
+GVT_RLS_THREADS=1 cargo test -q --offline --test eigen_oracle
+GVT_RLS_THREADS=1 cargo test -q --offline --lib -- linalg::eigh solvers::nystrom solvers::complete
+
 echo "== benches + examples compile (kept in the workspace) =="
 cargo build --offline --benches --examples
 
@@ -133,6 +144,27 @@ exec 3>&-
 wait "$server_pid"
 server_pid=""
 echo "serve round trip: OK ($i requests, 2 connections, mid-stream reload)"
+
+echo "== eigen solver: complete-grid train + exact LOOCV + artifact round trip =="
+# The direct lane end to end: train on the complete kernel-filling grid,
+# select λ by exact LOOCV (zero solver iterations), save the same v2
+# artifact the iterative lane writes, and score pairs through the
+# untouched predict path.
+"$bin" train --quick --dataset kernel-filling --solver eigen \
+  --save-model "$workdir/eigen_model.txt" > "$workdir/eigen_train.out"
+grep -q "solver eigen" "$workdir/eigen_train.out"
+grep -q "iterations 0" "$workdir/eigen_train.out"
+printf '0 0\n1 2\n3 1\n' > "$workdir/eigen_pairs.txt"
+"$bin" predict --model "$workdir/eigen_model.txt" --pairs "$workdir/eigen_pairs.txt" \
+  --out "$workdir/eigen_scores.txt"
+[[ "$(wc -l < "$workdir/eigen_scores.txt")" -eq 3 ]]
+# Incomplete data must fail in-band with the structured missing-count
+# error, not a panic or a silent wrong answer.
+if "$bin" train --quick --dataset metz --solver eigen 2> "$workdir/eigen_err.txt"; then
+  echo "eigen on incomplete data unexpectedly succeeded"; exit 1
+fi
+grep -q "incomplete grid" "$workdir/eigen_err.txt"
+echo "eigen lane: OK (LOOCV train, artifact round trip, in-band rejection)"
 
 echo "== serve: injected faults answered in-band (GVT_RLS_FAULT) =="
 # Dispatcher panic on the first scoring pass: request 1 gets an in-band
