@@ -1,0 +1,154 @@
+//! Micro-kernel ablation: register-blocked tile kernels
+//! (`linalg::microkernel`) vs the scalar chunk bodies
+//! (`GVT_RLS_MICROKERNEL=0`), A/B'd in-process via
+//! [`gvt_rls::linalg::microkernel::set_enabled`]. Three sweeps:
+//!
+//! 1. **GEMV** — square `y = A·x` (the fused plan's pooled terms and
+//!    every solver iteration's dense factor product).
+//! 2. **GEMM** — square `C = A·B` (Dense-policy GVT, eigen-basis
+//!    rotations, Nyström assembly).
+//! 3. **Stage-1 + stage-2** — the multi-RHS pairwise mat-mat (Kronecker,
+//!    B = 8 coefficient columns) at n ∈ {4k, 16k, 64k} pairs: the
+//!    scatter/row-dot chunk bodies the tiles rewire.
+//!
+//! Both settings are bit-identical (tests/microkernel_equiv.rs); this
+//! bench records what the tiling buys. Every row reports GFLOP/s next to
+//! the time so the distance to machine peak stays visible. Set
+//! `GVT_RLS_BENCH_JSON=<path>` to emit JSON — scripts/bench.sh points it
+//! at BENCH_microkernel.json.
+
+use gvt_rls::bench::{reduced_size, BenchConfig, BenchSuite};
+use gvt_rls::data::kernel_filling::KernelFillingConfig;
+use gvt_rls::gvt::pairwise::{PairwiseKernel, PairwiseLinOp};
+use gvt_rls::gvt::vec_trick::GvtPolicy;
+use gvt_rls::linalg::{microkernel, par, Mat};
+use gvt_rls::rng::{dist, Xoshiro256};
+use gvt_rls::runtime::pool;
+use std::hint::black_box;
+
+const MODES: [(&str, bool); 2] = [("tiled ", true), ("scalar", false)];
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let mut suite = BenchSuite::new();
+    let mut rng = Xoshiro256::seed_from(7);
+    pool::warm();
+    // name, size, GFLOP/s per mode [tiled, scalar].
+    let mut gflops: Vec<(&'static str, usize, [f64; 2])> = Vec::new();
+
+    println!("# bench_microkernel — register-blocked tiles vs scalar chunk bodies\n");
+
+    // 1. GEMV: y = A·x, square.
+    let gemv_sizes: &[usize] = if reduced_size() { &[256] } else { &[1_024, 2_048, 4_096] };
+    for &m in gemv_sizes {
+        let a = Mat::from_vec(m, m, dist::normal_vec(&mut rng, m * m));
+        let x = dist::normal_vec(&mut rng, m);
+        let mut y = vec![0.0; m];
+        let flops = 2.0 * (m as f64) * (m as f64);
+        let mut per_mode = [0.0f64; 2];
+        for (mi, &(label, on)) in MODES.iter().enumerate() {
+            microkernel::set_enabled(Some(on));
+            let r = suite.run(&format!("gemv  m={m:<5} {label}"), &cfg, || {
+                a.matvec_into(black_box(&x), black_box(&mut y));
+            });
+            per_mode[mi] = flops / r.mean.as_secs_f64().max(1e-12) / 1e9;
+        }
+        println!(
+            "gemv  m={m}: tiled {:.2} GFLOP/s, scalar {:.2} GFLOP/s ({:.2}x)",
+            per_mode[0],
+            per_mode[1],
+            per_mode[0] / per_mode[1].max(1e-12)
+        );
+        gflops.push(("gemv", m, per_mode));
+    }
+
+    // 2. GEMM: C = A·B, square.
+    let gemm_sizes: &[usize] = if reduced_size() { &[96] } else { &[256, 512, 768] };
+    for &m in gemm_sizes {
+        let a = Mat::from_vec(m, m, dist::normal_vec(&mut rng, m * m));
+        let b = Mat::from_vec(m, m, dist::normal_vec(&mut rng, m * m));
+        let mut c = Mat::zeros(m, m);
+        let flops = 2.0 * (m as f64).powi(3);
+        let mut per_mode = [0.0f64; 2];
+        for (mi, &(label, on)) in MODES.iter().enumerate() {
+            microkernel::set_enabled(Some(on));
+            let r = suite.run(&format!("gemm  m={m:<5} {label}"), &cfg, || {
+                a.matmul_into(black_box(&b), black_box(&mut c));
+            });
+            per_mode[mi] = flops / r.mean.as_secs_f64().max(1e-12) / 1e9;
+        }
+        println!(
+            "gemm  m={m}: tiled {:.2} GFLOP/s, scalar {:.2} GFLOP/s ({:.2}x)",
+            per_mode[0],
+            per_mode[1],
+            per_mode[0] / per_mode[1].max(1e-12)
+        );
+        gflops.push(("gemm", m, per_mode));
+    }
+
+    // 3. Stage-1 + stage-2: multi-RHS pairwise mat-mat over n pairs.
+    let (k, sizes): (usize, &[usize]) =
+        if reduced_size() { (48, &[800]) } else { (192, &[4_000, 16_000, 64_000]) };
+    let bcols = 8usize;
+    for &n in sizes {
+        let data = KernelFillingConfig::small().generate(k, n, 42);
+        let op = PairwiseLinOp::new(
+            PairwiseKernel::Kronecker,
+            data.d.clone(),
+            data.t.clone(),
+            data.pairs.clone(),
+            data.pairs.clone(),
+            GvtPolicy::Auto,
+        )
+        .unwrap();
+        let abm = Mat::from_vec(n, bcols, dist::normal_vec(&mut rng, n * bcols));
+        let mut out = Mat::zeros(n, bcols);
+        // Stage 1 scatters n·q MACs, stage 2 row-dots n·m, per RHS column.
+        let flops = 2.0 * (bcols as f64) * (n as f64) * (2 * k) as f64;
+        let mut per_mode = [0.0f64; 2];
+        for (mi, &(label, on)) in MODES.iter().enumerate() {
+            microkernel::set_enabled(Some(on));
+            let r = suite.run(&format!("stage12 n={n:<6} B={bcols} {label}"), &cfg, || {
+                op.matmat_into(black_box(&abm), black_box(&mut out));
+            });
+            per_mode[mi] = flops / r.mean.as_secs_f64().max(1e-12) / 1e9;
+        }
+        println!(
+            "stage12 n={n}: tiled {:.2} GFLOP/s, scalar {:.2} GFLOP/s ({:.2}x)",
+            per_mode[0],
+            per_mode[1],
+            per_mode[0] / per_mode[1].max(1e-12)
+        );
+        gflops.push(("stage12", n, per_mode));
+    }
+    microkernel::set_enabled(None);
+
+    println!("\n{}", suite.table());
+    println!("name          size      tiled-GFLOP/s  scalar-GFLOP/s  speedup");
+    for (name, sz, g) in &gflops {
+        println!(
+            "{name:<12} {sz:>8} {:>14.2} {:>15.2} {:>8.2}x",
+            g[0],
+            g[1],
+            g[0] / g[1].max(1e-12)
+        );
+    }
+
+    if let Ok(path) = std::env::var("GVT_RLS_BENCH_JSON") {
+        let meta: Vec<(&str, String)> = vec![
+            ("bench", "bench_microkernel".to_string()),
+            ("threads", par::num_threads().to_string()),
+            ("tile", format!("MR={} NR={} KC={}", microkernel::MR, microkernel::NR, microkernel::KC)),
+            (
+                "gflops",
+                gflops
+                    .iter()
+                    .map(|(nm, sz, g)| format!("{nm}@{sz}=tiled:{:.3},scalar:{:.3}", g[0], g[1]))
+                    .collect::<Vec<_>>()
+                    .join(";"),
+            ),
+        ];
+        suite.write_json(&path, &meta).expect("writing bench JSON");
+        println!("wrote {path}");
+    }
+}

@@ -58,7 +58,7 @@ use crate::gvt::terms::{
 use crate::gvt::vec_trick::{
     choose_policy, scatter_w_grouped, stage1_scatter, stage1_single_row, GvtPolicy,
 };
-use crate::linalg::{par, vecops, Mat};
+use crate::linalg::{microkernel, par, vecops, Mat};
 use crate::sparse::{GroupBy, PairIndex};
 use std::sync::{Arc, OnceLock};
 
@@ -994,6 +994,12 @@ fn stage1_grouped(
     let rows_here = chunk.len() / row_len;
     let mut r = 0;
     let block = !stage1_single_row();
+    if block && microkernel::enabled() {
+        // 8-row tiles first (GVT_RLS_MICROKERNEL=0 ablates back to the
+        // 4-row/scalar passes below); each cell's group sum stays a
+        // serial single accumulator, so the tile width cannot move a bit.
+        r = microkernel::stage1_grouped8(mat, row0, chunk, row_len, offsets, order, gather_keys, a);
+    }
     while block && r + 4 <= rows_here {
         let m0 = mat.row(row0 + r);
         let m1 = mat.row(row0 + r + 1);
@@ -1054,6 +1060,7 @@ fn stage2_rowdot_multi(
     debug_assert_eq!(lhs.cols(), s_cols);
     let row_len = s_cols * b;
     let odata = out.as_mut_slice();
+    let tiled = microkernel::enabled();
     par::parallel_fill_rows(odata, b.max(1), 2048, |start, _end, chunk| {
         let i0 = start / b.max(1);
         let rows_here = if b == 0 { 0 } else { chunk.len() / b };
@@ -1062,11 +1069,18 @@ fn stage2_rowdot_multi(
             let lrow = lhs.row(li[i] as usize);
             let sbase = ri[i] as usize * row_len;
             let orow = &mut chunk[t * b..(t + 1) * b];
-            for d in 0..s_cols {
-                let l = c * lrow[d];
-                let cell = &s[sbase + d * b..sbase + (d + 1) * b];
-                for (ob, sb) in orow.iter_mut().zip(cell) {
-                    *ob += l * sb;
+            if tiled {
+                // 8-wide output blocks held in registers across the `d`
+                // sweep; per-element order matches the scalar body below.
+                microkernel::stage2_multi_row(lrow, s, sbase, b, c, orow);
+            } else {
+                // Scalar ablation body (GVT_RLS_MICROKERNEL=0).
+                for d in 0..s_cols {
+                    let l = c * lrow[d];
+                    let cell = &s[sbase + d * b..sbase + (d + 1) * b];
+                    for (ob, sb) in orow.iter_mut().zip(cell) {
+                        *ob += l * sb;
+                    }
                 }
             }
         }

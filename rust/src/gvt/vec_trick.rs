@@ -252,6 +252,14 @@ pub(crate) fn stage1_scatter(
     let rows_here = chunk.len() / row_len;
     let mut r = 0;
     let block = !stage1_single_row();
+    if block && crate::linalg::microkernel::enabled() {
+        // 8-row tiles first (GVT_RLS_MICROKERNEL=0 ablates back to the
+        // 4-row/scalar passes below); per-(row, j) update order is
+        // unchanged, so the blocking width cannot move a bit.
+        r = crate::linalg::microkernel::stage1_scatter8(
+            mat, row0, chunk, row_len, scatter, gather, a,
+        );
+    }
     while block && r + 4 <= rows_here {
         let m0 = mat.row(row0 + r);
         let m1 = mat.row(row0 + r + 1);

@@ -1,35 +1,119 @@
 //! Kernel matrix construction from feature matrices.
+//!
+//! The dot-product family (linear / polynomial / Gaussian) builds through
+//! the [`microkernel`] row-dot tiles — the Gram entry is a feature dot
+//! product (Gaussian via `‖x‖² + ‖y‖² − 2⟨x,y⟩`), so a `K` build is one
+//! triangular `X·Xᵀ` sweep instead of `n²` independent `eval` calls. The
+//! combinatorial kernels (Tanimoto / Min / Cosine) and the
+//! `GVT_RLS_MICROKERNEL=0` ablation keep the per-entry `eval` path. All
+//! paths compute the upper triangle through the pool and mirror it: every
+//! `eval` is bitwise symmetric in its arguments (products and min/max
+//! commute), so mirroring returns the same bits at half the work — and
+//! makes `K` *exactly* symmetric by construction.
+//!
+//! The linear/polynomial tiled path is bit-identical to `eval` (both
+//! reduce through `vecops::dot`); the Gaussian squared-norm expansion is
+//! the one documented tolerance-level exception (rust/DESIGN.md
+//! §Micro-Kernels) — it is algebraically, not bitwise, equal to the
+//! per-entry `(x−y)²` sum, and `max(·, 0.0)` clamps the cancellation so
+//! the diagonal is still exactly 1.
 
 use crate::kernels::{BaseKernel, KernelParams};
-use crate::linalg::{par, Mat};
+use crate::linalg::{microkernel, par, vecops, Mat};
+
+/// Can this kernel's Gram matrix be assembled from feature dot products?
+fn gram_by_dot(kernel: BaseKernel) -> bool {
+    matches!(
+        kernel,
+        BaseKernel::Linear | BaseKernel::Polynomial | BaseKernel::Gaussian
+    )
+}
+
+/// Finish one Gram entry from the dot product `g = ⟨x_i, x_j⟩` and the
+/// squared norms (only read for Gaussian; callers pass 0.0 otherwise).
+#[inline]
+fn gram_value(kernel: BaseKernel, params: &KernelParams, g: f64, sqi: f64, sqj: f64) -> f64 {
+    match kernel {
+        BaseKernel::Linear => g,
+        BaseKernel::Polynomial => (g + params.coef0).powi(params.degree as i32),
+        BaseKernel::Gaussian => (-params.gamma * (sqi + sqj - 2.0 * g).max(0.0)).exp(),
+        // Gated by `gram_by_dot` at both call sites.
+        _ => f64::NAN,
+    }
+}
+
+/// Copy the strict upper triangle onto the lower one. Serial: the mirror
+/// is a straight `n²/2` copy, cheap next to the dot products above it,
+/// and the column-gather read pattern does not row-partition cleanly.
+fn mirror_upper(k: &mut Mat) {
+    let n = k.rows();
+    for i in 1..n {
+        for j in 0..i {
+            k[(i, j)] = k[(j, i)];
+        }
+    }
+}
 
 /// Symmetric kernel matrix `K[i,j] = k(X[i,:], X[j,:])` over the rows of a
-/// feature matrix. Threaded over row panels; exploits symmetry.
+/// feature matrix. Upper triangle through the pool (each worker owns
+/// disjoint row bands; the chunk-claim scheduler absorbs the triangular
+/// imbalance), then mirrored.
 pub fn kernel_matrix(kernel: BaseKernel, params: &KernelParams, x: &Mat) -> Mat {
     let n = x.rows();
     let mut k = Mat::zeros(n, n);
-    // Fill the full square in parallel (each worker owns disjoint rows);
-    // symmetry is exploited by computing j>=i then mirroring serially —
-    // simpler: compute full rows; kernels are cheap relative to bookkeeping
-    // and this keeps the parallel write pattern trivially disjoint.
+    if n == 0 {
+        return k;
+    }
+    let tiled = microkernel::enabled() && gram_by_dot(kernel);
+    let needs_sq = tiled && kernel == BaseKernel::Gaussian;
+    let sq: Vec<f64> = if needs_sq {
+        (0..n).map(|i| vecops::dot(x.row(i), x.row(i))).collect()
+    } else {
+        Vec::new()
+    };
     let cols = n;
     let kdata = k.as_mut_slice();
-    par::parallel_fill_rows(kdata, cols.max(1), 4 * cols.max(1), |start_flat, _end, chunk| {
+    par::parallel_fill_rows(kdata, cols, 4 * cols, |start_flat, _end, chunk| {
         let row0 = start_flat / cols;
         let rows_here = chunk.len() / cols;
         for r in 0..rows_here {
             let i = row0 + r;
             let xi = x.row(i);
             let out = &mut chunk[r * cols..(r + 1) * cols];
-            for (j, o) in out.iter_mut().enumerate() {
-                *o = kernel.eval(params, xi, x.row(j));
+            if tiled {
+                let sqi = if needs_sq { sq[i] } else { 0.0 };
+                let mut j = i;
+                while j + 4 <= n {
+                    let g = microkernel::dot4(xi, x.row(j), x.row(j + 1), x.row(j + 2), x.row(j + 3));
+                    for (t, gt) in g.iter().enumerate() {
+                        let sqj = if needs_sq { sq[j + t] } else { 0.0 };
+                        out[j + t] = gram_value(kernel, params, *gt, sqi, sqj);
+                    }
+                    j += 4;
+                }
+                while j < n {
+                    let g = vecops::dot(xi, x.row(j));
+                    let sqj = if needs_sq { sq[j] } else { 0.0 };
+                    out[j] = gram_value(kernel, params, g, sqi, sqj);
+                    j += 1;
+                }
+            } else {
+                // Per-entry path: combinatorial kernels and the
+                // GVT_RLS_MICROKERNEL=0 ablation.
+                for j in i..n {
+                    out[j] = kernel.eval(params, xi, x.row(j));
+                }
             }
         }
     });
+    mirror_upper(&mut k);
     k
 }
 
-/// Cross kernel matrix `K[i,j] = k(A[i,:], B[j,:])`.
+/// Cross kernel matrix `K[i,j] = k(A[i,:], B[j,:])`. Dot-product kernels
+/// run pooled through the 1×4 row-dot tile (the serving predictor builds
+/// cross rows on every cache miss); the rest — and the
+/// `GVT_RLS_MICROKERNEL=0` ablation — keep the serial per-entry build.
 pub fn cross_kernel_matrix(
     kernel: BaseKernel,
     params: &KernelParams,
@@ -37,7 +121,47 @@ pub fn cross_kernel_matrix(
     b: &Mat,
 ) -> Mat {
     assert_eq!(a.cols(), b.cols(), "cross kernel: feature dims differ");
-    Mat::from_fn(a.rows(), b.rows(), |i, j| kernel.eval(params, a.row(i), b.row(j)))
+    let (na, nb) = (a.rows(), b.rows());
+    if na == 0 || nb == 0 || !(microkernel::enabled() && gram_by_dot(kernel)) {
+        return Mat::from_fn(na, nb, |i, j| kernel.eval(params, a.row(i), b.row(j)));
+    }
+    let needs_sq = kernel == BaseKernel::Gaussian;
+    let (sqa, sqb): (Vec<f64>, Vec<f64>) = if needs_sq {
+        (
+            (0..na).map(|i| vecops::dot(a.row(i), a.row(i))).collect(),
+            (0..nb).map(|j| vecops::dot(b.row(j), b.row(j))).collect(),
+        )
+    } else {
+        (Vec::new(), Vec::new())
+    };
+    let mut k = Mat::zeros(na, nb);
+    let kdata = k.as_mut_slice();
+    par::parallel_fill_rows(kdata, nb, 4 * nb, |start_flat, _end, chunk| {
+        let row0 = start_flat / nb;
+        let rows_here = chunk.len() / nb;
+        for r in 0..rows_here {
+            let i = row0 + r;
+            let ai = a.row(i);
+            let sqi = if needs_sq { sqa[i] } else { 0.0 };
+            let out = &mut chunk[r * nb..(r + 1) * nb];
+            let mut j = 0;
+            while j + 4 <= nb {
+                let g = microkernel::dot4(ai, b.row(j), b.row(j + 1), b.row(j + 2), b.row(j + 3));
+                for (t, gt) in g.iter().enumerate() {
+                    let sqj = if needs_sq { sqb[j + t] } else { 0.0 };
+                    out[j + t] = gram_value(kernel, params, *gt, sqi, sqj);
+                }
+                j += 4;
+            }
+            while j < nb {
+                let g = vecops::dot(ai, b.row(j));
+                let sqj = if needs_sq { sqb[j] } else { 0.0 };
+                out[j] = gram_value(kernel, params, g, sqi, sqj);
+                j += 1;
+            }
+        }
+    });
+    k
 }
 
 /// Cosine-normalize a symmetric kernel matrix in place:

@@ -1,11 +1,13 @@
 //! Dense row-major `f64` matrix.
 //!
 //! This is the storage type for object-level kernel matrices (`D ∈ R^{m×m}`,
-//! `T ∈ R^{q×q}`), feature matrices, and the GVT intermediate `S`. The GEMM
-//! here is a cache-blocked, threaded triple loop — no SIMD intrinsics, but
-//! laid out so LLVM auto-vectorizes the innermost `axpy`-style loop.
+//! `T ∈ R^{q×q}`), feature matrices, and the GVT intermediate `S`. GEMV,
+//! GEMM, and `A·Bᵀ` run their per-chunk bodies through the register-blocked
+//! tiles in [`crate::linalg::microkernel`] (packed panels, 4×8 / 4-row
+//! tiles); `GVT_RLS_MICROKERNEL=0` falls back to the scalar cache-blocked
+//! loops, bit-identically (tests/microkernel_equiv.rs).
 
-use crate::linalg::par;
+use crate::linalg::{microkernel, par};
 use std::fmt;
 
 /// Row-major dense matrix of `f64`.
@@ -233,10 +235,16 @@ impl Mat {
         // MACs instead of the old fixed 256-row floor, so wide-but-short
         // GEMVs (the fused plan's pooled terms) parallelize too.
         let min_rows = (8192 / cols.max(1)).max(4);
+        let tiled = microkernel::enabled();
         par::parallel_fill(y, min_rows, |start, _end, chunk| {
-            for (k, yi) in chunk.iter_mut().enumerate() {
-                let row = &data[(start + k) * cols..(start + k + 1) * cols];
-                *yi = crate::linalg::vecops::dot(row, x);
+            if tiled {
+                microkernel::gemv_chunk(data, cols, start, x, chunk);
+            } else {
+                // Scalar ablation body (GVT_RLS_MICROKERNEL=0).
+                for (k, yi) in chunk.iter_mut().enumerate() {
+                    let row = &data[(start + k) * cols..(start + k + 1) * cols];
+                    *yi = crate::linalg::vecops::dot(row, x);
+                }
             }
         });
     }
@@ -250,9 +258,11 @@ impl Mat {
     }
 
     /// Dense GEMM `c = self · other` into a caller-provided matrix,
-    /// cache-blocked and threaded over row panels. Inner loop is
-    /// `C[i,:] += A[i,k] * B[k,:]` which LLVM vectorizes well on
-    /// row-major data. `c` is fully overwritten.
+    /// cache-blocked and threaded over row panels. Each worker's chunk
+    /// runs through [`microkernel::gemm_chunk`] (packed B panels, 4×8
+    /// register tiles, occupancy-gated sparse-panel escape); the
+    /// `GVT_RLS_MICROKERNEL=0` ablation keeps the scalar k-blocked
+    /// `C[i,:] += A[i,k] * B[k,:]` triple loop. `c` is fully overwritten.
     pub fn matmul_into(&self, other: &Mat, c: &mut Mat) {
         assert_eq!(self.cols, other.rows, "matmul dim mismatch");
         assert_eq!(
@@ -266,9 +276,21 @@ impl Mat {
         // Row-panel parallelism; each worker owns disjoint C rows.
         let cdata = c.as_mut_slice();
         cdata.fill(0.0);
-        par::parallel_fill_rows(cdata, n.max(1), 8 * n.max(1), |row_start_flat, _end, chunk| {
+        if n == 0 {
+            return;
+        }
+        let tiled = microkernel::enabled();
+        par::parallel_fill_rows(cdata, n, 8 * n, |row_start_flat, _end, chunk| {
             let row_start = row_start_flat / n;
             let rows_here = chunk.len() / n;
+            if tiled {
+                microkernel::gemm_chunk(a, b, k, n, row_start, chunk);
+                return;
+            }
+            // Scalar ablation body (GVT_RLS_MICROKERNEL=0): branch-free
+            // axpy inner loop (sparse A is the micro-kernel's concern —
+            // its panel-occupancy escape keeps the historical skip-zero
+            // route where measurement justifies it).
             const KB: usize = 256; // K-blocking: keep B panel in L2
             for kb in (0..k).step_by(KB) {
                 let kend = (kb + KB).min(k);
@@ -277,9 +299,6 @@ impl Mat {
                     let ci = &mut chunk[i * n..(i + 1) * n];
                     for kk in kb..kend {
                         let aik = ai[kk];
-                        if aik == 0.0 {
-                            continue;
-                        }
                         let brow = &b[kk * n..(kk + 1) * n];
                         for (cij, bkj) in ci.iter_mut().zip(brow) {
                             *cij += aik * bkj;
@@ -292,26 +311,33 @@ impl Mat {
 
     /// `self · otherᵀ` without materializing the transpose: row-dot-row,
     /// good when `other` is row-major and both row sets are gathered.
+    /// Both paths reduce each element with `vecops::dot`'s fixed 8-wide
+    /// tree (the tiled path via [`microkernel::rowdot_nt`]'s 1×4 tile),
+    /// so `GVT_RLS_MICROKERNEL` on/off stays bit-identical.
     pub fn matmul_nt(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.cols, "matmul_nt dim mismatch");
         let (m, n, k) = (self.rows, other.rows, self.cols);
         let mut c = Mat::zeros(m, n);
+        if n == 0 {
+            return c;
+        }
         let a = &self.data;
         let b = &other.data;
         let cdata = c.as_mut_slice();
-        par::parallel_fill_rows(cdata, n.max(1), 8 * n.max(1), |row_start_flat, _end, chunk| {
+        let tiled = microkernel::enabled();
+        par::parallel_fill_rows(cdata, n, 8 * n, |row_start_flat, _end, chunk| {
             let row_start = row_start_flat / n;
             let rows_here = chunk.len() / n;
             for i in 0..rows_here {
                 let ai = &a[(row_start + i) * k..(row_start + i) * k + k];
                 let ci = &mut chunk[i * n..(i + 1) * n];
-                for (j, cij) in ci.iter_mut().enumerate() {
-                    let bj = &b[j * k..(j + 1) * k];
-                    let mut acc = 0.0;
-                    for (x, y) in ai.iter().zip(bj) {
-                        acc += x * y;
+                if tiled {
+                    microkernel::rowdot_nt(ai, b, k, ci);
+                } else {
+                    // Scalar ablation body (GVT_RLS_MICROKERNEL=0).
+                    for (j, cij) in ci.iter_mut().enumerate() {
+                        *cij = crate::linalg::vecops::dot(ai, &b[j * k..(j + 1) * k]);
                     }
-                    *cij = acc;
                 }
             }
         });

@@ -1,0 +1,598 @@
+//! Register-blocked dense micro-kernels for the pool's chunk bodies.
+//!
+//! The worker pool (PR 5) made dispatch cheap; these tiles make the work
+//! inside each claimed chunk run at f64 throughput instead of one scalar
+//! FMA per cycle. Every kernel here is a *pure* tile function invoked
+//! from inside a `linalg::par` chunk body — no pool submission, no
+//! threads, no allocation (the one scratch buffer, the GEMM B panel, is
+//! a fixed-size stack array).
+//!
+//! ## Determinism contract (rust/DESIGN.md §Micro-Kernels)
+//!
+//! The PR 5 contract — bit-identical results for any worker count, chunk
+//! claim order, and pool on/off — extends to tiling: a tile may only
+//! block across *independent outputs* (multiple C rows/columns computed
+//! simultaneously), never reorder the floating-point reduction chain of
+//! any single output element. Concretely:
+//!
+//! * per-row reductions ([`dot4`]) reproduce `vecops::dot`'s exact
+//!   sequence: eight accumulators over `chunks_exact(8)`, the fixed
+//!   combine tree `((a0+a4)+(a1+a5)) + ((a2+a6)+(a3+a7))`, then a serial
+//!   remainder;
+//! * GEMM tiles ([`gemm_chunk`]) walk `k` in ascending order within each
+//!   `KC` block and the blocks in ascending order, seeding the register
+//!   tile from the current C values — the per-element chain is the same
+//!   `c += a_ik · b_kj` sequence the scalar loop executes;
+//! * stage-1 / stage-2 tiles keep each output cell's accumulation serial
+//!   and in stream order; blocking only amortizes the index streams.
+//!
+//! `GVT_RLS_MICROKERNEL=0` disables every tile and falls back to the
+//! scalar chunk bodies, so the equivalence is testable in-process
+//! (tests/microkernel_equiv.rs); [`set_enabled`] is the in-process A/B
+//! override the tests and benches use (same pattern as
+//! `runtime::pool::set_pool_enabled`).
+//!
+//! The only caveat is ±0.0 / NaN pathology: the scalar GEMM historically
+//! *skipped* zero `a_ik` entries while the packed tile multiplies through
+//! them. For finite inputs the two are bit-identical — an accumulator
+//! chain seeded at +0.0 can never produce -0.0 (exact cancellation of
+//! finite nonzero values rounds to +0.0, and `+0.0 + (±0.0 · x)` stays
+//! +0.0 in round-to-nearest) — so skipping a zero product is a no-op at
+//! the bit level. NaN/Inf inputs would break that argument (0·Inf = NaN);
+//! no solver path feeds them.
+//!
+//! This module is also the attach point for a dense accelerator backend:
+//! the stubbed PJRT/XLA surface in `runtime/xla.rs` would replace these
+//! CPU tiles per chunk, behind the same `enabled()`-style dispatch and
+//! the same fixed-reduction-order contract.
+
+use crate::linalg::vecops;
+use crate::linalg::Mat;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// GEMM micro-tile rows (register-blocked C rows per pass).
+pub const MR: usize = 4;
+/// GEMM micro-tile columns = SIMD register width in f64 lanes (AVX-512
+/// native, 2×AVX2). Also the stage-2 register block width.
+pub const NR: usize = 8;
+/// K-blocking depth: one packed B panel is `KC × NR` f64 = 16 KiB, small
+/// enough to live on the worker's stack and stay L1-resident. Matches the
+/// scalar fallback's historical `KB = 256` (the blocking does not affect
+/// bits — `k` ascends globally either way — but keeping them equal makes
+/// the A/B bench a pure tiling comparison).
+pub const KC: usize = 256;
+/// Minimum nonzero fraction of an A panel for the packed (branch-free)
+/// GEMM path; sparser panels — the Dense-policy GVT scatter matrix `W` is
+/// the motivating case — take the skip-zero scalar loop instead, which is
+/// bit-identical on finite data (see module docs) and avoids multiplying
+/// through a panel that is mostly structural zeros.
+pub const SPARSE_PANEL_OCCUPANCY: f64 = 1.0 / 16.0;
+
+// ---------------------------------------------------------------------
+// Enable switch: env default + in-process override
+// ---------------------------------------------------------------------
+
+/// In-process override: 0 = unset (follow the env), 1 = forced off,
+/// 2 = forced on. Same encoding as `runtime::pool::POOL_OVERRIDE`.
+static MK_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// `GVT_RLS_MICROKERNEL` env gate, read once and cached: the dispatch
+/// sits on every GEMV/GEMM/stage-1/stage-2 chunk, and `env::var_os`
+/// takes a process-global lock on some platforms. Default on; `0`
+/// disables (the scalar-ablation setting scripts/verify.sh sweeps).
+fn env_enabled() -> bool {
+    static CACHED: OnceLock<bool> = OnceLock::new();
+    *CACHED.get_or_init(|| match std::env::var("GVT_RLS_MICROKERNEL") {
+        Ok(v) => v != "0",
+        Err(_) => true,
+    })
+}
+
+/// Are the tiled kernels active? Checked once per chunk body (a relaxed
+/// atomic load plus a cached env read — nanoseconds against chunk bodies
+/// of ≥ thousands of MACs).
+#[inline]
+pub fn enabled() -> bool {
+    match MK_OVERRIDE.load(Ordering::Relaxed) {
+        1 => false,
+        2 => true,
+        _ => env_enabled(),
+    }
+}
+
+/// In-process A/B override for tests and benches (process-global, like
+/// the pool's thread/enable overrides): `Some(on)` forces the tiled or
+/// scalar path, `None` restores the `GVT_RLS_MICROKERNEL` env default.
+pub fn set_enabled(on: Option<bool>) {
+    let v = match on {
+        None => 0,
+        Some(false) => 1,
+        Some(true) => 2,
+    };
+    MK_OVERRIDE.store(v, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------
+// Multi-accumulator row-dot: the shared reduction primitive
+// ---------------------------------------------------------------------
+
+/// Four simultaneous dot products against one shared stream: returns
+/// `[⟨x,y0⟩, ⟨x,y1⟩, ⟨x,y2⟩, ⟨x,y3⟩]`, each bit-identical to
+/// `vecops::dot` on finite data (32 independent accumulators, the same
+/// 8-wide combine tree and serial remainder per output; multiplication
+/// order within a product commutes bitwise for non-NaN operands).
+///
+/// This is the GEMV tile (4 matrix rows × one `x`), the `A·Bᵀ` row-dot
+/// tile (one A row × 4 B rows), and the Gram-builder tile (one `x_i` ×
+/// 4 `x_j`) — the shared stream is loaded once per 4 outputs, which is
+/// what makes the blocking pay: these kernels are stream-bandwidth-bound.
+// lint: alloc_free — register tile over borrowed slices; no allocation.
+#[inline]
+pub fn dot4(x: &[f64], y0: &[f64], y1: &[f64], y2: &[f64], y3: &[f64]) -> [f64; 4] {
+    let n = x.len();
+    debug_assert!(y0.len() == n && y1.len() == n && y2.len() == n && y3.len() == n);
+    let mut a0 = [0.0f64; 8];
+    let mut a1 = [0.0f64; 8];
+    let mut a2 = [0.0f64; 8];
+    let mut a3 = [0.0f64; 8];
+    let xc = x.chunks_exact(8);
+    let tail = n - xc.remainder().len();
+    for (c, xs) in xc.enumerate() {
+        let base = c * 8;
+        let (c0, c1) = (&y0[base..base + 8], &y1[base..base + 8]);
+        let (c2, c3) = (&y2[base..base + 8], &y3[base..base + 8]);
+        for k in 0..8 {
+            a0[k] += xs[k] * c0[k];
+            a1[k] += xs[k] * c1[k];
+            a2[k] += xs[k] * c2[k];
+            a3[k] += xs[k] * c3[k];
+        }
+    }
+    let mut s0 = ((a0[0] + a0[4]) + (a0[1] + a0[5])) + ((a0[2] + a0[6]) + (a0[3] + a0[7]));
+    let mut s1 = ((a1[0] + a1[4]) + (a1[1] + a1[5])) + ((a1[2] + a1[6]) + (a1[3] + a1[7]));
+    let mut s2 = ((a2[0] + a2[4]) + (a2[1] + a2[5])) + ((a2[2] + a2[6]) + (a2[3] + a2[7]));
+    let mut s3 = ((a3[0] + a3[4]) + (a3[1] + a3[5])) + ((a3[2] + a3[6]) + (a3[3] + a3[7]));
+    for i in tail..n {
+        let xi = x[i];
+        s0 += xi * y0[i];
+        s1 += xi * y1[i];
+        s2 += xi * y2[i];
+        s3 += xi * y3[i];
+    }
+    [s0, s1, s2, s3]
+}
+
+// ---------------------------------------------------------------------
+// GEMV chunk: 4-row × 8-col register tile
+// ---------------------------------------------------------------------
+
+/// Tiled body for one `matvec_into` chunk: `out[r] = ⟨A[row0+r, :], x⟩`
+/// for `r` in `0..out.len()`, four rows per pass over `x`.
+// lint: alloc_free — slices only; per-row bits match vecops::dot.
+pub fn gemv_chunk(data: &[f64], cols: usize, row0: usize, x: &[f64], out: &mut [f64]) {
+    let rows_here = out.len();
+    let mut r = 0;
+    while r + 4 <= rows_here {
+        let base = (row0 + r) * cols;
+        let d = dot4(
+            x,
+            &data[base..base + cols],
+            &data[base + cols..base + 2 * cols],
+            &data[base + 2 * cols..base + 3 * cols],
+            &data[base + 3 * cols..base + 4 * cols],
+        );
+        out[r] = d[0];
+        out[r + 1] = d[1];
+        out[r + 2] = d[2];
+        out[r + 3] = d[3];
+        r += 4;
+    }
+    for rr in r..rows_here {
+        let base = (row0 + rr) * cols;
+        out[rr] = vecops::dot(&data[base..base + cols], x);
+    }
+}
+
+// ---------------------------------------------------------------------
+// A·Bᵀ row-dot sweep: 1×4 tile over B rows
+// ---------------------------------------------------------------------
+
+/// Tiled body for one `matmul_nt` output row: `ci[j] = ⟨ai, B[j, :]⟩`,
+/// four B rows per pass over `ai`.
+// lint: alloc_free — slices only; per-element bits match vecops::dot.
+pub fn rowdot_nt(ai: &[f64], b: &[f64], k: usize, ci: &mut [f64]) {
+    let n = ci.len();
+    let mut j = 0;
+    while j + 4 <= n {
+        let d = dot4(
+            ai,
+            &b[j * k..(j + 1) * k],
+            &b[(j + 1) * k..(j + 2) * k],
+            &b[(j + 2) * k..(j + 3) * k],
+            &b[(j + 3) * k..(j + 4) * k],
+        );
+        ci[j..j + 4].copy_from_slice(&d);
+        j += 4;
+    }
+    while j < n {
+        ci[j] = vecops::dot(ai, &b[j * k..(j + 1) * k]);
+        j += 1;
+    }
+}
+
+// ---------------------------------------------------------------------
+// GEMM chunk: 4×8 micro-tile over packed B panels
+// ---------------------------------------------------------------------
+
+/// Tiled body for one `matmul_into` row chunk: `chunk += A[row0.., :] · B`
+/// where `chunk` holds `rows_here = chunk.len() / n` pre-zeroed C rows.
+///
+/// Per `KC` block of `k`, an occupancy scan over the chunk's A panel
+/// routes mostly-zero panels (Dense-policy GVT `W`) to the skip-zero
+/// scalar loop; dense panels pack B into a stack-resident `KC×NR` panel
+/// and run 4×8 register tiles seeded from the current C values. Both
+/// routes execute each C element's `k`-ascending chain identically
+/// (finite data; see module docs for the ±0.0 argument).
+// lint: alloc_free — B panel is a fixed stack array; borrows otherwise.
+pub fn gemm_chunk(a: &[f64], b: &[f64], k: usize, n: usize, row0: usize, chunk: &mut [f64]) {
+    if n == 0 {
+        return;
+    }
+    let rows_here = chunk.len() / n;
+    let mut panel = [0.0f64; KC * NR];
+    let n_full = n - n % NR;
+    let mut kb = 0;
+    while kb < k {
+        let kc = (k - kb).min(KC);
+        // Occupancy scan: `rows_here × kc` loads, a ~1/n fraction of the
+        // multiply work it sizes up.
+        let mut nnz = 0usize;
+        for i in 0..rows_here {
+            let arow = &a[(row0 + i) * k + kb..(row0 + i) * k + kb + kc];
+            for &v in arow {
+                nnz += (v != 0.0) as usize;
+            }
+        }
+        if (nnz as f64) < SPARSE_PANEL_OCCUPANCY * (rows_here * kc) as f64 {
+            // Sparse-panel escape: the historical skip-zero axpy loop.
+            for i in 0..rows_here {
+                let arow = &a[(row0 + i) * k..(row0 + i) * k + k];
+                let ci = &mut chunk[i * n..(i + 1) * n];
+                for kk in kb..kb + kc {
+                    let aik = arow[kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    for (cij, bkj) in ci.iter_mut().zip(brow) {
+                        *cij += aik * bkj;
+                    }
+                }
+            }
+            kb += kc;
+            continue;
+        }
+        // Packed path over full NR-wide column bands.
+        let mut jb = 0;
+        while jb < n_full {
+            for kk in 0..kc {
+                let src = &b[(kb + kk) * n + jb..(kb + kk) * n + jb + NR];
+                panel[kk * NR..kk * NR + NR].copy_from_slice(src);
+            }
+            let mut i = 0;
+            while i + MR <= rows_here {
+                gemm_tile_4x8(a, k, row0 + i, kb, kc, &panel, chunk, i, n, jb);
+                i += MR;
+            }
+            while i < rows_here {
+                gemm_tile_1x8(a, k, row0 + i, kb, kc, &panel, chunk, i, n, jb);
+                i += 1;
+            }
+            jb += NR;
+        }
+        // Column remainder (n % NR): branch-free scalar sweep.
+        if n_full < n {
+            for i in 0..rows_here {
+                let arow = &a[(row0 + i) * k..(row0 + i) * k + k];
+                let ci = &mut chunk[i * n + n_full..(i + 1) * n];
+                for kk in kb..kb + kc {
+                    let aik = arow[kk];
+                    let brow = &b[kk * n + n_full..kk * n + n];
+                    for (cij, bkj) in ci.iter_mut().zip(brow) {
+                        *cij += aik * bkj;
+                    }
+                }
+            }
+        }
+        kb += kc;
+    }
+}
+
+/// 4×8 register tile: `C[ci0..ci0+4, jb..jb+8] += A-block · panel`,
+/// seeded from (and stored back to) the live C values so the per-element
+/// chain continues across `KC` blocks unchanged.
+// lint: alloc_free — fixed-size register tile.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn gemm_tile_4x8(
+    a: &[f64],
+    k: usize,
+    arow0: usize,
+    kb: usize,
+    kc: usize,
+    panel: &[f64],
+    chunk: &mut [f64],
+    ci0: usize,
+    n: usize,
+    jb: usize,
+) {
+    let mut acc = [[0.0f64; NR]; MR];
+    for (r, accr) in acc.iter_mut().enumerate() {
+        let base = (ci0 + r) * n + jb;
+        accr.copy_from_slice(&chunk[base..base + NR]);
+    }
+    let a0 = &a[arow0 * k + kb..arow0 * k + kb + kc];
+    let a1 = &a[(arow0 + 1) * k + kb..(arow0 + 1) * k + kb + kc];
+    let a2 = &a[(arow0 + 2) * k + kb..(arow0 + 2) * k + kb + kc];
+    let a3 = &a[(arow0 + 3) * k + kb..(arow0 + 3) * k + kb + kc];
+    for kk in 0..kc {
+        let bp = &panel[kk * NR..kk * NR + NR];
+        let (v0, v1, v2, v3) = (a0[kk], a1[kk], a2[kk], a3[kk]);
+        for c in 0..NR {
+            acc[0][c] += v0 * bp[c];
+            acc[1][c] += v1 * bp[c];
+            acc[2][c] += v2 * bp[c];
+            acc[3][c] += v3 * bp[c];
+        }
+    }
+    for (r, accr) in acc.iter().enumerate() {
+        let base = (ci0 + r) * n + jb;
+        chunk[base..base + NR].copy_from_slice(accr);
+    }
+}
+
+/// 1×8 edge tile for chunks whose row count is not a multiple of `MR`.
+// lint: alloc_free — fixed-size register tile.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn gemm_tile_1x8(
+    a: &[f64],
+    k: usize,
+    arow: usize,
+    kb: usize,
+    kc: usize,
+    panel: &[f64],
+    chunk: &mut [f64],
+    ci: usize,
+    n: usize,
+    jb: usize,
+) {
+    let base = ci * n + jb;
+    let mut acc = [0.0f64; NR];
+    acc.copy_from_slice(&chunk[base..base + NR]);
+    let arow = &a[arow * k + kb..arow * k + kb + kc];
+    for kk in 0..kc {
+        let bp = &panel[kk * NR..kk * NR + NR];
+        let v = arow[kk];
+        for c in 0..NR {
+            acc[c] += v * bp[c];
+        }
+    }
+    chunk[base..base + NR].copy_from_slice(&acc);
+}
+
+// ---------------------------------------------------------------------
+// Stage-1 tiles: 8-row scatter / grouped-gather
+// ---------------------------------------------------------------------
+
+/// 8-row head for `vec_trick::stage1_scatter`: processes
+/// `floor(rows_here / 8) · 8` S rows and returns how many it consumed
+/// (the caller finishes with the 4-row and single-row passes). The three
+/// index/coefficient streams are loaded once per 8 rows; per-(row, j)
+/// update order is exactly the scalar loop's.
+// lint: alloc_free — splits the chunk into row slices only.
+pub fn stage1_scatter8(
+    mat: &Mat,
+    row0: usize,
+    chunk: &mut [f64],
+    row_len: usize,
+    scatter: &[u32],
+    gather: &[u32],
+    a: &[f64],
+) -> usize {
+    let rows_here = chunk.len() / row_len.max(1);
+    let mut r = 0;
+    while r + 8 <= rows_here {
+        let m0 = mat.row(row0 + r);
+        let m1 = mat.row(row0 + r + 1);
+        let m2 = mat.row(row0 + r + 2);
+        let m3 = mat.row(row0 + r + 3);
+        let m4 = mat.row(row0 + r + 4);
+        let m5 = mat.row(row0 + r + 5);
+        let m6 = mat.row(row0 + r + 6);
+        let m7 = mat.row(row0 + r + 7);
+        let (s0, rest) = chunk[r * row_len..].split_at_mut(row_len);
+        let (s1, rest) = rest.split_at_mut(row_len);
+        let (s2, rest) = rest.split_at_mut(row_len);
+        let (s3, rest) = rest.split_at_mut(row_len);
+        let (s4, rest) = rest.split_at_mut(row_len);
+        let (s5, rest) = rest.split_at_mut(row_len);
+        let (s6, s7full) = rest.split_at_mut(row_len);
+        let s7 = &mut s7full[..row_len];
+        for j in 0..a.len() {
+            let dst = scatter[j] as usize;
+            let src = gather[j] as usize;
+            let aj = a[j];
+            s0[dst] += m0[src] * aj;
+            s1[dst] += m1[src] * aj;
+            s2[dst] += m2[src] * aj;
+            s3[dst] += m3[src] * aj;
+            s4[dst] += m4[src] * aj;
+            s5[dst] += m5[src] * aj;
+            s6[dst] += m6[src] * aj;
+            s7[dst] += m7[src] * aj;
+        }
+        r += 8;
+    }
+    r
+}
+
+/// 8-row head for the fused plan's grouped stage-1 kernel (same contract
+/// as [`stage1_scatter8`]: returns rows consumed). Each S cell keeps its
+/// serial single-accumulator sum over the cell's group, matching the
+/// scalar body bit-for-bit; only the index streams are amortized.
+// lint: alloc_free — register accumulators + row splits only.
+#[allow(clippy::too_many_arguments)]
+pub fn stage1_grouped8(
+    mat: &Mat,
+    row0: usize,
+    chunk: &mut [f64],
+    row_len: usize,
+    offsets: &[u32],
+    order: &[u32],
+    gather_keys: &[u32],
+    a: &[f64],
+) -> usize {
+    let rows_here = chunk.len() / row_len.max(1);
+    let mut r = 0;
+    while r + 8 <= rows_here {
+        let m0 = mat.row(row0 + r);
+        let m1 = mat.row(row0 + r + 1);
+        let m2 = mat.row(row0 + r + 2);
+        let m3 = mat.row(row0 + r + 3);
+        let m4 = mat.row(row0 + r + 4);
+        let m5 = mat.row(row0 + r + 5);
+        let m6 = mat.row(row0 + r + 6);
+        let m7 = mat.row(row0 + r + 7);
+        let (s0, rest) = chunk[r * row_len..].split_at_mut(row_len);
+        let (s1, rest) = rest.split_at_mut(row_len);
+        let (s2, rest) = rest.split_at_mut(row_len);
+        let (s3, rest) = rest.split_at_mut(row_len);
+        let (s4, rest) = rest.split_at_mut(row_len);
+        let (s5, rest) = rest.split_at_mut(row_len);
+        let (s6, s7full) = rest.split_at_mut(row_len);
+        let s7 = &mut s7full[..row_len];
+        for d in 0..row_len {
+            let lo = offsets[d] as usize;
+            let hi = offsets[d + 1] as usize;
+            let mut acc = [0.0f64; 8];
+            for k in lo..hi {
+                let src = gather_keys[k] as usize;
+                let aj = a[order[k] as usize];
+                acc[0] += m0[src] * aj;
+                acc[1] += m1[src] * aj;
+                acc[2] += m2[src] * aj;
+                acc[3] += m3[src] * aj;
+                acc[4] += m4[src] * aj;
+                acc[5] += m5[src] * aj;
+                acc[6] += m6[src] * aj;
+                acc[7] += m7[src] * aj;
+            }
+            s0[d] = acc[0];
+            s1[d] = acc[1];
+            s2[d] = acc[2];
+            s3[d] = acc[3];
+            s4[d] = acc[4];
+            s5[d] = acc[5];
+            s6[d] = acc[6];
+            s7[d] = acc[7];
+        }
+        r += 8;
+    }
+    r
+}
+
+// ---------------------------------------------------------------------
+// Stage-2 multi-RHS tile: 8-wide output blocks held in registers
+// ---------------------------------------------------------------------
+
+/// Register-blocked multi-RHS stage-2 row:
+/// `orow[bb] += Σ_d (c · lrow[d]) · s[sbase + d·b + bb]`, `d` ascending
+/// per element. The scalar body streams `orow` through memory once per
+/// `d`; this tile keeps each `NR`-wide `orow` block in registers across
+/// the whole `d` sweep, turning `s_cols` loads+stores per output into
+/// one — same chain, same `(c · lrow[d]) · s` association.
+// lint: alloc_free — register block over borrowed S/out slices.
+pub fn stage2_multi_row(lrow: &[f64], s: &[f64], sbase: usize, b: usize, c: f64, orow: &mut [f64]) {
+    let s_cols = lrow.len();
+    let b_full = b - b % NR;
+    let mut bc = 0;
+    while bc < b_full {
+        let mut acc = [0.0f64; NR];
+        acc.copy_from_slice(&orow[bc..bc + NR]);
+        for (d, ld) in lrow.iter().enumerate() {
+            let l = c * ld;
+            let cell = &s[sbase + d * b + bc..sbase + d * b + bc + NR];
+            for t in 0..NR {
+                acc[t] += l * cell[t];
+            }
+        }
+        orow[bc..bc + NR].copy_from_slice(&acc);
+        bc += NR;
+    }
+    for bb in b_full..b {
+        let mut acc = orow[bb];
+        for d in 0..s_cols {
+            acc += (c * lrow[d]) * s[sbase + d * b + bb];
+        }
+        orow[bb] = acc;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{dist, Xoshiro256};
+
+    #[test]
+    fn dot4_matches_vecops_dot_bitwise() {
+        let mut rng = Xoshiro256::seed_from(91);
+        for n in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 64, 100] {
+            let x = dist::normal_vec(&mut rng, n);
+            let ys: Vec<Vec<f64>> = (0..4).map(|_| dist::normal_vec(&mut rng, n)).collect();
+            let d = dot4(&x, &ys[0], &ys[1], &ys[2], &ys[3]);
+            for (t, y) in ys.iter().enumerate() {
+                assert_eq!(
+                    d[t].to_bits(),
+                    vecops::dot(y, &x).to_bits(),
+                    "n={n} lane {t}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn override_wins_over_env_default() {
+        set_enabled(Some(false));
+        assert!(!enabled());
+        set_enabled(Some(true));
+        assert!(enabled());
+        set_enabled(None);
+    }
+
+    #[test]
+    fn stage2_tile_matches_scalar_sweep() {
+        let mut rng = Xoshiro256::seed_from(92);
+        for (s_cols, b) in [(5usize, 3usize), (8, 8), (13, 11), (4, 16), (6, 1)] {
+            let lrow = dist::normal_vec(&mut rng, s_cols);
+            let s = dist::normal_vec(&mut rng, 2 * s_cols * b);
+            let sbase = s_cols * b / 2;
+            let init = dist::normal_vec(&mut rng, b);
+            let c = 1.25;
+            let mut tiled = init.clone();
+            stage2_multi_row(&lrow, &s, sbase, b, c, &mut tiled);
+            let mut scalar = init;
+            for d in 0..s_cols {
+                let l = c * lrow[d];
+                let cell = &s[sbase + d * b..sbase + (d + 1) * b];
+                for (ob, sb) in scalar.iter_mut().zip(cell) {
+                    *ob += l * sb;
+                }
+            }
+            for (a, b2) in tiled.iter().zip(&scalar) {
+                assert_eq!(a.to_bits(), b2.to_bits(), "s_cols={s_cols} b={b}");
+            }
+        }
+    }
+}

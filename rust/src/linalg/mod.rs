@@ -5,11 +5,14 @@
 //! * [`chol`] — Cholesky factorization + triangular solves (closed-form
 //!   ridge oracle and the Nyström/Falkon preconditioner).
 //! * [`vecops`] — dot/axpy/norm primitives used by the iterative solvers.
+//! * [`microkernel`] — register-blocked GEMV/GEMM/stage-2 tile kernels
+//!   behind the pool's chunk bodies (`GVT_RLS_MICROKERNEL=0` ablation).
 //! * [`par`] — scoped-thread parallel-for helper (no rayon offline).
 
 pub mod chol;
 pub mod eigh;
 pub mod mat;
+pub mod microkernel;
 pub mod par;
 pub mod vecops;
 

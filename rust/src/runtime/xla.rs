@@ -23,6 +23,13 @@
 //! `pub mod xla;` declaration in [`crate::runtime`] plus the
 //! `use crate::runtime::xla;` import in the executor, and add the `xla`
 //! dependency to Cargo.toml. No executor code changes.
+//!
+//! Until then, the CPU-side analogue of what the MXU would run lives in
+//! [`crate::linalg::microkernel`]: the packed-panel GEMM tile is
+//! shape-compatible with the scatter → GEMM → gather-dot formulation the
+//! AOT pipeline lowers (rust/DESIGN.md §Micro-Kernels,
+//! §Hardware-Adaptation), so a future real backend replaces tile calls,
+//! not loop structure.
 
 use crate::error::{gvt_err, GvtError, Result};
 

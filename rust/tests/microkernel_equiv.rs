@@ -1,0 +1,235 @@
+//! The micro-kernel determinism contract: every tiled chunk body
+//! (`linalg::microkernel`) produces **bit-identical** output to the
+//! `GVT_RLS_MICROKERNEL=0` scalar fallback, across all 8 pairwise
+//! kernels × thread budgets {1, 2, 8} × pool {off, on} (the
+//! pool_determinism sweep), plus shape-edge cases where rows/cols land on
+//! every residue of the 4/8-wide tiles.
+//!
+//! The one documented exception is the Gaussian Gram builder: the tiled
+//! path assembles `exp(-γ(‖x_i‖² + ‖x_j‖² − 2⟨x_i,x_j⟩))` from squared
+//! norms + dot tiles, which is algebraically but not bitwise equal to the
+//! per-entry `(x−y)²` sum — asserted to tolerance instead (rust/DESIGN.md
+//! §Micro-Kernels).
+//!
+//! One `#[test]` only: the microkernel/pool/thread overrides are
+//! process-global, and libtest runs sibling tests concurrently.
+
+use gvt_rls::gvt::pairwise::{PairwiseKernel, PairwiseLinOp};
+use gvt_rls::gvt::vec_trick::GvtPolicy;
+use gvt_rls::kernels::{cross_kernel_matrix, kernel_matrix, BaseKernel, KernelParams};
+use gvt_rls::linalg::{microkernel, Mat};
+use gvt_rls::rng::{dist, Xoshiro256};
+use gvt_rls::runtime::pool;
+use gvt_rls::solvers::linear_op::{LinOp, ShiftedOp};
+use gvt_rls::solvers::minres::{minres, MinresOptions};
+use gvt_rls::testing::gen;
+use std::ops::ControlFlow;
+use std::sync::Arc;
+
+fn bits(xs: &[f64]) -> Vec<u64> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Run `f` with the micro-kernels forced off, then on; return both.
+fn ab<T>(mut f: impl FnMut() -> T) -> (T, T) {
+    microkernel::set_enabled(Some(false));
+    let off = f();
+    microkernel::set_enabled(Some(true));
+    let on = f();
+    (off, on)
+}
+
+#[test]
+fn microkernels_are_bit_identical_to_scalar_paths() {
+    let mut rng = Xoshiro256::seed_from(2024);
+
+    // ------------------------------------------------------------------
+    // Mat-level shape sweep: every residue of the 4-row GEMV tile, the
+    // 4×8 GEMM tile, and the 1×4 NT tile, plus empty/degenerate shapes.
+    // ------------------------------------------------------------------
+    let shapes: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (2, 3, 5),
+        (3, 8, 9),
+        (4, 16, 8),
+        (5, 17, 7),
+        (6, 9, 33),
+        (7, 31, 2),
+        (8, 8, 8),
+        (9, 24, 17),
+        (12, 40, 12),
+        (16, 33, 16),
+        (17, 64, 41),
+        (33, 100, 29),
+        (0, 5, 4),
+        (4, 0, 3),
+        (5, 7, 0),
+    ];
+    for &(m, k, n) in shapes {
+        let a = Mat::from_vec(m, k, dist::normal_vec(&mut rng, m * k));
+        let b = Mat::from_vec(k, n, dist::normal_vec(&mut rng, k * n));
+        let bt = Mat::from_vec(n, k, dist::normal_vec(&mut rng, n * k));
+        let x = dist::normal_vec(&mut rng, k);
+        let (mm_off, mm_on) = ab(|| a.matmul(&b));
+        assert_eq!(
+            bits(mm_off.as_slice()),
+            bits(mm_on.as_slice()),
+            "matmul ({m},{k},{n})"
+        );
+        let (mv_off, mv_on) = ab(|| a.matvec(&x));
+        assert_eq!(bits(&mv_off), bits(&mv_on), "matvec ({m},{k})");
+        let (nt_off, nt_on) = ab(|| a.matmul_nt(&bt));
+        assert_eq!(
+            bits(nt_off.as_slice()),
+            bits(nt_on.as_slice()),
+            "matmul_nt ({m},{k},{n})"
+        );
+    }
+
+    // Sparse A exercises the panel-occupancy escape against the
+    // branch-free scalar fallback (the historical skip-zero loop's bits).
+    {
+        let mut adata = dist::normal_vec(&mut rng, 48 * 300);
+        for (i, v) in adata.iter_mut().enumerate() {
+            if i % 23 != 0 {
+                *v = 0.0;
+            }
+        }
+        let a = Mat::from_vec(48, 300, adata);
+        let b = Mat::from_vec(300, 19, dist::normal_vec(&mut rng, 300 * 19));
+        let (off, on) = ab(|| a.matmul(&b));
+        assert_eq!(bits(off.as_slice()), bits(on.as_slice()), "sparse-panel GEMM");
+    }
+
+    // ------------------------------------------------------------------
+    // Gram builders: linear/polynomial bitwise, Gaussian to tolerance,
+    // combinatorial kernels share one code path (still asserted).
+    // ------------------------------------------------------------------
+    let params = KernelParams { gamma: 0.37, degree: 3, coef0: 0.5 };
+    for n in [1usize, 5, 9, 16, 23] {
+        let x = Mat::from_vec(n, 13, dist::normal_vec(&mut rng, n * 13));
+        let y = Mat::from_vec(7, 13, dist::normal_vec(&mut rng, 7 * 13));
+        for kern in [
+            BaseKernel::Linear,
+            BaseKernel::Polynomial,
+            BaseKernel::Tanimoto,
+            BaseKernel::Min,
+            BaseKernel::Cosine,
+        ] {
+            let (off, on) = ab(|| kernel_matrix(kern, &params, &x));
+            assert_eq!(
+                bits(off.as_slice()),
+                bits(on.as_slice()),
+                "kernel_matrix {kern:?} n={n}"
+            );
+            let (coff, con) = ab(|| cross_kernel_matrix(kern, &params, &x, &y));
+            assert_eq!(
+                bits(coff.as_slice()),
+                bits(con.as_slice()),
+                "cross_kernel_matrix {kern:?} n={n}"
+            );
+        }
+        let (goff, gon) = ab(|| kernel_matrix(BaseKernel::Gaussian, &params, &x));
+        assert!(
+            goff.max_abs_diff(&gon) < 1e-12,
+            "gaussian kernel_matrix n={n}: {}",
+            goff.max_abs_diff(&gon)
+        );
+        assert!(gon.is_symmetric(0.0), "gaussian gram not exactly symmetric");
+        for i in 0..n {
+            assert_eq!(gon[(i, i)], 1.0, "gaussian diagonal n={n} i={i}");
+        }
+        let (gcoff, gcon) = ab(|| cross_kernel_matrix(BaseKernel::Gaussian, &params, &x, &y));
+        assert!(gcoff.max_abs_diff(&gcon) < 1e-12, "gaussian cross n={n}");
+    }
+
+    // ------------------------------------------------------------------
+    // Operator-level sweep: all 8 pairwise kernels × threads {1,2,8} ×
+    // pool {off,on}. Baseline = scalar path, single thread, scoped
+    // fallback; every configuration × both micro-kernel settings must
+    // reproduce it bit-for-bit (matvec twice for warm-workspace reuse,
+    // plus the multi-RHS matmat).
+    // ------------------------------------------------------------------
+    let m = 24;
+    let n = 300;
+    let nbar = 180;
+    let d = Arc::new(gen::psd_kernel(&mut rng, m));
+    let cols = gen::homogeneous_sample(&mut rng, n, m);
+    let rows = gen::homogeneous_sample(&mut rng, nbar, m);
+    let av = dist::normal_vec(&mut rng, n);
+    let rhs: Vec<Vec<f64>> = (0..3).map(|_| dist::normal_vec(&mut rng, n)).collect();
+    let refs: Vec<&[f64]> = rhs.iter().map(|v| v.as_slice()).collect();
+    let abm = Mat::from_columns(&refs);
+
+    let run = |kernel: PairwiseKernel| -> (Vec<u64>, Vec<u64>) {
+        let op = PairwiseLinOp::new(
+            kernel,
+            d.clone(),
+            d.clone(),
+            rows.clone(),
+            cols.clone(),
+            GvtPolicy::Auto,
+        )
+        .unwrap();
+        let mut out = vec![0.0; nbar];
+        op.apply_into(&av, &mut out);
+        op.apply_into(&av, &mut out);
+        let mm = op.matmat(&abm);
+        (bits(&out), bits(mm.as_slice()))
+    };
+
+    pool::set_num_threads(Some(1));
+    pool::set_pool_enabled(Some(false));
+    microkernel::set_enabled(Some(false));
+    let baseline: Vec<(PairwiseKernel, (Vec<u64>, Vec<u64>))> =
+        PairwiseKernel::ALL.iter().map(|&k| (k, run(k))).collect();
+
+    for threads in [1usize, 2, 8] {
+        for pool_on in [false, true] {
+            for mk_on in [false, true] {
+                pool::set_num_threads(Some(threads));
+                pool::set_pool_enabled(Some(pool_on));
+                microkernel::set_enabled(Some(mk_on));
+                for (kernel, (base_mv, base_mm)) in &baseline {
+                    let (mv, mm) = run(*kernel);
+                    assert_eq!(
+                        &mv, base_mv,
+                        "{kernel:?} threads={threads} pool={pool_on} mk={mk_on}: matvec bits"
+                    );
+                    assert_eq!(
+                        &mm, base_mm,
+                        "{kernel:?} threads={threads} pool={pool_on} mk={mk_on}: matmat bits"
+                    );
+                }
+            }
+        }
+    }
+    pool::set_num_threads(None);
+    pool::set_pool_enabled(None);
+
+    // ------------------------------------------------------------------
+    // Solver-level: a fixed-iteration MINRES ridge solve must produce the
+    // same bits either way (the iterates are compositions of the paths
+    // pinned above; this pins the composition end to end).
+    // ------------------------------------------------------------------
+    let sq_op = PairwiseLinOp::new(
+        PairwiseKernel::Kronecker,
+        d.clone(),
+        d.clone(),
+        cols.clone(),
+        cols.clone(),
+        GvtPolicy::Auto,
+    )
+    .unwrap();
+    let shifted = ShiftedOp::new(&sq_op, 1e-2);
+    let y: Vec<f64> = (0..n).map(|i| ((i % 7) as f64) - 3.0).collect();
+    let opts = MinresOptions { max_iters: 12, rel_tol: 0.0 };
+    let (sol_off, sol_on) = ab(|| {
+        minres(&shifted, &y, &opts, |_, _, _| ControlFlow::Continue(()))
+            .unwrap()
+            .x
+    });
+    assert_eq!(bits(&sol_off), bits(&sol_on), "MINRES solve bits");
+
+    microkernel::set_enabled(None);
+}

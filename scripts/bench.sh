@@ -7,11 +7,13 @@
 # mini-batched SGD time-to-ε, n ∈ {16k, 64k}, all 8 kernels) into
 # BENCH_sgd.json, the execution-runtime ablation (persistent pool
 # vs scoped spawn: region dispatch, mat-vec latency at n ∈ {4k, 16k,
-# 64k}, per-iteration MINRES overhead) into BENCH_pool.json, and the
+# 64k}, per-iteration MINRES overhead) into BENCH_pool.json, the
 # complete-grid eigen shortcut vs CG λ-grid comparison (m = q ∈ {64,
-# 128}, 8 λ values, plus the exact-LOOCV pass) into BENCH_eigen.json —
-# all at the repo root so future PRs can prove speedups against
-# recorded numbers.
+# 128}, 8 λ values, plus the exact-LOOCV pass) into BENCH_eigen.json,
+# and the dense micro-kernel ablation (register-blocked tiles vs scalar
+# chunk bodies: GEMV, GEMM, stage-1+2 mat-mat at n ∈ {4k, 16k, 64k},
+# GFLOP/s column) into BENCH_microkernel.json — all at the repo root so
+# future PRs can prove speedups against recorded numbers.
 #
 # Usage: scripts/bench.sh            # full sizes (~minutes)
 #        GVT_RLS_BENCH_QUICK=1 scripts/bench.sh   # small sizes, fast
@@ -28,12 +30,14 @@ if [[ -n "${GVT_RLS_BENCH_QUICK:-}" || -n "${GVT_BENCH_SMOKE:-}" ]]; then
   sgd_json="$PWD/BENCH_sgd_quick.json"
   pool_json="$PWD/BENCH_pool_quick.json"
   eigen_json="$PWD/BENCH_eigen_quick.json"
+  mk_json="$PWD/BENCH_microkernel_quick.json"
 else
   gvt_json="$PWD/BENCH_gvt.json"
   serve_json="$PWD/BENCH_serve.json"
   sgd_json="$PWD/BENCH_sgd.json"
   pool_json="$PWD/BENCH_pool.json"
   eigen_json="$PWD/BENCH_eigen.json"
+  mk_json="$PWD/BENCH_microkernel.json"
 fi
 
 echo "== bench_pairwise_kernels → ${gvt_json} =="
@@ -56,4 +60,8 @@ echo "== bench_eigen → ${eigen_json} =="
 GVT_RLS_BENCH_JSON="$eigen_json" \
   cargo bench --offline --bench bench_eigen
 
-echo "bench.sh: wrote ${GVT_RLS_BENCH_JSON:-$gvt_json}, ${serve_json}, ${sgd_json}, ${pool_json} and ${eigen_json}"
+echo "== bench_microkernel → ${mk_json} =="
+GVT_RLS_BENCH_JSON="$mk_json" \
+  cargo bench --offline --bench bench_microkernel
+
+echo "bench.sh: wrote ${GVT_RLS_BENCH_JSON:-$gvt_json}, ${serve_json}, ${sgd_json}, ${pool_json}, ${eigen_json} and ${mk_json}"

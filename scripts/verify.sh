@@ -20,15 +20,19 @@ target/release/gvt-rls lint --json > target/lint.json
 echo "== tier-1: cargo test -q =="
 cargo test -q --offline
 
-echo "== runtime ablations: scoped-spawn fallback + single-thread =="
-# Cross-check the execution runtime's two ablation axes over the whole
+echo "== runtime ablations: scoped-spawn fallback + single-thread + scalar micro-kernels =="
+# Cross-check the execution runtime's ablation axes over the whole
 # tier-1 suite: GVT_RLS_POOL=0 retires the persistent pool (pre-pool
-# scoped spawning) and GVT_RLS_THREADS=1 forces every parallel region
-# inline. The determinism contract (rows as the unit of work) makes all
-# three configurations bit-identical — tests/pool_determinism.rs pins
-# that directly; these sweeps prove nothing else depends on the runtime.
+# scoped spawning), GVT_RLS_THREADS=1 forces every parallel region
+# inline, and GVT_RLS_MICROKERNEL=0 swaps the register-blocked tile
+# kernels for the scalar chunk bodies. The determinism contract (rows as
+# the unit of work, fixed per-row reduction order) makes all four
+# configurations bit-identical — tests/pool_determinism.rs and
+# tests/microkernel_equiv.rs pin that directly; these sweeps prove
+# nothing else depends on the runtime.
 GVT_RLS_POOL=0 cargo test -q --offline
 GVT_RLS_THREADS=1 cargo test -q --offline
+GVT_RLS_MICROKERNEL=0 cargo test -q --offline
 
 echo "== eigen lane: oracle/eigh/nystrom suites under both runtime ablations =="
 # The full-suite sweeps above already include these, but the eigen
